@@ -1,0 +1,83 @@
+//! L3 hot-path microbenchmarks: the pure-rust lattice lookup (used by the
+//! memstore/serving gather accounting) and the memstore row gather.
+//! These are the pieces the perf pass tunes; see EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench lattice_hot_path`
+
+use lram::lattice::{LatticeLookup, TorusK};
+use lram::memstore::ValueTable;
+use lram::util::rng::Rng;
+use lram::util::timing::{bench, Table};
+
+fn main() {
+    let mut table = Table::new(&["op", "median", "p90", "per-unit"]);
+
+    // single lookup (reduce + 232 scores + top-32 + index)
+    let torus = TorusK::new([16, 16, 8, 8, 8, 8, 8, 8]).unwrap();
+    let mut lk = LatticeLookup::new(torus, 32);
+    let mut rng = Rng::new(1);
+    let queries: Vec<[f64; 8]> = (0..1024)
+        .map(|_| std::array::from_fn(|_| rng.uniform(-8.0, 8.0)))
+        .collect();
+    let mut out = Default::default();
+    let mut qi = 0;
+    let s = bench(200, 4096, || {
+        lk.lookup_into(&queries[qi & 1023], &mut out);
+        qi += 1;
+    });
+    table.row(&[
+        "lattice lookup".into(),
+        format!("{:.2} us", s.median_us()),
+        format!("{:.2} us", s.p90_ns / 1e3),
+        format!("{:.1} ns/candidate", s.median_ns / 232.0),
+    ]);
+
+    // quantize alone
+    let s = bench(200, 4096, || {
+        let q = &queries[qi & 1023];
+        std::hint::black_box(lram::lattice::quantize(q));
+        qi += 1;
+    });
+    table.row(&[
+        "quantize (2 cosets)".into(),
+        format!("{:.0} ns", s.median_ns),
+        format!("{:.0} ns", s.p90_ns),
+        "-".into(),
+    ]);
+
+    // memstore gather: 32 rows x 64 floats from a 2^22-row table
+    let mut vt = ValueTable::zeros(1 << 22, 64).unwrap();
+    vt.randomize(3, 0.02);
+    let idx: Vec<u64> = (0..32 * 1024).map(|_| rng.below(1 << 22)).collect();
+    let mut buf = vec![0.0f32; 32 * 64];
+    let mut gi = 0;
+    let s = bench(100, 4096, || {
+        let base = (gi & 1023) * 32;
+        vt.gather_rows(&idx[base..base + 32], &mut buf);
+        gi += 1;
+    });
+    table.row(&[
+        "gather 32x64 @ 2^22 rows".into(),
+        format!("{:.2} us", s.median_us()),
+        format!("{:.2} us", s.p90_ns / 1e3),
+        format!("{:.1} ns/row", s.median_ns / 32.0),
+    ]);
+
+    // weighted gather (fused combine)
+    let wts = vec![0.03125f32; 32];
+    let mut acc = vec![0.0f32; 64];
+    let s = bench(100, 4096, || {
+        let base = (gi & 1023) * 32;
+        vt.gather_weighted(&idx[base..base + 32], &wts, &mut acc);
+        gi += 1;
+    });
+    table.row(&[
+        "weighted gather 32x64".into(),
+        format!("{:.2} us", s.median_us()),
+        format!("{:.2} us", s.p90_ns / 1e3),
+        format!("{:.1} ns/row", s.median_ns / 32.0),
+    ]);
+
+    println!("\n== L3 hot-path microbench ==\n");
+    table.print();
+}

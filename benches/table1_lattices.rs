@@ -1,0 +1,61 @@
+//! Table 1 reproduction: lattice comparison in 8 and higher dimensions.
+//!
+//! Regenerates every row of the paper's Table 1: packing/covering radii
+//! (classical constants, unimodular scale), Monte-Carlo min/max kernel-
+//! support counts for Z^8 and E8, and analytic averages (ball volume =
+//! expected point count for a unimodular lattice — the paper's own method
+//! for K12 / Lambda16 / Lambda24).
+//!
+//! Run: `cargo bench --bench table1_lattices [-- --samples N]`
+//! (default 300k; the paper used >= 1e7 — pass `--samples 10000000`).
+
+use lram::lattice::{exotic, support};
+use lram::util::cli::Args;
+use lram::util::timing::Table;
+
+fn main() {
+    let args = Args::parse();
+    let samples = args.u64("samples", 300_000).unwrap();
+    let z8_samples = (samples / 20).max(2_000);
+    eprintln!("Table 1: E8 MC samples = {samples}, Z8 MC samples = {z8_samples}");
+
+    let t0 = std::time::Instant::now();
+    let e8 = support::e8_support_stats(samples, 1);
+    let z8 = support::z8_support_stats(z8_samples, 2);
+    let (avg_frac, min_frac) = support::topk_weight_fraction(samples.min(200_000), 32, 3);
+    eprintln!("MC done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let infos = [exotic::Z8, exotic::E8, exotic::K12, exotic::BW16, exotic::LEECH];
+    let mut t = Table::new(&[
+        "Lattice", "Dim", "Det", "Packing", "Covering", "MinSupport", "AvgSupport", "MaxSupport",
+    ]);
+    for info in infos {
+        let (min, max) = match info.name {
+            "Z8" => (format!("{} (m.c.)", z8.min), format!("{} (m.c.)", z8.max)),
+            "E8" => (format!("{} (m.c.)", e8.min), format!("{} (m.c.)", e8.max)),
+            _ => ("-".into(), "-".into()),
+        };
+        t.row(&[
+            info.name.to_string(),
+            info.dim.to_string(),
+            "1".into(),
+            format!("{:.3}", info.packing_radius),
+            format!("{:.3}", info.covering_radius),
+            min,
+            format!("{:.2}", info.avg_kernel_support()),
+            max,
+        ]);
+    }
+    println!("\n== Table 1 (paper: Z8 768/1039/1312, E8 45/64.94/121, K12 1138, L16 24704, L24 32373) ==\n");
+    t.print();
+    println!("\nE8 MC mean {:.3} (analytic {:.3})", e8.mean, exotic::E8.avg_kernel_support());
+    println!(
+        "top-32 weight capture: avg {:.2}%, min {:.2}%  (paper section 2.6: 99.5% / 90%)",
+        avg_frac * 100.0,
+        min_frac * 100.0
+    );
+    println!(
+        "E8 vs Z8 average access ratio: {:.2}x (paper section 2.4: 16x)",
+        exotic::Z8.avg_kernel_support() / exotic::E8.avg_kernel_support()
+    );
+}

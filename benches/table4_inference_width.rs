@@ -1,0 +1,64 @@
+//! Table 4 reproduction: inference time per vector (µs) as a function of
+//! width, dense `w -> 4w -> w` vs the LRAM layer in split mode.
+//!
+//! The paper's crossover (LRAM faster than dense beyond w ~ 8192 on an
+//! RTX 3090) translates here to: dense cost grows ~ w^2 while LRAM cost
+//! grows ~ w·(w/4 + const) with a much smaller quadratic coefficient
+//! (5/8 of dense per Table 3), so the *ratio* dense/LRAM must grow
+//! monotonically with width — that shape, not the absolute µs, is the
+//! reproduction target.
+//!
+//! Run: `cargo bench --bench table4_inference_width [-- --widths 256,512,1024,2048 --n 2^18]`
+
+use lram::runtime::Runtime;
+use lram::splitmode::{DenseLayer, SplitLramLayer};
+use lram::util::cli::Args;
+use lram::util::rng::Rng;
+use lram::util::timing::{bench, Table};
+
+fn main() -> anyhow::Result<()> {
+    lram::util::logger::init();
+    let args = Args::parse();
+    let widths = args.u64_list("widths", &[256, 512, 1024, 2048])?;
+    let locations = args.u64("n", 1 << 18)?;
+    let samples = args.usize("samples", 15)?; // paper: median of 15 runs
+
+    let rt = Runtime::new(args.str("artifacts", "artifacts"))?;
+    let mut table = Table::new(&[
+        "Width", "Dense us/vec", "LRAM us/vec", "dense/lram", "LRAM params",
+    ]);
+    let mut rng = Rng::new(4);
+    for &w in &widths {
+        let w = w as usize;
+        let mut dense = match DenseLayer::load(&rt, w) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("skipping width {w}: {e:#}");
+                continue;
+            }
+        };
+        let mut lram = SplitLramLayer::load(&rt, w, locations, false)?;
+        let b = dense.batch;
+        let x: Vec<f32> = (0..b * w).map(|_| rng.normal() as f32).collect();
+
+        let ds = bench(3, samples, || {
+            dense.run(&x).unwrap();
+        });
+        let ls = bench(3, samples, || {
+            lram.run(&x).unwrap();
+        });
+        let d_us = ds.median_us() / b as f64;
+        let l_us = ls.median_us() / b as f64;
+        table.row(&[
+            w.to_string(),
+            format!("{d_us:.2}"),
+            format!("{l_us:.2}"),
+            format!("{:.3}", d_us / l_us),
+            format!("{:.1}M", lram.param_count() as f64 / 1e6),
+        ]);
+    }
+    println!("\n== Table 4 (N = {locations} memory locations; batch-amortised, median of {samples}) ==\n");
+    table.print();
+    println!("\npaper shape: dense/lram ratio grows with width (crossover ~w=8192 on GPU).");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Lattice explorer: interactive tour of the E8 machinery the paper is
+//! built on — quantization, isometry reduction, the 232-point table,
+//! kernel weights, torus indexing.  Pure rust, no artifacts needed.
+//!
+//! Run: cargo run --release --example lattice_explorer -- [--seed 1]
+
+use lram::lattice::{
+    e8, exotic, kernel, neighbors, support, LatticeLookup, TorusK, SQRT8,
+};
+use lram::util::cli::Args;
+use lram::util::rng::Rng;
+use lram::util::timing::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let mut rng = Rng::new(args.u64("seed", 1)?);
+
+    println!("== Lambda = 2*E8 = {{ x in (2Z)^8 u (2Z+1)^8 : sum(x) = 0 mod 4 }} ==\n");
+    println!("packing radius  sqrt(2) = {:.4}", lram::lattice::PACKING_RADIUS);
+    println!("covering radius       2");
+    println!("minimal vector   sqrt(8) = {SQRT8:.4}");
+
+    // a random query, step by step
+    let q: [f64; 8] = std::array::from_fn(|_| rng.uniform(-6.0, 6.0));
+    println!("\n-- query {q:?}");
+    let x0 = e8::quantize(&q);
+    println!("nearest lattice point: {x0:?}");
+    let red = e8::reduce(&q);
+    println!("reduced into F:        {:?}", red.z.map(|v| (v * 1e3).round() / 1e3));
+    println!("permutation:           {:?}", red.perm);
+    println!("signs (even # of -1):  {:?}", red.eps);
+
+    // the 232-point table
+    let nbr = neighbors::neighbor_table();
+    println!("\n-- candidate table: {} lattice points within sqrt(8) of F", nbr.len());
+    let mut by_norm: std::collections::BTreeMap<i64, usize> = Default::default();
+    for p in nbr.iter() {
+        *by_norm.entry(p.iter().map(|v| v * v).sum()).or_default() += 1;
+    }
+    for (n2, count) in &by_norm {
+        println!("   |p|^2 = {n2:2}: {count:3} points");
+    }
+
+    // kernel weights along a path between two lattice points
+    println!("\n-- kernel f(r) = max(0, 1 - r^2/8)^4 along an edge of the lattice");
+    for i in 0..=8 {
+        let t = i as f64 / 8.0;
+        let d2 = (t * SQRT8).powi(2);
+        let bar = "#".repeat((kernel::kernel_f(d2) * 40.0) as usize);
+        println!("   r = {:4.2}  f = {:.4} {bar}", t * SQRT8, kernel::kernel_f(d2));
+    }
+
+    // torus memory + a lookup
+    let torus = TorusK::new([16, 16, 8, 8, 8, 8, 8, 8])?;
+    let mut lk = LatticeLookup::new(torus, 32);
+    let r = lk.lookup(&q);
+    println!(
+        "\n-- lookup on the 2^18-slot torus: {} hits, total weight {:.4}, top-32 keeps {:.2}%",
+        r.hits.len(),
+        r.total_weight,
+        100.0 * r.hits.iter().map(|h| h.weight).sum::<f64>() / r.total_weight
+    );
+
+    // Table-1 style summary at small sample counts
+    println!("\n-- kernel support statistics (quick MC; see bench table1_lattices)");
+    let e8s = support::e8_support_stats(20_000, 5);
+    let mut t = Table::new(&["lattice", "min", "avg", "max"]);
+    t.row(&[
+        "E8 (measured)".into(),
+        e8s.min.to_string(),
+        format!("{:.2}", e8s.mean),
+        e8s.max.to_string(),
+    ]);
+    t.row(&[
+        "E8 (paper)".into(),
+        "45".into(),
+        "64.94".into(),
+        "121".into(),
+    ]);
+    t.row(&[
+        "Z8 (analytic avg)".into(),
+        "-".into(),
+        format!("{:.0}", exotic::Z8.avg_kernel_support()),
+        "-".into(),
+    ]);
+    t.print();
+    Ok(())
+}

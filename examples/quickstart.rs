@@ -1,0 +1,75 @@
+//! Quickstart: the LRAM public API in five minutes.
+//!
+//! 1. pure-rust lattice lookups (no artifacts needed);
+//! 2. the O(1) memstore gather at billion-parameter scale;
+//! 3. if `make artifacts` has run: execute the AOT'd LRAM layer end to
+//!    end through the PJRT runtime (split mode).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lram::lattice::{LatticeLookup, TorusK};
+use lram::memstore::ValueTable;
+use lram::runtime::Runtime;
+use lram::splitmode::SplitLramLayer;
+use lram::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    lram::util::logger::init();
+
+    // --- 1. lattice lookups -------------------------------------------
+    // A torus with 2^18 memory locations (the paper's LRAM-small).
+    let torus = TorusK::new([16, 16, 8, 8, 8, 8, 8, 8])?;
+    println!("torus has {} memory locations", torus.num_locations());
+
+    let mut lookup = LatticeLookup::new(torus, 32);
+    let q = [0.3, -1.2, 2.7, 0.0, 4.4, -0.8, 1.1, 3.9];
+    let result = lookup.lookup(&q);
+    println!(
+        "query {:?}\n  -> {} nearby slots, total weight {:.4} (paper bound [0.851, 1])",
+        q,
+        result.hits.len(),
+        result.total_weight
+    );
+    for h in result.hits.iter().take(4) {
+        println!("  slot {:7}  weight {:.4}  d^2 {:.3}", h.index, h.weight, h.d2);
+    }
+
+    // --- 2. the memstore: a billion parameters, O(1) access ------------
+    let mut table = ValueTable::zeros(1 << 24, 64)?; // 2^30 params, 4 GB virtual
+    println!(
+        "\nvalue table: {} params, resident after creation: {} KB",
+        table.param_count(),
+        table.resident_bytes()? / 1024
+    );
+    let mut rng = Rng::new(7);
+    let mut out = vec![0.0f32; 64];
+    let idx: Vec<u64> = result.hits.iter().map(|h| h.index).collect();
+    let wts: Vec<f32> = result.hits.iter().map(|h| h.weight as f32).collect();
+    table.row_mut(idx[0])[0] = rng.normal() as f32; // touch something
+    table.gather_weighted(&idx, &wts, &mut out);
+    println!("weighted gather of {} rows done; out[0] = {:.5}", idx.len(), out[0]);
+    println!("resident now: {} KB (only touched pages)", table.resident_bytes()? / 1024);
+
+    // --- 3. the compiled LRAM layer (needs `make artifacts`) -----------
+    match Runtime::new("artifacts") {
+        Ok(rt) => match SplitLramLayer::load(&rt, 256, 1 << 18, true) {
+            Ok(mut layer) => {
+                let x: Vec<f32> =
+                    (0..layer.batch * 256).map(|_| rng.normal() as f32).collect();
+                let y = layer.run(&x)?;
+                let stats = layer.stats.as_ref().unwrap();
+                println!(
+                    "\nsplit-mode LRAM layer: {} -> {} activations, \
+                     {} slots touched in one batch, y[0] = {:.5}",
+                    x.len(),
+                    y.len(),
+                    (stats.utilization() * stats.locations() as f64) as u64,
+                    y[0]
+                );
+            }
+            Err(e) => println!("\n(split-mode demo skipped: {e})"),
+        },
+        Err(e) => println!("\n(PJRT demo skipped: {e})"),
+    }
+    Ok(())
+}

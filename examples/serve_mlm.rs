@@ -1,0 +1,95 @@
+//! Serving demo: start the fill-mask router, fire a few concurrent
+//! requests at it from client threads, print predictions + batching
+//! stats.  Demonstrates the vLLM-style dynamic batcher with python
+//! nowhere on the request path.
+//!
+//! Run:  cargo run --release --example serve_mlm -- \
+//!           [--variant lram_small] [--checkpoint runs/.../final.ckpt]
+//!           [--requests 12]
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use lram::data::synth::CorpusSpec;
+use lram::data::DataPipeline;
+use lram::server::{serve, Batcher, BatcherConfig, BatcherInit};
+use lram::util::cli::Args;
+
+fn http_post(addr: &str, body: &str) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    write!(
+        s,
+        "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp)?;
+    Ok(resp)
+}
+
+fn main() -> anyhow::Result<()> {
+    lram::util::logger::init();
+    let args = Args::parse();
+    let variant = args.str("variant", "lram_small");
+    let addr = args.str("addr", "127.0.0.1:8077");
+    let n_requests = args.usize("requests", 12)?;
+
+    let checkpoint = match args.flags.get("checkpoint") {
+        Some(p) => Some(std::fs::read(p)?),
+        None => None,
+    };
+    let pipeline = DataPipeline::new(CorpusSpec::default(), 4096, 8, 1, 0.15)?;
+    let bpe = Arc::new(pipeline.bpe);
+    let batcher = Batcher::spawn(
+        BatcherInit {
+            artifact_dir: args.str("artifacts", "artifacts"),
+            artifact_name: format!("infer_logits_{variant}"),
+            checkpoint,
+        },
+        bpe.clone(),
+        BatcherConfig::default(),
+    )?;
+    {
+        let batcher = batcher.clone();
+        let bpe = bpe.clone();
+        let addr = addr.clone();
+        std::thread::spawn(move || serve(&addr, batcher, bpe));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    println!("server on http://{addr}; firing {n_requests} concurrent requests\n");
+
+    let corpus = lram::data::synth::SynthCorpus::new(CorpusSpec::default());
+    let mut handles = vec![];
+    for i in 0..n_requests {
+        let addr = addr.clone();
+        // mask one word of a real corpus sentence
+        let text = corpus.paragraph(i as u64 + 50);
+        let words: Vec<&str> = text.split_whitespace().take(12).collect();
+        let mut masked = words.clone();
+        let pos = 2 + i % 6;
+        if pos < masked.len() {
+            masked[pos] = "[MASK]";
+        }
+        let body = format!(r#"{{"text": "{}", "top_k": 3}}"#, masked.join(" "));
+        handles.push(std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            let resp = http_post(&addr, &body).unwrap_or_default();
+            (body, resp, t0.elapsed().as_secs_f64() * 1e3)
+        }));
+    }
+    for h in handles {
+        let (body, resp, ms) = h.join().unwrap();
+        let line = resp.lines().last().unwrap_or("");
+        let preview: String = line.chars().take(120).collect();
+        println!("{:6.1} ms  {}\n          -> {}\n", ms, &body[..body.len().min(90)], preview);
+    }
+
+    // batching stats
+    let mut s = TcpStream::connect(&addr)?;
+    write!(s, "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n")?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp)?;
+    println!("router stats: {}", resp.lines().last().unwrap_or(""));
+    Ok(())
+}

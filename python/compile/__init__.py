@@ -1,0 +1,1 @@
+"""LRAM build-time compile package (never imported at runtime)."""

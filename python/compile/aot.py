@@ -1,0 +1,498 @@
+"""AOT export: lower L2/L1 computations once to HLO text + manifests.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact `<name>.hlo.txt` ships with `<name>.meta.json` describing
+its positional inputs/outputs:
+
+  role "state":  fed back from the matching leading outputs step-to-step
+                 (params, Adam moments, BatchNorm running stats);
+  role "input":  fresh each call (token batches, step counter);
+  outputs:       first len(state) entries are the new state, the rest are
+                 results (loss, logits, access indices, ...).
+
+Initial state tensors are written to `<variant>.state.bin` as raw
+little-endian bytes in manifest order.
+
+Usage:  python -m compile.aot --out ../artifacts [--sets core,micro,extra]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import lattice_tables as lt
+
+# ---------------------------------------------------------------------------
+# Model variants (scaled-down geometry; see DESIGN.md "Substitutions")
+# ---------------------------------------------------------------------------
+
+BASE = dict(vocab_size=4096, width=192, n_layers=4, n_heads=4, seq_len=96)
+
+#: K tuples and their slot counts M = prod(K)/256 (verified in pytest):
+K_2_14 = (8, 8, 8, 8, 8, 8, 4, 4)  # 2^14 locations
+K_2_16 = (8, 8, 8, 8, 8, 8, 8, 8)  # 2^16
+K_2_17 = (8, 8, 8, 8, 8, 8, 8, 16)  # 2^17
+K_2_18 = (16, 16, 8, 8, 8, 8, 8, 8)  # 2^18  (paper's LRAM-small)
+K_2_20 = (16, 16, 16, 16, 8, 8, 8, 8)  # 2^20  (paper's LRAM-medium)
+K_2_22 = (16, 16, 16, 16, 16, 16, 8, 8)  # 2^22  (paper's LRAM-large)
+K_2_24 = (16,) * 8  # 2^24
+
+
+def variants(paper_scale: bool = False) -> dict[str, M.ModelConfig]:
+    """Scaled-down slot counts by default (small 2^14 / medium 2^16 /
+    large 2^18); --paper-scale restores the paper's 2^18 / 2^20 / 2^22."""
+    if paper_scale:
+        ks, km, kl = K_2_18, K_2_20, K_2_22
+    else:
+        ks, km, kl = K_2_14, K_2_16, K_2_18
+    mk = lambda **kw: M.ModelConfig(**{**BASE, **kw}).validate()
+    return {
+        "baseline": mk(memory="none"),
+        "lram_small": mk(memory="lram", lram_K=ks),
+        "lram_medium": mk(memory="lram", lram_K=km),
+        "lram_large": mk(memory="lram", lram_K=kl),
+        "pkm": mk(memory="pkm", pkm_n_keys=128, pkm_heads=4, pkm_topk=32),
+        # paper section 6 (future work): two layers reading ONE shared table
+        "lram_shared": mk(memory="lram", lram_K=km, mem_layers=(1, 2)),
+    }
+
+
+TRAIN_BATCH = 8
+EVAL_BATCH = 8
+SERVE_BATCH = 4
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is LOAD-BEARING: the default elides big
+    # literals as "{...}", which the 0.5.1-era HLO text parser silently
+    # reads back as zeros — the 232-point lattice table would vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _dtype_tag(x) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32",
+            "float64": "f64", "int64": "i64"}[str(np.asarray(x).dtype)]
+
+
+def _leaf_names(tree) -> list[str]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names = []
+    for path, _ in flat:
+        parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        names.append("/".join(parts))
+    return names
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.index: list[dict] = []
+
+    def export(self, name: str, fn, state_tree, inputs, extra_meta=None,
+               n_result_outputs=None):
+        """Lower fn(state_leaves..., input_leaves...) and write artifact +
+        manifest.  fn must return (new_state_leaves..., results...).
+
+        `inputs` is an ORDERED list of (name, example_array) pairs — the
+        positional input order seen by the rust runtime is exactly this
+        list (dicts would silently flatten in sorted-key order, which
+        bit us once; never again).
+        """
+        t0 = time.time()
+        state_leaves, state_def = jax.tree_util.tree_flatten(state_tree)
+        input_names = [n for n, _ in inputs]
+        input_leaves = [a for _, a in inputs]
+        ns, ni = len(state_leaves), len(input_leaves)
+
+        def flat_fn(*flat):
+            st = jax.tree_util.tree_unflatten(state_def, flat[:ns])
+            inp = dict(zip(input_names, flat[ns:]))
+            return fn(st, inp)
+
+        specs = [
+            jax.ShapeDtypeStruct(np.asarray(x).shape, np.asarray(x).dtype)
+            for x in state_leaves + input_leaves
+        ]
+        lowered = jax.jit(flat_fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        hlo_path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(text)
+
+        out_tree = jax.eval_shape(flat_fn, *specs)
+        out_leaves = jax.tree_util.tree_leaves(out_tree)
+        meta = {
+            "artifact": f"{name}.hlo.txt",
+            "state": [
+                {"name": n, "shape": list(np.asarray(x).shape), "dtype": _dtype_tag(x)}
+                for n, x in zip(_leaf_names(state_tree), state_leaves)
+            ],
+            "inputs": [
+                {"name": n, "shape": list(np.asarray(x).shape), "dtype": _dtype_tag(x)}
+                for n, x in zip(input_names, input_leaves)
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _dtype_tag(jnp.zeros((), o.dtype))}
+                for o in out_leaves
+            ],
+            "n_state_outputs": ns if n_result_outputs is None
+            else len(out_leaves) - n_result_outputs,
+        }
+        if extra_meta:
+            meta.update(extra_meta)
+        with open(os.path.join(self.out_dir, f"{name}.meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        self.index.append({"name": name, "bytes": len(text)})
+        print(f"  [{time.time()-t0:6.1f}s] {name}: {len(text)/1e6:.2f} MB hlo, "
+              f"{ns} state + {ni} inputs -> {len(out_leaves)} outputs")
+        return meta
+
+    def write_state_bin(self, name: str, state_tree):
+        leaves = jax.tree_util.tree_leaves(state_tree)
+        path = os.path.join(self.out_dir, f"{name}.state.bin")
+        with open(path, "wb") as f:
+            for x in leaves:
+                f.write(np.ascontiguousarray(np.asarray(x)).tobytes())
+        sz = os.path.getsize(path)
+        print(f"  wrote {name}.state.bin ({sz/1e6:.1f} MB)")
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+
+def full_state(cfg: M.ModelConfig, seed: int = 0):
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    return {
+        "params": params,
+        "opt": M.init_opt_state(params),
+        "bn": M.init_bn_state(cfg),
+    }
+
+
+def _memory_meta(cfg: M.ModelConfig) -> dict:
+    if cfg.memory == "lram":
+        return {"locations": cfg.lram_locations, "k_top": cfg.lram_k_top,
+                "heads": cfg.lram_heads, "m": cfg.lram_m}
+    if cfg.memory == "pkm":
+        return {"locations": cfg.pkm_n, "k_top": cfg.pkm_topk,
+                "heads": cfg.pkm_heads, "n_keys": cfg.pkm_n_keys}
+    return {}
+
+
+def export_training(w: ArtifactWriter, name: str, cfg: M.ModelConfig,
+                    write_init: bool, B: int = TRAIN_BATCH):
+    S = cfg.seq_len
+    state = full_state(cfg)
+    batch = [
+        ("step", jnp.zeros((), jnp.int32)),
+        ("tokens", jnp.zeros((B, S), jnp.int32)),
+        ("targets", jnp.zeros((B, S), jnp.int32)),
+        ("weights", jnp.zeros((B, S), jnp.float32)),
+    ]
+
+    def step_fn(st, inp):
+        p, o, bn, loss = M.train_step(
+            st["params"], st["opt"], st["bn"], inp["step"],
+            inp["tokens"], inp["targets"], inp["weights"], cfg,
+        )
+        new_state = {"params": p, "opt": o, "bn": bn}
+        return tuple(jax.tree_util.tree_leaves(new_state)) + (loss,)
+
+    w.export(
+        f"train_step_{name}", step_fn, state, batch,
+        extra_meta={"kind": "train_step", "variant": name,
+                    "batch": {"B": B, "S": S},
+                    "config": dataclasses.asdict(cfg),
+                    "n_params": M.count_params(state["params"]),
+                    **_memory_meta(cfg)},
+        n_result_outputs=1,
+    )
+
+    def eval_fn(st, inp):
+        collect = cfg.memory in ("lram", "pkm")
+        out = M.eval_loss(st["params"], st["bn"], inp["tokens"],
+                          inp["targets"], inp["weights"], cfg,
+                          collect_access=collect)
+        return tuple(jax.tree_util.tree_leaves(st)) + tuple(out)
+
+    eval_batch = [(k, v) for k, v in batch if k != "step"]
+    nres = 4 if cfg.memory in ("lram", "pkm") else 2
+    w.export(
+        f"eval_loss_{name}", eval_fn, state, eval_batch,
+        extra_meta={"kind": "eval_loss", "variant": name,
+                    "batch": {"B": B, "S": S},
+                    "access_outputs": cfg.memory in ("lram", "pkm"),
+                    **_memory_meta(cfg)},
+        n_result_outputs=nres,
+    )
+
+    def infer_fn(st, inp):
+        logits, _, _ = M.forward(st["params"], inp["tokens"], cfg, st["bn"],
+                                 train=False)
+        return tuple(jax.tree_util.tree_leaves(st)) + (
+            jax.nn.log_softmax(logits, axis=-1),
+        )
+
+    w.export(
+        f"infer_logits_{name}", infer_fn, state,
+        [("tokens", jnp.zeros((SERVE_BATCH, S), jnp.int32))],
+        extra_meta={"kind": "infer_logits", "variant": name,
+                    "batch": {"B": SERVE_BATCH, "S": S}},
+        n_result_outputs=1,
+    )
+
+    if write_init:
+        w.write_state_bin(name, state)
+
+
+def export_micro(w: ArtifactWriter, widths=(256, 512, 1024, 2048),
+                 lram_Ks=(K_2_14, K_2_18, K_2_22, K_2_24),
+                 pkm_keys=(64, 128, 256, 512, 1024, 2048), B: int = 64):
+    """Layer microbenches for Table 4 and Figure 3.
+
+    All phases take x (B, w) batches.  The value-table gather lives in the
+    rust memstore (split mode), so the LRAM artifacts are N-independent
+    except for the index arithmetic baked in via K.
+    """
+    rng = jax.random.PRNGKey(1)
+
+    for wd in widths:
+        # ---- dense w -> 4w -> w (the replaced subnetwork) ----
+        p = {
+            "in": M._dense_init(rng, wd, 4 * wd),
+            "out": M._dense_init(rng, 4 * wd, wd),
+        }
+
+        def dense_fn(st, inp):
+            return tuple(jax.tree_util.tree_leaves(st)) + (
+                M.dense_ffn_layer(inp["x"], st),
+            )
+
+        w.export(
+            f"micro_dense_w{wd}", dense_fn, p,
+            [("x", jnp.zeros((B, wd), jnp.float32))],
+            extra_meta={"kind": "micro_dense", "width": wd, "batch": {"B": B},
+                        "n_params": M.count_params(p)},
+            n_result_outputs=1,
+        )
+
+        # ---- LRAM prefix (per K) + one suffix ----
+        for K in lram_Ks:
+            cfg = M.ModelConfig(**{**BASE, "width": wd, "memory": "lram",
+                                   "lram_K": K}).validate()
+            pp = {
+                "query": M._dense_init(rng, wd, wd),
+                "bn": {"g": jnp.ones((wd,)), "b": jnp.zeros((wd,))},
+            }
+            bn = {"mean": jnp.zeros((wd,)), "var": jnp.ones((wd,))}
+
+            def prefix_fn(st, inp, cfg=cfg):
+                idx, wts, scale = M.lram_layer_prefix(
+                    inp["x"], st["p"], cfg, st["bn"]
+                )
+                return tuple(jax.tree_util.tree_leaves(st)) + (idx, wts, scale)
+
+            nloc = lt.num_locations(K)
+            w.export(
+                f"micro_lram_prefix_w{wd}_n{nloc}", prefix_fn,
+                {"p": pp, "bn": bn}, [("x", jnp.zeros((B, wd), jnp.float32))],
+                extra_meta={"kind": "micro_lram_prefix", "width": wd,
+                            "locations": nloc, "K": list(K),
+                            "heads": cfg.lram_heads, "k_top": cfg.lram_k_top,
+                            "m": cfg.lram_m, "batch": {"B": B}},
+                n_result_outputs=3,
+            )
+
+        cfg = M.ModelConfig(**{**BASE, "width": wd, "memory": "lram",
+                               "lram_K": lram_Ks[0]}).validate()
+        h, kt, m = cfg.lram_heads, cfg.lram_k_top, cfg.lram_m
+        ps = {"out": M._dense_init(rng, 4 * wd, wd)}
+
+        def suffix_fn(st, inp, cfg=cfg):
+            y = M.lram_layer_suffix(inp["gathered"], inp["w"], inp["scale"],
+                                    st, cfg)
+            return tuple(jax.tree_util.tree_leaves(st)) + (y,)
+
+        w.export(
+            f"micro_lram_suffix_w{wd}", suffix_fn, ps,
+            [
+                ("gathered", jnp.zeros((B, h, kt, m), jnp.float32)),
+                ("w", jnp.zeros((B, h, kt), jnp.float32)),
+                ("scale", jnp.zeros((B, h), jnp.float32)),
+            ],
+            extra_meta={"kind": "micro_lram_suffix", "width": wd,
+                        "batch": {"B": B}},
+            n_result_outputs=1,
+        )
+
+        # ---- PKM score (per sqrt(N)) + one combine ----
+        for nk in pkm_keys:
+            cfg = M.ModelConfig(**{**BASE, "width": wd, "memory": "pkm",
+                                   "pkm_n_keys": nk}).validate()
+            hd, dk = cfg.pkm_heads, cfg.pkm_dk
+            pp = {
+                "query": M._dense_init(rng, wd, hd * dk),
+                "bn": {"g": jnp.ones((hd * dk,)), "b": jnp.zeros((hd * dk,))},
+                "keys1": jnp.zeros((hd, nk, dk // 2), jnp.float32),
+                "keys2": jnp.zeros((hd, nk, dk // 2), jnp.float32),
+            }
+            bn = {"mean": jnp.zeros((hd * dk,)), "var": jnp.ones((hd * dk,))}
+
+            def score_fn(st, inp, cfg=cfg):
+                idx, wts = M.pkm_layer_score(inp["x"], st["p"], cfg, st["bn"])
+                return tuple(jax.tree_util.tree_leaves(st)) + (idx, wts)
+
+            w.export(
+                f"micro_pkm_score_w{wd}_nk{nk}", score_fn,
+                {"p": pp, "bn": bn}, [("x", jnp.zeros((B, wd), jnp.float32))],
+                extra_meta={"kind": "micro_pkm_score", "width": wd,
+                            "n_keys": nk, "locations": nk * nk,
+                            "heads": hd, "k_top": cfg.pkm_topk,
+                            "batch": {"B": B}},
+                n_result_outputs=2,
+            )
+
+        cfg = M.ModelConfig(**{**BASE, "width": wd, "memory": "pkm"}).validate()
+
+        def combine_fn(st, inp):
+            y = M.pkm_layer_combine(inp["gathered"], inp["w"])
+            return tuple(jax.tree_util.tree_leaves(st)) + (y,)
+
+        w.export(
+            f"micro_pkm_combine_w{wd}", combine_fn,
+            {"unused": jnp.zeros((1,), jnp.float32)},
+            [
+                ("gathered", jnp.zeros(
+                    (B, cfg.pkm_heads, cfg.pkm_topk, wd), jnp.float32
+                )),
+                ("w", jnp.zeros((B, cfg.pkm_heads, cfg.pkm_topk), jnp.float32)),
+            ],
+            extra_meta={"kind": "micro_pkm_combine", "width": wd,
+                        "batch": {"B": B}},
+            n_result_outputs=1,
+        )
+
+
+def export_fixture(out_dir: str, n_queries: int = 256, seed: int = 42,
+                   writer: ArtifactWriter | None = None):
+    """Cross-language fixture: the rust lattice implementation must
+    reproduce these exact tables and lookups (rust/tests/fixture.rs).
+
+    When a writer is given, also export `lookup_check` — the bare L1
+    kernel on the fixture's first 64 queries — so the rust integration
+    tests verify the *compiled HLO* against the python oracle end to end
+    (the regression net for every gotcha in DESIGN.md).
+    """
+    rng = np.random.default_rng(seed)
+    K = np.asarray(K_2_16)
+    qs = rng.uniform(-12, 12, size=(n_queries, 8))
+    from .kernels import e8, ref
+
+    if writer is not None:
+        Kt = tuple(int(k) for k in K)
+
+        def check_fn(st, inp):
+            idx, wts, dwdq = e8.e8_lookup(inp["q"], Kt, 32, 32, True)
+            return (st["unused"], idx, wts, dwdq)
+
+        writer.export(
+            "lookup_check", check_fn, {"unused": jnp.zeros((1,), jnp.float32)},
+            [("q", jnp.zeros((64, 8), jnp.float32))],
+            extra_meta={"kind": "lookup_check", "K": [int(k) for k in K],
+                        "batch": {"B": 64, "S": 1}},
+            n_result_outputs=3,
+        )
+
+    lookups = []
+    for q in qs:
+        idx, wts = ref.lookup_topk(q, K, k=32)
+        lookups.append({"q": [float(v) for v in q],
+                        "idx": [int(i) for i in idx],
+                        "w": [round(float(x), 10) for x in wts]})
+    x0 = lt.quantize(qs)
+    sample_pts = lt.torus_index_inverse(
+        np.arange(0, lt.num_locations(K), max(1, lt.num_locations(K) // 64),
+                  dtype=np.int64), K)
+    fixture = {
+        "K": [int(k) for k in K],
+        "num_locations": lt.num_locations(K),
+        "neighbor_table": lt.neighbor_table().tolist(),
+        "quantize": [
+            {"q": [float(v) for v in q], "x": [int(v) for v in x]}
+            for q, x in zip(qs[:64], x0[:64])
+        ],
+        "torus_roundtrip": sample_pts.tolist(),
+        "lookups": lookups[:64],
+    }
+    path = os.path.join(out_dir, "lattice_fixture.json")
+    with open(path, "w") as f:
+        json.dump(fixture, f)
+    print(f"  wrote lattice_fixture.json ({os.path.getsize(path)/1e3:.0f} KB)")
+
+
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sets", default="core,micro",
+                    help="comma list: core (train/eval/infer for baseline, "
+                         "lram_small, pkm), extra (lram_medium, lram_large), "
+                         "micro (Table 4 / Fig 3 layers), fixture")
+    ap.add_argument("--paper-scale", action="store_true",
+                    help="use the paper's 2^18..2^22 slot counts")
+    ap.add_argument("--widths", default="256,512,1024,2048")
+    args = ap.parse_args()
+    sets = set(args.sets.split(","))
+
+    w = ArtifactWriter(args.out)
+    vs = variants(args.paper_scale)
+    if "core" in sets:
+        print("== core training/eval/inference artifacts ==")
+        for name in ("baseline", "lram_small", "pkm"):
+            export_training(w, name, vs[name], write_init=True)
+    if "extra" in sets:
+        print("== extra variants ==")
+        for name in ("lram_medium", "lram_large", "lram_shared"):
+            export_training(w, name, vs[name], write_init=True)
+    if "micro" in sets:
+        print("== micro layer artifacts (Table 4 / Figure 3) ==")
+        widths = tuple(int(x) for x in args.widths.split(","))
+        export_micro(w, widths=widths)
+    if "fixture" in sets or "core" in sets:
+        export_fixture(args.out, writer=w)
+
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(w.index, f, indent=1)
+    print(f"done: {len(w.index)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""LRAM build-time kernels: Pallas lattice lookup + numpy oracle."""

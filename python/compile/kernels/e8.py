@@ -1,0 +1,357 @@
+"""L1 Pallas kernel: E8-lattice memory lookup (paper section 2.6).
+
+For a block of query points q in R^8 the kernel
+
+  1. quantizes q to the nearest point x0 of Lambda = 2*E8 (branch-free
+     coset decoder);
+  2. applies the isometry reduction (translation by x0, then a signed
+     permutation with an even number of sign changes) mapping the
+     residual into the fundamental region F — the sort is a fixed
+     19-comparator Batcher network on 8 lanes so the whole block
+     vectorizes with no data-dependent control flow (TPU-friendly; this
+     replaces the per-thread scalar loop of the paper's CUDA kernel);
+  3. scores the fixed table of 232 candidate lattice points (the only
+     points that can lie within the kernel radius sqrt(8) of F) with
+     f(r) = max(0, 1 - r^2/8)^4;
+  4. keeps the top-32 weights (paper: >= 90% of total weight), maps the
+     surviving candidates back through the inverse isometry, and emits
+     their O(1) torus memory indices, weights, and the partial
+     derivatives dw/dq needed for the custom VJP.
+
+The kernel runs under ``interpret=True`` so it lowers to plain HLO that
+the rust PJRT CPU client can execute; on a real TPU the same BlockSpec
+tiling applies (see DESIGN.md section "Hardware adaptation").
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .lattice_tables import neighbor_table, num_locations, validate_K
+
+#: Batcher odd-even mergesort network for 8 lanes (19 comparators).
+SORT_NETWORK = (
+    (0, 1), (2, 3), (4, 5), (6, 7),
+    (0, 2), (1, 3), (4, 6), (5, 7),
+    (1, 2), (5, 6),
+    (0, 4), (1, 5), (2, 6), (3, 7),
+    (2, 4), (3, 5),
+    (1, 2), (3, 4), (5, 6),
+)
+
+K_TOP_DEFAULT = 32
+
+#: Candidate-selection implementation (perf A/B; see EXPERIMENTS.md §Perf):
+#:   "onehot" — (B,k,232)x(232,8) one-hot contraction (MXU-friendly);
+#:   "take"   — plain axis-0 gather (embedding-style; CPU-friendly).
+#: Both round-trip through the 0.5.1 HLO parser (the lookup_check
+#: integration test verifies whichever is active).
+GATHER_IMPL = os.environ.get("LRAM_GATHER_IMPL", "take")
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def topk_desc(x, k: int):
+    """Top-k along the last axis, descending: (values, indices).
+
+    Deliberately NOT `jax.lax.top_k`, for two reasons:
+
+    * jax >= 0.8 lowers top_k to an HLO `topk` instruction with a
+      `largest` attribute that the bundled xla_extension 0.5.1 text
+      parser rejects; a variadic descending `lax.sort` carrying an iota
+      payload lowers to a plain `sort`, which round-trips cleanly.
+    * sort's builtin JVP routes through a batched gather this jax/jaxlib
+      pairing cannot transpose; the custom VJP below scatters the value
+      cotangent with a one-hot contraction instead (k is tiny, so the
+      one-hot is cheap).
+    """
+    return _topk_fwd_impl(x, k)
+
+
+def _topk_fwd_impl(x, k: int):
+    """Iterative argmax-and-mask top-k.
+
+    Neither `lax.top_k` (emits a `largest` attribute the 0.5.1 HLO parser
+    rejects) nor a variadic `lax.sort` (payload operand miscompiles on the
+    0.5.1 PJRT CPU backend — it replicates the max element) survives the
+    AOT round-trip, so select the k maxima with k argmax/mask passes:
+    only reduce/select ops, which round-trip exactly.  k is 32 and the
+    candidate axis is 232, so the cost is negligible.
+    """
+
+    vals, idxs = [], []
+    w = x
+    for _ in range(k):  # unrolled: no while-loop in the lowered HLO
+        i = jnp.argmax(w, axis=-1).astype(jnp.int32)
+        v = jnp.max(w, axis=-1)
+        onehot = jax.nn.one_hot(i, w.shape[-1], dtype=w.dtype)
+        w = jnp.where(onehot > 0, -1e30, w)
+        vals.append(v)
+        idxs.append(i)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def _topk_fwd(x, k: int):
+    vals, idx = _topk_fwd_impl(x, k)
+    return (vals, idx), (idx, x.shape[-1])
+
+
+def _topk_bwd(k: int, res, cts):
+    idx, n = res
+    val_ct, _ = cts  # index cotangent is float0
+    onehot = jax.nn.one_hot(idx, n, dtype=val_ct.dtype)  # (..., k, n)
+    x_bar = jnp.einsum("...k,...kn->...n", val_ct, onehot)
+    return (x_bar,)
+
+
+topk_desc.defvjp(_topk_fwd, _topk_bwd)
+
+
+def _decode_d8(y):
+    """Nearest point of D8 to y, branch-free, batched over rows.
+
+    NOTE (AOT portability): this file avoids `take_along_axis`-style
+    batched gathers everywhere — jax 0.8 lowers them with
+    operand_batching_dims, which the bundled xla_extension 0.5.1 parses
+    but miscompiles (it broadcasts row 0).  One-hot contractions are used
+    instead; they also map better onto the TPU MXU (see DESIGN.md
+    "Hardware adaptation").
+    """
+    f = jnp.round(y)
+    err = y - f
+    worst = jnp.argmax(jnp.abs(err), axis=-1)
+    onehot = jax.nn.one_hot(worst, 8, dtype=y.dtype)
+    worst_err = jnp.sum(onehot * err, axis=-1, keepdims=True)  # gather-free
+    step = jnp.where(worst_err >= 0, 1.0, -1.0)
+    g = f + onehot * step
+    odd = (jnp.sum(f, axis=-1).astype(jnp.int32) % 2) != 0
+    return jnp.where(odd[:, None], g, f)
+
+
+def _quantize(q):
+    """Nearest point of Lambda = 2D8 u (2D8 + 1) to q."""
+    even = 2.0 * _decode_d8(q / 2.0)
+    odd = 2.0 * _decode_d8((q - 1.0) / 2.0) + 1.0
+    de = jnp.sum((q - even) ** 2, axis=-1)
+    do = jnp.sum((q - odd) ** 2, axis=-1)
+    return jnp.where((de <= do)[:, None], even, odd)
+
+
+def _sort_desc_tracked(t, s):
+    """Sort |r| descending with the fixed comparator network, tracking the
+    coordinate index and sign lanes alongside the key lane.
+
+    t: (B, 8) keys (absolute residuals), s: (B, 8) signs (+-1 float).
+    Returns (t_sorted, perm, s_sorted)."""
+    p = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), t.shape)
+    for i, j in SORT_NETWORK:
+        ti, tj = t[:, i], t[:, j]
+        swap = ti < tj  # descending
+        t = t.at[:, i].set(jnp.where(swap, tj, ti)).at[:, j].set(jnp.where(swap, ti, tj))
+        pi, pj = p[:, i], p[:, j]
+        p = p.at[:, i].set(jnp.where(swap, pj, pi)).at[:, j].set(jnp.where(swap, pi, pj))
+        si, sj = s[:, i], s[:, j]
+        s = s.at[:, i].set(jnp.where(swap, sj, si)).at[:, j].set(jnp.where(swap, si, sj))
+    return t, p, s
+
+
+def _torus_index_i32(u, K):
+    """O(1) memory index of integer lattice points u (B, k, 8) int32.
+
+    K is a static Python tuple, so all divisor arithmetic folds to scalar
+    constants (no captured array constants — pallas requirement)."""
+    p = jnp.remainder(u[..., 0], 2)
+    y = (u - p[..., None]) >> 1
+    # jnp.remainder's sign follows the divisor, so m_i is already >= 0
+    m = [jnp.remainder(y[..., i], int(K[i]) // 2) for i in range(8)]
+    s = jnp.remainder(sum(m[:7]), 2)
+    t = (m[7] - s) >> 1
+    idx = p
+    for i in range(7):
+        idx = idx * (int(K[i]) // 2) + m[i]
+    return idx * (int(K[7]) // 4) + t
+
+
+def _lookup_block(q, nbr, K, k_top):
+    """The kernel body on a (B, 8) block; pure jnp so it can run either
+    inside pallas_call or directly (both paths are tested against the
+    oracle and each other).
+
+    Gather-free by construction (one-hot contractions instead of batched
+    gathers): both an AOT-portability requirement and the natural MXU
+    formulation on TPU — the permutation application becomes an 8x8
+    matmul per query and the candidate selection a (k x 232) matmul.
+    """
+    q = q.astype(jnp.float32)
+    x0 = _quantize(q)
+    r = q - x0
+    t, perm, s = _sort_desc_tracked(jnp.abs(r), jnp.where(r < 0, -1.0, 1.0))
+    # parity fix: even number of sign flips (last lane absorbs the parity)
+    nneg = jnp.sum((s < 0).astype(jnp.int32), axis=-1) % 2
+    eps = s.at[:, 7].set(jnp.where(nneg == 1, -s[:, 7], s[:, 7]))
+    # rs[j] = r[perm[j]] = s[j] * t[j]  (sign and magnitude travelled
+    # through the sorting network together — no gather needed)
+    z = t.at[:, 7].set(eps[:, 7] * s[:, 7] * t[:, 7])
+
+    # score all 232 candidates in the reduced frame (isometry-invariant)
+    nbrf = nbr.astype(jnp.float32)  # (232, 8)
+    d2 = jnp.sum((z[:, None, :] - nbrf[None, :, :]) ** 2, axis=-1)  # (B, 232)
+    w_all = jnp.maximum(0.0, 1.0 - d2 / 8.0) ** 4
+
+    w, sel = topk_desc(w_all, k_top)  # (B, k_top)
+
+    # selected candidates: (B, k, 8) in the reduced frame
+    if GATHER_IMPL == "take":
+        csel = jnp.take(nbrf, sel, axis=0)  # plain axis-0 gather
+    else:
+        sel_oh = jax.nn.one_hot(sel, nbr.shape[0], dtype=jnp.float32)
+        csel = jnp.einsum("bkc,ci->bki", sel_oh, nbrf)
+
+    # inverse isometry: u[b, s, perm[b, j]] = x0 + eps[b, j] * csel[b, s, j]
+    # as a permutation-matrix contraction P[b, j, i] = 1{perm[b, j] = i}
+    pmat = jax.nn.one_hot(perm, 8, dtype=jnp.float32)  # (B, 8, 8)
+    signed = eps[:, None, :] * csel  # (B, k, 8) in sorted-lane order
+    u_f = x0[:, None, :] + jnp.einsum("bkj,bji->bki", signed, pmat)
+    u = jnp.round(u_f).astype(jnp.int32)  # exact: all integers
+
+    idx = _torus_index_i32(u, K)
+
+    # dw/dq = -(1 - d^2/8)^3 * (q - u); note (1 - d^2/8)^3 = w^(3/4) for
+    # w > 0, which avoids re-gathering the selected distances
+    base = jnp.power(jnp.maximum(w, 0.0), 0.75)  # (B, k)
+    diff = q[:, None, :] - u_f  # (B, k, 8)
+    dwdq = -base[:, :, None] * diff
+    return idx, w, dwdq
+
+
+def _pallas_kernel(q_ref, nbr_ref, idx_ref, w_ref, dw_ref, *, K, k_top):
+    idx, w, dwdq = _lookup_block(q_ref[...], nbr_ref[...], K, k_top)
+    idx_ref[...] = idx
+    w_ref[...] = w
+    dw_ref[...] = dwdq
+
+
+def _round_up(n, b):
+    return (n + b - 1) // b * b
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def e8_lookup(q, K: tuple, k_top: int = K_TOP_DEFAULT, block_q: int = 128,
+              use_pallas: bool = True):
+    """Lattice lookup for a batch of torus queries.
+
+    Args:
+      q: (B, 8) float32 query points in the Lambda coordinate frame.
+      K: static 8-tuple of torus periods, each a multiple of 4.
+      k_top: number of nearest lattice points kept (paper: 32).
+      block_q: pallas block size along the batch dimension.
+      use_pallas: route through pallas_call (interpret mode) or run the
+        identical jnp body directly.
+
+    Returns:
+      idx: (B, k_top) int32 memory indices in [0, M);
+      w:   (B, k_top) float32 kernel weights (descending);
+      dwdq:(B, k_top, 8) float32 partial derivatives dw_i/dq_j.
+    """
+    Kv = validate_K(K)
+    if num_locations(Kv) >= 2**31:
+        raise ValueError("M must fit in int32 for the in-kernel index math")
+    nbr = jnp.asarray(neighbor_table(), dtype=jnp.int32)
+    B = q.shape[0]
+    if not use_pallas:
+        return _lookup_block(q, nbr, tuple(int(k) for k in Kv), k_top)
+
+    Bp = _round_up(max(B, 1), block_q)
+    qp = jnp.pad(q, ((0, Bp - B), (0, 0)))
+    grid = (Bp // block_q,)
+    idx, w, dwdq = pl.pallas_call(
+        functools.partial(
+            _pallas_kernel, K=tuple(int(k) for k in Kv), k_top=k_top
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, 8), lambda i: (i, 0)),
+            # the 232-point table is replicated into every block (the
+            # analogue of CUDA constant memory)
+            pl.BlockSpec((232, 8), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k_top), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, k_top), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, k_top, 8), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, k_top), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, k_top), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, k_top, 8), jnp.float32),
+        ],
+        interpret=True,
+    )(qp, nbr)
+    return idx[:B], w[:B], dwdq[:B]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper (the paper's "autograd-compatible wrapper")
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def lattice_lookup(q, K: tuple, k_top: int = K_TOP_DEFAULT, block_q: int = 128,
+                   use_pallas: bool = True):
+    """Differentiable (idx, w) lookup; gradients flow into q through the
+    kernel-supplied dw/dq exactly as in the paper's CUDA wrapper."""
+    idx, w, _ = e8_lookup(q, K, k_top, block_q, use_pallas)
+    return idx, w
+
+
+def _lookup_fwd(q, K, k_top, block_q, use_pallas):
+    idx, w, dwdq = e8_lookup(q, K, k_top, block_q, use_pallas)
+    return (idx, w), dwdq
+
+
+def _lookup_bwd(K, k_top, block_q, use_pallas, dwdq, cts):
+    _, w_ct = cts
+    q_bar = jnp.einsum("bk,bki->bi", w_ct, dwdq)
+    return (q_bar,)
+
+
+lattice_lookup.defvjp(_lookup_fwd, _lookup_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Full memory layer pieces used by the L2 model
+# ---------------------------------------------------------------------------
+
+
+def phi(q, values, K: tuple, k_top: int = K_TOP_DEFAULT, block_q: int = 128,
+        use_pallas: bool = True):
+    """phi(q) = sum over the k_top nearest lattice points of f(d) * v
+    (differentiable in both q and values)."""
+    idx, w = lattice_lookup(q, K, k_top, block_q, use_pallas)
+    gathered = jnp.take(values, idx, axis=0)  # (B, k, m)
+    return jnp.einsum("bk,bkm->bm", w, gathered)
+
+
+def theta(z, values, K: tuple, k_top: int = K_TOP_DEFAULT, block_q: int = 128,
+          use_pallas: bool = True, eps: float = 1e-6):
+    """The activation layer (paper section 2.3).
+
+    z: (B, 16) float32, interpreted as 8 complex numbers per row
+    (re_1, im_1, ..., re_8, im_8).  Output: (B, m), positively
+    homogeneous in z: theta(l*z) = l*theta(z) for l >= 0.
+    """
+    Kv = validate_K(K)
+    zc = z.reshape(z.shape[0], 8, 2)
+    mag = jnp.sqrt(jnp.sum(zc**2, axis=-1) + eps * eps)
+    ang = jnp.arctan2(zc[..., 1], zc[..., 0])
+    q = jnp.asarray(Kv, dtype=jnp.float32) / (2 * math.pi) * ang
+    scale = 1.0 / jnp.sum(1.0 / mag, axis=-1)  # harmonic-mean term
+    out = phi(q, values, tuple(int(k) for k in Kv), k_top, block_q, use_pallas)
+    return scale[:, None] * out

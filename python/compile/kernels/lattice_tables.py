@@ -1,0 +1,266 @@
+"""Shared lattice math for the LRAM kernel (build-time, pure numpy).
+
+Implements the scaled E8 lattice of Goucher & Troll (2021), section 2:
+
+    Lambda = { x in (2Z)^8 u (2Z+1)^8 : sum(x) = 0 mod 4 }  (= 2*E8)
+
+with packing radius sqrt(2), covering radius 2 and minimal vector norm
+sqrt(8).  Provides:
+
+  * `decode_d8` / `quantize` — nearest-point decoder (Conway-Sloane coset
+    decoding over Lambda = 2*D8 u (2*D8 + 1));
+  * `reduce_batch` — the paper's isometry reduction into the fundamental
+    region F = { z1 >= ... >= z7 >= |z8|, z1+z2 <= 2, sum(z) <= 4 };
+  * `neighbor_table` — the fixed table of the exactly 232 lattice points
+    within distance < sqrt(8) of F (paper section 2.6), computed once via
+    Dykstra projections onto F's halfspaces;
+  * `kernel_f` — the compact kernel f(r) = max(0, 1 - r^2/8)^4;
+  * `torus_index` / `torus_index_inverse` — the O(1) bijection
+    Lambda / L_K -> [0, M) used to address memory slots, where
+    L_K = prod(K_i Z) with K_i in 4Z and M = prod(K_i) / 256.
+
+Everything here is mirrored in rust/src/lattice/ and cross-checked through
+artifacts/lattice_fixture.json (see python/tests/test_fixture.py).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import numpy as np
+
+SQRT8 = math.sqrt(8.0)
+#: determinant of Lambda = 2*E8  (2^8 * det E8 = 256)
+DET_LAMBDA = 256
+#: number of lattice points within distance < sqrt(8) of F (paper: 232)
+N_NEIGHBORS = 232
+#: paper section 2.5: lower bound on the total kernel weight
+TOTAL_WEIGHT_LOWER = (22158 - 625 * math.sqrt(5)) / 24389
+
+# ---------------------------------------------------------------------------
+# Quantizer
+# ---------------------------------------------------------------------------
+
+
+def decode_d8(y: np.ndarray) -> np.ndarray:
+    """Nearest point of D8 = { y in Z^8 : sum(y) even } to `y`.
+
+    Standard Conway-Sloane decoder: round every coordinate; if the sum of
+    the rounded point is odd, re-round the coordinate with the largest
+    rounding error in the opposite direction.  Vectorized over any number
+    of leading batch dimensions.
+    """
+    y = np.asarray(y, dtype=np.float64)
+    f = np.round(y)
+    err = y - f
+    worst = np.argmax(np.abs(err), axis=-1)
+    g = f.copy()
+    sel = tuple(np.indices(worst.shape)) + (worst,)
+    g[sel] = f[sel] + np.where(err[sel] >= 0, 1.0, -1.0)
+    odd = (f.sum(-1).astype(np.int64) % 2) != 0
+    return np.where(odd[..., None], g, f)
+
+
+def quantize(q: np.ndarray) -> np.ndarray:
+    """Nearest point of Lambda to `q` (ties broken toward the even coset)."""
+    q = np.asarray(q, dtype=np.float64)
+    even = 2.0 * decode_d8(q / 2.0)
+    odd = 2.0 * decode_d8((q - 1.0) / 2.0) + 1.0
+    de = ((q - even) ** 2).sum(-1)
+    do = ((q - odd) ** 2).sum(-1)
+    return np.where((de <= do)[..., None], even, odd)
+
+
+def is_lattice_point(x) -> bool:
+    """Membership test for Lambda."""
+    x = np.asarray(x, dtype=np.int64)
+    par = ((x % 2) + 2) % 2
+    return bool((par == par[..., :1]).all() and int(x.sum()) % 4 == 0)
+
+
+# ---------------------------------------------------------------------------
+# Isometry reduction into the fundamental region F
+# ---------------------------------------------------------------------------
+
+
+def reduce_batch(q: np.ndarray):
+    """Map each query into the fundamental region F.
+
+    Returns ``(x0, perm, eps, z)`` where ``x0`` is the nearest lattice
+    point, and ``z[j] = eps[j] * (q - x0)[perm[j]]`` lies in F.  ``eps``
+    has an even number of -1 entries (modulo sign flips on exactly-zero
+    coordinates, which are numerically irrelevant), so the signed
+    permutation is a symmetry of Lambda.
+    """
+    q = np.asarray(q, dtype=np.float64)
+    x0 = quantize(q)
+    r = q - x0
+    a = np.abs(r)
+    perm = np.argsort(-a, axis=-1, kind="stable")
+    t = np.take_along_axis(a, perm, axis=-1)
+    rs = np.take_along_axis(r, perm, axis=-1)
+    eps = np.where(rs < 0, -1.0, 1.0)
+    # parity fix: if an odd number of signs were flipped, un-flip the last
+    # (smallest-magnitude) coordinate so the sign change count is even.
+    nneg = (rs < 0).sum(-1) % 2
+    eps[..., 7] = np.where(nneg == 1, -eps[..., 7], eps[..., 7])
+    z = t.copy()
+    z[..., 7] = eps[..., 7] * rs[..., 7]
+    return x0, perm, eps, z
+
+
+def in_fundamental_region(z: np.ndarray, tol: float = 1e-9) -> bool:
+    z = np.asarray(z, dtype=np.float64)
+    mono = (z[..., :6] >= z[..., 1:7] - tol).all()
+    last = (z[..., 6] >= np.abs(z[..., 7]) - tol).all()
+    edge = (z[..., 0] + z[..., 1] <= 2 + tol).all()
+    ssum = (z.sum(-1) <= 4 + tol).all()
+    return bool(mono and last and edge and ssum)
+
+
+# ---------------------------------------------------------------------------
+# The 232-point neighbour table
+# ---------------------------------------------------------------------------
+
+#: Halfspaces a.z <= b whose intersection is F.
+_F_HALFSPACES_A = np.array(
+    [[0] * i + [-1, 1] + [0] * (6 - i) for i in range(6)]
+    + [
+        [0, 0, 0, 0, 0, 0, -1, 1],
+        [0, 0, 0, 0, 0, 0, -1, -1],
+        [1, 1, 0, 0, 0, 0, 0, 0],
+        [1, 1, 1, 1, 1, 1, 1, 1],
+    ],
+    dtype=np.float64,
+)
+_F_HALFSPACES_B = np.array([0.0] * 8 + [2.0, 4.0])
+
+
+def dist_to_F(p: np.ndarray, iters: int = 800) -> np.ndarray:
+    """Distance from each row of `p` to F via Dykstra's projection onto the
+    intersection of F's halfspaces.  Vectorized over rows."""
+    p = np.atleast_2d(np.asarray(p, dtype=np.float64))
+    A, b = _F_HALFSPACES_A, _F_HALFSPACES_B
+    an = (A * A).sum(1)
+    x = p.copy()
+    y = np.zeros((len(A),) + p.shape)
+    for _ in range(iters):
+        for k in range(len(A)):
+            w = x + y[k]
+            viol = np.maximum(w @ A[k] - b[k], 0.0)
+            x = w - (viol / an[k])[:, None] * A[k][None, :]
+            y[k] = w - x
+    return np.sqrt(((p - x) ** 2).sum(-1))
+
+
+def _enumerate_candidates() -> np.ndarray:
+    """All points of Lambda with |p| <= sqrt(24); superset of every point
+    within sqrt(8) of F (F's circumradius is the covering radius 2, and
+    (sqrt(8) + 2)^2 < 24)."""
+    import itertools
+
+    out = []
+    for vals in ((-4, -2, 0, 2, 4), (-3, -1, 1, 3)):
+        for tup in itertools.product(vals, repeat=8):
+            if sum(v * v for v in tup) <= 24 and sum(tup) % 4 == 0:
+                out.append(tup)
+    return np.array(out, dtype=np.int64)
+
+
+@lru_cache(maxsize=1)
+def neighbor_table() -> np.ndarray:
+    """The (232, 8) int table of all lattice points within < sqrt(8) of F,
+    in canonical (lexicographic) order.  Matches the paper's QP count."""
+    cand = _enumerate_candidates()
+    d = dist_to_F(cand.astype(np.float64))
+    nbr = cand[d < SQRT8 - 1e-6]
+    assert len(nbr) == N_NEIGHBORS, f"expected 232 neighbours, got {len(nbr)}"
+    order = np.lexsort(nbr.T[::-1])
+    return np.ascontiguousarray(nbr[order])
+
+
+# ---------------------------------------------------------------------------
+# Kernel and lookup reference
+# ---------------------------------------------------------------------------
+
+
+def kernel_f(d2: np.ndarray) -> np.ndarray:
+    """f(r) = max(0, 1 - r^2/8)^4 expressed in terms of r^2."""
+    return np.maximum(0.0, 1.0 - np.asarray(d2) / 8.0) ** 4
+
+
+def candidates_for(q: np.ndarray):
+    """For a batch of queries, return original-frame candidate lattice
+    points ``u`` (B, 232, 8) and squared distances ``d2`` (B, 232)."""
+    q = np.atleast_2d(np.asarray(q, dtype=np.float64))
+    x0, perm, eps, z = reduce_batch(q)
+    nbr = neighbor_table().astype(np.float64)
+    d2 = ((z[:, None, :] - nbr[None, :, :]) ** 2).sum(-1)
+    # u[b, c, perm[b, j]] = x0[b, perm[b, j]] + eps[b, j] * nbr[c, j]
+    B = q.shape[0]
+    u = np.empty((B, nbr.shape[0], 8), dtype=np.float64)
+    rows = np.arange(B)[:, None]
+    u[rows, :, perm] = (
+        np.take_along_axis(x0, perm, axis=-1)[:, :, None]
+        + (eps[:, :, None] * nbr.T[None, :, :])
+    )
+    return u, d2
+
+
+# ---------------------------------------------------------------------------
+# Torus memory indexing
+# ---------------------------------------------------------------------------
+
+
+def validate_K(K) -> np.ndarray:
+    K = np.asarray(K, dtype=np.int64)
+    if K.shape != (8,):
+        raise ValueError("K must have 8 entries")
+    if (K % 4 != 0).any() or (K < 4).any():
+        raise ValueError("each K_i must be a positive multiple of 4 so that L_K <= Lambda")
+    return K
+
+
+def num_locations(K) -> int:
+    """M = |Lambda / L_K| = prod(K) / det(Lambda)."""
+    K = validate_K(K)
+    return int(np.prod(K) // DET_LAMBDA)
+
+
+def torus_index(x: np.ndarray, K) -> np.ndarray:
+    """O(1) bijection Lambda/L_K -> [0, M).
+
+    Writes x = 2y + p with parity bit p and y in D8; packs p, y_1..y_7
+    (mod K_i/2, mixed radix) and y_8 (mod K_8/4 after removing its parity,
+    which is determined by y_1..y_7 because sum(y) is even).
+    """
+    K = validate_K(K)
+    x = np.asarray(np.rint(x), dtype=np.int64)
+    p = ((x[..., 0] % 2) + 2) % 2
+    y = (x - p[..., None]) >> 1
+    kh = K // 2
+    m = ((y % kh) + kh) % kh
+    s = m[..., :7].sum(-1) % 2
+    t = (m[..., 7] - s) >> 1
+    idx = p
+    for i in range(7):
+        idx = idx * kh[i] + m[..., i]
+    return idx * (K[7] // 4) + t
+
+
+def torus_index_inverse(idx, K) -> np.ndarray:
+    """Canonical representative of memory slot `idx` (vectorized)."""
+    K = validate_K(K)
+    idx = np.asarray(idx, dtype=np.int64).copy()
+    kh = K // 2
+    t = idx % (K[7] // 4)
+    idx //= K[7] // 4
+    m = np.zeros(idx.shape + (8,), dtype=np.int64)
+    for i in range(6, -1, -1):
+        m[..., i] = idx % kh[i]
+        idx //= kh[i]
+    p = idx
+    s = m[..., :7].sum(-1) % 2
+    m[..., 7] = 2 * t + s
+    return 2 * m + p[..., None]

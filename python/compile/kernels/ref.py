@@ -1,0 +1,118 @@
+"""Pure-numpy brute-force oracle for the LRAM lookup.
+
+Deliberately *independent* of the isometry-reduction machinery in
+`lattice_tables.py` / `e8.py`: lattice points near a query are found by a
+parity-split depth-first enumeration with distance pruning, so a bug in
+the reduction or the 232-point table cannot hide in the oracle.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .lattice_tables import kernel_f, torus_index, validate_K
+
+SQRT8 = math.sqrt(8.0)
+
+
+def ball_points(q: np.ndarray, r2: float = 8.0) -> np.ndarray:
+    """All points of Lambda with ||p - q||^2 < r2, by DFS enumeration.
+
+    For each coordinate the admissible integer values of a given parity
+    within distance sqrt(r2) are enumerated closest-first; partial
+    squared-distance pruning keeps the search tiny (the ball holds at
+    most 121 points for r2 = 8).
+    """
+    q = np.asarray(q, dtype=np.float64)
+    r = math.sqrt(r2)
+    out: list[list[int]] = []
+    for parity in (0, 1):
+        cands = []
+        for i in range(8):
+            lo, hi = math.ceil(q[i] - r), math.floor(q[i] + r)
+            vs = [v for v in range(lo, hi + 1) if ((v % 2) + 2) % 2 == parity]
+            vs.sort(key=lambda v: abs(v - q[i]))
+            cands.append(vs)
+        if any(not c for c in cands):
+            continue
+        acc = [0] * 8
+
+        def dfs(i: int, d2: float, ssum: int) -> None:
+            if i == 8:
+                if ssum % 4 == 0:
+                    out.append(list(acc))
+                return
+            for v in cands[i]:
+                nd2 = d2 + (v - q[i]) ** 2
+                if nd2 >= r2:
+                    # candidates are sorted by closeness; all later ones
+                    # are at least as far, so stop scanning this level.
+                    break
+                acc[i] = v
+                dfs(i + 1, nd2, ssum + v)
+
+        dfs(0, 0.0, 0)
+    if not out:
+        return np.zeros((0, 8), dtype=np.int64)
+    return np.array(sorted(out), dtype=np.int64)
+
+
+def lookup_all(q: np.ndarray, K) -> tuple[np.ndarray, np.ndarray]:
+    """Oracle lookup without top-k truncation.
+
+    Returns ``(idx, w)`` for every lattice point with nonzero kernel
+    weight: memory indices (sorted by descending weight) and the weights.
+    """
+    K = validate_K(K)
+    pts = ball_points(q, r2=8.0)
+    if len(pts) == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.float64)
+    d2 = ((pts - np.asarray(q)[None, :]) ** 2).sum(-1)
+    w = kernel_f(d2)
+    keep = w > 0
+    pts, w = pts[keep], w[keep]
+    order = np.argsort(-w, kind="stable")
+    return torus_index(pts[order], K), w[order]
+
+
+def lookup_topk(q: np.ndarray, K, k: int = 32):
+    """Oracle lookup truncated to the k highest-weight points (paper's
+    k = 32 restriction).  Pads with (0, 0.0) when fewer than k points
+    carry weight."""
+    idx, w = lookup_all(q, K)
+    idx, w = idx[:k], w[:k]
+    if len(idx) < k:
+        idx = np.pad(idx, (0, k - len(idx)))
+        w = np.pad(w, (0, k - len(w)))
+    return idx, w
+
+
+def phi(q: np.ndarray, values: np.ndarray, K, k: int | None = 32) -> np.ndarray:
+    """Reference phi(q) = sum_k f(d(q,k)) v_k (optionally top-k truncated)."""
+    idx, w = lookup_all(q, K)
+    if k is not None:
+        idx, w = idx[:k], w[:k]
+    if len(idx) == 0:
+        return np.zeros(values.shape[1], dtype=values.dtype)
+    return (w[:, None] * values[idx]).sum(0)
+
+
+def theta(z: np.ndarray, values: np.ndarray, K, k: int | None = 32) -> np.ndarray:
+    """Reference activation layer theta (paper section 2.3).
+
+    ``z`` is a length-16 real vector interpreted as 8 complex numbers
+    (re_1, im_1, ..., re_8, im_8); the torus point is
+    q_i = (K_i / 2pi) * arg z_i and the output is scaled by the harmonic
+    mean term (sum_i 1/|z_i|)^{-1}.
+    """
+    K = validate_K(K)
+    z = np.asarray(z, dtype=np.float64).reshape(8, 2)
+    mag = np.sqrt((z**2).sum(-1))
+    if (mag == 0).any():
+        return np.zeros(values.shape[1], dtype=values.dtype)
+    ang = np.arctan2(z[:, 1], z[:, 0])
+    q = K.astype(np.float64) / (2 * math.pi) * ang
+    scale = 1.0 / (1.0 / mag).sum()
+    return scale * phi(q, values, K, k=k)

@@ -1,0 +1,540 @@
+"""L2: BERT-style masked language model with LRAM / PKM / dense FFN variants.
+
+Paper section 3.1: a residual tower of alternating self-attention and
+fully-connected subnetworks; in the memory-augmented variants the FFN of
+one designated layer is replaced by
+
+    dense(w -> w)  ->  theta (n, m, h) = (8, m, w/16)  ->  dense(4w -> w)
+
+where theta is the lattice-memory activation layer built on the L1 Pallas
+kernel.  Everything is hand-rolled functional JAX (no flax/optax): params
+and optimizer state are plain nested dicts so they flatten to a stable,
+manifest-described list of arrays for the rust runtime.
+
+Build-time only; never imported on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import e8
+from .kernels.e8 import topk_desc
+from .kernels.lattice_tables import num_locations, validate_K
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Geometry + memory-layer configuration.
+
+    The paper's setup is ``width=512, n_layers=6, seq_len=256, vocab=30k``;
+    the defaults here are the scaled-down single-CPU geometry used by the
+    reproduction runs (see DESIGN.md "Substitutions").
+    """
+
+    vocab_size: int = 4096
+    width: int = 192
+    n_layers: int = 4
+    n_heads: int = 4
+    seq_len: int = 96
+    ffn_mult: int = 4  # r in Table 3
+    memory: str = "none"  # none | lram | pkm
+    mem_layer: int = 2  # 0-based index of the layer whose FFN is replaced
+    #: paper §6 (future work): multiple memory layers reading ONE shared
+    #: table of values — "no costlier to allow all l layers to read from
+    #: a shared set of l*N memory locations".  When non-empty this
+    #: overrides mem_layer; all listed layers get their own query/output
+    #: projections but phi reads the same memory_values (and, for
+    #: simplicity, shares one BatchNorm over the common query space).
+    mem_layers: tuple = ()
+    # LRAM (paper: n=8, m=64, h=w/16, k=32)
+    lram_K: tuple = (8, 8, 8, 8, 8, 8, 8, 8)
+    lram_m: int = 64
+    lram_k_top: int = 32
+    lram_block_q: int = 128
+    lram_use_pallas: bool = True
+    # PKM (paper config: 8 heads, N=2^16, value dim 512, key dim 64)
+    pkm_n_keys: int = 128  # sqrt(N); N = n_keys^2 value slots
+    pkm_heads: int = 4
+    pkm_topk: int = 32
+    pkm_dk: int = 64  # query/key dim per head (split into two halves)
+    # misc
+    pre_ln: bool = True  # pre-LN tower (stability deviation; see DESIGN.md)
+    tie_embeddings: bool = False
+    bn_momentum: float = 0.98
+
+    @property
+    def ffn_hidden(self) -> int:
+        return self.ffn_mult * self.width
+
+    @property
+    def lram_heads(self) -> int:
+        # 2 * h * n = width  with n = 8
+        assert self.width % 16 == 0, "width must be a multiple of 16"
+        return self.width // 16
+
+    @property
+    def lram_locations(self) -> int:
+        return num_locations(self.lram_K)
+
+    @property
+    def pkm_n(self) -> int:
+        return self.pkm_n_keys**2
+
+    @property
+    def memory_layer_set(self) -> tuple:
+        if self.mem_layers:
+            return tuple(sorted(self.mem_layers))
+        return (self.mem_layer,)
+
+    @property
+    def shared_memory(self) -> bool:
+        return len(self.memory_layer_set) > 1
+
+    def validate(self) -> "ModelConfig":
+        assert self.memory in ("none", "lram", "pkm")
+        assert self.width % self.n_heads == 0
+        if self.memory == "lram":
+            validate_K(self.lram_K)
+            assert self.lram_heads * self.lram_m == self.ffn_mult * self.width, (
+                "h*m must equal 4w: got "
+                f"h={self.lram_heads} m={self.lram_m} w={self.width}"
+            )
+        if self.mem_layers:
+            assert self.memory == "lram", "shared memory layers require lram"
+            assert all(0 <= i < self.n_layers for i in self.mem_layers)
+            assert len(set(self.mem_layers)) == len(self.mem_layers)
+        else:
+            assert 0 <= self.mem_layer < self.n_layers
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(rng, n_in, n_out, scale=0.02):
+    kw, _ = jax.random.split(rng)
+    return {
+        "w": (jax.random.normal(kw, (n_in, n_out), jnp.float32) * scale),
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def _ln_init(n):
+    return {"g": jnp.ones((n,), jnp.float32), "b": jnp.zeros((n,), jnp.float32)}
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    cfg.validate()
+    keys = jax.random.split(rng, cfg.n_layers + 8)
+    w = cfg.width
+    p: Params = {
+        "tok_embed": jax.random.normal(keys[0], (cfg.vocab_size, w)) * 0.02,
+        "pos_embed": jax.random.normal(keys[1], (cfg.seq_len, w)) * 0.02,
+        "final_ln": _ln_init(w),
+        "head": {
+            "transform": _dense_init(keys[2], w, w),
+            "ln": _ln_init(w),
+        },
+    }
+    if not cfg.tie_embeddings:
+        p["head"]["out"] = _dense_init(keys[3], w, cfg.vocab_size)
+    else:
+        p["head"]["out_bias"] = jnp.zeros((cfg.vocab_size,), jnp.float32)
+
+    if cfg.memory == "lram" and cfg.shared_memory:
+        # paper §6: one table read by every memory layer
+        p["shared_memory_values"] = (
+            jax.random.normal(keys[-1], (cfg.lram_locations, cfg.lram_m)) * 0.02
+        )
+
+    for i in range(cfg.n_layers):
+        k = jax.random.split(keys[4 + i], 8)
+        layer: Params = {
+            "ln1": _ln_init(w),
+            "ln2": _ln_init(w),
+            "attn": {
+                "qkv": _dense_init(k[0], w, 3 * w),
+                "out": _dense_init(k[1], w, w),
+            },
+        }
+        if cfg.memory != "none" and i in cfg.memory_layer_set:
+            if cfg.memory == "lram":
+                layer["lram"] = {
+                    "query": _dense_init(k[2], w, w),
+                    # BN over the 2hn = w query channels
+                    "bn": {"g": jnp.ones((w,)), "b": jnp.zeros((w,))},
+                    "out": _dense_init(k[4], cfg.ffn_hidden, w),
+                }
+                if not cfg.shared_memory:
+                    # the memory: M value vectors of dim m, shared by heads
+                    layer["lram"]["memory_values"] = (
+                        jax.random.normal(k[3], (cfg.lram_locations, cfg.lram_m))
+                        * 0.02
+                    )
+            else:  # pkm
+                hd = cfg.pkm_heads
+                layer["pkm"] = {
+                    "query": _dense_init(k[2], w, hd * cfg.pkm_dk),
+                    "bn": {"g": jnp.ones((hd * cfg.pkm_dk,)), "b": jnp.zeros((hd * cfg.pkm_dk,))},
+                    "keys1": jax.random.normal(
+                        k[3], (hd, cfg.pkm_n_keys, cfg.pkm_dk // 2)
+                    )
+                    * (1.0 / math.sqrt(cfg.pkm_dk // 2)),
+                    "keys2": jax.random.normal(
+                        k[5], (hd, cfg.pkm_n_keys, cfg.pkm_dk // 2)
+                    )
+                    * (1.0 / math.sqrt(cfg.pkm_dk // 2)),
+                    "memory_values": jax.random.normal(k[6], (cfg.pkm_n, w)) * 0.02,
+                }
+        else:
+            layer["ffn"] = {
+                "in": _dense_init(k[2], w, cfg.ffn_hidden),
+                "out": _dense_init(k[3], cfg.ffn_hidden, w),
+            }
+        p[f"layer_{i}"] = layer
+    return p
+
+
+def init_bn_state(cfg: ModelConfig) -> Params:
+    """Running BatchNorm statistics (train-updated, eval-consumed)."""
+    if cfg.memory == "lram":
+        n = cfg.width
+    elif cfg.memory == "pkm":
+        n = cfg.pkm_heads * cfg.pkm_dk
+    else:
+        return {"mean": jnp.zeros((1,)), "var": jnp.ones((1,))}
+    return {"mean": jnp.zeros((n,)), "var": jnp.ones((n,))}
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, p, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def dense(x, p):
+    return x @ p["w"] + p["b"]
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def attention(x, p, n_heads):
+    B, S, w = x.shape
+    qkv = dense(x, p["qkv"]).reshape(B, S, 3, n_heads, w // n_heads)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(w // n_heads)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S, w)
+    return dense(out, p["out"])
+
+
+def _batch_norm(x2d, bn_params, bn_state, train: bool, momentum: float):
+    """BN over the flattened (batch*seq, channels) query matrix."""
+    if train:
+        mu = x2d.mean(0)
+        var = x2d.var(0)
+        new_state = {
+            "mean": momentum * bn_state["mean"] + (1 - momentum) * mu,
+            "var": momentum * bn_state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var = bn_state["mean"], bn_state["var"]
+        new_state = bn_state
+    xn = (x2d - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xn * bn_params["g"] + bn_params["b"], new_state
+
+
+def lram_ffn(x, p, cfg: ModelConfig, bn_state, train: bool,
+             collect_access: bool = False, shared_values=None):
+    """The memory-augmented subnetwork (paper section 3.1).
+
+    Returns (y, new_bn_state, access) where access is (idx, w) per query
+    when collect_access (used for Table 5 accounting), else None.
+    `shared_values` carries the §6 shared table when configured.
+    """
+    B, S, w = x.shape
+    h, n, m = cfg.lram_heads, 8, cfg.lram_m
+    z = dense(x, p["query"])  # (B, S, w) with w = 2hn
+    z2, new_state = _batch_norm(z.reshape(B * S, w), p["bn"], bn_state, train,
+                                cfg.bn_momentum)
+    zq = z2.reshape(B * S * h, 2 * n)
+    K = tuple(int(k) for k in cfg.lram_K)
+
+    # theta, inlined so we can optionally expose the accesses
+    zc = zq.reshape(zq.shape[0], n, 2)
+    mag = jnp.sqrt(jnp.sum(zc**2, axis=-1) + 1e-12)
+    ang = jnp.arctan2(zc[..., 1], zc[..., 0])
+    q = jnp.asarray(K, jnp.float32) / (2 * math.pi) * ang
+    scale = 1.0 / jnp.sum(1.0 / mag, axis=-1)
+    idx, wts = e8.lattice_lookup(
+        q, K, cfg.lram_k_top, cfg.lram_block_q, cfg.lram_use_pallas
+    )
+    values = shared_values if shared_values is not None else p["memory_values"]
+    gathered = jnp.take(values, idx, axis=0)  # (Q, k, m)
+    out = scale[:, None] * jnp.einsum("qk,qkm->qm", wts, gathered)
+
+    y = dense(out.reshape(B, S, h * m), p["out"])
+    access = (idx, wts) if collect_access else None
+    return y, new_state, access
+
+
+def pkm_ffn(x, p, cfg: ModelConfig, bn_state, train: bool,
+            collect_access: bool = False):
+    """Product-key memory baseline (Lample et al. 2019), O(sqrt N) scoring."""
+    B, S, w = x.shape
+    hd, dk, half = cfg.pkm_heads, cfg.pkm_dk, cfg.pkm_dk // 2
+    kk = cfg.pkm_topk
+    z = dense(x, p["query"])  # (B, S, hd*dk)
+    z2, new_state = _batch_norm(z.reshape(B * S, hd * dk), p["bn"], bn_state,
+                                train, cfg.bn_momentum)
+    q = z2.reshape(B * S, hd, dk)
+    q1, q2 = q[..., :half], q[..., half:]
+    s1 = jnp.einsum("qhd,hnd->qhn", q1, p["keys1"])  # (Q, hd, n_keys)
+    s2 = jnp.einsum("qhd,hnd->qhn", q2, p["keys2"])
+    t1, i1 = topk_desc(s1, kk)  # (Q, hd, kk)
+    t2, i2 = topk_desc(s2, kk)
+    # Cartesian product of the two top-k lists -> top-k overall
+    comb = t1[..., :, None] + t2[..., None, :]  # (Q, hd, kk, kk)
+    flat = comb.reshape(*comb.shape[:2], kk * kk)
+    ts, ci = topk_desc(flat, kk)  # (Q, hd, kk)
+    r1, r2 = _select_pkm_indices(i1, i2, ci, kk)
+    idx = r1 * cfg.pkm_n_keys + r2  # (Q, hd, kk) in [0, N)
+    wts = jax.nn.softmax(ts, axis=-1)
+    gathered = jnp.take(p["memory_values"], idx, axis=0)  # (Q, hd, kk, w)
+    out = jnp.einsum("qhk,qhkw->qw", wts, gathered)  # heads sum into w
+    y = out.reshape(B, S, w)
+    access = (idx.reshape(-1, kk), wts.reshape(-1, kk)) if collect_access else None
+    return y, new_state, access
+
+
+def _select_pkm_indices(i1, i2, ci, kk):
+    """Resolve the Cartesian-product winners back to codebook rows via
+    one-hot contractions (gather-free; see kernels/e8.py note)."""
+    oh1 = jax.nn.one_hot(ci // kk, kk, dtype=jnp.float32)  # (..., kk, kk)
+    oh2 = jax.nn.one_hot(ci % kk, kk, dtype=jnp.float32)
+    r1 = jnp.einsum("...kc,...c->...k", oh1, i1.astype(jnp.float32))
+    r2 = jnp.einsum("...kc,...c->...k", oh2, i2.astype(jnp.float32))
+    # indices are < n_keys <= 2^24, exactly representable in f32
+    return r1.astype(jnp.int32), r2.astype(jnp.int32)
+
+
+def ffn(x, p):
+    return dense(gelu(dense(x, p["in"])), p["out"])
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def forward(params: Params, tokens, cfg: ModelConfig, bn_state, train: bool,
+            collect_access: bool = False):
+    """tokens: (B, S) int32 -> logits (B, S, V).
+
+    Returns (logits, new_bn_state, access)."""
+    B, S = tokens.shape
+    x = params["tok_embed"][tokens] + params["pos_embed"][None, :S]
+    new_state, access = bn_state, None
+    for i in range(cfg.n_layers):
+        lp = params[f"layer_{i}"]
+        if cfg.pre_ln:
+            x = x + attention(layer_norm(x, lp["ln1"]), lp["attn"], cfg.n_heads)
+            hin = layer_norm(x, lp["ln2"])
+        else:
+            x = layer_norm(x + attention(x, lp["attn"], cfg.n_heads), lp["ln1"])
+            hin = x
+        if "lram" in lp:
+            delta, new_state, access = lram_ffn(
+                hin, lp["lram"], cfg, bn_state, train, collect_access,
+                shared_values=params.get("shared_memory_values"),
+            )
+        elif "pkm" in lp:
+            delta, new_state, access = pkm_ffn(
+                hin, lp["pkm"], cfg, bn_state, train, collect_access
+            )
+        else:
+            delta = ffn(hin, lp["ffn"])
+        if cfg.pre_ln:
+            x = x + delta
+        else:
+            x = layer_norm(x + delta, lp["ln2"])
+    x = layer_norm(x, params["final_ln"])
+    h = params["head"]
+    x = layer_norm(gelu(dense(x, h["transform"])), h["ln"])
+    if cfg.tie_embeddings:
+        logits = x @ params["tok_embed"].T + h["out_bias"]
+    else:
+        logits = dense(x, h["out"])
+    return logits, new_state, access
+
+
+def mlm_loss(logits, targets, weights):
+    """Masked cross-entropy; returns (sum_nll, sum_weight).
+
+    One-hot contraction instead of take_along_axis: batched gathers
+    miscompile on the AOT target (see kernels/e8.py) and the one-hot
+    form fuses into the softmax anyway.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logp.dtype)
+    nll = -jnp.sum(logp * onehot, axis=-1)
+    return jnp.sum(nll * weights), jnp.sum(weights)
+
+
+# ---------------------------------------------------------------------------
+# Optimiser: Adam with the paper's two learning-rate groups
+# ---------------------------------------------------------------------------
+
+
+LR_DENSE = 1e-4  # paper section 3.2
+LR_MEMORY = 1e-3  # "to compensate for sparse access"
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def init_opt_state(params: Params) -> Params:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params)}
+
+
+def _lr_tree(params: Params):
+    """Per-leaf learning rate: memory value tables get LR_MEMORY."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def leaf_lr(path):
+        names = [str(getattr(k, "key", k)) for k in path]
+        return LR_MEMORY if any("memory_values" in n for n in names) else LR_DENSE
+
+    lrs = [leaf_lr(path) for path, _ in flat]
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, lrs)
+
+
+def train_step(params, opt, bn_state, step, tokens, targets, weights,
+               cfg: ModelConfig):
+    """One Adam step; returns (params, opt, bn_state, loss)."""
+
+    def loss_fn(p):
+        logits, new_bn, _ = forward(p, tokens, cfg, bn_state, train=True)
+        s, n = mlm_loss(logits, targets, weights)
+        return s / jnp.maximum(n, 1.0), new_bn
+
+    (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    lrs = _lr_tree(params)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+
+    def upd(p, g, m, v, lr):
+        m2 = ADAM_B1 * m + (1 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+        p2 = p - lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + ADAM_EPS)
+        return p2, m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"], lrs)
+    new_params = jax.tree.map(lambda t3: t3[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}, new_bn, loss
+
+
+def eval_loss(params, bn_state, tokens, targets, weights, cfg: ModelConfig,
+              collect_access: bool = False):
+    """Returns (sum_nll, sum_weight[, idx, w]) for perplexity accounting."""
+    logits, _, access = forward(params, tokens, cfg, bn_state, train=False,
+                                collect_access=collect_access)
+    s, n = mlm_loss(logits, targets, weights)
+    if collect_access:
+        return s, n, access[0], access[1]
+    return s, n
+
+
+# ---------------------------------------------------------------------------
+# Standalone layer functions (Table 4 / Figure 3 microbenches)
+# ---------------------------------------------------------------------------
+
+
+def dense_ffn_layer(x, p):
+    """The replaced subnetwork: dense w -> 4w -> w with GELU."""
+    return dense(gelu(dense(x, p["in"])), p["out"])
+
+
+def lram_layer_prefix(x, p, cfg: ModelConfig, bn_state):
+    """Split-mode phase A: queries -> (idx, w, scale).  The gather between
+    prefix and suffix belongs to the rust memstore."""
+    B, w = x.shape
+    h, n = cfg.lram_heads, 8
+    z = dense(x, p["query"])
+    z2, _ = _batch_norm(z, p["bn"], bn_state, train=False,
+                        momentum=cfg.bn_momentum)
+    zq = z2.reshape(B * h, 2 * n)
+    zc = zq.reshape(-1, n, 2)
+    mag = jnp.sqrt(jnp.sum(zc**2, axis=-1) + 1e-12)
+    ang = jnp.arctan2(zc[..., 1], zc[..., 0])
+    K = tuple(int(k) for k in cfg.lram_K)
+    q = jnp.asarray(K, jnp.float32) / (2 * math.pi) * ang
+    scale = 1.0 / jnp.sum(1.0 / mag, axis=-1)
+    idx, wts, _ = e8.e8_lookup(q, K, cfg.lram_k_top, cfg.lram_block_q,
+                               cfg.lram_use_pallas)
+    return idx.reshape(B, h, -1), wts.reshape(B, h, -1), scale.reshape(B, h)
+
+
+def lram_layer_suffix(gathered, wts, scale, p, cfg: ModelConfig):
+    """Split-mode phase B: combine gathered rows -> layer output.
+
+    gathered: (B, h, k, m); wts: (B, h, k); scale: (B, h)."""
+    B, h = wts.shape[0], wts.shape[1]
+    out = scale[..., None] * jnp.einsum("bhk,bhkm->bhm", wts, gathered)
+    return dense(out.reshape(B, h * cfg.lram_m), p["out"])
+
+
+def pkm_layer_score(x, p, cfg: ModelConfig, bn_state):
+    """Split-mode phase A for PKM: O(sqrt N) codebook scoring -> (idx, w)."""
+    B, w = x.shape
+    hd, dk, half, kk = cfg.pkm_heads, cfg.pkm_dk, cfg.pkm_dk // 2, cfg.pkm_topk
+    z = dense(x, p["query"])
+    z2, _ = _batch_norm(z, p["bn"], bn_state, train=False,
+                        momentum=cfg.bn_momentum)
+    q = z2.reshape(B, hd, dk)
+    q1, q2 = q[..., :half], q[..., half:]
+    s1 = jnp.einsum("qhd,hnd->qhn", q1, p["keys1"])
+    s2 = jnp.einsum("qhd,hnd->qhn", q2, p["keys2"])
+    t1, i1 = topk_desc(s1, kk)
+    t2, i2 = topk_desc(s2, kk)
+    comb = t1[..., :, None] + t2[..., None, :]
+    ts, ci = topk_desc(comb.reshape(B, hd, kk * kk), kk)
+    r1, r2 = _select_pkm_indices(i1, i2, ci, kk)
+    idx = r1 * cfg.pkm_n_keys + r2
+    return idx, jax.nn.softmax(ts, axis=-1)
+
+
+def pkm_layer_combine(gathered, wts):
+    """Split-mode phase B for PKM: (B, hd, k, w) x (B, hd, k) -> (B, w)."""
+    return jnp.einsum("bhk,bhkw->bw", wts, gathered)
+
+
+def count_params(params: Params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

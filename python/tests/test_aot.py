@@ -1,0 +1,133 @@
+"""AOT export regression tests — the interchange gotchas in DESIGN.md
+("AOT interchange gotchas") must never come back."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def lower_text(fn, *specs):
+    return aot.to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def test_large_constants_are_printed():
+    """Gotcha #1: the 232x8 table must appear verbatim, never as {...}."""
+    from compile.kernels import e8
+
+    spec = jax.ShapeDtypeStruct((4, 8), jnp.float32)
+    text = lower_text(lambda q: e8.e8_lookup(q, (8,) * 8, 8, 4, False), spec)
+    assert "constant({...})" not in text, "elided constants would read back as zeros"
+    # a distinctive row of the neighbor table must be embedded
+    assert "232,8" in text
+
+
+def test_no_topk_or_sort_instructions():
+    """Gotchas #2/#3: no `topk`/`sort` ops in any lowered lookup."""
+    from compile.kernels import e8
+
+    spec = jax.ShapeDtypeStruct((4, 8), jnp.float32)
+    for use_pallas in (False, True):
+        text = lower_text(
+            lambda q: e8.e8_lookup(q, (8,) * 8, 8, 4, use_pallas), spec
+        )
+        for needle in (" topk(", "largest=", " sort("):
+            assert needle not in text, f"{needle} found (pallas={use_pallas})"
+
+
+def test_no_batched_gather_in_train_step():
+    """Gotcha #4: no operand_batching_dims gathers anywhere in training."""
+    cfg = M.ModelConfig(
+        vocab_size=256, width=64, n_layers=2, n_heads=2, seq_len=16,
+        memory="lram", mem_layer=1, lram_K=(8, 8, 8, 8, 8, 8, 4, 4),
+        lram_use_pallas=False,
+    ).validate()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = M.init_opt_state(params)
+    bn = M.init_bn_state(cfg)
+
+    def step(tokens, targets, weights):
+        return M.train_step(params, opt, bn, jnp.int32(0), tokens, targets,
+                            weights, cfg)[3]
+
+    text = lower_text(
+        step,
+        jax.ShapeDtypeStruct((2, 16), jnp.int32),
+        jax.ShapeDtypeStruct((2, 16), jnp.int32),
+        jax.ShapeDtypeStruct((2, 16), jnp.float32),
+    )
+    assert "operand_batching_dims" not in text
+
+
+def test_variants_have_expected_slot_counts():
+    vs = aot.variants(paper_scale=False)
+    assert vs["lram_small"].lram_locations == 2**14
+    assert vs["lram_medium"].lram_locations == 2**16
+    assert vs["lram_large"].lram_locations == 2**18
+    vp = aot.variants(paper_scale=True)
+    assert vp["lram_small"].lram_locations == 2**18  # paper Table 5
+    assert vp["lram_medium"].lram_locations == 2**20
+    assert vp["lram_large"].lram_locations == 2**22
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "index.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+def test_manifests_are_consistent():
+    """Every manifest: outputs >= n_state_outputs, state/input dtype tags
+    valid, hlo file exists, state bin (if referenced) matches byte size."""
+    for fname in os.listdir(ARTIFACT_DIR):
+        if not fname.endswith(".meta.json"):
+            continue
+        with open(os.path.join(ARTIFACT_DIR, fname)) as f:
+            m = json.load(f)
+        assert os.path.exists(os.path.join(ARTIFACT_DIR, m["artifact"])), fname
+        assert m["n_state_outputs"] <= len(m["outputs"]), fname
+        for spec in m["state"] + m["inputs"] + m["outputs"]:
+            assert spec["dtype"] in ("f32", "i32", "u32", "f64", "i64"), fname
+            assert all(isinstance(d, int) and d >= 0 for d in spec["shape"])
+        if m.get("variant"):
+            bin_path = os.path.join(ARTIFACT_DIR, f"{m['variant']}.state.bin")
+            if os.path.exists(bin_path):
+                expect = sum(
+                    int(np.prod(s["shape"])) * (8 if s["dtype"] in ("f64", "i64") else 4)
+                    for s in m["state"]
+                )
+                assert os.path.getsize(bin_path) == expect, fname
+
+
+@needs_artifacts
+def test_train_and_eval_manifests_share_state_layout():
+    """The trainer feeds eval with the train artifact's state: the two
+    manifests must agree on every state tensor."""
+    for variant in ("baseline", "lram_small", "pkm"):
+        with open(os.path.join(ARTIFACT_DIR, f"train_step_{variant}.meta.json")) as f:
+            train = json.load(f)
+        with open(os.path.join(ARTIFACT_DIR, f"eval_loss_{variant}.meta.json")) as f:
+            ev = json.load(f)
+        assert [s["name"] for s in train["state"]] == [s["name"] for s in ev["state"]]
+        assert [s["shape"] for s in train["state"]] == [s["shape"] for s in ev["state"]]
+
+
+@needs_artifacts
+def test_input_order_is_authored_not_sorted():
+    """Gotcha #5: tokens must come before targets in the manifests."""
+    with open(os.path.join(ARTIFACT_DIR, "eval_loss_baseline.meta.json")) as f:
+        m = json.load(f)
+    names = [s["name"] for s in m["inputs"]]
+    assert names == ["tokens", "targets", "weights"], names
+    with open(os.path.join(ARTIFACT_DIR, "train_step_baseline.meta.json")) as f:
+        m = json.load(f)
+    names = [s["name"] for s in m["inputs"]]
+    assert names == ["step", "tokens", "targets", "weights"], names

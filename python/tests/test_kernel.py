@@ -1,0 +1,230 @@
+"""L1 correctness: Pallas kernel vs the brute-force oracle.
+
+This is the CORE correctness signal for the whole stack — everything the
+rust coordinator executes flows through this kernel.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import e8, ref
+from compile.kernels import lattice_tables as lt
+
+RNG = np.random.default_rng(7)
+K8 = (8,) * 8
+K_MIX = (16, 16, 8, 8, 8, 8, 8, 8)  # 2^18 slots, paper's LRAM-small
+
+
+def queries(n, lo=-12.0, hi=12.0, rng=RNG):
+    return rng.uniform(lo, hi, size=(n, 8)).astype(np.float32)
+
+
+def oracle_pairs(q, K, k_top):
+    idx, w = ref.lookup_topk(np.asarray(q, np.float64), K, k=k_top)
+    return idx, w
+
+
+def compare_against_oracle(qs, K, k_top=32, use_pallas=True, atol=1e-4):
+    idx, w, dwdq = map(
+        np.asarray, e8.e8_lookup(jnp.asarray(qs), K, k_top, 64, use_pallas)
+    )
+    for b in range(len(qs)):
+        oid, ow = oracle_pairs(qs[b], K, k_top)
+        # weights: compare as sorted multisets (both descending)
+        np.testing.assert_allclose(w[b], ow, atol=atol, rtol=1e-4)
+        # index->weight map must agree for non-tied, nonzero weights
+        got = {}
+        for i, wi in zip(idx[b], w[b]):
+            if wi > 1e-6:
+                got[int(i)] = got.get(int(i), 0.0) + float(wi)
+        want = {}
+        for i, wi in zip(oid, ow):
+            if wi > 1e-6:
+                want[int(i)] = want.get(int(i), 0.0) + float(wi)
+        assert set(got) == set(want), f"query {b}: index sets differ"
+        for k in got:
+            assert abs(got[k] - want[k]) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+def test_pallas_matches_oracle_uniform():
+    compare_against_oracle(queries(64), K_MIX)
+
+
+def test_pallas_matches_oracle_small_torus():
+    compare_against_oracle(queries(48), K8)
+
+
+def test_pallas_matches_oracle_near_lattice_points():
+    base = lt.torus_index_inverse(
+        np.arange(24, dtype=np.int64), np.asarray(K_MIX)
+    ).astype(np.float32)
+    qs = base + RNG.normal(0, 0.05, base.shape).astype(np.float32)
+    compare_against_oracle(qs, K_MIX)
+
+
+def test_pallas_matches_oracle_large_coordinates():
+    compare_against_oracle(queries(32, lo=-200, hi=200), K_MIX)
+
+
+def test_jnp_path_equals_pallas_path():
+    qs = queries(96)
+    a = e8.e8_lookup(jnp.asarray(qs), K_MIX, 32, 32, True)
+    b = e8.e8_lookup(jnp.asarray(qs), K_MIX, 32, 32, False)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a[2]), np.asarray(b[2]), atol=1e-6)
+
+
+@pytest.mark.parametrize("k_top", [8, 16, 32, 64])
+def test_k_top_variants(k_top):
+    compare_against_oracle(queries(16), K_MIX, k_top=k_top)
+
+
+@pytest.mark.parametrize("block_q", [16, 64, 128])
+def test_batch_not_multiple_of_block(block_q):
+    qs = queries(37)
+    idx, w, _ = e8.e8_lookup(jnp.asarray(qs), K_MIX, 32, block_q, True)
+    assert idx.shape == (37, 32) and w.shape == (37, 32)
+    compare_against_oracle(qs[:8], K_MIX)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes / ranges / dtypes
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 17),
+    lo=st.floats(-100, 0),
+    span=st.floats(0.5, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_kernel_invariants_hypothesis(n, lo, span, seed):
+    rng = np.random.default_rng(seed)
+    qs = rng.uniform(lo, lo + span, size=(n, 8)).astype(np.float32)
+    idx, w, dwdq = map(
+        np.asarray, e8.e8_lookup(jnp.asarray(qs), K_MIX, 32, 32, False)
+    )
+    M = lt.num_locations(K_MIX)
+    assert ((idx >= 0) & (idx < M)).all()
+    assert (w >= 0).all() and (w <= 1 + 1e-6).all()
+    # weights descending
+    assert (np.diff(w, axis=-1) <= 1e-6).all()
+    # total weight within the paper's bounds (top-32 keeps >= 90%)
+    tot = w.sum(-1)
+    assert (tot >= 0.90 * lt.TOTAL_WEIGHT_LOWER - 1e-4).all()
+    assert (tot <= 1.0 + 1e-5).all()
+    assert np.isfinite(dwdq).all()
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_query_dtypes(dtype):
+    qs = queries(8).astype(dtype)
+    idx, w, _ = e8.e8_lookup(jnp.asarray(qs), K_MIX, 32, 32, False)
+    assert np.asarray(w).dtype == np.float32
+    compare_against_oracle(qs.astype(np.float32)[:4], K_MIX)
+
+
+# ---------------------------------------------------------------------------
+# gradients
+# ---------------------------------------------------------------------------
+
+
+def test_dwdq_matches_finite_differences():
+    qs = queries(12)
+    _, w0, dwdq = map(np.asarray, e8.e8_lookup(jnp.asarray(qs), K_MIX, 32, 32, False))
+    h = 1e-3
+    for j in range(8):
+        qp = qs.copy()
+        qp[:, j] += h
+        qm = qs.copy()
+        qm[:, j] -= h
+        _, wp, _ = e8.e8_lookup(jnp.asarray(qp), K_MIX, 32, 32, False)
+        _, wm, _ = e8.e8_lookup(jnp.asarray(qm), K_MIX, 32, 32, False)
+        fd = (np.asarray(wp) - np.asarray(wm)) / (2 * h)
+        # candidate selection can change at region boundaries; compare only
+        # entries whose weight sets moved smoothly
+        mask = np.abs(fd - dwdq[:, :, j]) < 0.05
+        frac = mask.mean()
+        assert frac > 0.97, f"coordinate {j}: only {frac:.2%} smooth matches"
+
+
+def test_phi_gradient_flows_to_queries_and_values():
+    M = lt.num_locations(K8)
+    values = jnp.asarray(RNG.normal(size=(M, 4)).astype(np.float32))
+    qs = jnp.asarray(queries(6))
+
+    def loss(q, v):
+        return jnp.sum(e8.phi(q, v, K8, 32, 32, False) ** 2)
+
+    gq, gv = jax.grad(loss, argnums=(0, 1))(qs, values)
+    assert np.isfinite(np.asarray(gq)).all()
+    assert np.asarray(gq).any(), "no gradient reached the queries"
+    assert np.isfinite(np.asarray(gv)).all()
+    assert (np.abs(np.asarray(gv)).sum(-1) > 0).sum() > 0
+
+
+def test_phi_matches_oracle_with_values():
+    K = K8
+    M = lt.num_locations(K)
+    values = RNG.normal(size=(M, 16)).astype(np.float32)
+    qs = queries(24)
+    out = np.asarray(e8.phi(jnp.asarray(qs), jnp.asarray(values), K, 32, 32, True))
+    for b in range(len(qs)):
+        want = ref.phi(qs[b].astype(np.float64), values.astype(np.float64), K, k=32)
+        np.testing.assert_allclose(out[b], want, atol=5e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# theta activation layer
+# ---------------------------------------------------------------------------
+
+
+def test_theta_positive_homogeneity():
+    """theta(l z) = l theta(z) for l >= 0 (paper section 2.3)."""
+    K = K8
+    M = lt.num_locations(K)
+    values = jnp.asarray(RNG.normal(size=(M, 8)).astype(np.float32))
+    z = jnp.asarray(RNG.normal(0, 2.0, size=(10, 16)).astype(np.float32))
+    base = np.asarray(e8.theta(z, values, K, 32, 32, False, eps=0.0))
+    for lam in (0.5, 2.0, 7.5):
+        out = np.asarray(e8.theta(lam * z, values, K, 32, 32, False, eps=0.0))
+        np.testing.assert_allclose(out, lam * base, rtol=2e-4, atol=1e-5)
+
+
+def test_theta_matches_oracle():
+    K = K8
+    M = lt.num_locations(K)
+    values = RNG.normal(size=(M, 8)).astype(np.float32)
+    z = RNG.normal(0, 2.0, size=(12, 16)).astype(np.float32)
+    out = np.asarray(
+        e8.theta(jnp.asarray(z), jnp.asarray(values), K, 32, 32, False, eps=0.0)
+    )
+    for b in range(len(z)):
+        want = ref.theta(z[b].astype(np.float64), values.astype(np.float64), K, k=32)
+        np.testing.assert_allclose(out[b], want, atol=1e-4, rtol=2e-3)
+
+
+def test_theta_gradients_finite_near_origin():
+    K = K8
+    M = lt.num_locations(K)
+    values = jnp.asarray(RNG.normal(size=(M, 8)).astype(np.float32))
+    z = jnp.asarray((RNG.normal(0, 1e-3, size=(4, 16))).astype(np.float32))
+
+    def loss(zz):
+        return jnp.sum(e8.theta(zz, values, K, 32, 32, False) ** 2)
+
+    g = np.asarray(jax.grad(loss)(z))
+    assert np.isfinite(g).all()

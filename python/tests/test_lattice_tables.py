@@ -1,0 +1,237 @@
+"""Tests for the shared lattice math (numpy reference layer)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from compile.kernels import lattice_tables as lt
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def queries(n, lo=-12.0, hi=12.0):
+    return RNG.uniform(lo, hi, size=(n, 8))
+
+
+# ---------------------------------------------------------------------------
+# quantizer
+# ---------------------------------------------------------------------------
+
+
+def test_quantizer_returns_lattice_points():
+    q = queries(500)
+    x = lt.quantize(q)
+    for row in x.astype(np.int64):
+        assert lt.is_lattice_point(row)
+
+
+def test_quantizer_is_nearest_vs_bruteforce():
+    for q in queries(150):
+        x = lt.quantize(q)
+        pts = ref.ball_points(q, r2=16.0)  # covering radius 2 => nonempty
+        assert len(pts) > 0
+        d_brute = ((pts - q[None]) ** 2).sum(-1).min()
+        d_quant = ((q - x) ** 2).sum()
+        assert d_quant <= d_brute + 1e-9
+
+
+def test_quantizer_fixed_points():
+    # lattice points quantize to themselves
+    pts = lt.neighbor_table().astype(np.float64)
+    out = lt.quantize(pts)
+    np.testing.assert_array_equal(out, pts)
+
+
+def test_covering_radius_bound():
+    q = queries(5000)
+    x = lt.quantize(q)
+    d = np.sqrt(((q - x) ** 2).sum(-1))
+    assert d.max() <= 2.0 + 1e-9  # covering radius of Lambda is 2
+
+
+@given(hnp.arrays(np.float64, (8,), elements=st.floats(-50, 50)))
+@settings(max_examples=200, deadline=None)
+def test_quantizer_translation_invariance(q):
+    """Distance to the lattice is translation-invariant.  (The returned
+    *point* may differ by tie-breaking when q is exactly equidistant to
+    several lattice points — hypothesis happily generates such boundary
+    floats — so the invariant is the distance, not the point.)"""
+    shift = np.array([4, 0, 0, 0, 0, 0, 0, 0], dtype=np.float64)  # in Lambda
+    a = lt.quantize(q)
+    b = lt.quantize(q + shift)
+    da = ((q - a) ** 2).sum()
+    db = ((q + shift - b) ** 2).sum()
+    np.testing.assert_allclose(da, db, atol=1e-9)
+    assert lt.is_lattice_point(b.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# reduction
+# ---------------------------------------------------------------------------
+
+
+def test_reduction_lands_in_F():
+    q = queries(3000)
+    _, _, _, z = lt.reduce_batch(q)
+    assert lt.in_fundamental_region(z)
+
+
+def test_reduction_is_isometry():
+    q = queries(500)
+    x0, perm, eps, z = lt.reduce_batch(q)
+    r = q - x0
+    rs = np.take_along_axis(r, perm, axis=-1)
+    np.testing.assert_allclose(np.abs(eps * rs), np.abs(z), atol=1e-12)
+    np.testing.assert_allclose(
+        (z**2).sum(-1), (r**2).sum(-1), atol=1e-9
+    )
+
+
+def test_reduction_even_sign_changes():
+    q = queries(2000)
+    _, _, eps, _ = lt.reduce_batch(q)
+    assert (np.prod(eps, axis=-1) == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# neighbour table
+# ---------------------------------------------------------------------------
+
+
+def test_neighbor_table_has_232_points():
+    nbr = lt.neighbor_table()
+    assert nbr.shape == (232, 8)
+    # all are lattice points, all within sqrt(24) of the origin
+    for row in nbr:
+        assert lt.is_lattice_point(row)
+    assert ((nbr**2).sum(-1) <= 24).all()
+    # no duplicates
+    assert len({tuple(r) for r in nbr}) == 232
+
+
+def test_neighbor_table_covers_bruteforce_ball():
+    """Candidates found through the reduction must equal the brute-force
+    enumeration of lattice points within sqrt(8) of q."""
+    for q in queries(100):
+        u, d2 = lt.candidates_for(q)
+        got = {
+            tuple(map(int, u[0, i]))
+            for i in range(u.shape[1])
+            if d2[0, i] < 8.0 - 1e-9
+        }
+        want = {tuple(p) for p in ref.ball_points(q, r2=8.0 - 1e-9)}
+        assert got == want
+
+
+def test_candidate_distances_match_original_frame():
+    q = queries(200)
+    u, d2 = lt.candidates_for(q)
+    d2_direct = ((q[:, None, :] - u) ** 2).sum(-1)
+    np.testing.assert_allclose(d2, d2_direct, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# kernel
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_support_and_smoothness():
+    r2 = np.linspace(0, 12, 200)
+    f = lt.kernel_f(r2)
+    assert f[0] == 1.0
+    assert (f[r2 >= 8.0] == 0.0).all()
+    assert (np.diff(f) <= 1e-12).all()  # monotone decreasing in r^2
+
+
+def test_interpolation_property():
+    """phi(k) = v_k at lattice points (paper section 2.5)."""
+    K = (8,) * 8
+    M = lt.num_locations(K)
+    values = RNG.normal(size=(M, 4))
+    for _ in range(20):
+        i = int(RNG.integers(0, M))
+        x = lt.torus_index_inverse(np.int64(i), np.asarray(K)).astype(np.float64)
+        out = ref.phi(x, values, K, k=None)
+        np.testing.assert_allclose(out, values[i], atol=1e-9)
+
+
+def test_total_weight_bounds():
+    """Paper section 2.5: 0.851 <= total weight <= 1."""
+    q = queries(5000)
+    _, d2 = lt.candidates_for(q)
+    w = lt.kernel_f(d2).sum(-1)
+    assert w.min() >= lt.TOTAL_WEIGHT_LOWER - 1e-9
+    assert w.max() <= 1.0 + 1e-9
+
+
+def test_total_weight_is_one_at_lattice_points_and_deep_holes():
+    # lattice point
+    _, d2 = lt.candidates_for(np.zeros((1, 8)))
+    assert abs(lt.kernel_f(d2).sum() - 1.0) < 1e-12
+    # a deep hole of Lambda: distance 2 from nearest point, e.g. (1,...,1,-1)
+    hole = np.array([[1.0, 1, 1, 1, 1, 1, 1, -1]])
+    x0 = lt.quantize(hole)
+    assert abs(((hole - x0) ** 2).sum() - 4.0) < 1e-9  # dist 2 = covering radius
+    _, d2 = lt.candidates_for(hole)
+    assert abs(lt.kernel_f(d2).sum() - 1.0) < 1e-6
+
+
+def test_top32_weight_mass():
+    """Paper: top-32 of the 232 candidates carry >= 90% of the weight."""
+    q = queries(2000)
+    _, d2 = lt.candidates_for(q)
+    w = lt.kernel_f(d2)
+    w_sorted = -np.sort(-w, axis=-1)
+    frac = w_sorted[:, :32].sum(-1) / w.sum(-1)
+    assert frac.min() >= 0.90
+    assert frac.mean() >= 0.995 - 0.002
+
+
+# ---------------------------------------------------------------------------
+# torus indexing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "K",
+    [
+        (8,) * 8,
+        (4,) * 8,
+        (16, 16, 8, 8, 8, 8, 8, 8),
+        (12, 8, 8, 8, 4, 4, 8, 8),
+    ],
+)
+def test_torus_index_bijection(K):
+    Kv = np.asarray(K)
+    M = lt.num_locations(Kv)
+    idx = np.arange(M, dtype=np.int64)
+    x = lt.torus_index_inverse(idx, Kv)
+    # representatives are lattice points
+    par = ((x % 2) + 2) % 2
+    assert (par == par[..., :1]).all()
+    assert (x.sum(-1) % 4 == 0).all()
+    back = lt.torus_index(x, Kv)
+    np.testing.assert_array_equal(back, idx)
+
+
+def test_torus_index_L_K_invariance():
+    K = np.asarray((8, 8, 8, 8, 16, 8, 8, 4))
+    for _ in range(500):
+        q = RNG.uniform(-30, 30, 8)
+        x = lt.quantize(q).astype(np.int64)
+        j = lt.torus_index(x, K)
+        shift = K * RNG.integers(-3, 4, size=8)
+        assert lt.torus_index(x + shift, K) == j
+        assert 0 <= j < lt.num_locations(K)
+
+
+def test_num_locations_paper_sizes():
+    # paper Table 5: LRAM-small/medium/large have 2^18 / 2^20 / 2^22 slots
+    assert lt.num_locations((16, 16, 8, 8, 8, 8, 8, 8)) == 2**18
+    assert lt.num_locations((16, 16, 16, 16, 8, 8, 8, 8)) == 2**20
+    assert lt.num_locations((16,) * 6 + (8, 8)) == 2**22

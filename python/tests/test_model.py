@@ -1,0 +1,233 @@
+"""L2 model tests: shapes, training dynamics, scaling formulas (Table 3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.lattice_tables import num_locations
+
+RNG = np.random.default_rng(3)
+
+SMALL = dict(vocab_size=512, width=64, n_layers=2, n_heads=2, seq_len=32)
+
+
+def cfg_for(memory, **kw):
+    base = dict(SMALL, mem_layer=1)
+    if memory == "lram":
+        base.update(lram_K=(8, 8, 8, 8, 8, 8, 8, 4), mem_layer=1)
+    if memory == "pkm":
+        base.update(pkm_n_keys=16, pkm_heads=2, pkm_topk=8, mem_layer=1)
+    base.update(kw)
+    return M.ModelConfig(memory=memory, **base).validate()
+
+
+def batch_for(cfg, B=2, rng=RNG):
+    tokens = rng.integers(0, cfg.vocab_size, (B, cfg.seq_len)).astype(np.int32)
+    targets = tokens.copy()
+    weights = (rng.random((B, cfg.seq_len)) < 0.15).astype(np.float32)
+    return jnp.asarray(tokens), jnp.asarray(targets), jnp.asarray(weights)
+
+
+@pytest.mark.parametrize("memory", ["none", "lram", "pkm"])
+def test_forward_shapes(memory):
+    cfg = cfg_for(memory, lram_use_pallas=False)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    bn = M.init_bn_state(cfg)
+    tokens, _, _ = batch_for(cfg)
+    logits, new_bn, _ = M.forward(params, tokens, cfg, bn, train=True)
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("memory", ["none", "lram", "pkm"])
+def test_train_step_reduces_loss(memory):
+    """A few steps on one repeated batch must reduce the loss."""
+    cfg = cfg_for(memory, lram_use_pallas=False)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = M.init_opt_state(params)
+    bn = M.init_bn_state(cfg)
+    tokens, targets, weights = batch_for(cfg, B=4)
+
+    step_fn = jax.jit(
+        lambda p, o, b, s: M.train_step(p, o, b, s, tokens, targets, weights, cfg)
+    )
+    losses = []
+    for i in range(8):
+        params, opt, bn, loss = step_fn(params, opt, bn, jnp.int32(i))
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_memory_values_receive_sparse_updates():
+    cfg = cfg_for("lram", lram_use_pallas=False)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = M.init_opt_state(params)
+    bn = M.init_bn_state(cfg)
+    tokens, targets, weights = batch_for(cfg, B=2)
+    before = np.asarray(params[f"layer_{cfg.mem_layer}"]["lram"]["memory_values"]).copy()
+    params2, *_ = M.train_step(params, opt, bn, jnp.int32(0), tokens, targets,
+                               weights, cfg)
+    after = np.asarray(params2[f"layer_{cfg.mem_layer}"]["lram"]["memory_values"])
+    changed = (np.abs(after - before).sum(-1) > 0).mean()
+    assert 0 < changed < 1.0, f"expected sparse row updates, changed={changed:.2%}"
+
+
+def test_eval_loss_collects_access():
+    cfg = cfg_for("lram", lram_use_pallas=False)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    bn = M.init_bn_state(cfg)
+    tokens, targets, weights = batch_for(cfg)
+    s, n, idx, w = M.eval_loss(params, bn, tokens, targets, weights, cfg,
+                               collect_access=True)
+    Q = 2 * cfg.seq_len * cfg.lram_heads
+    assert idx.shape == (Q, cfg.lram_k_top)
+    assert w.shape == (Q, cfg.lram_k_top)
+    M_loc = num_locations(cfg.lram_K)
+    assert ((np.asarray(idx) >= 0) & (np.asarray(idx) < M_loc)).all()
+
+
+def test_bn_running_stats_update():
+    cfg = cfg_for("lram", lram_use_pallas=False)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    bn = M.init_bn_state(cfg)
+    tokens, targets, weights = batch_for(cfg)
+    _, _, bn2, _ = M.train_step(params, M.init_opt_state(params), bn,
+                                jnp.int32(0), tokens, targets, weights, cfg)
+    assert not np.allclose(np.asarray(bn2["mean"]), np.asarray(bn["mean"]))
+
+
+# ---------------------------------------------------------------------------
+# Table 3: parameter-count formulas
+# ---------------------------------------------------------------------------
+
+
+def _layer_param_count(cfg, kind):
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    lp = params[f"layer_{cfg.mem_layer}"]
+    return M.count_params(lp[kind])
+
+
+def test_table3_dense_params():
+    """Dense 2-layer: 2 r w^2 (+ O(w) biases)."""
+    cfg = cfg_for("none")
+    w, r = cfg.width, cfg.ffn_mult
+    got = _layer_param_count(cfg, "ffn")
+    assert abs(got - 2 * r * w * w) <= (r + 1) * w + w
+
+
+def test_table3_lram_params():
+    """LRAM: m N + (5/4) r w^2 (+ O(w))."""
+    cfg = cfg_for("lram")
+    w, r = cfg.width, cfg.ffn_mult
+    N = num_locations(cfg.lram_K)
+    got = _layer_param_count(cfg, "lram")
+    expect = cfg.lram_m * N + (5 * r // 4) * w * w
+    assert abs(got - expect) <= 10 * w
+
+
+def test_table3_pkm_params():
+    """PKM: m N + 2 w sqrt(N)-ish keys + w^2-ish query net."""
+    cfg = cfg_for("pkm")
+    w = cfg.width
+    got = _layer_param_count(cfg, "pkm")
+    N = cfg.pkm_n
+    keys = 2 * cfg.pkm_heads * cfg.pkm_n_keys * (cfg.pkm_dk // 2)
+    query = w * cfg.pkm_heads * cfg.pkm_dk
+    expect = w * N + keys + query
+    assert abs(got - expect) <= 10 * (w + cfg.pkm_heads * cfg.pkm_dk)
+
+
+def test_paper_geometry_param_counts():
+    """At the paper's w=512 geometry the LRAM layer sizes line up with
+    Table 2's deltas (memory table dominates)."""
+    cfg = M.ModelConfig(
+        vocab_size=512, width=512, n_layers=1, n_heads=8, seq_len=16,
+        memory="lram", mem_layer=0, lram_K=(16, 16, 8, 8, 8, 8, 8, 8),
+    ).validate()
+    assert cfg.lram_heads == 32
+    assert cfg.lram_heads * 16 == 512  # 2hn = w
+    assert cfg.lram_heads * cfg.lram_m == 4 * 512  # hm = 4w
+    assert num_locations(cfg.lram_K) == 2**18
+    # paper: LRAM-small adds ~16M params (2^18 * 64)
+    assert cfg.lram_m * num_locations(cfg.lram_K) == 2**18 * 64
+
+
+def test_pre_ln_and_post_ln_both_run():
+    for pre in (True, False):
+        cfg = cfg_for("none", pre_ln=pre)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        tokens, _, _ = batch_for(cfg)
+        logits, _, _ = M.forward(params, tokens, cfg, M.init_bn_state(cfg),
+                                 train=False)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_tied_embeddings():
+    cfg = cfg_for("none", tie_embeddings=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    assert "out" not in params["head"]
+    tokens, _, _ = batch_for(cfg)
+    logits, _, _ = M.forward(params, tokens, cfg, M.init_bn_state(cfg),
+                             train=False)
+    assert logits.shape[-1] == cfg.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# Paper section 6 (future work): shared memory across layers
+# ---------------------------------------------------------------------------
+
+
+def shared_cfg():
+    return M.ModelConfig(
+        memory="lram", mem_layers=(0, 1), lram_K=(8, 8, 8, 8, 8, 8, 8, 4),
+        lram_use_pallas=False, **SMALL,
+    ).validate()
+
+
+def test_shared_memory_single_table():
+    cfg = shared_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    assert "shared_memory_values" in params
+    for i in (0, 1):
+        lp = params[f"layer_{i}"]
+        assert "lram" in lp and "memory_values" not in lp["lram"]
+    # parameter saving vs two private tables
+    import numpy as np
+    table = int(np.prod(params["shared_memory_values"].shape))
+    assert table == cfg.lram_locations * cfg.lram_m
+
+
+def test_shared_memory_forward_and_training():
+    cfg = shared_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = M.init_opt_state(params)
+    bn = M.init_bn_state(cfg)
+    tokens, targets, weights = batch_for(cfg, B=2)
+    logits, _, _ = M.forward(params, tokens, cfg, bn, train=True)
+    assert np.isfinite(np.asarray(logits)).all()
+    p2, _, _, loss = M.train_step(params, opt, bn, jnp.int32(0), tokens,
+                                  targets, weights, cfg)
+    assert np.isfinite(float(loss))
+    # the shared table receives gradient from BOTH layers
+    before = np.asarray(params["shared_memory_values"])
+    after = np.asarray(p2["shared_memory_values"])
+    assert (before != after).any()
+
+
+def test_shared_memory_loss_decreases():
+    cfg = shared_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = M.init_opt_state(params)
+    bn = M.init_bn_state(cfg)
+    tokens, targets, weights = batch_for(cfg, B=4)
+    step_fn = jax.jit(
+        lambda p, o, b, s: M.train_step(p, o, b, s, tokens, targets, weights, cfg)
+    )
+    losses = []
+    for i in range(8):
+        params, opt, bn, loss = step_fn(params, opt, bn, jnp.int32(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.05, losses

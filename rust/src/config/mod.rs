@@ -1,0 +1,154 @@
+//! Run configuration: JSON config files + CLI overrides.
+//!
+//! (The classic `.toml` config crate is unavailable offline; configs are
+//! JSON documents parsed with `util::json` — same shape as the manifests.)
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// Training-run configuration for the coordinator.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Variant name: baseline | lram_small | lram_medium | lram_large | pkm.
+    pub variant: String,
+    pub artifact_dir: String,
+    pub run_dir: String,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    /// Synthetic-corpus generator settings.
+    pub corpus_seed: u64,
+    pub vocab_size: usize,
+    pub mask_prob: f64,
+    /// Paragraphs in each split (train is streamed, val/test materialised).
+    pub val_paragraphs: usize,
+    pub test_paragraphs: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            variant: "lram_small".into(),
+            artifact_dir: "artifacts".into(),
+            run_dir: "runs/default".into(),
+            steps: 300,
+            eval_every: 50,
+            eval_batches: 8,
+            corpus_seed: 1234,
+            vocab_size: 4096,
+            mask_prob: 0.15,
+            val_paragraphs: 512,
+            test_paragraphs: 512,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut c = TrainConfig::default();
+        let get_s = |k: &str, d: &str| -> String {
+            v.get(k).and_then(Json::as_str).unwrap_or(d).to_string()
+        };
+        c.variant = get_s("variant", &c.variant);
+        c.artifact_dir = get_s("artifact_dir", &c.artifact_dir);
+        c.run_dir = get_s("run_dir", &c.run_dir);
+        let get_u = |k: &str, d: u64| v.get(k).and_then(Json::as_i64).map(|x| x as u64).unwrap_or(d);
+        c.steps = get_u("steps", c.steps);
+        c.eval_every = get_u("eval_every", c.eval_every);
+        c.eval_batches = get_u("eval_batches", c.eval_batches);
+        c.corpus_seed = get_u("corpus_seed", c.corpus_seed);
+        c.vocab_size = get_u("vocab_size", c.vocab_size as u64) as usize;
+        c.mask_prob = v.get("mask_prob").and_then(Json::as_f64).unwrap_or(c.mask_prob);
+        c.val_paragraphs = get_u("val_paragraphs", c.val_paragraphs as u64) as usize;
+        c.test_paragraphs = get_u("test_paragraphs", c.test_paragraphs as u64) as usize;
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    /// Apply `--key value` CLI overrides on top of the file config.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.flags.get("variant") {
+            self.variant = v.clone();
+        }
+        if let Some(v) = args.flags.get("artifacts") {
+            self.artifact_dir = v.clone();
+        }
+        if let Some(v) = args.flags.get("run-dir") {
+            self.run_dir = v.clone();
+        }
+        self.steps = args.u64("steps", self.steps)?;
+        self.eval_every = args.u64("eval-every", self.eval_every)?;
+        self.eval_batches = args.u64("eval-batches", self.eval_batches)?;
+        self.corpus_seed = args.u64("corpus-seed", self.corpus_seed)?;
+        self.mask_prob = args.f64("mask-prob", self.mask_prob)?;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        const VARIANTS: &[&str] = &[
+            "baseline", "lram_small", "lram_medium", "lram_large", "pkm",
+            "lram_shared", "tiny_lram",
+        ];
+        if !VARIANTS.contains(&self.variant.as_str()) {
+            return Err(anyhow!(
+                "unknown variant '{}' (expected one of {VARIANTS:?})",
+                self.variant
+            ));
+        }
+        if !(0.0..1.0).contains(&self.mask_prob) {
+            return Err(anyhow!("mask_prob must be in [0, 1)"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_json_overrides() {
+        let v = json::parse(
+            r#"{"variant": "pkm", "steps": 42, "mask_prob": 0.2, "run_dir": "runs/x"}"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.variant, "pkm");
+        assert_eq!(c.steps, 42);
+        assert_eq!(c.mask_prob, 0.2);
+        assert_eq!(c.run_dir, "runs/x");
+        assert_eq!(c.eval_every, 50); // default preserved
+    }
+
+    #[test]
+    fn rejects_unknown_variant() {
+        let mut c = TrainConfig::default();
+        c.variant = "bogus".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let mut c = TrainConfig::default();
+        let args = Args::parse_from(
+            ["--steps", "7", "--variant", "baseline"].iter().map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.steps, 7);
+        assert_eq!(c.variant, "baseline");
+    }
+}

@@ -1,0 +1,65 @@
+//! Evaluation: perplexity over the validation/test splits, plus the
+//! memory-access accounting behind Table 5.
+
+use anyhow::Result;
+
+use crate::data::DataPipeline;
+use crate::memstore::AccessStats;
+use crate::metrics::Perplexity;
+use crate::runtime::{Artifact, ArtifactState, HostTensor};
+
+/// Aggregated evaluation results.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub perplexity: f64,
+    pub mean_nll: f64,
+    pub batches: u64,
+    pub masked_tokens: f64,
+    /// Memory utilisation % and KL(access || uniform), when the artifact
+    /// exposes accesses (LRAM / PKM variants).
+    pub utilization: Option<f64>,
+    pub kl_divergence: Option<f64>,
+}
+
+/// Run the eval artifact over `n_batches` of the chosen split.
+pub fn evaluate(
+    eval_art: &Artifact,
+    state: &mut ArtifactState,
+    pipeline: &DataPipeline,
+    n_batches: u64,
+    test: bool,
+) -> Result<EvalReport> {
+    let mut ppl = Perplexity::default();
+    let locations = eval_art.manifest.locations;
+    let mut stats = locations.map(AccessStats::new);
+    for bi in 0..n_batches {
+        let batch = if test { pipeline.test_batch(bi) } else { pipeline.val_batch(bi) };
+        let (b, s) = (batch.b, batch.s);
+        let inputs = vec![
+            HostTensor::I32(batch.tokens, vec![b, s]),
+            HostTensor::I32(batch.targets, vec![b, s]),
+            HostTensor::F32(batch.weights, vec![b, s]),
+        ];
+        let results = eval_art.call(state, &inputs)?;
+        let sum_nll = results[0].as_f32()?[0] as f64;
+        let sum_w = results[1].as_f32()?[0] as f64;
+        ppl.add(sum_nll, sum_w);
+        if eval_art.manifest.access_outputs {
+            if let Some(st) = stats.as_mut() {
+                let idx = results[2].as_i32()?;
+                let wts = results[3].as_f32()?;
+                for (&i, &w) in idx.iter().zip(wts) {
+                    st.record(i as u64, w as f64);
+                }
+            }
+        }
+    }
+    Ok(EvalReport {
+        perplexity: ppl.value(),
+        mean_nll: ppl.mean_nll(),
+        batches: n_batches,
+        masked_tokens: ppl.sum_weight,
+        utilization: stats.as_ref().map(|s| s.utilization()),
+        kl_divergence: stats.as_ref().map(|s| s.kl_from_uniform()),
+    })
+}

@@ -1,0 +1,9 @@
+//! The L3 coordinator: drives training and evaluation over the AOT
+//! artifacts, owns checkpoints and run logs.  Python never runs here —
+//! the compiled HLO plus the rust data pipeline is the whole loop.
+
+mod eval;
+mod trainer;
+
+pub use eval::{evaluate, EvalReport};
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,160 @@
+//! Training loop: data pipeline -> train-step artifact -> metrics.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::synth::CorpusSpec;
+use crate::data::DataPipeline;
+use crate::metrics::RunLog;
+use crate::runtime::{Artifact, ArtifactState, HostTensor, Runtime};
+
+use super::eval::{evaluate, EvalReport};
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub variant: String,
+    pub steps: u64,
+    pub final_train_loss: f64,
+    pub best_val_ppl: f64,
+    pub final_val: EvalReport,
+    pub wall_secs: f64,
+    pub run_dir: PathBuf,
+}
+
+/// The coordinator's trainer: owns artifact state + pipeline + logs.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    runtime: std::sync::Arc<Runtime>,
+    train_art: std::sync::Arc<Artifact>,
+    eval_art: std::sync::Arc<Artifact>,
+    state: ArtifactState,
+    pipeline: DataPipeline,
+    step: u64,
+}
+
+impl Trainer {
+    pub fn new(runtime: std::sync::Arc<Runtime>, cfg: TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        let train_art = runtime.load(&format!("train_step_{}", cfg.variant))?;
+        let eval_art = runtime.load(&format!("eval_loss_{}", cfg.variant))?;
+        let state = train_art.initial_state().context("loading initial state")?;
+        let b = train_art.manifest.batch.b;
+        let s = train_art.manifest.batch.s;
+        let spec = CorpusSpec { seed: cfg.corpus_seed, ..CorpusSpec::default() };
+        let pipeline = DataPipeline::new(spec, cfg.vocab_size, s, b, cfg.mask_prob)?;
+        Ok(Trainer { cfg, runtime, train_art, eval_art, state, pipeline, step: 0 })
+    }
+
+    pub fn pipeline(&self) -> &DataPipeline {
+        &self.pipeline
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Run one training step; returns the loss.
+    pub fn train_step(&mut self) -> Result<f64> {
+        let batch = self.pipeline.train_batch(self.step);
+        let b = batch.b;
+        let s = batch.s;
+        let inputs = vec![
+            HostTensor::scalar_i32(self.step as i32),
+            HostTensor::I32(batch.tokens, vec![b, s]),
+            HostTensor::I32(batch.targets, vec![b, s]),
+            HostTensor::F32(batch.weights, vec![b, s]),
+        ];
+        let results = self.train_art.step(&mut self.state, &inputs)?;
+        self.step += 1;
+        Ok(results[0].as_f32()?[0] as f64)
+    }
+
+    /// Evaluate on the validation split using the shared state.
+    pub fn evaluate_val(&mut self) -> Result<EvalReport> {
+        evaluate(
+            &self.eval_art,
+            &mut self.state,
+            &self.pipeline,
+            self.cfg.eval_batches,
+            /* test = */ false,
+        )
+    }
+
+    pub fn evaluate_test(&mut self) -> Result<EvalReport> {
+        evaluate(
+            &self.eval_art,
+            &mut self.state,
+            &self.pipeline,
+            self.cfg.eval_batches,
+            /* test = */ true,
+        )
+    }
+
+    /// Save the current state as a checkpoint.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let bytes = self.state.to_bytes(&self.train_art.manifest)?;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let bytes = std::fs::read(path)?;
+        self.state = ArtifactState::from_bytes(&self.train_art.manifest, &bytes)?;
+        Ok(())
+    }
+
+    /// Full training run with periodic validation (Figure 2's curves land
+    /// in `<run_dir>/valcurve.csv`).
+    pub fn run(&mut self) -> Result<TrainOutcome> {
+        let run_dir = PathBuf::from(&self.cfg.run_dir);
+        std::fs::create_dir_all(&run_dir)?;
+        let mut curve = RunLog::new(run_dir.join("valcurve.csv"), "step,val_ppl,train_loss");
+        let mut losses = RunLog::new(run_dir.join("trainloss.csv"), "step,loss");
+        let t0 = Instant::now();
+        let mut best_ppl = f64::INFINITY;
+        let mut last_loss = f64::NAN;
+        for i in 0..self.cfg.steps {
+            let loss = self.train_step()?;
+            last_loss = loss;
+            losses.push(format!("{},{:.6}", i, loss));
+            if (i + 1) % self.cfg.eval_every == 0 || i + 1 == self.cfg.steps {
+                let report = self.evaluate_val()?;
+                best_ppl = best_ppl.min(report.perplexity);
+                curve.push(format!("{},{:.4},{:.6}", i + 1, report.perplexity, loss));
+                log::info!(
+                    "[{}] step {}/{} loss {:.4} val_ppl {:.2} ({:.1}s)",
+                    self.cfg.variant,
+                    i + 1,
+                    self.cfg.steps,
+                    loss,
+                    report.perplexity,
+                    t0.elapsed().as_secs_f64()
+                );
+                curve.flush()?;
+                losses.flush()?;
+            }
+        }
+        let final_val = self.evaluate_val()?;
+        best_ppl = best_ppl.min(final_val.perplexity);
+        curve.flush()?;
+        losses.flush()?;
+        self.save_checkpoint(&run_dir.join("final.ckpt"))?;
+        let _ = &self.runtime; // keep the client alive for the whole run
+        Ok(TrainOutcome {
+            variant: self.cfg.variant.clone(),
+            steps: self.cfg.steps,
+            final_train_loss: last_loss,
+            best_val_ppl: best_ppl,
+            final_val,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            run_dir,
+        })
+    }
+}

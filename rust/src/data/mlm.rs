@@ -1,0 +1,122 @@
+//! BERT-style masked-language-model corruption (paper §3: MLM objective).
+//!
+//! 15% of content positions are selected; of those 80% become `[MASK]`,
+//! 10% a random token, 10% stay unchanged (the standard 80/10/10 recipe).
+//! `weights` marks the selected positions for the loss.
+
+use crate::tokenizer::{MASK_ID, PAD_ID};
+use crate::util::rng::Rng;
+
+/// One masked training example.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskedExample {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub weights: Vec<f32>,
+}
+
+/// Number of reserved special ids that must never be predicted targets or
+/// random replacements.
+const N_SPECIALS: i32 = 5;
+
+/// Apply MLM corruption to a token sequence.
+pub fn mask_tokens(
+    ids: &[i32],
+    vocab_size: i32,
+    mask_prob: f64,
+    rng: &mut Rng,
+) -> MaskedExample {
+    let mut tokens = ids.to_vec();
+    let targets = ids.to_vec();
+    let mut weights = vec![0.0f32; ids.len()];
+    for i in 0..ids.len() {
+        if ids[i] < N_SPECIALS {
+            continue; // never mask specials (incl. padding)
+        }
+        if rng.f64() >= mask_prob {
+            continue;
+        }
+        weights[i] = 1.0;
+        let r = rng.f64();
+        if r < 0.8 {
+            tokens[i] = MASK_ID;
+        } else if r < 0.9 {
+            tokens[i] = N_SPECIALS + rng.below((vocab_size - N_SPECIALS) as u64) as i32;
+        } // else: keep original
+    }
+    MaskedExample { tokens, targets, weights }
+}
+
+/// Pad/truncate a token sequence to exactly `seq_len`.
+pub fn fit_length(mut ids: Vec<i32>, seq_len: usize) -> Vec<i32> {
+    ids.truncate(seq_len);
+    while ids.len() < seq_len {
+        ids.push(PAD_ID);
+    }
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn masking_statistics() {
+        let mut rng = Rng::new(1);
+        let ids: Vec<i32> = (0..20000).map(|i| 5 + (i % 100)).collect();
+        let ex = mask_tokens(&ids, 4096, 0.15, &mut rng);
+        let n_sel = ex.weights.iter().filter(|&&w| w > 0.0).count();
+        let frac = n_sel as f64 / ids.len() as f64;
+        assert!((frac - 0.15).abs() < 0.01, "selected {frac}");
+        // among selected: ~80% MASK
+        let n_mask = ex
+            .tokens
+            .iter()
+            .zip(&ex.weights)
+            .filter(|(&t, &w)| w > 0.0 && t == MASK_ID)
+            .count();
+        let mask_frac = n_mask as f64 / n_sel as f64;
+        assert!((mask_frac - 0.8).abs() < 0.03, "mask frac {mask_frac}");
+    }
+
+    #[test]
+    fn targets_always_keep_originals() {
+        forall(50, |rng| {
+            let ids: Vec<i32> = (0..64).map(|_| rng.range(5, 500) as i32).collect();
+            let ex = mask_tokens(&ids, 512, 0.3, rng);
+            assert_eq!(ex.targets, ids);
+            // unselected positions are unchanged
+            for i in 0..ids.len() {
+                if ex.weights[i] == 0.0 {
+                    assert_eq!(ex.tokens[i], ids[i]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn specials_never_masked() {
+        let mut rng = Rng::new(3);
+        let ids = vec![0, 1, 2, 3, 4, 0, 0, 0];
+        let ex = mask_tokens(&ids, 512, 0.99, &mut rng);
+        assert!(ex.weights.iter().all(|&w| w == 0.0));
+        assert_eq!(ex.tokens, ids);
+    }
+
+    #[test]
+    fn random_replacements_are_valid_tokens() {
+        let mut rng = Rng::new(7);
+        let ids: Vec<i32> = vec![100; 5000];
+        let ex = mask_tokens(&ids, 512, 0.5, &mut rng);
+        for &t in &ex.tokens {
+            assert!((0..512).contains(&t));
+        }
+    }
+
+    #[test]
+    fn fit_length_pads_and_truncates() {
+        assert_eq!(fit_length(vec![9, 9, 9], 5), vec![9, 9, 9, 0, 0]);
+        assert_eq!(fit_length(vec![1, 2, 3, 4], 2), vec![1, 2]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Data pipeline: synthetic corpus -> BPE -> masked batches.
+//!
+//! Split discipline follows the paper (§3.3): the stream of paragraph
+//! indices is partitioned deterministically into train / validation /
+//! test, so no validation paragraph is ever trained on.
+
+pub mod mlm;
+pub mod synth;
+
+use anyhow::Result;
+
+use crate::tokenizer::{Bpe, BpeTrainer, CLS_ID, SEP_ID};
+use crate::util::rng::Rng;
+use mlm::{fit_length, mask_tokens, MaskedExample};
+use synth::{CorpusSpec, SynthCorpus};
+
+/// A batch in the exact layout the train/eval artifacts expect.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>,  // B * S
+    pub targets: Vec<i32>, // B * S
+    pub weights: Vec<f32>, // B * S
+    pub b: usize,
+    pub s: usize,
+}
+
+/// End-to-end pipeline: owns the corpus, the tokenizer and the split map.
+pub struct DataPipeline {
+    pub corpus: SynthCorpus,
+    pub bpe: Bpe,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub mask_prob: f64,
+    vocab_size: i32,
+    val_offset: u64,
+    test_offset: u64,
+}
+
+/// Paragraph-index ranges: validation and test take fixed prefixes of the
+/// stream, training takes everything after.
+const VAL_BASE: u64 = 0;
+const TEST_BASE: u64 = 1 << 20;
+const TRAIN_BASE: u64 = 1 << 21;
+
+impl DataPipeline {
+    /// Build the pipeline: generate a BPE training sample from the corpus
+    /// and train the tokenizer to `vocab_size`.
+    pub fn new(
+        spec: CorpusSpec,
+        vocab_size: usize,
+        seq_len: usize,
+        batch_size: usize,
+        mask_prob: f64,
+    ) -> Result<Self> {
+        let corpus = SynthCorpus::new(spec);
+        let mut trainer = BpeTrainer::new();
+        // BPE sample: a deterministic slice of the *training* stream
+        for i in 0..400 {
+            trainer.add_text(&corpus.paragraph(TRAIN_BASE + i));
+        }
+        let bpe = trainer.train(vocab_size);
+        Ok(DataPipeline {
+            corpus,
+            bpe,
+            seq_len,
+            batch_size,
+            mask_prob,
+            vocab_size: vocab_size as i32,
+            val_offset: VAL_BASE,
+            test_offset: TEST_BASE,
+        })
+    }
+
+    /// Encode one paragraph into a fixed-length `[CLS] ... [SEP]` row.
+    pub fn encode_paragraph(&self, index: u64) -> Vec<i32> {
+        let text = self.corpus.paragraph(index);
+        let mut ids = vec![CLS_ID];
+        ids.extend(self.bpe.encode(&text));
+        ids.truncate(self.seq_len - 1);
+        ids.push(SEP_ID);
+        fit_length(ids, self.seq_len)
+    }
+
+    fn build_batch(&self, base: u64, batch_idx: u64, seed_salt: u64) -> Batch {
+        let b = self.batch_size;
+        let s = self.seq_len;
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut targets = Vec::with_capacity(b * s);
+        let mut weights = Vec::with_capacity(b * s);
+        for row in 0..b {
+            let pidx = base + batch_idx * b as u64 + row as u64;
+            let ids = self.encode_paragraph(pidx);
+            let mut rng = Rng::new(seed_salt ^ pidx.wrapping_mul(0x2545F4914F6CDD1D));
+            let MaskedExample { tokens: t, targets: g, weights: w } =
+                mask_tokens(&ids, self.vocab_size, self.mask_prob, &mut rng);
+            tokens.extend(t);
+            targets.extend(g);
+            weights.extend(w);
+        }
+        Batch { tokens, targets, weights, b, s }
+    }
+
+    /// Training batch for a global step (fresh paragraphs every step —
+    /// the underfitting regime of the paper).
+    pub fn train_batch(&self, step: u64) -> Batch {
+        self.build_batch(TRAIN_BASE, step, 0xA11CE)
+    }
+
+    /// Deterministic validation batch (masking fixed by the batch index).
+    pub fn val_batch(&self, batch_idx: u64) -> Batch {
+        self.build_batch(self.val_offset, batch_idx, 0x5A17)
+    }
+
+    /// Deterministic test batch.
+    pub fn test_batch(&self, batch_idx: u64) -> Batch {
+        self.build_batch(self.test_offset, batch_idx, 0x7E57)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pipeline() -> DataPipeline {
+        DataPipeline::new(CorpusSpec::default(), 512, 48, 4, 0.15).unwrap()
+    }
+
+    #[test]
+    fn batch_shapes_and_ranges() {
+        let p = pipeline();
+        let b = p.train_batch(0);
+        assert_eq!(b.tokens.len(), 4 * 48);
+        assert_eq!(b.targets.len(), 4 * 48);
+        assert_eq!(b.weights.len(), 4 * 48);
+        for &t in &b.tokens {
+            assert!((0..512).contains(&t), "{t}");
+        }
+    }
+
+    #[test]
+    fn train_batches_differ_by_step() {
+        let p = pipeline();
+        assert_ne!(p.train_batch(0).tokens, p.train_batch(1).tokens);
+    }
+
+    #[test]
+    fn val_batches_are_deterministic() {
+        let p = pipeline();
+        let a = p.val_batch(3);
+        let b = p.val_batch(3);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn splits_do_not_overlap() {
+        // train stream starts far above the val/test prefixes
+        let p = pipeline();
+        // 1M steps x batch 4 stays below the next split boundary
+        assert!(TRAIN_BASE > TEST_BASE && TEST_BASE > VAL_BASE);
+        let _ = p;
+    }
+
+    #[test]
+    fn rows_start_with_cls() {
+        let p = pipeline();
+        let b = p.val_batch(0);
+        for row in 0..b.b {
+            assert_eq!(b.targets[row * b.s], CLS_ID);
+        }
+    }
+
+    #[test]
+    fn some_positions_are_masked() {
+        let p = pipeline();
+        let b = p.train_batch(5);
+        let total: f32 = b.weights.iter().sum();
+        assert!(total > 0.0);
+    }
+}

@@ -1,0 +1,284 @@
+//! The `Lambda = 2*E8` quantizer and isometry reduction (paper §2.6).
+//!
+//! `Lambda = 2*D8 u (2*D8 + 1)`: decoding splits into the even and odd
+//! cosets; each is a scaled `D8` decode (round every coordinate, fix the
+//! worst one if the parity constraint fails — Conway & Sloane ch. 20).
+
+/// One query/lattice point in R^8.
+pub type Vec8 = [f64; 8];
+/// Integer lattice point.
+pub type IVec8 = [i64; 8];
+
+/// Nearest point of `D8 = { y in Z^8 : sum(y) even }` to `y`.
+#[inline]
+fn decode_d8(y: &Vec8) -> IVec8 {
+    let mut f = [0i64; 8];
+    let mut sum = 0i64;
+    let mut worst = 0usize;
+    let mut worst_err = -1.0f64;
+    let mut err = [0.0f64; 8];
+    for i in 0..8 {
+        let r = y[i].round_ties_even();
+        f[i] = r as i64;
+        sum += f[i];
+        err[i] = y[i] - r;
+        let a = err[i].abs();
+        if a > worst_err {
+            worst_err = a;
+            worst = i;
+        }
+    }
+    if sum.rem_euclid(2) != 0 {
+        f[worst] += if err[worst] >= 0.0 { 1 } else { -1 };
+    }
+    f
+}
+
+/// Nearest point of `Lambda` to `q` (ties broken toward the even coset,
+/// matching the python reference).
+pub fn quantize(q: &Vec8) -> IVec8 {
+    // even coset: 2 * decode_d8(q / 2)
+    let mut half = [0.0; 8];
+    for i in 0..8 {
+        half[i] = q[i] * 0.5;
+    }
+    let e = decode_d8(&half);
+    // odd coset: 2 * decode_d8((q - 1) / 2) + 1
+    let mut shifted = [0.0; 8];
+    for i in 0..8 {
+        shifted[i] = (q[i] - 1.0) * 0.5;
+    }
+    let o = decode_d8(&shifted);
+    let (mut de, mut dodd) = (0.0, 0.0);
+    let mut even_pt = [0i64; 8];
+    let mut odd_pt = [0i64; 8];
+    for i in 0..8 {
+        even_pt[i] = 2 * e[i];
+        odd_pt[i] = 2 * o[i] + 1;
+        let a = q[i] - even_pt[i] as f64;
+        let b = q[i] - odd_pt[i] as f64;
+        de += a * a;
+        dodd += b * b;
+    }
+    if de <= dodd {
+        even_pt
+    } else {
+        odd_pt
+    }
+}
+
+/// Membership test for Lambda.
+pub fn is_lattice_point(x: &IVec8) -> bool {
+    let parity = x[0].rem_euclid(2);
+    x.iter().all(|&v| v.rem_euclid(2) == parity) && x.iter().sum::<i64>().rem_euclid(4) == 0
+}
+
+/// The isometry mapping a query into the fundamental region F.
+///
+/// `z[j] = eps[j] * (q - x0)[perm[j]]` with `z` in
+/// `F = { z1 >= ... >= z7 >= |z8|, z1 + z2 <= 2, sum(z) <= 4 }` and an
+/// even number of `-1` entries in `eps`.
+#[derive(Debug, Clone)]
+pub struct Reduction {
+    /// Nearest lattice point (the translation part).
+    pub x0: IVec8,
+    /// Sorted-coordinate permutation: `perm[j]` = original index of lane j.
+    pub perm: [usize; 8],
+    /// Sign flips applied per sorted lane (product is +1).
+    pub eps: [f64; 8],
+    /// The reduced point in F.
+    pub z: Vec8,
+}
+
+impl Reduction {
+    /// Inverse isometry applied to an integer candidate (reduced frame):
+    /// returns the original-frame lattice point.
+    #[inline]
+    pub fn unmap(&self, c: &IVec8) -> IVec8 {
+        let mut u = self.x0;
+        for j in 0..8 {
+            u[self.perm[j]] += self.eps[j] as i64 * c[j];
+        }
+        u
+    }
+}
+
+/// Reduce `q` into the fundamental region (paper §2.6: translation by a
+/// lattice vector, a coordinate permutation, and an even number of sign
+/// changes — the index-135 subgroup of the full isometry group).
+pub fn reduce(q: &Vec8) -> Reduction {
+    let x0 = quantize(q);
+    let mut r = [0.0f64; 8];
+    for i in 0..8 {
+        r[i] = q[i] - x0[i] as f64;
+    }
+    // sort |r| descending, tracking original index and sign
+    let mut lanes: [(f64, usize, f64); 8] = [(0.0, 0, 1.0); 8];
+    for i in 0..8 {
+        lanes[i] = (r[i].abs(), i, if r[i] < 0.0 { -1.0 } else { 1.0 });
+    }
+    // insertion sort (n = 8), stable, descending by |r|
+    for i in 1..8 {
+        let key = lanes[i];
+        let mut j = i;
+        while j > 0 && lanes[j - 1].0 < key.0 {
+            lanes[j] = lanes[j - 1];
+            j -= 1;
+        }
+        lanes[j] = key;
+    }
+    let mut perm = [0usize; 8];
+    let mut eps = [1.0f64; 8];
+    let mut z = [0.0f64; 8];
+    let mut nneg = 0usize;
+    for j in 0..8 {
+        perm[j] = lanes[j].1;
+        eps[j] = lanes[j].2;
+        z[j] = lanes[j].0;
+        if lanes[j].2 < 0.0 {
+            nneg += 1;
+        }
+    }
+    // parity fix: even number of sign changes; the smallest-|.| lane
+    // absorbs the leftover flip (z8 may become negative — F allows it)
+    if nneg % 2 == 1 {
+        eps[7] = -eps[7];
+        z[7] = eps[7] * (lanes[7].2 * lanes[7].0); // eps * r[perm[7]]
+    }
+    Reduction { x0, perm, eps, z }
+}
+
+/// Check membership of the fundamental region (tests / diagnostics).
+pub fn in_fundamental_region(z: &Vec8, tol: f64) -> bool {
+    for i in 0..6 {
+        if z[i] < z[i + 1] - tol {
+            return false;
+        }
+    }
+    if z[6] < z[7].abs() - tol {
+        return false;
+    }
+    if z[0] + z[1] > 2.0 + tol {
+        return false;
+    }
+    z.iter().sum::<f64>() <= 4.0 + tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    fn rand_q(rng: &mut crate::util::rng::Rng, lo: f64, hi: f64) -> Vec8 {
+        let mut q = [0.0; 8];
+        for v in q.iter_mut() {
+            *v = rng.uniform(lo, hi);
+        }
+        q
+    }
+
+    #[test]
+    fn quantize_returns_lattice_points() {
+        forall(500, |rng| {
+            let q = rand_q(rng, -20.0, 20.0);
+            let x = quantize(&q);
+            assert!(is_lattice_point(&x), "{x:?} not in Lambda (q = {q:?})");
+        });
+    }
+
+    #[test]
+    fn quantize_within_covering_radius() {
+        forall(2000, |rng| {
+            let q = rand_q(rng, -10.0, 10.0);
+            let x = quantize(&q);
+            let d2: f64 = (0..8).map(|i| (q[i] - x[i] as f64).powi(2)).sum();
+            assert!(d2 <= 4.0 + 1e-9, "dist^2 {d2} > covering^2");
+        });
+    }
+
+    #[test]
+    fn quantize_fixes_lattice_points() {
+        forall(300, |rng| {
+            // random lattice point: 2*(random ints) with sum fixed to 0 mod 2
+            let mut y = [0i64; 8];
+            for v in y.iter_mut() {
+                *v = rng.range(-6, 7);
+            }
+            let s: i64 = y.iter().sum();
+            if s.rem_euclid(2) != 0 {
+                y[7] += 1;
+            }
+            let parity = rng.range(0, 2);
+            let mut x = [0i64; 8];
+            for i in 0..8 {
+                x[i] = 2 * y[i] + parity;
+            }
+            if !is_lattice_point(&x) {
+                // fix sum mod 4 by shifting one coordinate by 2
+                x[0] += 2;
+            }
+            assert!(is_lattice_point(&x));
+            let q: Vec8 = std::array::from_fn(|i| x[i] as f64);
+            assert_eq!(quantize(&q), x);
+        });
+    }
+
+    #[test]
+    fn quantize_translation_equivariant() {
+        forall(300, |rng| {
+            let q = rand_q(rng, -8.0, 8.0);
+            let shift = [4.0, -4.0, 0.0, 8.0, 0.0, 0.0, 0.0, 0.0]; // in Lambda
+            let a = quantize(&q);
+            let mut q2 = q;
+            for i in 0..8 {
+                q2[i] += shift[i];
+            }
+            let b = quantize(&q2);
+            for i in 0..8 {
+                assert_eq!(b[i] - a[i], shift[i] as i64);
+            }
+        });
+    }
+
+    #[test]
+    fn reduction_lands_in_f() {
+        forall(3000, |rng| {
+            let q = rand_q(rng, -15.0, 15.0);
+            let red = reduce(&q);
+            assert!(in_fundamental_region(&red.z, 1e-9), "z = {:?}", red.z);
+        });
+    }
+
+    #[test]
+    fn reduction_is_isometry_and_even_signed() {
+        forall(1000, |rng| {
+            let q = rand_q(rng, -15.0, 15.0);
+            let red = reduce(&q);
+            // even number of sign changes
+            let prod: f64 = red.eps.iter().product();
+            assert_eq!(prod, 1.0);
+            // norm preserved
+            let rn: f64 = (0..8).map(|i| (q[i] - red.x0[i] as f64).powi(2)).sum();
+            let zn: f64 = red.z.iter().map(|v| v * v).sum();
+            assert!((rn - zn).abs() < 1e-9);
+            // unmap of origin gives x0
+            assert_eq!(red.unmap(&[0; 8]), red.x0);
+        });
+    }
+
+    #[test]
+    fn unmap_preserves_distance() {
+        forall(500, |rng| {
+            let q = rand_q(rng, -10.0, 10.0);
+            let red = reduce(&q);
+            // arbitrary candidate point with matching parity classes exists
+            // in the neighbor table; here use a simple lattice vector
+            let c: IVec8 = [2, 2, 0, 0, 0, 0, 0, 0];
+            let u = red.unmap(&c);
+            assert!(is_lattice_point(&u), "{u:?}");
+            let dz: f64 = (0..8).map(|j| (red.z[j] - c[j] as f64).powi(2)).sum();
+            let dq: f64 = (0..8).map(|i| (q[i] - u[i] as f64).powi(2)).sum();
+            assert!((dz - dq).abs() < 1e-9, "{dz} vs {dq}");
+        });
+    }
+}

@@ -1,0 +1,152 @@
+//! Higher-dimensional lattices for Table 1: the Coxeter–Todd lattice
+//! `K12`, the Barnes–Wall lattice `Lambda16` and the Leech lattice
+//! `Lambda24`.
+//!
+//! The paper reports only the *average* kernel-support count for these
+//! (no `(m.c.)` mark), which is analytic: for a unimodular lattice the
+//! expected number of points in a ball equals the ball's volume, and the
+//! kernel radius is `sqrt(2) *` covering radius.  Packing/covering radii
+//! are the classical values from Conway & Sloane (SPLAG), normalised to
+//! determinant 1.
+
+/// Classical lattice constants, unimodular normalisation.
+#[derive(Debug, Clone, Copy)]
+pub struct LatticeInfo {
+    pub name: &'static str,
+    pub dim: usize,
+    pub packing_radius: f64,
+    pub covering_radius: f64,
+}
+
+/// n-ball volume of radius r.
+pub fn ball_volume(n: usize, r: f64) -> f64 {
+    // V_n(r) = pi^{n/2} r^n / Gamma(n/2 + 1)
+    let half = n as f64 / 2.0;
+    (std::f64::consts::PI.powf(half) / gamma(half + 1.0)) * r.powi(n as i32)
+}
+
+/// Lanczos approximation of the Gamma function (double precision).
+pub fn gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        std::f64::consts::PI / ((std::f64::consts::PI * x).sin() * gamma(1.0 - x))
+    } else {
+        let x = x - 1.0;
+        let mut a = C[0];
+        let t = x + G + 0.5;
+        for (i, &c) in C.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        (2.0 * std::f64::consts::PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
+    }
+}
+
+/// K12, Coxeter–Todd: det 3^6 at min norm 4; covering radius normalised
+/// to det 1 per the paper's Table 1 value.
+pub const K12: LatticeInfo = LatticeInfo {
+    name: "K12",
+    dim: 12,
+    // SPLAG ch. 4: unimodular-normalised packing radius 3^{1/4}/sqrt(2)/3^{1/4}...
+    // the paper's Table 1 lists 0.760 / 1.241; those follow from
+    // rho = (min/2)/det^{1/n} = 1/3^{1/4} and R = sqrt(8/3)/3^{1/4}.
+    packing_radius: 0.759_835_685_651_593, // 3^{-1/4}
+    covering_radius: 1.240_806_478_181_74, // sqrt(8/3) * 3^{-1/4}
+};
+
+/// Lambda16, Barnes–Wall: det 2^8, min norm 4, covering radius^2 = 3.
+pub const BW16: LatticeInfo = LatticeInfo {
+    name: "Lambda16",
+    dim: 16,
+    packing_radius: 0.840_896_415_253_714_6, // 1/2^{1/4}
+    covering_radius: 1.456_475_315_121_9,    // sqrt(3)/2^{1/4}
+};
+
+/// Lambda24, Leech: unimodular, min norm 4, covering radius sqrt(2).
+pub const LEECH: LatticeInfo = LatticeInfo {
+    name: "Lambda24",
+    dim: 24,
+    packing_radius: 1.0,
+    covering_radius: std::f64::consts::SQRT_2,
+};
+
+/// Z8 and E8 rows (for uniform Table-1 reporting).
+pub const Z8: LatticeInfo = LatticeInfo {
+    name: "Z8",
+    dim: 8,
+    packing_radius: 0.5,
+    covering_radius: 1.414_213_562_373_095_1,
+};
+
+pub const E8: LatticeInfo = LatticeInfo {
+    name: "E8",
+    dim: 8,
+    packing_radius: 0.707_106_781_186_547_6,
+    covering_radius: 1.0,
+};
+
+impl LatticeInfo {
+    /// Analytic average number of lattice points in the kernel support
+    /// (ball of radius sqrt(2) * covering radius; unimodular => expected
+    /// count = ball volume).
+    pub fn avg_kernel_support(&self) -> f64 {
+        ball_volume(self.dim, std::f64::consts::SQRT_2 * self.covering_radius)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_known_values() {
+        assert!((gamma(1.0) - 1.0).abs() < 1e-12);
+        assert!((gamma(5.0) - 24.0).abs() < 1e-9);
+        assert!((gamma(0.5) - std::f64::consts::PI.sqrt()).abs() < 1e-12);
+        assert!((gamma(7.5) - 1871.254_305_797_788).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ball_volume_known_values() {
+        assert!((ball_volume(2, 1.0) - std::f64::consts::PI).abs() < 1e-12);
+        assert!((ball_volume(3, 1.0) - 4.188_790_204_786_391).abs() < 1e-9);
+        // V_8(sqrt 2) = pi^4 * 16 / 24 = 64.939...
+        assert!((ball_volume(8, std::f64::consts::SQRT_2) - 64.939_394_022_668_29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table1_average_support_counts() {
+        // paper Table 1 row "Average points in kernel support"
+        assert!((Z8.avg_kernel_support() - 1039.0).abs() < 1.0, "{}", Z8.avg_kernel_support());
+        assert!((E8.avg_kernel_support() - 64.94).abs() < 0.01);
+        assert!((K12.avg_kernel_support() - 1138.0).abs() < 6.0, "{}", K12.avg_kernel_support());
+        assert!(
+            (BW16.avg_kernel_support() - 24704.0).abs() < 150.0,
+            "{}",
+            BW16.avg_kernel_support()
+        );
+        assert!(
+            (LEECH.avg_kernel_support() - 32373.0).abs() < 200.0,
+            "{}",
+            LEECH.avg_kernel_support()
+        );
+    }
+
+    #[test]
+    fn e8_beats_z8_by_16x_average_access(){
+        // paper §2.4: "lookup with E8 accesses 16 times fewer points on
+        // average for the same spatial resolution"
+        let ratio = Z8.avg_kernel_support() / E8.avg_kernel_support();
+        assert!((ratio - 16.0).abs() < 0.01, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,100 @@
+//! The interpolation kernel (paper §2.5):
+//! `f(r) = max(0, 1 - r^2/8)^4`, supported in the open ball of radius
+//! `sqrt(8)`; `f = 1` exactly at lattice points, and the total weight
+//! `sum_k f(d(q, k))` lies in `[(22158 - 625*sqrt(5))/24389, 1]`.
+
+/// Paper §2.5 lower bound on the total kernel weight.
+pub const TOTAL_WEIGHT_LOWER: f64 = 0.851_222_518_575_920_3;
+
+/// Kernel value in terms of the squared distance.
+#[inline(always)]
+pub fn kernel_f(d2: f64) -> f64 {
+    let t = 1.0 - d2 * 0.125;
+    if t <= 0.0 {
+        0.0
+    } else {
+        let t2 = t * t;
+        t2 * t2
+    }
+}
+
+/// d/d(d2) of the kernel (for the analytic gradient in the lookup).
+#[inline(always)]
+pub fn kernel_df_dd2(d2: f64) -> f64 {
+    let t = 1.0 - d2 * 0.125;
+    if t <= 0.0 {
+        0.0
+    } else {
+        -0.5 * t * t * t
+    }
+}
+
+/// Partial top-k selection by descending weight over (weight, payload)
+/// pairs; stable for ties.  k is small (32) and n fixed (232), so a simple
+/// selection keeps the hot path allocation-free when given a scratch
+/// buffer.
+pub fn top_k_desc<T: Copy>(items: &mut [(f64, T)], k: usize) -> &[(f64, T)] {
+    let k = k.min(items.len());
+    // partial selection sort — O(n*k) with tiny constants; for n=232,
+    // k=32 this beats building a heap in practice (see bench
+    // lattice_hot_path).
+    for i in 0..k {
+        let mut best = i;
+        for j in (i + 1)..items.len() {
+            if items[j].0 > items[best].0 {
+                best = j;
+            }
+        }
+        items.swap(i, best);
+    }
+    &items[..k]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_boundary_values() {
+        assert_eq!(kernel_f(0.0), 1.0);
+        assert_eq!(kernel_f(8.0), 0.0);
+        assert_eq!(kernel_f(9.0), 0.0);
+        assert!((kernel_f(4.0) - 0.0625).abs() < 1e-12); // (1/2)^4
+    }
+
+    #[test]
+    fn kernel_monotone_decreasing() {
+        let mut prev = kernel_f(0.0);
+        for i in 1..100 {
+            let cur = kernel_f(i as f64 * 0.1);
+            assert!(cur <= prev + 1e-15);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        for d2 in [0.1, 1.0, 3.0, 6.5, 7.9] {
+            let h = 1e-6;
+            let fd = (kernel_f(d2 + h) - kernel_f(d2 - h)) / (2.0 * h);
+            assert!((fd - kernel_df_dd2(d2)).abs() < 1e-6, "d2 = {d2}");
+        }
+    }
+
+    #[test]
+    fn top_k_selects_descending() {
+        let mut items: Vec<(f64, usize)> =
+            (0..100).map(|i| (((i * 37) % 100) as f64, i)).collect();
+        let top = top_k_desc(&mut items, 5);
+        let vals: Vec<f64> = top.iter().map(|t| t.0).collect();
+        assert_eq!(vals, vec![99.0, 98.0, 97.0, 96.0, 95.0]);
+    }
+
+    #[test]
+    fn top_k_with_k_larger_than_n() {
+        let mut items = vec![(1.0, 0), (3.0, 1)];
+        let top = top_k_desc(&mut items, 10);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].1, 1);
+    }
+}

@@ -1,0 +1,195 @@
+//! The full O(1) lattice lookup: reduce → score 232 candidates → top-k →
+//! inverse isometry → torus memory indices (paper §2.6).
+//!
+//! This is the L3 hot path used by the serving gather, the Table-5
+//! access accounting and the Figure-3 benches; it is allocation-free per
+//! query when driven through [`LatticeLookup::lookup_into`].
+
+use super::e8::{reduce, Vec8};
+use super::kernel::{kernel_f, top_k_desc};
+use super::neighbors::{neighbor_table, N_NEIGHBORS};
+use super::torus::TorusK;
+
+/// One selected memory slot: index, kernel weight, squared distance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hit {
+    pub index: u64,
+    pub weight: f64,
+    pub d2: f64,
+}
+
+/// Result of a lookup (top-k hits, weight-descending).
+#[derive(Debug, Clone, Default)]
+pub struct LookupResult {
+    pub hits: Vec<Hit>,
+    /// Total weight over *all* candidates (paper bound: [0.851, 1]).
+    pub total_weight: f64,
+}
+
+/// Reusable lookup engine for a fixed torus.
+pub struct LatticeLookup {
+    pub torus: TorusK,
+    pub k_top: usize,
+    // scratch: (weight, (d2, candidate index)) pairs
+    scratch: Vec<(f64, (f64, usize))>,
+}
+
+impl LatticeLookup {
+    pub fn new(torus: TorusK, k_top: usize) -> Self {
+        LatticeLookup { torus, k_top, scratch: Vec::with_capacity(N_NEIGHBORS) }
+    }
+
+    /// Lookup a single query point (allocates the result).
+    pub fn lookup(&mut self, q: &Vec8) -> LookupResult {
+        let mut out = LookupResult::default();
+        self.lookup_into(q, &mut out);
+        out
+    }
+
+    /// Allocation-free lookup into a reusable result buffer.
+    pub fn lookup_into(&mut self, q: &Vec8, out: &mut LookupResult) {
+        out.hits.clear();
+        out.total_weight = 0.0;
+        let red = reduce(q);
+        let nbr = neighbor_table();
+        let nbrf = super::neighbors::neighbor_table_f64();
+        self.scratch.clear();
+        for (ci, c) in nbrf.iter().enumerate() {
+            // unrolled squared distance in the reduced frame
+            let d0 = red.z[0] - c[0];
+            let d1 = red.z[1] - c[1];
+            let d2_ = red.z[2] - c[2];
+            let d3 = red.z[3] - c[3];
+            let d4 = red.z[4] - c[4];
+            let d5 = red.z[5] - c[5];
+            let d6 = red.z[6] - c[6];
+            let d7 = red.z[7] - c[7];
+            let d2 = d0 * d0 + d1 * d1 + d2_ * d2_ + d3 * d3
+                + d4 * d4 + d5 * d5 + d6 * d6 + d7 * d7;
+            if d2 < 8.0 {
+                let w = kernel_f(d2);
+                out.total_weight += w;
+                self.scratch.push((w, (d2, ci)));
+            }
+        }
+        let top = top_k_desc(&mut self.scratch, self.k_top);
+        for &(w, (d2, ci)) in top {
+            let u = red.unmap(&nbr[ci]);
+            out.hits.push(Hit { index: self.torus.index(&u), weight: w, d2 });
+        }
+    }
+
+    /// Batch lookup (row-major queries, 8 per row).
+    pub fn lookup_batch(&mut self, queries: &[f64]) -> Vec<LookupResult> {
+        assert_eq!(queries.len() % 8, 0);
+        let mut results = Vec::with_capacity(queries.len() / 8);
+        for chunk in queries.chunks_exact(8) {
+            let q: Vec8 = chunk.try_into().unwrap();
+            results.push(self.lookup(&q));
+        }
+        results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::kernel::TOTAL_WEIGHT_LOWER;
+    use crate::util::check::forall;
+
+    fn torus() -> TorusK {
+        TorusK::new([16, 16, 8, 8, 8, 8, 8, 8]).unwrap()
+    }
+
+    #[test]
+    fn weights_within_paper_bounds() {
+        forall(500, |rng| {
+            let mut lk = LatticeLookup::new(torus(), 32);
+            let q: Vec8 = std::array::from_fn(|_| rng.uniform(-10.0, 10.0));
+            let r = lk.lookup(&q);
+            assert!(r.total_weight >= TOTAL_WEIGHT_LOWER - 1e-9, "{}", r.total_weight);
+            assert!(r.total_weight <= 1.0 + 1e-9, "{}", r.total_weight);
+        });
+    }
+
+    #[test]
+    fn top32_captures_at_least_90_percent() {
+        let mut lk = LatticeLookup::new(torus(), 32);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut min_frac = f64::MAX;
+        for _ in 0..2000 {
+            let q: Vec8 = std::array::from_fn(|_| rng.uniform(-10.0, 10.0));
+            let r = lk.lookup(&q);
+            let kept: f64 = r.hits.iter().map(|h| h.weight).sum();
+            min_frac = min_frac.min(kept / r.total_weight);
+        }
+        assert!(min_frac >= 0.90, "top-32 kept only {min_frac:.4}");
+    }
+
+    #[test]
+    fn weights_descending_and_indices_in_range() {
+        let mut lk = LatticeLookup::new(torus(), 32);
+        let m = lk.torus.num_locations();
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..500 {
+            let q: Vec8 = std::array::from_fn(|_| rng.uniform(-30.0, 30.0));
+            let r = lk.lookup(&q);
+            for w in r.hits.windows(2) {
+                assert!(w[0].weight >= w[1].weight - 1e-12);
+            }
+            for h in &r.hits {
+                assert!(h.index < m);
+                assert!(h.weight > 0.0 && h.weight <= 1.0 + 1e-12);
+                assert!(h.d2 < 8.0);
+            }
+        }
+    }
+
+    #[test]
+    fn lattice_point_query_hits_itself_with_weight_one() {
+        let mut lk = LatticeLookup::new(torus(), 32);
+        let k = lk.torus;
+        for idx in [0u64, 1, 1000, 12345] {
+            let x = k.representative(idx);
+            let q: Vec8 = std::array::from_fn(|i| x[i] as f64);
+            let r = lk.lookup(&q);
+            assert_eq!(r.hits.len(), 1, "open-ball kernel: only the point itself");
+            assert_eq!(r.hits[0].index, idx);
+            assert!((r.hits[0].weight - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn count_in_support_matches_paper_range() {
+        // paper Table 1 (E8 row): min 45, max 121 points in kernel support
+        // for non-degenerate queries
+        let mut lk = LatticeLookup::new(torus(), 232);
+        let mut rng = crate::util::rng::Rng::new(17);
+        let (mut lo, mut hi) = (usize::MAX, 0usize);
+        for _ in 0..20000 {
+            let q: Vec8 = std::array::from_fn(|_| rng.uniform(0.0, 8.0));
+            let r = lk.lookup(&q);
+            lo = lo.min(r.hits.len());
+            hi = hi.max(r.hits.len());
+        }
+        assert!(lo >= 45, "min support {lo} below paper's 45");
+        assert!(hi <= 121, "max support {hi} above paper's 121");
+        assert!(hi >= 90, "max support {hi} suspiciously small");
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut lk = LatticeLookup::new(torus(), 32);
+        let mut rng = crate::util::rng::Rng::new(23);
+        let flat: Vec<f64> = (0..80).map(|_| rng.uniform(-5.0, 5.0)).collect();
+        let batch = lk.lookup_batch(&flat);
+        for (i, r) in batch.iter().enumerate() {
+            let q: Vec8 = flat[i * 8..(i + 1) * 8].try_into().unwrap();
+            let single = lk.lookup(&q);
+            assert_eq!(single.hits.len(), r.hits.len());
+            for (a, b) in single.hits.iter().zip(&r.hits) {
+                assert_eq!(a.index, b.index);
+            }
+        }
+    }
+}

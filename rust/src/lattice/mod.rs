@@ -1,0 +1,43 @@
+//! Lattice mathematics for LRAM (paper sections 2.2–2.6).
+//!
+//! The memory lattice is `Lambda = 2*E8`:
+//!
+//! ```text
+//! Lambda = { x in (2Z)^8 u (2Z+1)^8 : sum(x) = 0 mod 4 }
+//! ```
+//!
+//! with packing radius `sqrt(2)`, covering radius `2`, minimal vector norm
+//! `sqrt(8)` and determinant `256`.  A query is answered by reducing it
+//! into the fundamental region `F` with a lattice isometry (translation +
+//! signed permutation with an even number of sign changes), scoring the
+//! fixed table of exactly **232** candidate lattice points that can fall
+//! within the kernel radius `sqrt(8)` of `F`, keeping the top-32 weights,
+//! and mapping those points to O(1) torus memory indices.
+//!
+//! This module mirrors `python/compile/kernels/lattice_tables.py`; the two
+//! implementations are cross-checked through
+//! `artifacts/lattice_fixture.json` (see `rust/tests/fixture.rs`).
+
+pub mod e8;
+pub mod exotic;
+pub mod kernel;
+pub mod lookup;
+pub mod neighbors;
+pub mod support;
+pub mod torus;
+pub mod zn;
+
+pub use e8::{is_lattice_point, quantize, reduce, Reduction};
+pub use kernel::{kernel_f, TOTAL_WEIGHT_LOWER};
+pub use lookup::{LatticeLookup, LookupResult};
+pub use neighbors::{neighbor_table, N_NEIGHBORS};
+pub use torus::TorusK;
+
+/// sqrt(8): kernel support radius and the minimal vector norm of Lambda.
+pub const SQRT8: f64 = 2.828_427_124_746_190_3;
+/// Determinant (covolume) of Lambda = 2*E8.
+pub const DET_LAMBDA: u64 = 256;
+/// Covering radius of Lambda.
+pub const COVERING_RADIUS: f64 = 2.0;
+/// Packing radius of Lambda.
+pub const PACKING_RADIUS: f64 = std::f64::consts::SQRT_2;

@@ -1,0 +1,188 @@
+//! The fixed 232-point candidate table (paper §2.6).
+//!
+//! All lattice points within distance `< sqrt(8)` of the fundamental
+//! region `F`.  The paper derives the count 232 by convex quadratic
+//! programming; we recompute the table at first use by enumerating the
+//! ~9.1k lattice points with `|p|^2 <= 24` (every point within
+//! `sqrt(8)` of `F` satisfies `|p| < sqrt(8) + 2 < sqrt(24)`) and solving
+//! `min_{z in F} |p - z|^2` with Dykstra's alternating projections onto
+//! `F`'s ten halfspaces.  The result is cached in a `OnceLock` and
+//! cross-checked against the python implementation through
+//! `artifacts/lattice_fixture.json`.
+
+use std::sync::OnceLock;
+
+use super::e8::IVec8;
+use super::SQRT8;
+
+/// Exactly this many lattice points lie within `sqrt(8)` of `F`.
+pub const N_NEIGHBORS: usize = 232;
+
+/// Halfspaces `a.z <= b` whose intersection is F.
+fn halfspaces() -> ([[f64; 8]; 10], [f64; 10]) {
+    let mut a = [[0.0f64; 8]; 10];
+    let b = [0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 2.0, 4.0];
+    for i in 0..6 {
+        a[i][i] = -1.0;
+        a[i][i + 1] = 1.0;
+    }
+    a[6][6] = -1.0;
+    a[6][7] = 1.0; //  z8 <= z7
+    a[7][6] = -1.0;
+    a[7][7] = -1.0; // -z8 <= z7
+    a[8][0] = 1.0;
+    a[8][1] = 1.0; // z1 + z2 <= 2
+    a[9] = [1.0; 8]; // sum <= 4
+    (a, b)
+}
+
+/// Squared distance from `p` to `F` via Dykstra's projection algorithm.
+pub fn dist2_to_f(p: &[f64; 8], iters: usize) -> f64 {
+    let (a, b) = halfspaces();
+    let mut an = [0.0f64; 10];
+    for k in 0..10 {
+        an[k] = a[k].iter().map(|v| v * v).sum();
+    }
+    let mut x = *p;
+    let mut y = [[0.0f64; 8]; 10];
+    for _ in 0..iters {
+        for k in 0..10 {
+            let mut w = [0.0f64; 8];
+            let mut dot = 0.0;
+            for i in 0..8 {
+                w[i] = x[i] + y[k][i];
+                dot += a[k][i] * w[i];
+            }
+            let viol = (dot - b[k]).max(0.0) / an[k];
+            for i in 0..8 {
+                let xn = w[i] - viol * a[k][i];
+                y[k][i] = w[i] - xn;
+                x[i] = xn;
+            }
+        }
+    }
+    (0..8).map(|i| (p[i] - x[i]).powi(2)).sum()
+}
+
+/// Enumerate all points of Lambda with `|p|^2 <= 24` (both cosets).
+fn enumerate_candidates() -> Vec<IVec8> {
+    let mut out = Vec::with_capacity(10_000);
+    // depth-first over per-coordinate values, pruned by partial norm
+    fn dfs(vals: &[i64], depth: usize, acc: &mut IVec8, n2: i64, sum: i64, out: &mut Vec<IVec8>) {
+        if n2 > 24 {
+            return;
+        }
+        if depth == 8 {
+            if sum.rem_euclid(4) == 0 {
+                out.push(*acc);
+            }
+            return;
+        }
+        for &v in vals {
+            acc[depth] = v;
+            dfs(vals, depth + 1, acc, n2 + v * v, sum + v, out);
+        }
+    }
+    let mut acc = [0i64; 8];
+    dfs(&[0, 2, -2, 4, -4], 0, &mut acc, 0, 0, &mut out);
+    dfs(&[1, -1, 3, -3], 0, &mut acc, 0, 0, &mut out);
+    out
+}
+
+/// The canonical (lexicographically sorted) 232-point table.
+pub fn neighbor_table() -> &'static [IVec8; N_NEIGHBORS] {
+    static TABLE: OnceLock<[IVec8; N_NEIGHBORS]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let cands = enumerate_candidates();
+        let mut near: Vec<IVec8> = Vec::with_capacity(N_NEIGHBORS);
+        for c in cands {
+            let p: [f64; 8] = std::array::from_fn(|i| c[i] as f64);
+            if dist2_to_f(&p, 400) < SQRT8 * SQRT8 - 1e-6 {
+                near.push(c);
+            }
+        }
+        near.sort();
+        assert_eq!(
+            near.len(),
+            N_NEIGHBORS,
+            "neighbour enumeration produced {} points, expected 232",
+            near.len()
+        );
+        let mut table = [[0i64; 8]; N_NEIGHBORS];
+        table.copy_from_slice(&near);
+        table
+    })
+}
+
+/// The neighbour table pre-converted to f64 (hot-path scoring avoids
+/// 232 x 8 int->float conversions per query; see bench lattice_hot_path).
+pub fn neighbor_table_f64() -> &'static [[f64; 8]; N_NEIGHBORS] {
+    static TABLE: OnceLock<[[f64; 8]; N_NEIGHBORS]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let t = neighbor_table();
+        std::array::from_fn(|i| std::array::from_fn(|j| t[i][j] as f64))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::e8::is_lattice_point;
+
+    #[test]
+    fn table_has_exactly_232_points() {
+        let t = neighbor_table();
+        assert_eq!(t.len(), 232);
+        for p in t.iter() {
+            assert!(is_lattice_point(p), "{p:?}");
+            let n2: i64 = p.iter().map(|v| v * v).sum();
+            assert!(n2 <= 24, "{p:?} too far from origin");
+        }
+        // origin (the lattice point of F itself) is in the table
+        assert!(t.contains(&[0i64; 8]));
+        // no duplicates (table is sorted)
+        for w in t.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn dykstra_projects_inside_points_to_themselves() {
+        // deep interior point of F
+        let p = [0.5, 0.4, 0.3, 0.2, 0.2, 0.1, 0.1, 0.0];
+        assert!(dist2_to_f(&p, 200) < 1e-12);
+    }
+
+    #[test]
+    fn dykstra_distance_matches_hand_case() {
+        // p = (4,0,...,0): nearest point of F on the z1+z2<=2 face vs
+        // ordering constraints; known projection is (2, ...)? verify
+        // against a fine grid search along the symmetric direction.
+        let p = [4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let d2 = dist2_to_f(&p, 2000);
+        // grid check: F points of form (a, b, 0...0), a>=b>=0, a+b<=2
+        let mut best = f64::MAX;
+        let n = 400;
+        for ia in 0..=n {
+            let a = 2.0 * ia as f64 / n as f64;
+            for ib in 0..=ia {
+                let b = 2.0 * ib as f64 / n as f64;
+                if a + b <= 2.0 {
+                    let d = (4.0 - a).powi(2) + b * b;
+                    best = best.min(d);
+                }
+            }
+        }
+        assert!((d2 - best).abs() < 1e-3, "dykstra {d2} vs grid {best}");
+    }
+
+    #[test]
+    fn minimal_vectors_are_included() {
+        // the 240*... minimal vectors of Lambda at norm sqrt(8) adjacent to
+        // the origin region: e.g. (2,2,0,...), (1,...,1,-1) variants with
+        // small distance to F must appear
+        let t = neighbor_table();
+        assert!(t.contains(&[2, 2, 0, 0, 0, 0, 0, 0]));
+        assert!(t.contains(&[1, 1, 1, 1, 1, 1, 1, 1]));
+    }
+}

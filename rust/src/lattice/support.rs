@@ -1,0 +1,133 @@
+//! Monte-Carlo kernel-support statistics (Table 1).
+//!
+//! For Z^8 and E8 we sample uniform queries and count lattice points in
+//! the open kernel ball (radius sqrt(2) * covering radius, in each
+//! lattice's unimodular scale); the averages are also available
+//! analytically (`exotic::LatticeInfo::avg_kernel_support`), which the
+//! paper uses for the 12/16/24-dimensional lattices.
+
+use crate::util::rng::Rng;
+
+use super::e8::{reduce, Vec8};
+use super::kernel::kernel_f;
+use super::neighbors::neighbor_table;
+use super::zn;
+
+/// min / mean / max kernel-support counts over `samples` random queries.
+#[derive(Debug, Clone, Copy)]
+pub struct SupportStats {
+    pub min: usize,
+    pub mean: f64,
+    pub max: usize,
+    pub samples: u64,
+}
+
+/// E8 (as Lambda = 2*E8; the count is scale-invariant): number of lattice
+/// points within the kernel radius sqrt(8).
+pub fn e8_support_count(q: &Vec8) -> usize {
+    let red = reduce(q);
+    let mut count = 0;
+    for c in neighbor_table().iter() {
+        let mut d2 = 0.0;
+        for j in 0..8 {
+            let d = red.z[j] - c[j] as f64;
+            d2 += d * d;
+        }
+        if d2 < 8.0 {
+            count += 1;
+        }
+    }
+    count
+}
+
+/// Monte-Carlo sweep for E8.
+pub fn e8_support_stats(samples: u64, seed: u64) -> SupportStats {
+    let mut rng = Rng::new(seed);
+    let (mut lo, mut hi, mut sum) = (usize::MAX, 0usize, 0u64);
+    for _ in 0..samples {
+        // uniform over one fundamental cube of the (scaled) lattice
+        let q: Vec8 = std::array::from_fn(|_| rng.uniform(0.0, 8.0));
+        let c = e8_support_count(&q);
+        lo = lo.min(c);
+        hi = hi.max(c);
+        sum += c as u64;
+    }
+    SupportStats { min: lo, mean: sum as f64 / samples as f64, max: hi, samples }
+}
+
+/// Monte-Carlo sweep for Z^8 (kernel radius 2 in the unimodular scale).
+pub fn z8_support_stats(samples: u64, seed: u64) -> SupportStats {
+    let mut rng = Rng::new(seed);
+    let (mut lo, mut hi, mut sum) = (usize::MAX, 0usize, 0u64);
+    let mut q = [0.0f64; 8];
+    for _ in 0..samples {
+        for v in q.iter_mut() {
+            *v = rng.uniform(0.0, 1.0);
+        }
+        let c = zn::count_in_ball(&q, 4.0);
+        lo = lo.min(c);
+        hi = hi.max(c);
+        sum += c as u64;
+    }
+    SupportStats { min: lo, mean: sum as f64 / samples as f64, max: hi, samples }
+}
+
+/// Mean weight captured by the top-k selection (paper §2.6: ">= 99.5% on
+/// average, >= 90% minimum" for k = 32).
+pub fn topk_weight_fraction(samples: u64, k: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut weights = Vec::with_capacity(232);
+    let (mut min_frac, mut sum_frac) = (f64::MAX, 0.0);
+    for _ in 0..samples {
+        let q: Vec8 = std::array::from_fn(|_| rng.uniform(0.0, 8.0));
+        let red = reduce(&q);
+        weights.clear();
+        let mut total = 0.0;
+        for c in neighbor_table().iter() {
+            let mut d2 = 0.0;
+            for j in 0..8 {
+                let d = red.z[j] - c[j] as f64;
+                d2 += d * d;
+            }
+            let w = kernel_f(d2);
+            if w > 0.0 {
+                total += w;
+                weights.push(w);
+            }
+        }
+        weights.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let kept: f64 = weights.iter().take(k).sum();
+        let frac = kept / total;
+        min_frac = min_frac.min(frac);
+        sum_frac += frac;
+    }
+    (sum_frac / samples as f64, min_frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e8_stats_match_paper_at_moderate_samples() {
+        let s = e8_support_stats(30_000, 1);
+        assert_eq!(s.min, 45, "paper min 45 (m.c.)");
+        assert!((s.mean - 64.94).abs() < 0.5, "mean {}", s.mean);
+        assert!(s.max <= 121 && s.max >= 95, "max {}", s.max);
+    }
+
+    #[test]
+    fn z8_stats_match_paper_at_moderate_samples() {
+        let s = z8_support_stats(3_000, 2);
+        assert!(s.min >= 768, "min {}", s.min);
+        assert!((s.mean - 1039.0).abs() < 20.0, "mean {}", s.mean);
+        assert!(s.max <= 1312, "max {}", s.max);
+    }
+
+    #[test]
+    fn top32_fraction_matches_paper() {
+        let (avg, min) = topk_weight_fraction(5_000, 32, 3);
+        assert!(avg >= 0.99, "avg {avg}");
+        assert!(min >= 0.90, "min {min}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Torus memory addressing (paper §2.2): the quotient `M = Lambda / L_K`
+//! with `L_K = prod(K_i Z)`, `K_i in 4Z`, has `M = prod(K_i) / 256`
+//! memory locations.  `torus_index` is the O(1) bijection onto `[0, M)`.
+//!
+//! Write `x = 2y + p` (parity bit `p`, `y in D8`).  `y_1..y_7` are free
+//! mod `K_i/2` (mixed-radix packed); `sum(y)` even makes `y_8`'s parity a
+//! function of the others, so `y_8` packs mod `K_8/4` after removing it.
+
+use anyhow::{bail, Result};
+
+use super::e8::IVec8;
+
+/// Validated torus periods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TorusK {
+    pub k: [i64; 8],
+}
+
+impl TorusK {
+    pub fn new(k: [i64; 8]) -> Result<Self> {
+        for &v in &k {
+            if v < 4 || v % 4 != 0 {
+                bail!("each K_i must be a positive multiple of 4 (got {v}) so that L_K <= Lambda");
+            }
+        }
+        Ok(TorusK { k })
+    }
+
+    pub fn uniform(k: i64) -> Result<Self> {
+        Self::new([k; 8])
+    }
+
+    /// Number of memory locations `M = prod(K_i) / 256`.
+    pub fn num_locations(&self) -> u64 {
+        let p: u64 = self.k.iter().map(|&v| v as u64).product();
+        p / super::DET_LAMBDA
+    }
+
+    /// O(1) memory index of a lattice point (representative-independent).
+    #[inline]
+    pub fn index(&self, x: &IVec8) -> u64 {
+        let p = x[0].rem_euclid(2);
+        let mut m = [0i64; 8];
+        let mut s = 0i64;
+        for i in 0..8 {
+            let y = (x[i] - p) >> 1;
+            m[i] = y.rem_euclid(self.k[i] >> 1);
+            if i < 7 {
+                s += m[i];
+            }
+        }
+        let t = (m[7] - (s & 1)) >> 1;
+        let mut idx = p as u64;
+        for i in 0..7 {
+            idx = idx * (self.k[i] >> 1) as u64 + m[i] as u64;
+        }
+        idx * (self.k[7] >> 2) as u64 + t as u64
+    }
+
+    /// Canonical representative of a memory slot (inverse of `index`).
+    pub fn representative(&self, idx: u64) -> IVec8 {
+        let mut rest = idx;
+        let k84 = (self.k[7] >> 2) as u64;
+        let t = rest % k84;
+        rest /= k84;
+        let mut m = [0i64; 8];
+        for i in (0..7).rev() {
+            let kh = (self.k[i] >> 1) as u64;
+            m[i] = (rest % kh) as i64;
+            rest /= kh;
+        }
+        let p = rest as i64;
+        let s: i64 = m[..7].iter().sum::<i64>() & 1;
+        m[7] = 2 * t as i64 + s;
+        let mut x = [0i64; 8];
+        for i in 0..8 {
+            x[i] = 2 * m[i] + p;
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::e8::{is_lattice_point, quantize};
+    use crate::util::check::forall;
+
+    #[test]
+    fn rejects_bad_k() {
+        assert!(TorusK::new([8, 8, 8, 8, 8, 8, 8, 2]).is_err());
+        assert!(TorusK::new([8, 8, 8, 8, 8, 8, 8, 6]).is_err());
+        assert!(TorusK::uniform(8).is_ok());
+    }
+
+    #[test]
+    fn paper_slot_counts() {
+        // Table 5: LRAM-small/medium/large = 2^18 / 2^20 / 2^22 locations
+        assert_eq!(TorusK::new([16, 16, 8, 8, 8, 8, 8, 8]).unwrap().num_locations(), 1 << 18);
+        assert_eq!(TorusK::new([16, 16, 16, 16, 8, 8, 8, 8]).unwrap().num_locations(), 1 << 20);
+        assert_eq!(
+            TorusK::new([16, 16, 16, 16, 16, 16, 8, 8]).unwrap().num_locations(),
+            1 << 22
+        );
+    }
+
+    #[test]
+    fn bijection_small_torus() {
+        for k in [
+            TorusK::uniform(4).unwrap(),
+            TorusK::uniform(8).unwrap(),
+            TorusK::new([8, 4, 8, 4, 8, 8, 4, 8]).unwrap(),
+            TorusK::new([12, 8, 8, 8, 4, 4, 8, 8]).unwrap(),
+        ] {
+            let m = k.num_locations();
+            let mut seen = std::collections::HashSet::new();
+            for idx in 0..m {
+                let x = k.representative(idx);
+                assert!(is_lattice_point(&x), "{x:?}");
+                assert_eq!(k.index(&x), idx);
+                assert!(seen.insert(x), "duplicate representative {x:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn index_invariant_under_l_k_shifts() {
+        let k = TorusK::new([8, 8, 16, 8, 8, 4, 8, 8]).unwrap();
+        forall(500, |rng| {
+            let mut q = [0.0f64; 8];
+            for v in q.iter_mut() {
+                *v = rng.uniform(-40.0, 40.0);
+            }
+            let x = quantize(&q);
+            let base = k.index(&x);
+            assert!(base < k.num_locations());
+            let mut shifted = x;
+            for i in 0..8 {
+                shifted[i] += k.k[i] * rng.range(-3, 4);
+            }
+            assert_eq!(k.index(&shifted), base);
+        });
+    }
+}

@@ -1,0 +1,100 @@
+//! The cubic lattice `Z^n` (Table 1 baseline).
+//!
+//! Unimodular by construction; packing radius 1/2, covering radius
+//! `sqrt(n)/2`.  Kernel-support counting enumerates integer points in an
+//! open ball by pruned DFS (the ball for the Table-1 radius holds ~1e3
+//! points in 8D).
+
+/// Packing radius of unimodular Z^n.
+pub const fn packing_radius() -> f64 {
+    0.5
+}
+
+/// Covering radius of unimodular Z^n.
+pub fn covering_radius(n: usize) -> f64 {
+    (n as f64).sqrt() / 2.0
+}
+
+/// Nearest point of Z^n.
+pub fn quantize(q: &[f64]) -> Vec<i64> {
+    q.iter().map(|v| v.round_ties_even() as i64).collect()
+}
+
+/// Count lattice points of Z^n within open ball of radius^2 `r2` of `q`.
+pub fn count_in_ball(q: &[f64], r2: f64) -> usize {
+    let n = q.len();
+    let r = r2.sqrt();
+    // per-coordinate candidate offsets, sorted by closeness for pruning
+    let mut cands: Vec<Vec<(f64, i64)>> = Vec::with_capacity(n);
+    for &qi in q {
+        let lo = (qi - r).ceil() as i64;
+        let hi = (qi + r).floor() as i64;
+        let mut v: Vec<(f64, i64)> = (lo..=hi).map(|x| ((x as f64 - qi).powi(2), x)).collect();
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        cands.push(v);
+    }
+    fn dfs(cands: &[Vec<(f64, i64)>], depth: usize, d2: f64, r2: f64) -> usize {
+        if depth == cands.len() {
+            return 1;
+        }
+        let mut count = 0;
+        for &(c2, _) in &cands[depth] {
+            let nd = d2 + c2;
+            if nd >= r2 {
+                break; // sorted by closeness: the rest are farther
+            }
+            count += dfs(cands, depth + 1, nd, r2);
+        }
+        count
+    }
+    dfs(&cands, 0, 0.0, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn quantize_is_rounding() {
+        assert_eq!(quantize(&[0.4, -0.6, 2.5, 3.49]), vec![0, -1, 2, 3]);
+    }
+
+    #[test]
+    fn ball_count_at_origin() {
+        // open ball radius sqrt(2) around origin in Z^2: (0,0) and 4 axis
+        // neighbours = 5 points
+        assert_eq!(count_in_ball(&[0.0, 0.0], 2.0 - 1e-12), 5);
+        // radius^2 = 2 + eps also captures the 4 diagonal points
+        assert_eq!(count_in_ball(&[0.0, 0.0], 2.0 + 1e-9), 9);
+    }
+
+    #[test]
+    fn ball_count_translation_invariant() {
+        forall(100, |rng| {
+            let q: Vec<f64> = (0..4).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let shifted: Vec<f64> = q.iter().map(|v| v + 7.0).collect();
+            assert_eq!(count_in_ball(&q, 3.7), count_in_ball(&shifted, 3.7));
+        });
+    }
+
+    #[test]
+    fn z8_kernel_support_range_matches_paper() {
+        // Table 1: Z^8 kernel radius = sqrt(2) * cov = 2 (open ball).
+        // MC min 768, analytic avg 1039, MC max 1312.
+        let mut rng = crate::util::rng::Rng::new(99);
+        let (mut lo, mut hi, mut sum) = (usize::MAX, 0usize, 0usize);
+        let n = 3000;
+        for _ in 0..n {
+            let q: Vec<f64> = (0..8).map(|_| rng.uniform(0.0, 1.0)).collect();
+            let c = count_in_ball(&q, 4.0);
+            lo = lo.min(c);
+            hi = hi.max(c);
+            sum += c;
+        }
+        let avg = sum as f64 / n as f64;
+        assert!((avg - 1039.0).abs() < 25.0, "avg {avg}");
+        assert!(lo >= 768, "min {lo}");
+        assert!(hi <= 1312, "max {hi}");
+    }
+}

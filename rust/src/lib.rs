@@ -1,0 +1,29 @@
+//! # LRAM — Lattice-based differentiable Random Access Memory
+//!
+//! Production-grade reproduction of *"Differentiable Random Access Memory
+//! using Lattices"* (Goucher & Troll, 2021): an `E8`-lattice memory layer
+//! with O(1) lookups regardless of memory size, embedded in a BERT-style
+//! masked language model.
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the coordinator: training loop, serving router,
+//!   the O(1) random-access [`memstore`], the full lattice mathematics in
+//!   [`lattice`], tokenizer/data substrates, metrics.
+//! * **L2/L1 (python, build-time only)** — JAX model + Pallas lattice
+//!   kernel, AOT-lowered once into `artifacts/*.hlo.txt` and executed here
+//!   through the PJRT CPU client ([`runtime`]). Python never runs on the
+//!   request path.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod lattice;
+pub mod memstore;
+pub mod metrics;
+pub mod pkm;
+pub mod runtime;
+pub mod server;
+pub mod splitmode;
+pub mod tokenizer;
+pub mod util;

@@ -1,0 +1,285 @@
+//! `lram` — the LRAM coordinator CLI.
+//!
+//! Subcommands map onto the paper's experiments (see DESIGN.md):
+//!
+//! ```text
+//! lram train   --variant lram_small --steps 300      # Table 2 / Figure 2
+//! lram table1  [--samples 1000000]                   # lattice comparison
+//! lram table2  --steps 300                           # all five variants
+//! lram table3  [--width 512]                         # scaling formulas
+//! lram table5  --variant lram_small                  # memory utilisation
+//! lram serve   --variant lram_small --addr 0.0.0.0:8077
+//! lram artifacts                                     # list compiled units
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use lram::config::TrainConfig;
+use lram::coordinator::Trainer;
+use lram::data::synth::CorpusSpec;
+use lram::data::DataPipeline;
+use lram::lattice::{exotic, support};
+use lram::pkm::cost;
+use lram::runtime::Runtime;
+use lram::server::{serve, Batcher, BatcherConfig};
+use lram::util::cli::Args;
+use lram::util::timing::Table;
+
+fn main() -> Result<()> {
+    lram::util::logger::init();
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "table1" => cmd_table1(&args),
+        "table2" => cmd_table2(&args),
+        "table3" => cmd_table3(&args),
+        "table5" => cmd_table5(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "corpus" => cmd_corpus(&args),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "lram — lattice-based differentiable RAM (Goucher & Troll 2021)
+
+USAGE: lram <command> [--flags]
+
+COMMANDS:
+  train      train one variant (Table 2 / Figure 2 data point)
+  table1     lattice comparison: packing/covering radii + kernel support
+  table2     train all five variants and print the perplexity table
+  table3     asymptotic parameter/op counts for dense / PKM / LRAM
+  table5     memory utilisation + KL divergence over the validation set
+  serve      MLM fill-mask server with dynamic batching
+  artifacts  list compiled AOT artifacts
+  corpus     print sample paragraphs of the synthetic corpus
+
+COMMON FLAGS:
+  --artifacts DIR   artifact directory (default: artifacts)
+  --variant NAME    baseline | lram_small | lram_medium | lram_large | pkm
+  --steps N         training steps (default 300)
+  --config FILE     JSON config (CLI flags override)
+";
+
+fn load_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.flags.get("config") {
+        Some(path) => TrainConfig::load(std::path::Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    if !args.has("run-dir") && !args.has("config") {
+        cfg.run_dir = format!("runs/{}", cfg.variant);
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = Arc::new(Runtime::new(&cfg.artifact_dir)?);
+    let mut trainer = Trainer::new(rt, cfg)?;
+    let out = trainer.run()?;
+    println!(
+        "{}: steps={} train_loss={:.4} best_val_ppl={:.3} final_val_ppl={:.3} wall={:.1}s",
+        out.variant, out.steps, out.final_train_loss, out.best_val_ppl,
+        out.final_val.perplexity, out.wall_secs
+    );
+    let test = trainer.evaluate_test()?;
+    println!("test_ppl={:.3}", test.perplexity);
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let variants = ["baseline", "pkm", "lram_small", "lram_medium", "lram_large"];
+    let rt = Arc::new(Runtime::new(&args.str("artifacts", "artifacts"))?);
+    let mut table = Table::new(&[
+        "Model", "Total parameters (M)", "Validation perplexity", "Test perplexity",
+    ]);
+    for v in variants {
+        let mut cfg = load_config(args)?;
+        cfg.variant = v.to_string();
+        cfg.run_dir = format!("runs/table2_{v}");
+        let mut trainer = match Trainer::new(rt.clone(), cfg) {
+            Ok(t) => t,
+            Err(e) => {
+                log::warn!("skipping {v}: {e:#} (artifact not exported?)");
+                continue;
+            }
+        };
+        let out = trainer.run()?;
+        let test = trainer.evaluate_test()?;
+        let params = rt
+            .load(&format!("train_step_{v}"))?
+            .manifest
+            .n_params
+            .unwrap_or(0);
+        table.row(&[
+            v.to_string(),
+            format!("{:.1}", params as f64 / 1e6),
+            format!("{:.2}", out.final_val.perplexity),
+            format!("{:.2}", test.perplexity),
+        ]);
+    }
+    println!("\nTable 2 (reproduction; see EXPERIMENTS.md for scale notes)");
+    table.print();
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let samples = args.u64("samples", 200_000)?;
+    println!("Table 1: lattice comparison (MC samples = {samples}; paper used 1e7+)\n");
+    let e8 = support::e8_support_stats(samples, 1);
+    let z8 = support::z8_support_stats((samples / 20).max(1000), 2);
+    let infos = [exotic::Z8, exotic::E8, exotic::K12, exotic::BW16, exotic::LEECH];
+    let mut t = Table::new(&["Lattice", "Dim", "Det", "Packing", "Covering", "Min", "Avg", "Max"]);
+    for info in infos {
+        let (min, max) = match info.name {
+            "Z8" => (format!("{} (m.c.)", z8.min), format!("{} (m.c.)", z8.max)),
+            "E8" => (format!("{} (m.c.)", e8.min), format!("{} (m.c.)", e8.max)),
+            _ => ("-".into(), "-".into()),
+        };
+        t.row(&[
+            info.name.to_string(),
+            info.dim.to_string(),
+            "1".to_string(),
+            format!("{:.3}", info.packing_radius),
+            format!("{:.3}", info.covering_radius),
+            min,
+            format!("{:.2}", info.avg_kernel_support()),
+            max,
+        ]);
+    }
+    t.print();
+    let (avg_frac, min_frac) = support::topk_weight_fraction(samples.min(100_000), 32, 3);
+    println!(
+        "\ntop-32 weight capture: avg {:.2}% min {:.2}%  (paper: 99.5% / 90%)",
+        avg_frac * 100.0,
+        min_frac * 100.0
+    );
+    println!(
+        "measured E8 MC mean {:.2} vs analytic {:.2}",
+        e8.mean,
+        exotic::E8.avg_kernel_support()
+    );
+    Ok(())
+}
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    let w = args.u64("width", 512)?;
+    let r = 4u64;
+    let m = 64u64;
+    println!("Table 3: asymptotic scaling at w = {w}, r = {r}\n");
+    let mut t = Table::new(&["Method", "Parameters", "Approx op count"]);
+    for n_exp in [16u32, 20, 24] {
+        let n = 1u64 << n_exp;
+        t.row(&[
+            format!("PKM (N=2^{n_exp})"),
+            cost::pkm_params(w, n, 512).to_string(),
+            cost::pkm_ops(w, n).to_string(),
+        ]);
+        t.row(&[
+            format!("LRAM (N=2^{n_exp})"),
+            cost::lram_params(w, r, n, m).to_string(),
+            cost::lram_ops(w, r).to_string(),
+        ]);
+    }
+    t.row(&[
+        "Dense 2-layer".into(),
+        cost::dense_params(w, r).to_string(),
+        cost::dense_ops(w, r).to_string(),
+    ]);
+    t.print();
+    println!("\nLRAM op count is independent of N (O(1) lookup); PKM grows as sqrt(N).");
+    Ok(())
+}
+
+fn cmd_table5(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = Arc::new(Runtime::new(&cfg.artifact_dir)?);
+    let mut trainer = Trainer::new(rt, cfg)?;
+    if let Some(ckpt) = args.flags.get("checkpoint") {
+        trainer.load_checkpoint(std::path::Path::new(ckpt))?;
+        log::info!("loaded checkpoint {ckpt}");
+    }
+    // warm the model so accesses reflect trained queries
+    let warm = args.u64("warm-steps", 50)?;
+    for _ in 0..warm {
+        trainer.train_step()?;
+    }
+    let report = trainer.evaluate_val()?;
+    println!("Table 5 row for variant ({} eval batches):", report.batches);
+    println!("  val_ppl        = {:.3}", report.perplexity);
+    match (report.utilization, report.kl_divergence) {
+        (Some(u), Some(kl)) => {
+            println!("  memory usage % = {:.2}", u * 100.0);
+            println!("  KL divergence  = {:.3}", kl);
+        }
+        _ => println!("  (variant has no memory layer: baseline)"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let addr = args.str("addr", "127.0.0.1:8077");
+    let checkpoint = match args.flags.get("checkpoint") {
+        Some(ckpt) => {
+            log::info!("restoring checkpoint {ckpt}");
+            Some(std::fs::read(ckpt)?)
+        }
+        None => None,
+    };
+    // the tokenizer must match the training pipeline: rebuild it from the
+    // same corpus spec
+    let spec = CorpusSpec { seed: cfg.corpus_seed, ..CorpusSpec::default() };
+    let pipeline = DataPipeline::new(spec, cfg.vocab_size, 8, 1, 0.15)?;
+    let bpe = Arc::new(pipeline.bpe);
+    let batcher = Batcher::spawn(
+        lram::server::BatcherInit {
+            artifact_dir: cfg.artifact_dir.clone(),
+            artifact_name: format!("infer_logits_{}", cfg.variant),
+            checkpoint,
+        },
+        bpe.clone(),
+        BatcherConfig::default(),
+    )?;
+    serve(&addr, batcher, bpe)
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.str("artifacts", "artifacts");
+    let rt = Runtime::new(&dir)?;
+    let names = rt.available()?;
+    if names.is_empty() {
+        bail!("no artifacts in {dir}; run `make artifacts` first");
+    }
+    let mut t = Table::new(&["artifact", "kind", "state", "inputs", "outputs"]);
+    for n in names {
+        let m = lram::runtime::Manifest::load(std::path::Path::new(&dir), &n)?;
+        t.row(&[
+            n,
+            m.kind.clone(),
+            m.state.len().to_string(),
+            m.inputs.len().to_string(),
+            m.outputs.len().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_corpus(args: &Args) -> Result<()> {
+    let seed = args.u64("seed", 1234)?;
+    let n = args.u64("n", 3)?;
+    let corpus = lram::data::synth::SynthCorpus::new(CorpusSpec { seed, ..Default::default() });
+    for i in 0..n {
+        println!("--- paragraph {i} ---\n{}\n", corpus.paragraph(i));
+    }
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! The random-access parameter store (the paper's "random access over the
+//! parameter storage" assumption, made concrete).
+//!
+//! A value table of `M` rows times `m` floats lives in a lazily-populated
+//! anonymous mmap, so tables with billions of parameters cost physical
+//! memory only for rows actually touched.  Reads gather `k = 32` rows per
+//! query in O(1) w.r.t. `M`; writes apply the paper's sparse-Adam updates
+//! (lr 1e-3 on memory values) to touched rows only.  Access statistics
+//! feed the Table-5 utilisation / KL-divergence experiment.
+
+mod sparse_adam;
+mod stats;
+mod table;
+
+pub use sparse_adam::SparseAdam;
+pub use stats::AccessStats;
+pub use table::ValueTable;

@@ -1,0 +1,117 @@
+//! Access accounting for Table 5: fraction of memory locations touched
+//! and the KL divergence between the weighted access distribution and
+//! uniform.
+
+/// Streaming per-slot access statistics.
+pub struct AccessStats {
+    weighted: Vec<f64>,
+    hits: Vec<u64>,
+    total_weight: f64,
+    total_hits: u64,
+}
+
+impl AccessStats {
+    pub fn new(locations: u64) -> Self {
+        AccessStats {
+            weighted: vec![0.0; locations as usize],
+            hits: vec![0; locations as usize],
+            total_weight: 0.0,
+            total_hits: 0,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, index: u64, weight: f64) {
+        if weight <= 0.0 {
+            return; // padded top-k entries are not real accesses
+        }
+        self.weighted[index as usize] += weight;
+        self.hits[index as usize] += 1;
+        self.total_weight += weight;
+        self.total_hits += 1;
+    }
+
+    pub fn record_batch(&mut self, indices: &[u64], weights: &[f64]) {
+        for (&i, &w) in indices.iter().zip(weights) {
+            self.record(i, w);
+        }
+    }
+
+    pub fn locations(&self) -> u64 {
+        self.weighted.len() as u64
+    }
+
+    /// Fraction of memory locations accessed at least once ("Memory
+    /// usage %" row of Table 5).
+    pub fn utilization(&self) -> f64 {
+        let used = self.hits.iter().filter(|&&h| h > 0).count();
+        used as f64 / self.hits.len() as f64
+    }
+
+    /// KL(access || uniform) in nats, over the *weighted* distribution
+    /// (Table 5, following Lample et al. 2019).
+    pub fn kl_from_uniform(&self) -> f64 {
+        if self.total_weight <= 0.0 {
+            return 0.0;
+        }
+        let n = self.weighted.len() as f64;
+        let mut kl = 0.0;
+        for &w in &self.weighted {
+            if w > 0.0 {
+                let p = w / self.total_weight;
+                kl += p * (p * n).ln();
+            }
+        }
+        kl
+    }
+
+    pub fn total_accesses(&self) -> u64 {
+        self.total_hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_access_has_zero_kl_and_full_utilization() {
+        let mut s = AccessStats::new(64);
+        for i in 0..64 {
+            s.record(i, 1.0);
+        }
+        assert_eq!(s.utilization(), 1.0);
+        assert!(s.kl_from_uniform().abs() < 1e-12);
+    }
+
+    #[test]
+    fn concentrated_access_has_high_kl() {
+        let mut s = AccessStats::new(1024);
+        for _ in 0..100 {
+            s.record(7, 1.0);
+        }
+        assert!((s.utilization() - 1.0 / 1024.0).abs() < 1e-12);
+        // all mass on one of 1024 slots: KL = ln(1024)
+        assert!((s.kl_from_uniform() - (1024f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_weight_entries_ignored() {
+        let mut s = AccessStats::new(16);
+        s.record(3, 0.0);
+        assert_eq!(s.total_accesses(), 0);
+        assert_eq!(s.utilization(), 0.0);
+    }
+
+    #[test]
+    fn kl_is_scale_invariant_in_weights() {
+        let mut a = AccessStats::new(32);
+        let mut b = AccessStats::new(32);
+        for i in 0..32 {
+            let w = 1.0 + (i % 5) as f64;
+            a.record(i, w);
+            b.record(i, 10.0 * w);
+        }
+        assert!((a.kl_from_uniform() - b.kl_from_uniform()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,186 @@
+//! The value table: `M x m` f32 rows with O(1) row access.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::mmap::MmapF32;
+use crate::util::rng::Rng;
+
+/// A flat `M x m` table of value vectors backed by a lazily-populated
+/// memory map (anonymous by default, file-backed for persistence).
+pub struct ValueTable {
+    map: MmapF32,
+    rows: u64,
+    dim: usize,
+}
+
+impl ValueTable {
+    /// Zero-initialised anonymous table.  Virtual size may exceed RAM;
+    /// pages materialise on first touch.
+    pub fn zeros(rows: u64, dim: usize) -> Result<Self> {
+        let len = (rows as usize).checked_mul(dim).ok_or_else(|| {
+            anyhow::anyhow!("table size overflow: {rows} x {dim}")
+        })?;
+        Ok(ValueTable { map: MmapF32::anon(len)?, rows, dim })
+    }
+
+    /// File-backed table (persists across runs).
+    pub fn open(path: &Path, rows: u64, dim: usize) -> Result<Self> {
+        let len = rows as usize * dim;
+        Ok(ValueTable { map: MmapF32::file(path, len)?, rows, dim })
+    }
+
+    /// Gaussian init matching `model.py` (std 0.02), deterministic.
+    pub fn randomize(&mut self, seed: u64, std: f32) {
+        let rows = self.rows;
+        self.randomize_rows(seed, std, rows);
+    }
+
+    /// Initialise only the first `n_rows` rows (keeps huge tables lazy:
+    /// untouched pages stay virtual — benches cap this at 2^18 rows).
+    pub fn randomize_rows(&mut self, seed: u64, std: f32, n_rows: u64) {
+        let mut rng = Rng::new(seed);
+        let n = (n_rows.min(self.rows) as usize) * self.dim;
+        for v in &mut self.map.as_mut_slice()[..n] {
+            *v = rng.normal() as f32 * std;
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn param_count(&self) -> u64 {
+        self.rows * self.dim as u64
+    }
+
+    #[inline]
+    pub fn row(&self, idx: u64) -> &[f32] {
+        debug_assert!(idx < self.rows, "row {idx} out of range ({})", self.rows);
+        let start = idx as usize * self.dim;
+        &self.map.as_slice()[start..start + self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, idx: u64) -> &mut [f32] {
+        let start = idx as usize * self.dim;
+        let dim = self.dim;
+        &mut self.map.as_mut_slice()[start..start + dim]
+    }
+
+    /// Gather `k` weighted rows into `out` (the split-mode hot path):
+    /// `out = sum_i weights[i] * table[indices[i]]`.
+    pub fn gather_weighted(&self, indices: &[u64], weights: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(indices.len(), weights.len());
+        debug_assert_eq!(out.len(), self.dim);
+        out.fill(0.0);
+        for (&idx, &w) in indices.iter().zip(weights) {
+            if w == 0.0 {
+                continue; // padded top-k entries carry no weight
+            }
+            let row = self.row(idx);
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += w * v;
+            }
+        }
+    }
+
+    /// Plain gather of `k` rows into a `k x m` buffer (feeds the suffix
+    /// artifact, which applies the weights in-graph).
+    pub fn gather_rows(&self, indices: &[u64], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), indices.len() * self.dim);
+        for (i, &idx) in indices.iter().enumerate() {
+            out[i * self.dim..(i + 1) * self.dim].copy_from_slice(self.row(idx));
+        }
+    }
+
+    /// Scatter-add `delta` into row `idx` (training write path).
+    pub fn scatter_add(&mut self, idx: u64, delta: &[f32]) {
+        let row = self.row_mut(idx);
+        for (r, &d) in row.iter_mut().zip(delta) {
+            *r += d;
+        }
+    }
+
+    /// Bulk load from raw f32 slice (checkpoint restore).
+    pub fn load_from(&mut self, data: &[f32]) -> Result<()> {
+        if data.len() != self.param_count() as usize {
+            bail!("load_from: {} floats for {} params", data.len(), self.param_count());
+        }
+        self.map.as_mut_slice().copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Physically-resident bytes (lazy-allocation observability).
+    pub fn resident_bytes(&self) -> Result<usize> {
+        self.map.resident_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_weighted_combines_rows() {
+        let mut t = ValueTable::zeros(16, 4).unwrap();
+        t.row_mut(3).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        t.row_mut(7).copy_from_slice(&[10.0, 20.0, 30.0, 40.0]);
+        let mut out = [0.0f32; 4];
+        t.gather_weighted(&[3, 7], &[0.5, 0.25], &mut out);
+        assert_eq!(out, [3.0, 6.0, 9.0, 12.0]);
+    }
+
+    #[test]
+    fn zero_weights_skip_rows() {
+        let t = ValueTable::zeros(8, 2).unwrap();
+        let mut out = [9.0f32; 2];
+        t.gather_weighted(&[0, 1], &[0.0, 0.0], &mut out);
+        assert_eq!(out, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn scatter_add_accumulates() {
+        let mut t = ValueTable::zeros(4, 3).unwrap();
+        t.scatter_add(2, &[1.0, 1.0, 1.0]);
+        t.scatter_add(2, &[0.5, 0.0, -1.0]);
+        assert_eq!(t.row(2), &[1.5, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn billion_parameter_table_is_cheap_until_touched() {
+        // 2^24 rows x 64 = 2^30 params = 4 GB virtual
+        let mut t = ValueTable::zeros(1 << 24, 64).unwrap();
+        assert_eq!(t.param_count(), 1 << 30);
+        let before = t.resident_bytes().unwrap();
+        assert!(before < 64 << 20, "resident {before} before touching");
+        t.row_mut(12_345_678)[0] = 1.0;
+        assert_eq!(t.row(12_345_678)[0], 1.0);
+    }
+
+    #[test]
+    fn randomize_is_deterministic() {
+        let mut a = ValueTable::zeros(64, 8).unwrap();
+        let mut b = ValueTable::zeros(64, 8).unwrap();
+        a.randomize(7, 0.02);
+        b.randomize(7, 0.02);
+        assert_eq!(a.row(20), b.row(20));
+        assert!(a.row(20).iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn gather_rows_copies() {
+        let mut t = ValueTable::zeros(8, 2).unwrap();
+        t.row_mut(1).copy_from_slice(&[5.0, 6.0]);
+        let mut out = [0.0f32; 4];
+        t.gather_rows(&[1, 1], &mut out);
+        assert_eq!(out, [5.0, 6.0, 5.0, 6.0]);
+    }
+}

@@ -1,0 +1,242 @@
+//! Compiled-artifact handles: one PJRT executable per AOT'd computation,
+//! with manifest-driven positional marshalling of state and inputs.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::literal::{literal_from_bytes, HostTensor};
+use super::manifest::Manifest;
+
+/// Shared PJRT CPU client + artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    compiled: std::sync::Mutex<HashMap<String, Arc<Artifact>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime rooted at an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client ready: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self {
+            client,
+            dir: artifact_dir.as_ref().to_path_buf(),
+            compiled: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Artifact>> {
+        if let Some(a) = self.compiled.lock().unwrap().get(name) {
+            return Ok(a.clone());
+        }
+        let manifest = Manifest::load(&self.dir, name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(manifest.hlo_path())
+            .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        log::info!("compiled artifact {name} in {:.2}s", t0.elapsed().as_secs_f32());
+        let a = Arc::new(Artifact { manifest, exe, client: self.client.clone() });
+        self.compiled.lock().unwrap().insert(name.to_string(), a.clone());
+        Ok(a)
+    }
+
+    /// Names of every artifact manifest present in the directory.
+    pub fn available(&self) -> Result<Vec<String>> {
+        let mut names = vec![];
+        for entry in std::fs::read_dir(&self.dir)? {
+            let p = entry?.path();
+            if let Some(f) = p.file_name().and_then(|f| f.to_str()) {
+                if let Some(stem) = f.strip_suffix(".meta.json") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+/// A compiled computation plus its manifest.
+pub struct Artifact {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+/// Mutable model state (params, optimizer moments, BN stats) held as host
+/// literals between calls, positionally matching `manifest.state`.
+pub struct ArtifactState {
+    pub tensors: Vec<Literal>,
+}
+
+impl Artifact {
+    /// Load the variant's initial state from `<variant>.state.bin`.
+    pub fn initial_state(&self) -> Result<ArtifactState> {
+        let path = self.manifest.state_bin_path();
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading initial state {}", path.display()))?;
+        if bytes.len() != self.manifest.total_state_bytes() {
+            bail!(
+                "state bin {}: {} bytes, manifest expects {}",
+                path.display(),
+                bytes.len(),
+                self.manifest.total_state_bytes()
+            );
+        }
+        let mut tensors = Vec::with_capacity(self.manifest.state.len());
+        let mut off = 0usize;
+        for spec in &self.manifest.state {
+            let n = spec.byte_len();
+            tensors.push(literal_from_bytes(spec, &bytes[off..off + n])?);
+            off += n;
+        }
+        Ok(ArtifactState { tensors })
+    }
+
+    /// Zero-filled state matching the manifest (micro-bench artifacts
+    /// ship no `.state.bin`; their weights only matter for timing).
+    pub fn zero_state(&self) -> Result<ArtifactState> {
+        let mut tensors = Vec::with_capacity(self.manifest.state.len());
+        for spec in &self.manifest.state {
+            let n = spec.element_count();
+            let lit = match spec.dtype {
+                super::manifest::Dtype::F32 => {
+                    super::literal::literal_f32(&vec![0.0f32; n], &spec.shape)?
+                }
+                super::manifest::Dtype::I32 => {
+                    super::literal::literal_i32(&vec![0i32; n], &spec.shape)?
+                }
+                other => bail!("zero_state: dtype {other:?} unsupported"),
+            };
+            tensors.push(lit);
+        }
+        Ok(ArtifactState { tensors })
+    }
+
+    /// `initial_state` if the variant ships a `.state.bin`, else zeros.
+    pub fn initial_state_or_zeros(&self) -> Result<ArtifactState> {
+        if self.manifest.state_bin_path().exists() {
+            self.initial_state()
+        } else {
+            self.zero_state()
+        }
+    }
+
+    /// Execute with `state ++ inputs`; splits the result into
+    /// (new_state, results) per the manifest, updating `state` in place.
+    pub fn step(&self, state: &mut ArtifactState, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if state.tensors.len() != self.manifest.state.len() {
+            bail!(
+                "artifact {}: state has {} tensors, manifest expects {}",
+                self.manifest.name,
+                state.tensors.len(),
+                self.manifest.state.len()
+            );
+        }
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "artifact {}: got {} inputs, manifest expects {}",
+                self.manifest.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        // NOTE: go through execute_b with buffers we own — the C shim
+        // behind `execute(<literals>)` leaks its internally-created input
+        // buffers (one full state copy per step; discovered when the
+        // 241 MB-state lram_large variant OOM'd at ~step 120).  Buffers
+        // created here are freed by PjRtBuffer::drop.
+        let mut args: Vec<Literal> = Vec::with_capacity(state.tensors.len() + inputs.len());
+        args.append(&mut state.tensors);
+        for t in inputs {
+            args.push(t.to_literal()?);
+        }
+        let mut bufs = Vec::with_capacity(args.len());
+        for lit in &args {
+            bufs.push(self.client.buffer_from_host_literal(None, lit)?);
+        }
+        let result = self.exe.execute_b(&bufs)?;
+        // PJRT execution is asynchronous: the input buffers (and their
+        // source literals) must stay alive until the output is
+        // materialised by to_literal_sync below.
+        let root = result[0][0].to_literal_sync()?;
+        drop(bufs);
+        drop(args);
+        let mut outs = root.to_tuple()?;
+        if outs.len() != self.manifest.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs, manifest expects {}",
+                self.manifest.name,
+                outs.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        let results = outs.split_off(self.manifest.n_state_outputs);
+        state.tensors = outs;
+        results.iter().map(|l| HostTensor::from_literal(l)).collect()
+    }
+
+    /// Execute a stateless (read-only state) call: state is restored
+    /// afterwards even though the artifact returns it.
+    pub fn call(&self, state: &mut ArtifactState, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.step(state, inputs)
+    }
+}
+
+impl ArtifactState {
+    /// Serialize to the same flat binary layout as `aot.py` (checkpoints).
+    pub fn to_bytes(&self, manifest: &Manifest) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(manifest.total_state_bytes());
+        for (lit, spec) in self.tensors.iter().zip(&manifest.state) {
+            super::literal::check_spec(lit, spec)?;
+            match spec.dtype {
+                super::manifest::Dtype::F32 => {
+                    for v in lit.to_vec::<f32>()? {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                super::manifest::Dtype::I32 => {
+                    for v in lit.to_vec::<i32>()? {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                other => bail!("checkpoint dtype {other:?} unsupported"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Restore from checkpoint bytes.
+    pub fn from_bytes(manifest: &Manifest, bytes: &[u8]) -> Result<Self> {
+        if bytes.len() != manifest.total_state_bytes() {
+            bail!("checkpoint size mismatch");
+        }
+        let mut tensors = Vec::with_capacity(manifest.state.len());
+        let mut off = 0;
+        for spec in &manifest.state {
+            let n = spec.byte_len();
+            tensors.push(literal_from_bytes(spec, &bytes[off..off + n])?);
+            off += n;
+        }
+        Ok(Self { tensors })
+    }
+}

@@ -1,0 +1,134 @@
+//! Host-side tensor helpers: build xla Literals from raw data and read
+//! results back without guessing dtypes.
+
+use anyhow::{bail, Result};
+use xla::{ArrayElement, ElementType, Literal};
+
+use super::manifest::{Dtype, TensorSpec};
+
+/// A tensor on the host, mirroring the manifest dtypes we actually use.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v, _) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        match self {
+            HostTensor::F32(v, s) => literal_f32(v, s),
+            HostTensor::I32(v, s) => literal_i32(v, s),
+        }
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims)),
+            ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+/// Build a rank-N f32 literal from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal_f32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build a rank-N i32 literal from a flat slice.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("literal_i32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build a literal of the spec's dtype from raw little-endian bytes
+/// (the `*.state.bin` format written by `aot.py`).
+pub fn literal_from_bytes(spec: &TensorSpec, bytes: &[u8]) -> Result<Literal> {
+    if bytes.len() != spec.byte_len() {
+        bail!(
+            "state tensor {}: expected {} bytes, got {}",
+            spec.name,
+            spec.byte_len(),
+            bytes.len()
+        );
+    }
+    match spec.dtype {
+        Dtype::F32 => {
+            let v: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            literal_f32(&v, &spec.shape)
+        }
+        Dtype::I32 => {
+            let v: Vec<i32> = bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            literal_i32(&v, &spec.shape)
+        }
+        other => bail!("state dtype {other:?} not supported"),
+    }
+}
+
+/// Check a literal matches its manifest spec (debug aid for artifact drift).
+pub fn check_spec(lit: &Literal, spec: &TensorSpec) -> Result<()> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    if dims != spec.shape {
+        bail!("tensor {}: shape {:?} != manifest {:?}", spec.name, dims, spec.shape);
+    }
+    let ok = matches!(
+        (shape.ty(), spec.dtype),
+        (ElementType::F32, Dtype::F32) | (ElementType::S32, Dtype::I32)
+    );
+    if !ok {
+        bail!("tensor {}: dtype mismatch vs manifest {:?}", spec.name, spec.dtype);
+    }
+    Ok(())
+}
+
+/// Convenience: total f32 element count sanity check used by tests.
+#[allow(dead_code)]
+pub fn element_count<T: ArrayElement>(lit: &Literal) -> usize {
+    lit.element_count()
+}

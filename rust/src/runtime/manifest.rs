@@ -1,0 +1,213 @@
+//! Artifact manifests: the JSON contract between `aot.py` and the runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Element type tag used throughout the manifest files.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+    F64,
+    I64,
+}
+
+impl Dtype {
+    pub fn parse(tag: &str) -> Result<Self> {
+        Ok(match tag {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            "f64" => Dtype::F64,
+            "i64" => Dtype::I64,
+            other => bail!("unknown dtype tag '{other}'"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 | Dtype::U32 => 4,
+            Dtype::F64 | Dtype::I64 => 8,
+        }
+    }
+}
+
+/// Shape + dtype (+ optional name) of one positional tensor.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: v.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            shape: v.req("shape")?.as_usize_vec()?,
+            dtype: Dtype::parse(
+                v.req("dtype")?.as_str().ok_or_else(|| anyhow!("dtype not a string"))?,
+            )?,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.element_count() * self.dtype.size_bytes()
+    }
+}
+
+/// Batch geometry recorded by the exporter (when applicable).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchSpec {
+    pub b: usize,
+    pub s: usize,
+}
+
+/// `<name>.meta.json`, written by `python/compile/aot.py` for every HLO
+/// artifact.  Positional calling convention: `state ++ inputs`; the first
+/// `n_state_outputs` outputs are the updated state.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifact: String,
+    pub state: Vec<TensorSpec>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub n_state_outputs: usize,
+    pub kind: String,
+    pub variant: String,
+    pub batch: BatchSpec,
+    pub n_params: Option<u64>,
+    pub width: Option<usize>,
+    pub locations: Option<u64>,
+    pub heads: Option<usize>,
+    pub k_top: Option<usize>,
+    pub m: Option<usize>,
+    pub n_keys: Option<usize>,
+    pub access_outputs: bool,
+    pub dir: PathBuf,
+    pub name: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path, name: &str) -> Result<Self> {
+        let path = dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let batch = match v.get("batch") {
+            Some(b) => BatchSpec {
+                b: b.get("B").and_then(Json::as_usize).unwrap_or(0),
+                s: b.get("S").and_then(Json::as_usize).unwrap_or(0),
+            },
+            None => BatchSpec::default(),
+        };
+        let opt_usize = |key: &str| v.get(key).and_then(Json::as_usize);
+        let m = Manifest {
+            artifact: v
+                .req("artifact")?
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact not a string"))?
+                .to_string(),
+            state: specs("state")?,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            n_state_outputs: v
+                .req("n_state_outputs")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("n_state_outputs not an int"))?,
+            kind: v.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+            variant: v.get("variant").and_then(Json::as_str).unwrap_or("").to_string(),
+            batch,
+            n_params: v.get("n_params").and_then(Json::as_i64).map(|x| x as u64),
+            width: opt_usize("width"),
+            locations: v.get("locations").and_then(Json::as_i64).map(|x| x as u64),
+            heads: opt_usize("heads"),
+            k_top: opt_usize("k_top"),
+            m: opt_usize("m"),
+            n_keys: opt_usize("n_keys"),
+            access_outputs: v.get("access_outputs").and_then(Json::as_bool).unwrap_or(false),
+            dir: dir.to_path_buf(),
+            name: name.to_string(),
+        };
+        if m.n_state_outputs > m.outputs.len() {
+            bail!("manifest {name}: n_state_outputs exceeds output count");
+        }
+        Ok(m)
+    }
+
+    pub fn hlo_path(&self) -> PathBuf {
+        self.dir.join(&self.artifact)
+    }
+
+    /// Path of the initial-state binary for this artifact's variant.
+    pub fn state_bin_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.state.bin", self.variant))
+    }
+
+    pub fn result_specs(&self) -> &[TensorSpec] {
+        &self.outputs[self.n_state_outputs..]
+    }
+
+    pub fn total_state_bytes(&self) -> usize {
+        self.state.iter().map(|s| s.byte_len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("lram_man_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("toy.meta.json"),
+            r#"{"artifact": "toy.hlo.txt",
+                "state": [{"name": "p/w", "shape": [2, 3], "dtype": "f32"}],
+                "inputs": [{"name": "x", "shape": [4], "dtype": "i32"}],
+                "outputs": [{"shape": [2, 3], "dtype": "f32"}, {"shape": [], "dtype": "f32"}],
+                "n_state_outputs": 1, "kind": "test", "variant": "toy",
+                "batch": {"B": 4, "S": 1}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir, "toy").unwrap();
+        assert_eq!(m.state[0].byte_len(), 24);
+        assert_eq!(m.inputs[0].dtype, Dtype::I32);
+        assert_eq!(m.result_specs().len(), 1);
+        assert_eq!(m.batch.b, 4);
+        assert_eq!(m.total_state_bytes(), 24);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_state_count() {
+        let dir = std::env::temp_dir().join(format!("lram_man2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("bad.meta.json"),
+            r#"{"artifact": "b.hlo.txt", "state": [], "inputs": [],
+                "outputs": [], "n_state_outputs": 3}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir, "bad").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

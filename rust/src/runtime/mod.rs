@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest) and execute them.
+//!
+//! The python compile path (`python/compile/aot.py`) lowers every jitted
+//! computation to HLO *text* — the only interchange format the bundled
+//! xla_extension 0.5.1 accepts from jax >= 0.5 — alongside a
+//! `<name>.meta.json` manifest describing the positional `state` and
+//! `input` tensors and the output layout.  This module wraps the `xla`
+//! crate (`PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `compile` -> `execute`) behind an [`Artifact`] handle that keeps model
+//! state device-side between calls.
+
+mod artifact;
+mod literal;
+mod manifest;
+
+pub use artifact::{Artifact, ArtifactState, Runtime};
+pub use literal::{literal_f32, literal_i32, HostTensor};
+pub use manifest::{Dtype, Manifest, TensorSpec};

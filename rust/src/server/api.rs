@@ -1,0 +1,116 @@
+//! Request/response types for the MLM serving API.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// A fill-mask request.
+#[derive(Debug, Clone)]
+pub struct PredictRequest {
+    pub text: String,
+    /// top-k predictions per mask (default 5)
+    pub top_k: usize,
+}
+
+impl PredictRequest {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(PredictRequest {
+            text: v
+                .req("text")?
+                .as_str()
+                .ok_or_else(|| anyhow!("'text' must be a string"))?
+                .to_string(),
+            top_k: v.get("top_k").and_then(Json::as_usize).unwrap_or(5),
+        })
+    }
+}
+
+/// One candidate token for a masked position.
+#[derive(Debug, Clone)]
+pub struct TokenScore {
+    pub token: String,
+    pub logprob: f64,
+}
+
+/// Response: predictions per `[MASK]` position, in order of appearance.
+#[derive(Debug, Clone, Default)]
+pub struct PredictResponse {
+    pub masks: Vec<Vec<TokenScore>>,
+    pub latency_ms: f64,
+    pub batch_size: usize,
+}
+
+impl PredictResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "masks",
+                Json::Arr(
+                    self.masks
+                        .iter()
+                        .map(|cands| {
+                            Json::Arr(
+                                cands
+                                    .iter()
+                                    .map(|c| {
+                                        Json::obj(vec![
+                                            ("token", Json::Str(c.token.clone())),
+                                            ("logprob", Json::Num(c.logprob)),
+                                        ])
+                                    })
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            ("latency_ms", Json::Num(self.latency_ms)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn parses_request() {
+        let v = json::parse(r#"{"text": "a [MASK] b", "top_k": 3}"#).unwrap();
+        let r = PredictRequest::from_json(&v).unwrap();
+        assert_eq!(r.text, "a [MASK] b");
+        assert_eq!(r.top_k, 3);
+    }
+
+    #[test]
+    fn default_top_k() {
+        let v = json::parse(r#"{"text": "x"}"#).unwrap();
+        assert_eq!(PredictRequest::from_json(&v).unwrap().top_k, 5);
+    }
+
+    #[test]
+    fn missing_text_is_error() {
+        let v = json::parse(r#"{"top_k": 1}"#).unwrap();
+        assert!(PredictRequest::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn response_serialises() {
+        let resp = PredictResponse {
+            masks: vec![vec![TokenScore { token: "cat".into(), logprob: -0.5 }]],
+            latency_ms: 12.0,
+            batch_size: 2,
+        };
+        let j = resp.to_json().to_string();
+        let v = json::parse(&j).unwrap();
+        assert_eq!(
+            v.get("masks").unwrap().as_arr().unwrap()[0].as_arr().unwrap()[0]
+                .get("token")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "cat"
+        );
+    }
+}

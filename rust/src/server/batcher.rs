@@ -1,0 +1,263 @@
+//! Dynamic batcher: coalesce concurrent fill-mask requests into the
+//! fixed-shape inference artifact (max-batch-or-timeout policy, the same
+//! shape as vLLM's router loop).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::mlm::fit_length;
+use crate::runtime::{ArtifactState, HostTensor, Runtime};
+use crate::tokenizer::{Bpe, CLS_ID, MASK_ID, SEP_ID};
+
+use super::api::{PredictRequest, PredictResponse, TokenScore};
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Max time a request waits for batch-mates.
+    pub max_wait: Duration,
+    pub top_k_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_wait: Duration::from_millis(20), top_k_cap: 20 }
+    }
+}
+
+struct Pending {
+    tokens: Vec<i32>,
+    mask_positions: Vec<usize>,
+    top_k: usize,
+    reply: Sender<Result<PredictResponse>>,
+    enqueued: Instant,
+}
+
+/// The batcher: submit() from any thread; a scheduler thread drains the
+/// queue into artifact-sized batches.
+pub struct Batcher {
+    tx: Sender<Pending>,
+    /// rolling access statistics (Table-5 style observability in serving)
+    pub stats: Arc<Mutex<BatchStats>>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct BatchStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub total_latency_ms: f64,
+    pub max_batch_fill: usize,
+}
+
+/// Everything the executor thread needs to construct its own PJRT state —
+/// the xla crate's handles are not Send, so the thread owns the runtime.
+#[derive(Debug, Clone)]
+pub struct BatcherInit {
+    pub artifact_dir: String,
+    pub artifact_name: String,
+    pub checkpoint: Option<Vec<u8>>,
+}
+
+impl Batcher {
+    /// Spawn the scheduler/executor thread.  Blocks until the artifact is
+    /// compiled (or compilation fails).
+    pub fn spawn(init: BatcherInit, bpe: Arc<Bpe>, cfg: BatcherConfig) -> Result<Arc<Batcher>> {
+        let (tx, rx): (Sender<Pending>, Receiver<Pending>) = channel();
+        let stats = Arc::new(Mutex::new(BatchStats::default()));
+        let batcher = Arc::new(Batcher { tx, stats: stats.clone() });
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        std::thread::spawn(move || {
+            // the PJRT client, executable and state all live (and die) on
+            // this thread
+            let setup = (|| -> Result<_> {
+                let rt = Runtime::new(&init.artifact_dir)?;
+                let artifact = rt.load(&init.artifact_name)?;
+                let state = match &init.checkpoint {
+                    Some(bytes) => ArtifactState::from_bytes(&artifact.manifest, bytes)?,
+                    None => artifact.initial_state()?,
+                };
+                Ok((rt, artifact, state))
+            })();
+            let (_rt, artifact, mut state) = match setup {
+                Ok(v) => {
+                    let _ = ready_tx.send(Ok(()));
+                    v
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let b_max = artifact.manifest.batch.b;
+            let seq_len = artifact.manifest.inputs[0].shape[1];
+            let vocab =
+                artifact.manifest.outputs[artifact.manifest.n_state_outputs].shape[2];
+            loop {
+                // block for the first request, then collect until full or
+                // the oldest request exceeds max_wait
+                let first = match rx.recv() {
+                    Ok(p) => p,
+                    Err(_) => return, // all senders dropped: shut down
+                };
+                let mut group = vec![first];
+                let deadline = group[0].enqueued + cfg.max_wait;
+                while group.len() < b_max {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(p) => group.push(p),
+                        Err(_) => break,
+                    }
+                }
+                let t0 = Instant::now();
+                let fill = group.len();
+                // build the fixed-shape batch (pad with empty rows)
+                let mut tokens = Vec::with_capacity(b_max * seq_len);
+                for p in &group {
+                    tokens.extend(fit_length(p.tokens.clone(), seq_len));
+                }
+                for _ in group.len()..b_max {
+                    tokens.extend(std::iter::repeat(0).take(seq_len));
+                }
+                let inputs = vec![HostTensor::I32(tokens, vec![b_max, seq_len])];
+                let result = artifact.call(&mut state, &inputs);
+                let latency = t0.elapsed().as_secs_f64() * 1e3;
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.requests += fill as u64;
+                    s.batches += 1;
+                    s.total_latency_ms += latency;
+                    s.max_batch_fill = s.max_batch_fill.max(fill);
+                }
+                match result {
+                    Ok(outs) => {
+                        let logp = outs[0].as_f32().unwrap_or(&[]).to_vec();
+                        for (row, p) in group.into_iter().enumerate() {
+                            let resp = extract_predictions(
+                                &logp, row, seq_len, vocab, &p, &bpe, cfg.top_k_cap,
+                                latency, fill,
+                            );
+                            let _ = p.reply.send(Ok(resp));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("inference failed: {e:#}");
+                        for p in group {
+                            let _ = p.reply.send(Err(anyhow!(msg.clone())));
+                        }
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during setup"))??;
+        Ok(batcher)
+    }
+
+    /// Tokenize + enqueue a request; blocks until the response is ready.
+    pub fn submit(&self, bpe: &Bpe, req: &PredictRequest) -> Result<PredictResponse> {
+        let (tokens, mask_positions) = encode_with_masks(bpe, &req.text);
+        if mask_positions.is_empty() {
+            return Err(anyhow!("request contains no [MASK] token"));
+        }
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Pending {
+                tokens,
+                mask_positions,
+                top_k: req.top_k,
+                reply: reply_tx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow!("batcher is shut down"))?;
+        reply_rx.recv().map_err(|_| anyhow!("batcher dropped the request"))?
+    }
+}
+
+/// Tokenize text, mapping literal `[MASK]` spans to the mask id.
+pub fn encode_with_masks(bpe: &Bpe, text: &str) -> (Vec<i32>, Vec<usize>) {
+    let mut ids = vec![CLS_ID];
+    let mut masks = Vec::new();
+    let mut rest = text;
+    while let Some(pos) = rest.find("[MASK]") {
+        ids.extend(bpe.encode(&rest[..pos]));
+        masks.push(ids.len());
+        ids.push(MASK_ID);
+        rest = &rest[pos + "[MASK]".len()..];
+    }
+    ids.extend(bpe.encode(rest));
+    ids.push(SEP_ID);
+    (ids, masks)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn extract_predictions(
+    logp: &[f32],
+    row: usize,
+    seq_len: usize,
+    vocab: usize,
+    p: &Pending,
+    bpe: &Bpe,
+    top_k_cap: usize,
+    latency_ms: f64,
+    batch_size: usize,
+) -> PredictResponse {
+    let mut masks = Vec::with_capacity(p.mask_positions.len());
+    for &pos in &p.mask_positions {
+        if pos >= seq_len {
+            masks.push(vec![]);
+            continue;
+        }
+        let base = row * seq_len * vocab + pos * vocab;
+        let scores = &logp[base..base + vocab];
+        let k = p.top_k.min(top_k_cap);
+        let mut idx: Vec<usize> = (0..vocab).collect();
+        idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        masks.push(
+            idx.into_iter()
+                .take(k)
+                .map(|i| TokenScore {
+                    token: bpe.vocab.token(i as i32).to_string(),
+                    logprob: scores[i] as f64,
+                })
+                .collect(),
+        );
+    }
+    PredictResponse { masks, latency_ms, batch_size }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::BpeTrainer;
+
+    fn bpe() -> Bpe {
+        let mut t = BpeTrainer::new();
+        t.add_text("the cat sat on the mat the cat sat");
+        t.train(100)
+    }
+
+    #[test]
+    fn encode_with_masks_finds_positions() {
+        let b = bpe();
+        let (ids, masks) = encode_with_masks(&b, "the [MASK] sat on the [MASK]");
+        assert_eq!(masks.len(), 2);
+        for &m in &masks {
+            assert_eq!(ids[m], MASK_ID);
+        }
+        assert_eq!(ids[0], CLS_ID);
+        assert_eq!(*ids.last().unwrap(), SEP_ID);
+    }
+
+    #[test]
+    fn no_mask_text_has_no_positions() {
+        let b = bpe();
+        let (_, masks) = encode_with_masks(&b, "the cat sat");
+        assert!(masks.is_empty());
+    }
+}

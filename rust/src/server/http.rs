@@ -1,0 +1,120 @@
+//! Minimal threaded HTTP/1.1 front door for the serving router
+//! (std::net; tokio is unavailable offline).  One thread per connection —
+//! batching happens downstream in [`super::batcher`], which is where the
+//! coordination actually matters.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::tokenizer::Bpe;
+use crate::util::json;
+
+use super::api::PredictRequest;
+use super::batcher::Batcher;
+
+/// Serve until the process is killed.  Endpoints:
+///   POST /predict  {"text": "... [MASK] ...", "top_k": 5}
+///   GET  /healthz
+///   GET  /stats
+pub fn serve(addr: &str, batcher: Arc<Batcher>, bpe: Arc<Bpe>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    log::info!("serving on http://{addr} (POST /predict)");
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                log::warn!("accept failed: {e}");
+                continue;
+            }
+        };
+        let batcher = batcher.clone();
+        let bpe = bpe.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle(stream, &batcher, &bpe) {
+                log::debug!("connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle(mut stream: TcpStream, batcher: &Batcher, bpe: &Bpe) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    // headers: we only need Content-Length
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+
+    let (status, body) = match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => (200, r#"{"ok": true}"#.to_string()),
+        ("GET", "/stats") => {
+            let s = batcher.stats.lock().unwrap().clone();
+            let mean = if s.batches > 0 { s.total_latency_ms / s.batches as f64 } else { 0.0 };
+            (
+                200,
+                format!(
+                    r#"{{"requests": {}, "batches": {}, "mean_batch_latency_ms": {:.3}, "max_batch_fill": {}}}"#,
+                    s.requests, s.batches, mean, s.max_batch_fill
+                ),
+            )
+        }
+        ("POST", "/predict") => {
+            let mut raw = vec![0u8; content_length];
+            reader.read_exact(&mut raw)?;
+            handle_post(&raw, batcher, bpe)
+        }
+        _ => (404, r#"{"error": "not found"}"#.to_string()),
+    };
+    respond(&mut stream, status, &body)
+}
+
+fn respond(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn handle_post(body: &[u8], batcher: &Batcher, bpe: &Bpe) -> (u16, String) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, r#"{"error": "body is not utf-8"}"#.into()),
+    };
+    let parsed = json::parse(text)
+        .map_err(|e| anyhow!(e))
+        .and_then(|v| PredictRequest::from_json(&v));
+    match parsed {
+        Ok(req) => match batcher.submit(bpe, &req) {
+            Ok(resp) => (200, resp.to_json().to_string()),
+            Err(e) => (400, format!(r#"{{"error": "{e}"}}"#)),
+        },
+        Err(e) => (400, format!(r#"{{"error": "{e}"}}"#)),
+    }
+}

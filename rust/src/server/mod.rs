@@ -1,0 +1,15 @@
+//! MLM serving: a vLLM-router-style coordinator — TCP front door,
+//! dynamic batcher, PJRT executor — with python nowhere on the path.
+//!
+//! Requests (`POST /predict` with `{"text": "... [MASK] ..."}`) are
+//! tokenized, queued, and coalesced by the [`batcher`] into fixed-shape
+//! batches for the `infer_logits_<variant>` artifact; responses carry the
+//! top-k predictions for every `[MASK]` position.
+
+pub mod api;
+pub mod batcher;
+mod http;
+
+pub use api::{PredictRequest, PredictResponse, TokenScore};
+pub use batcher::{Batcher, BatcherConfig, BatcherInit};
+pub use http::serve;

@@ -1,0 +1,249 @@
+//! Split-mode layer execution — the paper's *system* contribution made
+//! concrete: the dense compute runs as AOT'd HLO while the value-table
+//! gather runs against the rust [`crate::memstore`], whose O(1) row
+//! access is what lets a single layer scale to billions of parameters
+//! with constant compute (Figure 3 / Table 4).
+//!
+//! ```text
+//! x ──HLO prefix──► (idx, w, scale) ──rust gather──► rows ──HLO suffix──► y
+//! ```
+//!
+//! The same structure serves PKM, whose prefix (codebook scoring) is
+//! O(sqrt N) — timing both under identical marshalling is what makes the
+//! Figure-3 comparison fair.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::memstore::{AccessStats, ValueTable};
+use crate::runtime::{Artifact, ArtifactState, HostTensor, Runtime};
+
+/// An LRAM layer in split mode: HLO prefix/suffix + rust value table.
+pub struct SplitLramLayer {
+    prefix: Arc<Artifact>,
+    suffix: Arc<Artifact>,
+    prefix_state: ArtifactState,
+    suffix_state: ArtifactState,
+    pub table: ValueTable,
+    pub width: usize,
+    pub heads: usize,
+    pub k_top: usize,
+    pub m: usize,
+    pub batch: usize,
+    /// optional access accounting (Table 5 in serving)
+    pub stats: Option<AccessStats>,
+    gathered: Vec<f32>,
+    row_idx: Vec<u64>,
+}
+
+impl SplitLramLayer {
+    /// Load `micro_lram_prefix_w{w}_n{N}` + `micro_lram_suffix_w{w}` and
+    /// build an `N x m` value table.
+    pub fn load(rt: &Runtime, width: usize, locations: u64, track_stats: bool) -> Result<Self> {
+        let prefix = rt
+            .load(&format!("micro_lram_prefix_w{width}_n{locations}"))
+            .context("loading prefix artifact")?;
+        let suffix = rt.load(&format!("micro_lram_suffix_w{width}"))?;
+        let heads = prefix.manifest.heads.ok_or_else(|| anyhow!("prefix manifest: heads"))?;
+        let k_top = prefix.manifest.k_top.ok_or_else(|| anyhow!("prefix manifest: k_top"))?;
+        let m = prefix.manifest.m.ok_or_else(|| anyhow!("prefix manifest: m"))?;
+        let batch = prefix.manifest.batch.b;
+        let mut table = ValueTable::zeros(locations, m)?;
+        // deterministic non-zero rows for numerically meaningful outputs;
+        // capped so billion-parameter tables stay lazily mapped
+        table.randomize_rows(0xE8, 0.02, locations.min(1 << 18));
+        // non-degenerate query/output projections so lookups spread over
+        // the torus (zero weights would collapse every query to one slot)
+        let mut prefix_state = prefix.zero_state()?;
+        randomize_state(&mut prefix_state, &prefix.manifest)?;
+        let mut suffix_state = suffix.zero_state()?;
+        randomize_state(&mut suffix_state, &suffix.manifest)?;
+        Ok(SplitLramLayer {
+            prefix,
+            suffix,
+            prefix_state,
+            suffix_state,
+            table,
+            width,
+            heads,
+            k_top,
+            m,
+            batch,
+            stats: track_stats.then(|| AccessStats::new(locations)),
+            gathered: vec![0.0; batch * heads * k_top * m],
+            row_idx: vec![0; batch * heads * k_top],
+        })
+    }
+
+    /// Total parameters reachable by this layer (the Figure-3 x-axis).
+    pub fn param_count(&self) -> u64 {
+        self.table.param_count()
+    }
+
+    /// Run the full split pipeline on x (batch x width).
+    pub fn run(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch;
+        assert_eq!(x.len(), b * self.width);
+        let outs = self.prefix.call(
+            &mut self.prefix_state,
+            &[HostTensor::F32(x.to_vec(), vec![b, self.width])],
+        )?;
+        let idx = outs[0].as_i32()?;
+        let wts = outs[1].as_f32()?.to_vec();
+        let scale = outs[2].as_f32()?.to_vec();
+
+        // the O(1) random-access gather — the memstore hot path
+        for (i, &ix) in idx.iter().enumerate() {
+            self.row_idx[i] = ix as u64;
+        }
+        self.table.gather_rows(&self.row_idx, &mut self.gathered);
+        if let Some(stats) = self.stats.as_mut() {
+            for (&i, &w) in self.row_idx.iter().zip(&wts) {
+                stats.record(i, w as f64);
+            }
+        }
+
+        let outs = self.suffix.call(
+            &mut self.suffix_state,
+            &[
+                HostTensor::F32(
+                    self.gathered.clone(),
+                    vec![b, self.heads, self.k_top, self.m],
+                ),
+                HostTensor::F32(wts, vec![b, self.heads, self.k_top]),
+                HostTensor::F32(scale, vec![b, self.heads]),
+            ],
+        )?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+}
+
+/// A PKM layer in split mode (O(sqrt N) scoring prefix).
+pub struct SplitPkmLayer {
+    score: Arc<Artifact>,
+    combine: Arc<Artifact>,
+    score_state: ArtifactState,
+    combine_state: ArtifactState,
+    pub table: ValueTable,
+    pub width: usize,
+    pub heads: usize,
+    pub k_top: usize,
+    pub batch: usize,
+    gathered: Vec<f32>,
+    row_idx: Vec<u64>,
+}
+
+impl SplitPkmLayer {
+    pub fn load(rt: &Runtime, width: usize, n_keys: usize) -> Result<Self> {
+        let score = rt.load(&format!("micro_pkm_score_w{width}_nk{n_keys}"))?;
+        let combine = rt.load(&format!("micro_pkm_combine_w{width}"))?;
+        let heads = score.manifest.heads.ok_or_else(|| anyhow!("score manifest: heads"))?;
+        let k_top = score.manifest.k_top.ok_or_else(|| anyhow!("score manifest: k_top"))?;
+        let batch = score.manifest.batch.b;
+        let locations = (n_keys * n_keys) as u64;
+        let mut table = ValueTable::zeros(locations, width)?;
+        table.randomize_rows(0x93B, 0.02, locations.min(1 << 18));
+        let mut score_state = score.zero_state()?;
+        // fill the codebooks with deterministic values so scoring is
+        // non-degenerate (state layout: bn then p/* per manifest order)
+        randomize_state(&mut score_state, &score.manifest)?;
+        let combine_state = combine.zero_state()?;
+        Ok(SplitPkmLayer {
+            score,
+            combine,
+            score_state,
+            combine_state,
+            table,
+            width,
+            heads,
+            k_top,
+            batch,
+            gathered: vec![0.0; batch * heads * k_top * width],
+            row_idx: vec![0; batch * heads * k_top],
+        })
+    }
+
+    pub fn param_count(&self) -> u64 {
+        self.table.param_count()
+    }
+
+    pub fn run(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch;
+        let outs = self.score.call(
+            &mut self.score_state,
+            &[HostTensor::F32(x.to_vec(), vec![b, self.width])],
+        )?;
+        let idx = outs[0].as_i32()?;
+        let wts = outs[1].as_f32()?.to_vec();
+        for (i, &ix) in idx.iter().enumerate() {
+            self.row_idx[i] = ix as u64;
+        }
+        self.table.gather_rows(&self.row_idx, &mut self.gathered);
+        let outs = self.combine.call(
+            &mut self.combine_state,
+            &[
+                HostTensor::F32(
+                    self.gathered.clone(),
+                    vec![b, self.heads, self.k_top, self.width],
+                ),
+                HostTensor::F32(wts, vec![b, self.heads, self.k_top]),
+            ],
+        )?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+}
+
+/// A dense w -> 4w -> w reference layer (the replaced subnetwork).
+pub struct DenseLayer {
+    art: Arc<Artifact>,
+    state: ArtifactState,
+    pub width: usize,
+    pub batch: usize,
+}
+
+impl DenseLayer {
+    pub fn load(rt: &Runtime, width: usize) -> Result<Self> {
+        let art = rt.load(&format!("micro_dense_w{width}"))?;
+        let mut state = art.zero_state()?;
+        randomize_state(&mut state, &art.manifest)?;
+        let batch = art.manifest.batch.b;
+        Ok(DenseLayer { art, state, width, batch })
+    }
+
+    pub fn param_count(&self) -> u64 {
+        self.art.manifest.n_params.unwrap_or(0)
+    }
+
+    pub fn run(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.art.call(
+            &mut self.state,
+            &[HostTensor::F32(x.to_vec(), vec![self.batch, self.width])],
+        )?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+}
+
+/// Fill the state with semantically sensible deterministic values:
+/// weight matrices / codebooks get small gaussians, BatchNorm gains and
+/// running variances get 1, everything else stays 0.
+fn randomize_state(state: &mut ArtifactState, manifest: &crate::runtime::Manifest) -> Result<()> {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(0x57A7E);
+    for (lit, spec) in state.tensors.iter_mut().zip(&manifest.state) {
+        if spec.dtype != crate::runtime::Dtype::F32 {
+            continue;
+        }
+        let n = spec.element_count();
+        let name = spec.name.as_str();
+        let v: Vec<f32> = if name.ends_with("/w") || name.contains("keys") {
+            (0..n).map(|_| (rng.normal() * 0.05) as f32).collect()
+        } else if name.ends_with("/g") || name.contains("var") {
+            vec![1.0; n]
+        } else {
+            vec![0.0; n]
+        };
+        *lit = crate::runtime::literal_f32(&v, &spec.shape)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,342 @@
+//! Byte-pair encoding: training (greedy most-frequent-pair merges over a
+//! word-frequency table) and encoding (rank-ordered merge application),
+//! XLM-style: input is lowercased, whitespace-pretokenized, and every
+//! word carries a `</w>` end-of-word marker so merges never cross word
+//! boundaries.
+
+use std::collections::HashMap;
+
+use super::vocab::{Vocab, UNK_ID};
+
+/// A trained BPE model: merge ranks + vocabulary.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    pub vocab: Vocab,
+    /// (left, right) -> rank; lower rank merges first.
+    merges: HashMap<(String, String), usize>,
+}
+
+/// Trainer: accumulates word counts, then learns merges.
+#[derive(Debug, Default)]
+pub struct BpeTrainer {
+    word_counts: HashMap<String, u64>,
+}
+
+pub const EOW: &str = "</w>";
+
+/// XLM-style pretokenization: lowercase, strip non-alphanumeric except
+/// basic punctuation (kept as standalone words), split on whitespace.
+pub fn pretokenize(text: &str) -> Vec<String> {
+    let mut words = Vec::new();
+    let mut cur = String::new();
+    for c in text.chars() {
+        let c = c.to_ascii_lowercase();
+        if c.is_alphanumeric() {
+            cur.push(c);
+        } else {
+            if !cur.is_empty() {
+                words.push(std::mem::take(&mut cur));
+            }
+            if !c.is_whitespace() && c.is_ascii_punctuation() {
+                words.push(c.to_string());
+            }
+        }
+    }
+    if !cur.is_empty() {
+        words.push(cur);
+    }
+    words
+}
+
+impl BpeTrainer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed a document into the frequency table.
+    pub fn add_text(&mut self, text: &str) {
+        for w in pretokenize(text) {
+            *self.word_counts.entry(w).or_insert(0) += 1;
+        }
+    }
+
+    /// Learn merges until the vocabulary reaches `vocab_size`.
+    ///
+    /// Uses incremental pair counting: a merge only revisits the words
+    /// that actually contain the merged pair, so training a few-thousand
+    /// token vocabulary over tens of thousands of distinct words stays
+    /// sub-second.
+    pub fn train(&self, vocab_size: usize) -> Bpe {
+        // represent each distinct word as a symbol sequence ending in </w>
+        let mut words: Vec<(Vec<String>, u64)> = self
+            .word_counts
+            .iter()
+            .map(|(w, &c)| {
+                let mut syms: Vec<String> = w.chars().map(|ch| ch.to_string()).collect();
+                if let Some(last) = syms.last_mut() {
+                    last.push_str(EOW);
+                } else {
+                    syms.push(EOW.to_string());
+                }
+                (syms, c)
+            })
+            .collect();
+        words.sort(); // determinism independent of hash order
+
+        let mut vocab = Vocab::with_specials();
+        // base symbols
+        let mut base: Vec<String> = words
+            .iter()
+            .flat_map(|(syms, _)| syms.iter().cloned())
+            .collect();
+        base.sort();
+        base.dedup();
+        for s in base {
+            vocab.push(s);
+        }
+
+        // pair -> (count, set of word indices currently containing it)
+        type Pair = (String, String);
+        let mut pair_counts: HashMap<Pair, u64> = HashMap::new();
+        let mut pair_words: HashMap<Pair, std::collections::BTreeSet<usize>> = HashMap::new();
+        for (wi, (syms, c)) in words.iter().enumerate() {
+            for win in syms.windows(2) {
+                let p = (win[0].clone(), win[1].clone());
+                *pair_counts.entry(p.clone()).or_insert(0) += c;
+                pair_words.entry(p).or_default().insert(wi);
+            }
+        }
+
+        let mut merges: HashMap<Pair, usize> = HashMap::new();
+        while vocab.len() < vocab_size {
+            // deterministic argmax: by count, then lexicographically
+            // smallest pair (ties are rare but must not depend on hash
+            // iteration order)
+            let best = pair_counts
+                .iter()
+                .filter(|(_, &c)| c >= 2)
+                .max_by(|a, b| a.1.cmp(b.1).then_with(|| b.0.cmp(a.0)))
+                .map(|(p, &c)| (p.clone(), c));
+            let Some(((l, r), _)) = best else { break };
+            let merged = format!("{l}{r}");
+            merges.insert((l.clone(), r.clone()), merges.len());
+            vocab.push(merged.clone());
+            // revisit only the words containing this pair
+            let touched = pair_words.remove(&(l.clone(), r.clone())).unwrap_or_default();
+            pair_counts.remove(&(l.clone(), r.clone()));
+            for wi in touched {
+                let (syms, c) = &mut words[wi];
+                let c = *c;
+                // retract this word's old pair contributions
+                for win in syms.windows(2) {
+                    let p = (win[0].clone(), win[1].clone());
+                    if let Some(cnt) = pair_counts.get_mut(&p) {
+                        *cnt = cnt.saturating_sub(c);
+                        if *cnt == 0 {
+                            pair_counts.remove(&p);
+                        }
+                    }
+                    if let Some(set) = pair_words.get_mut(&p) {
+                        set.remove(&wi);
+                    }
+                }
+                // apply the merge
+                let mut i = 0;
+                while i + 1 < syms.len() {
+                    if syms[i] == l && syms[i + 1] == r {
+                        syms[i] = merged.clone();
+                        syms.remove(i + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+                // add the new contributions back
+                for win in syms.windows(2) {
+                    let p = (win[0].clone(), win[1].clone());
+                    *pair_counts.entry(p.clone()).or_insert(0) += c;
+                    pair_words.entry(p).or_default().insert(wi);
+                }
+            }
+        }
+        Bpe { vocab, merges }
+    }
+}
+
+impl Bpe {
+    /// Encode text to token ids (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for w in pretokenize(text) {
+            self.encode_word(&w, &mut out);
+        }
+        out
+    }
+
+    fn encode_word(&self, word: &str, out: &mut Vec<i32>) {
+        let mut syms: Vec<String> = word.chars().map(|c| c.to_string()).collect();
+        if let Some(last) = syms.last_mut() {
+            last.push_str(EOW);
+        } else {
+            return;
+        }
+        // iteratively apply the lowest-rank merge present
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, position)
+            for i in 0..syms.len().saturating_sub(1) {
+                if let Some(&rank) =
+                    self.merges.get(&(syms[i].clone(), syms[i + 1].clone()))
+                {
+                    if best.map(|(r, _)| rank < r).unwrap_or(true) {
+                        best = Some((rank, i));
+                    }
+                }
+            }
+            let Some((_, i)) = best else { break };
+            let merged = format!("{}{}", syms[i], syms[i + 1]);
+            syms[i] = merged;
+            syms.remove(i + 1);
+        }
+        for s in &syms {
+            let id = self.vocab.id(s);
+            out.push(if id >= 0 { id } else { UNK_ID });
+        }
+    }
+
+    /// Decode ids back to a string (lossy w.r.t. whitespace).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            let tok = self.vocab.token(id);
+            if tok.starts_with('[') && tok.ends_with(']') {
+                continue; // specials
+            }
+            if let Some(stripped) = tok.strip_suffix(EOW) {
+                s.push_str(stripped);
+                s.push(' ');
+            } else {
+                s.push_str(tok);
+            }
+        }
+        s.trim_end().to_string()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Serialize: one token per line, then merges.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str("#version lram-bpe-1\n");
+        s.push_str(&format!("#tokens {}\n", self.vocab.len()));
+        for t in &self.vocab.tokens {
+            s.push_str(t);
+            s.push('\n');
+        }
+        let mut ordered: Vec<(&(String, String), &usize)> = self.merges.iter().collect();
+        ordered.sort_by_key(|(_, &r)| r);
+        s.push_str(&format!("#merges {}\n", ordered.len()));
+        for ((l, r), _) in ordered {
+            s.push_str(&format!("{l} {r}\n"));
+        }
+        s
+    }
+
+    pub fn from_text(text: &str) -> anyhow::Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("");
+        anyhow::ensure!(header == "#version lram-bpe-1", "bad BPE file header");
+        let ntok: usize = lines
+            .next()
+            .and_then(|l| l.strip_prefix("#tokens "))
+            .and_then(|n| n.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad #tokens line"))?;
+        let mut vocab = Vocab::default();
+        for _ in 0..ntok {
+            let t = lines.next().ok_or_else(|| anyhow::anyhow!("truncated tokens"))?;
+            vocab.push(t.to_string());
+        }
+        let nmerge: usize = lines
+            .next()
+            .and_then(|l| l.strip_prefix("#merges "))
+            .and_then(|n| n.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad #merges line"))?;
+        let mut merges = HashMap::new();
+        for rank in 0..nmerge {
+            let line = lines.next().ok_or_else(|| anyhow::anyhow!("truncated merges"))?;
+            let (l, r) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("bad merge line '{line}'"))?;
+            merges.insert((l.to_string(), r.to_string()), rank);
+        }
+        Ok(Bpe { vocab, merges })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn train_on(texts: &[&str], vocab: usize) -> Bpe {
+        let mut tr = BpeTrainer::new();
+        for t in texts {
+            tr.add_text(t);
+        }
+        tr.train(vocab)
+    }
+
+    #[test]
+    fn pretokenize_lowercases_and_splits() {
+        assert_eq!(
+            pretokenize("Hello, World! x2"),
+            vec!["hello", ",", "world", "!", "x2"]
+        );
+    }
+
+    #[test]
+    fn frequent_words_become_single_tokens() {
+        let texts = vec!["the cat sat on the mat "; 50];
+        let bpe = train_on(&texts, 300);
+        let ids = bpe.encode("the cat");
+        // "the" appears often enough to merge into one token
+        assert!(ids.len() <= 3, "{ids:?}");
+        assert_eq!(bpe.decode(&ids), "the cat");
+    }
+
+    #[test]
+    fn roundtrip_text() {
+        let corpus = ["alpha beta gamma delta", "beta gamma alpha", "delta delta beta"];
+        let bpe = train_on(&corpus, 100);
+        for t in corpus {
+            let ids = bpe.encode(t);
+            assert_eq!(bpe.decode(&ids), t);
+        }
+    }
+
+    #[test]
+    fn unseen_chars_do_not_panic() {
+        let bpe = train_on(&["abc abc abc"], 50);
+        let ids = bpe.encode("xyz");
+        assert!(!ids.is_empty());
+        // all ids valid
+        for &i in &ids {
+            assert!((i as usize) < bpe.vocab_size() || i == UNK_ID);
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let bpe = train_on(&["the quick brown fox ", "the slow brown dog "], 120);
+        let text = bpe.to_text();
+        let back = Bpe::from_text(&text).unwrap();
+        assert_eq!(back.vocab_size(), bpe.vocab_size());
+        assert_eq!(back.encode("the quick dog"), bpe.encode("the quick dog"));
+    }
+
+    #[test]
+    fn determinism() {
+        let a = train_on(&["x y z w x y z", "w w x y"], 60).to_text();
+        let b = train_on(&["x y z w x y z", "w w x y"], 60).to_text();
+        assert_eq!(a, b);
+    }
+}

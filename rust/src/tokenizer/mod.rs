@@ -1,0 +1,9 @@
+//! Byte-pair-encoding tokenizer (from scratch — the paper preprocesses
+//! with the XLM pipeline: lowercasing + BPE with a 30k dictionary; we
+//! reproduce the same structure at a scaled-down vocabulary).
+
+mod bpe;
+mod vocab;
+
+pub use bpe::{Bpe, BpeTrainer};
+pub use vocab::{Vocab, CLS_ID, MASK_ID, PAD_ID, SEP_ID, UNK_ID};

@@ -1,0 +1,87 @@
+//! Token vocabulary with reserved special ids.
+
+use std::collections::HashMap;
+
+pub const PAD_ID: i32 = 0;
+pub const UNK_ID: i32 = 1;
+pub const MASK_ID: i32 = 2;
+pub const CLS_ID: i32 = 3;
+pub const SEP_ID: i32 = 4;
+#[allow(dead_code)]
+pub const N_SPECIALS: i32 = 5;
+
+pub const SPECIALS: [&str; 5] = ["[PAD]", "[UNK]", "[MASK]", "[CLS]", "[SEP]"];
+
+/// Bidirectional token <-> id map.
+#[derive(Debug, Clone, Default)]
+pub struct Vocab {
+    pub tokens: Vec<String>,
+    pub ids: HashMap<String, i32>,
+}
+
+impl Vocab {
+    pub fn with_specials() -> Self {
+        let mut v = Vocab::default();
+        for s in SPECIALS {
+            v.push(s.to_string());
+        }
+        v
+    }
+
+    pub fn push(&mut self, token: String) -> i32 {
+        if let Some(&id) = self.ids.get(&token) {
+            return id;
+        }
+        let id = self.tokens.len() as i32;
+        self.ids.insert(token.clone(), id);
+        self.tokens.push(token);
+        id
+    }
+
+    pub fn id(&self, token: &str) -> i32 {
+        self.ids.get(token).copied().unwrap_or(UNK_ID)
+    }
+
+    pub fn token(&self, id: i32) -> &str {
+        self.tokens
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("[UNK]")
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let v = Vocab::with_specials();
+        assert_eq!(v.id("[PAD]"), PAD_ID);
+        assert_eq!(v.id("[MASK]"), MASK_ID);
+        assert_eq!(v.token(SEP_ID), "[SEP]");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = Vocab::with_specials();
+        assert_eq!(v.id("zzz"), UNK_ID);
+    }
+
+    #[test]
+    fn push_is_idempotent() {
+        let mut v = Vocab::with_specials();
+        let a = v.push("ab".into());
+        let b = v.push("ab".into());
+        assert_eq!(a, b);
+        assert_eq!(v.len(), 6);
+    }
+}

@@ -1,0 +1,84 @@
+//! Tiny property-testing harness (the `proptest` crate is unavailable in
+//! the offline build).  `forall` runs a closure over `n` random cases and
+//! reports the seed of the first failing case so it can be replayed.
+//!
+//! ```no_run
+//! use lram::util::check::forall;
+//! forall(200, |rng| {
+//!     let x = rng.uniform(-10.0, 10.0);
+//!     assert!(x.abs() <= 10.0);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `f` on `n` independently-seeded RNGs; panic with the failing seed.
+pub fn forall(n: u32, f: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    let base = std::env::var("LRAM_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..n as u64 {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed on case {case} (replay with LRAM_CHECK_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two slices are element-wise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "element {i}: {x} vs {y} (|diff| = {}, tol = {tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall(50, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "LRAM_CHECK_SEED")]
+    fn forall_reports_seed_on_failure() {
+        forall(50, |rng| {
+            assert!(rng.f64() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-5);
+    }
+}

@@ -1,0 +1,147 @@
+//! Minimal CLI argument parser (`clap` is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free
+//! positional arguments, with typed accessors and a usage dump.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        self.flags
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                // accept 2^k and 1_000_000 style
+                let clean = v.replace('_', "");
+                if let Some(exp) = clean.strip_prefix("2^") {
+                    let e: u32 = exp.parse().with_context(|| format!("--{key}: bad exponent"))?;
+                    return Ok(1u64 << e);
+                }
+                clean.parse().with_context(|| format!("--{key} must be an integer"))
+            }
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(anyhow!("--{key}: expected bool, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of integers, with 2^k support.
+    pub fn u64_list(&self, key: &str, default: &[u64]) -> Result<Vec<u64>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    let s = s.trim().replace('_', "");
+                    if let Some(exp) = s.strip_prefix("2^") {
+                        Ok(1u64 << exp.parse::<u32>()?)
+                    } else {
+                        Ok(s.parse::<u64>()?)
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_kinds() {
+        let a = args(&["train", "--steps", "100", "--fast", "--lr=0.5"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize("steps", 0).unwrap(), 100);
+        assert!(a.bool("fast", false).unwrap());
+        assert_eq!(a.f64("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.str("missing", "d"), "d");
+    }
+
+    #[test]
+    fn power_of_two() {
+        let a = args(&["--n", "2^20", "--list", "2^10,1000,2^4"]);
+        assert_eq!(a.u64("n", 0).unwrap(), 1 << 20);
+        assert_eq!(a.u64_list("list", &[]).unwrap(), vec![1024, 1000, 16]);
+    }
+
+    #[test]
+    fn required_flag_errors() {
+        assert!(args(&[]).req_str("x").is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Minimal stderr logger backing the `log` crate facade.
+//! Level from `LRAM_LOG` (error|warn|info|debug|trace), default info.
+
+use std::sync::Once;
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _: &log::Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            let now = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs_f64())
+                .unwrap_or(0.0);
+            eprintln!(
+                "[{:13.3} {:5} {}] {}",
+                now,
+                record.level(),
+                record.target().split("::").last().unwrap_or(""),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+static INIT: Once = Once::new();
+
+/// Install the logger (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("LRAM_LOG").as_deref() {
+            Ok("error") => log::LevelFilter::Error,
+            Ok("warn") => log::LevelFilter::Warn,
+            Ok("debug") => log::LevelFilter::Debug,
+            Ok("trace") => log::LevelFilter::Trace,
+            _ => log::LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+}

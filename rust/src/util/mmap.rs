@@ -1,0 +1,169 @@
+//! Anonymous/file-backed memory maps via libc (`memmap2` unavailable).
+//!
+//! The memstore uses lazily-populated anonymous maps so a "billion
+//! parameter" value table costs physical memory only for pages actually
+//! touched — the honest CPU analogue of allocating a huge HBM tensor and
+//! accessing 32 rows per query.
+
+use std::fs::OpenOptions;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// An owned mmap'd region of `f32`s.
+pub struct MmapF32 {
+    ptr: *mut f32,
+    len: usize, // in f32 elements
+}
+
+// SAFETY: the region is owned and pages are plain memory; concurrent
+// readers are fine, writers must hold external synchronisation (the
+// memstore shards guarantee this).
+unsafe impl Send for MmapF32 {}
+unsafe impl Sync for MmapF32 {}
+
+impl MmapF32 {
+    /// Anonymous zero-initialised map of `len` f32 elements.
+    pub fn anon(len: usize) -> Result<Self> {
+        if len == 0 {
+            bail!("mmap of zero length");
+        }
+        let bytes = len * 4;
+        // SAFETY: standard anonymous private mapping.
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                bytes,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_NORESERVE,
+                -1,
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap({} bytes) failed: {}", bytes, std::io::Error::last_os_error());
+        }
+        Ok(MmapF32 { ptr: ptr as *mut f32, len })
+    }
+
+    /// File-backed map (created/truncated to size) for persistence.
+    pub fn file(path: &Path, len: usize) -> Result<Self> {
+        let f = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        f.set_len((len * 4) as u64)?;
+        // SAFETY: shared file mapping of the exact file length.
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len * 4,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap file failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(MmapF32 { ptr: ptr as *mut f32, len })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: region is valid for len elements for the lifetime of self.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    #[allow(dead_code)]
+    pub(crate) unsafe fn as_mut_slice_unchecked(&self) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: exclusive borrow of self.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    /// Resident-set estimate: how many pages of the map are actually
+    /// backed by physical memory (Table-5-style utilisation accounting).
+    pub fn resident_bytes(&self) -> Result<usize> {
+        let page = 4096usize;
+        let bytes = self.len * 4;
+        let pages = bytes.div_ceil(page);
+        let mut vec = vec![0u8; pages];
+        // SAFETY: mincore over our own mapping.
+        let rc = unsafe {
+            libc::mincore(self.ptr as *mut libc::c_void, bytes, vec.as_mut_ptr())
+        };
+        if rc != 0 {
+            bail!("mincore failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(vec.iter().filter(|&&b| b & 1 != 0).count() * page)
+    }
+}
+
+impl Drop for MmapF32 {
+    fn drop(&mut self) {
+        // SAFETY: unmapping the region we mapped.
+        unsafe {
+            libc::munmap(self.ptr as *mut libc::c_void, self.len * 4);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anon_map_reads_zero_writes_back() {
+        let mut m = MmapF32::anon(1 << 20).unwrap();
+        assert_eq!(m.as_slice()[12345], 0.0);
+        m.as_mut_slice()[12345] = 3.5;
+        assert_eq!(m.as_slice()[12345], 3.5);
+    }
+
+    #[test]
+    fn huge_map_is_lazy() {
+        // 4 GB virtual, but only touched pages go resident
+        let m = MmapF32::anon(1 << 30).unwrap();
+        let before = m.resident_bytes().unwrap();
+        // SAFETY: test-only single-threaded write
+        unsafe { m.as_mut_slice_unchecked()[1 << 29] = 1.0 };
+        let after = m.resident_bytes().unwrap();
+        assert!(after >= before);
+        assert!(after < (1 << 26), "resident {after} unexpectedly large");
+    }
+
+    #[test]
+    fn file_map_persists() {
+        let dir = std::env::temp_dir().join(format!("lram_mmap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("table.bin");
+        {
+            let mut m = MmapF32::file(&path, 1024).unwrap();
+            m.as_mut_slice()[7] = 2.25;
+        }
+        let m = MmapF32::file(&path, 1024).unwrap();
+        assert_eq!(m.as_slice()[7], 2.25);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

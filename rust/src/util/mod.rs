@@ -1,0 +1,12 @@
+//! Offline-build substrates: JSON, PRNG, CLI, mmap, logging, timing,
+//! property-testing.  These replace serde/rand/clap/memmap2/tracing/
+//! criterion/proptest, none of which are available without network access
+//! (see DESIGN.md "Substitutions").
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod mmap;
+pub mod rng;
+pub mod timing;

@@ -1,0 +1,104 @@
+//! Benchmark timing helpers (criterion is unavailable offline).
+//!
+//! `bench` runs warmups then samples, reporting median / p10 / p90 —
+//! matching the paper's "median of 15 successive runs" protocol for
+//! Figure 3 and Table 4.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mean_ns: f64,
+    pub samples: usize,
+}
+
+impl BenchStats {
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Time `f` (`samples` runs after `warmup` runs); returns stats over runs.
+pub fn bench(warmup: usize, samples: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| {
+        let idx = ((times.len() - 1) as f64 * p).round() as usize;
+        times[idx]
+    };
+    BenchStats {
+        median_ns: q(0.5),
+        p10_ns: q(0.1),
+        p90_ns: q(0.9),
+        mean_ns: times.iter().sum::<f64>() / times.len() as f64,
+        samples,
+    }
+}
+
+/// Fixed-width table printer for the bench binaries.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(w + 2)).collect::<String>());
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench(1, 9, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+        assert_eq!(s.samples, 9);
+    }
+}

@@ -1,0 +1,168 @@
+//! Cross-language consistency: the rust lattice implementation must agree
+//! exactly with the python implementation that lowered the kernels, via
+//! `artifacts/lattice_fixture.json` (written by `python -m compile.aot`).
+//!
+//! This is the contract that makes the split-mode gather sound: indices
+//! computed inside the HLO (python math) address the rust memstore (rust
+//! math).
+
+use lram::lattice::{neighbor_table, LatticeLookup, TorusK};
+use lram::util::json::{self, Json};
+
+fn load_fixture() -> Option<Json> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/lattice_fixture.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(json::parse(&text).expect("fixture parses"))
+}
+
+macro_rules! require_fixture {
+    () => {
+        match load_fixture() {
+            Some(f) => f,
+            None => {
+                eprintln!("skipping: artifacts/lattice_fixture.json missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn neighbor_tables_match() {
+    let f = require_fixture!();
+    let py: Vec<Vec<i64>> = f
+        .req("neighbor_table")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|row| row.as_i64_vec().unwrap())
+        .collect();
+    let rs = neighbor_table();
+    assert_eq!(py.len(), rs.len(), "table sizes differ");
+    for (a, b) in py.iter().zip(rs.iter()) {
+        assert_eq!(a.as_slice(), b.as_slice(), "neighbor table rows differ");
+    }
+}
+
+#[test]
+fn quantizer_matches() {
+    let f = require_fixture!();
+    for case in f.req("quantize").unwrap().as_arr().unwrap() {
+        let q: Vec<f64> = case.req("q").unwrap().as_f64_vec().unwrap();
+        let want: Vec<i64> = case.req("x").unwrap().as_i64_vec().unwrap();
+        let got = lram::lattice::quantize(&q.clone().try_into().unwrap());
+        assert_eq!(got.to_vec(), want, "quantize({q:?})");
+    }
+}
+
+#[test]
+fn torus_roundtrip_matches() {
+    let f = require_fixture!();
+    let k_vec = f.req("K").unwrap().as_i64_vec().unwrap();
+    let torus = TorusK::new(k_vec.clone().try_into().unwrap()).unwrap();
+    assert_eq!(
+        torus.num_locations(),
+        f.req("num_locations").unwrap().as_i64().unwrap() as u64
+    );
+    // python wrote representatives of evenly-spaced indices; rust must
+    // map each back to an index consistent with its position
+    let m = torus.num_locations();
+    let stride = (m / 64).max(1);
+    for (i, row) in f.req("torus_roundtrip").unwrap().as_arr().unwrap().iter().enumerate() {
+        let x: Vec<i64> = row.as_i64_vec().unwrap();
+        let idx = torus.index(&x.clone().try_into().unwrap());
+        assert_eq!(idx, i as u64 * stride, "representative {x:?}");
+    }
+}
+
+#[test]
+fn compiled_kernel_matches_python_oracle() {
+    // End-to-end HLO round-trip: run the AOT'd L1 kernel (lookup_check
+    // artifact) on the fixture queries and compare the (index -> weight)
+    // maps against the python brute-force oracle values.
+    let f = require_fixture!();
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("lookup_check.meta.json").exists() {
+        eprintln!("skipping: lookup_check artifact missing");
+        return;
+    }
+    let rt = lram::runtime::Runtime::new(&dir).unwrap();
+    let art = rt.load("lookup_check").unwrap();
+    let mut state = art.zero_state().unwrap();
+    let cases = f.req("lookups").unwrap().as_arr().unwrap();
+    let n = cases.len().min(64);
+    let mut q = vec![0.0f32; 64 * 8];
+    for (i, case) in cases.iter().take(n).enumerate() {
+        for (j, v) in case.req("q").unwrap().as_f64_vec().unwrap().iter().enumerate() {
+            q[i * 8 + j] = *v as f32;
+        }
+    }
+    let out = art
+        .call(&mut state, &[lram::runtime::HostTensor::F32(q, vec![64, 8])])
+        .unwrap();
+    let idx = out[0].as_i32().unwrap();
+    let wts = out[1].as_f32().unwrap();
+    for (i, case) in cases.iter().take(n).enumerate() {
+        let want_idx = case.req("idx").unwrap().as_i64_vec().unwrap();
+        let want_w = case.req("w").unwrap().as_f64_vec().unwrap();
+        let mut want: std::collections::HashMap<i64, f64> = Default::default();
+        for (&wi, &ww) in want_idx.iter().zip(&want_w) {
+            if ww > 1e-5 {
+                *want.entry(wi).or_insert(0.0) += ww;
+            }
+        }
+        let mut have: std::collections::HashMap<i64, f64> = Default::default();
+        for k in 0..32 {
+            let w = wts[i * 32 + k] as f64;
+            if w > 1e-5 {
+                *have.entry(idx[i * 32 + k] as i64).or_insert(0.0) += w;
+            }
+        }
+        assert_eq!(
+            want.keys().collect::<std::collections::BTreeSet<_>>(),
+            have.keys().collect::<std::collections::BTreeSet<_>>(),
+            "query {i}: compiled-kernel index set diverged from oracle"
+        );
+        for (k, w) in &want {
+            assert!((have[k] - w).abs() < 1e-4, "query {i} slot {k}: {} vs {w}", have[k]);
+        }
+    }
+}
+
+#[test]
+fn lookups_match_python_oracle() {
+    let f = require_fixture!();
+    let k_vec = f.req("K").unwrap().as_i64_vec().unwrap();
+    let torus = TorusK::new(k_vec.try_into().unwrap()).unwrap();
+    let mut lk = LatticeLookup::new(torus, 32);
+    for case in f.req("lookups").unwrap().as_arr().unwrap() {
+        let q: Vec<f64> = case.req("q").unwrap().as_f64_vec().unwrap();
+        let want_idx: Vec<i64> = case.req("idx").unwrap().as_i64_vec().unwrap();
+        let want_w: Vec<f64> = case.req("w").unwrap().as_f64_vec().unwrap();
+        let got = lk.lookup(&q.clone().try_into().unwrap());
+        // compare as index -> weight maps over nonzero weights (tie order
+        // between equal weights is implementation-defined)
+        let mut want: std::collections::HashMap<i64, f64> = Default::default();
+        for (&i, &w) in want_idx.iter().zip(&want_w) {
+            if w > 1e-9 {
+                *want.entry(i).or_insert(0.0) += w;
+            }
+        }
+        let mut have: std::collections::HashMap<i64, f64> = Default::default();
+        for h in &got.hits {
+            if h.weight > 1e-9 {
+                *have.entry(h.index as i64).or_insert(0.0) += h.weight;
+            }
+        }
+        assert_eq!(
+            want.keys().collect::<std::collections::BTreeSet<_>>(),
+            have.keys().collect::<std::collections::BTreeSet<_>>(),
+            "index sets differ for q = {q:?}"
+        );
+        for (k, w) in &want {
+            let h = have[k];
+            assert!((h - w).abs() < 1e-6, "slot {k}: rust {h} vs python {w}");
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Serving-path integration: dynamic batcher over the inference artifact,
+//! HTTP front door end-to-end on a loopback socket.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use lram::data::synth::CorpusSpec;
+use lram::data::DataPipeline;
+use lram::server::{serve, Batcher, BatcherConfig, BatcherInit, PredictRequest};
+
+fn artifact_dir() -> Option<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("infer_logits_baseline.meta.json").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(dir.display().to_string())
+}
+
+macro_rules! require {
+    ($e:expr) => {
+        match $e {
+            Some(v) => v,
+            None => return,
+        }
+    };
+}
+
+fn build_bpe() -> Arc<lram::tokenizer::Bpe> {
+    let p = DataPipeline::new(CorpusSpec::default(), 4096, 8, 1, 0.15).unwrap();
+    Arc::new(p.bpe)
+}
+
+fn spawn_batcher(dir: &str) -> Arc<Batcher> {
+    Batcher::spawn(
+        BatcherInit {
+            artifact_dir: dir.to_string(),
+            artifact_name: "infer_logits_baseline".into(),
+            checkpoint: None,
+        },
+        build_bpe(),
+        BatcherConfig::default(),
+    )
+    .expect("batcher setup")
+}
+
+#[test]
+fn batcher_answers_fill_mask_requests() {
+    let dir = require!(artifact_dir());
+    let batcher = spawn_batcher(&dir);
+    let bpe = build_bpe();
+    let req = PredictRequest { text: "the [MASK] of the".into(), top_k: 5 };
+    let resp = batcher.submit(&bpe, &req).unwrap();
+    assert_eq!(resp.masks.len(), 1);
+    assert_eq!(resp.masks[0].len(), 5);
+    // log-probs descending and finite
+    let lps: Vec<f64> = resp.masks[0].iter().map(|c| c.logprob).collect();
+    for w in lps.windows(2) {
+        assert!(w[0] >= w[1]);
+    }
+    assert!(lps.iter().all(|l| l.is_finite() && *l <= 0.0));
+}
+
+#[test]
+fn batcher_coalesces_concurrent_requests() {
+    let dir = require!(artifact_dir());
+    let batcher = spawn_batcher(&dir);
+    let mut handles = vec![];
+    for i in 0..4 {
+        let b = batcher.clone();
+        let bpe = build_bpe();
+        handles.push(std::thread::spawn(move || {
+            let req = PredictRequest {
+                text: format!("request {i} says [MASK] ."),
+                top_k: 3,
+            };
+            b.submit(&bpe, &req).unwrap()
+        }));
+    }
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.masks.len(), 1);
+        assert_eq!(resp.masks[0].len(), 3);
+    }
+    let stats = batcher.stats.lock().unwrap().clone();
+    assert_eq!(stats.requests, 4);
+    assert!(stats.batches <= 4);
+    assert!(stats.max_batch_fill >= 1);
+}
+
+#[test]
+fn request_without_mask_errors() {
+    let dir = require!(artifact_dir());
+    let batcher = spawn_batcher(&dir);
+    let bpe = build_bpe();
+    let req = PredictRequest { text: "no mask here".into(), top_k: 3 };
+    assert!(batcher.submit(&bpe, &req).is_err());
+}
+
+#[test]
+fn http_end_to_end() {
+    let dir = require!(artifact_dir());
+    let batcher = spawn_batcher(&dir);
+    let bpe = build_bpe();
+    let addr = "127.0.0.1:18471";
+    {
+        let batcher = batcher.clone();
+        let bpe = bpe.clone();
+        std::thread::spawn(move || {
+            let _ = serve(addr, batcher, bpe);
+        });
+    }
+    // wait for the listener
+    let mut stream = None;
+    for _ in 0..50 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            stream = Some(s);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let mut stream = stream.expect("server did not start");
+    let body = r#"{"text": "the [MASK] sat", "top_k": 2}"#;
+    write!(
+        stream,
+        "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("\"masks\""), "{resp}");
+
+    // health endpoint
+    let mut s2 = TcpStream::connect(addr).unwrap();
+    write!(s2, "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut r2 = String::new();
+    s2.read_to_string(&mut r2).unwrap();
+    assert!(r2.contains(r#"{"ok": true}"#), "{r2}");
+}
