@@ -1,20 +1,30 @@
 //! L3 hot-path microbenchmarks: the pure-rust lattice lookup (used by the
-//! memstore/serving gather accounting) and the memstore row gather.
-//! These are the pieces the perf pass tunes; see EXPERIMENTS.md §Perf.
+//! memstore/serving gather accounting) and the memstore row gather —
+//! scalar reference vs the batched SoA engine (`lattice::batch`).
+//!
+//! Alongside the human-readable table this writes machine-readable
+//! results to `BENCH_lattice.json` (parseable with `lram::util::json`;
+//! see `util::timing::BenchReport`) so later PRs can track the perf
+//! trajectory.  The headline row is batch-256 lookup+gather: the fused
+//! engine must beat the seed scalar path by >= 3x single-threaded.
 //!
 //! Run: `cargo bench --bench lattice_hot_path`
 
-use lram::lattice::{LatticeLookup, TorusK};
+use lram::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
 use lram::memstore::ValueTable;
 use lram::util::rng::Rng;
-use lram::util::timing::{bench, Table};
+use lram::util::timing::{bench, BenchReport, Table};
+
+fn torus() -> TorusK {
+    TorusK::new([16, 16, 8, 8, 8, 8, 8, 8]).unwrap()
+}
 
 fn main() {
     let mut table = Table::new(&["op", "median", "p90", "per-unit"]);
+    let mut report = BenchReport::new("lattice_hot_path");
 
     // single lookup (reduce + 232 scores + top-32 + index)
-    let torus = TorusK::new([16, 16, 8, 8, 8, 8, 8, 8]).unwrap();
-    let mut lk = LatticeLookup::new(torus, 32);
+    let mut lk = LatticeLookup::new(torus(), 32);
     let mut rng = Rng::new(1);
     let queries: Vec<[f64; 8]> = (0..1024)
         .map(|_| std::array::from_fn(|_| rng.uniform(-8.0, 8.0)))
@@ -26,11 +36,12 @@ fn main() {
         qi += 1;
     });
     table.row(&[
-        "lattice lookup".into(),
+        "scalar lookup".into(),
         format!("{:.2} us", s.median_us()),
         format!("{:.2} us", s.p90_ns / 1e3),
         format!("{:.1} ns/candidate", s.median_ns / 232.0),
     ]);
+    report.entry("scalar_lookup", &[("median_us", s.median_us()), ("p90_us", s.p90_ns / 1e3)]);
 
     // quantize alone
     let s = bench(200, 4096, || {
@@ -44,6 +55,7 @@ fn main() {
         format!("{:.0} ns", s.p90_ns),
         "-".into(),
     ]);
+    report.entry("quantize", &[("median_ns", s.median_ns)]);
 
     // memstore gather: 32 rows x 64 floats from a 2^22-row table
     let mut vt = ValueTable::zeros(1 << 22, 64).unwrap();
@@ -62,6 +74,7 @@ fn main() {
         format!("{:.2} us", s.p90_ns / 1e3),
         format!("{:.1} ns/row", s.median_ns / 32.0),
     ]);
+    report.entry("gather_rows_32x64", &[("median_us", s.median_us())]);
 
     // weighted gather (fused combine)
     let wts = vec![0.03125f32; 32];
@@ -77,7 +90,121 @@ fn main() {
         format!("{:.2} us", s.p90_ns / 1e3),
         format!("{:.1} ns/row", s.median_ns / 32.0),
     ]);
+    report.entry("gather_weighted_32x64", &[("median_us", s.median_us())]);
+
+    // ---- batched SoA engine: lookup throughput --------------------------
+    let n_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // flat query pool: 4096 queries, batches rotate over disjoint windows
+    let pool: Vec<f64> = (0..4096 * 8).map(|_| rng.uniform(-8.0, 8.0)).collect();
+    let thread_opts: Vec<usize> = if n_threads > 1 { vec![1, n_threads] } else { vec![1] };
+    let mut soa = BatchOutput::default();
+    for &batch in &[1usize, 32, 256, 1024] {
+        for &threads in &thread_opts {
+            if threads > 1 && batch < 32 {
+                continue; // sharding a tiny batch is pure overhead
+            }
+            let engine = BatchLookupEngine::with_threads(torus(), 32, threads);
+            let mut bi = 0;
+            let samples = if batch >= 1024 { 256 } else { 2048 };
+            let s = bench(32, samples, || {
+                let start = (bi & 3) * batch * 8;
+                engine.lookup_batch_into(&pool[start..start + batch * 8], &mut soa);
+                bi += 1;
+            });
+            let qps = batch as f64 / (s.median_ns / 1e9);
+            table.row(&[
+                format!("engine lookup b={batch} t={threads}"),
+                format!("{:.2} us", s.median_us()),
+                format!("{:.2} us", s.p90_ns / 1e3),
+                format!("{:.2} Mq/s", qps / 1e6),
+            ]);
+            report.entry(
+                &format!("engine_lookup_b{batch}_t{threads}"),
+                &[
+                    ("batch", batch as f64),
+                    ("threads", threads as f64),
+                    ("median_us", s.median_us()),
+                    ("qps", qps),
+                ],
+            );
+        }
+    }
+
+    // ---- headline: batch-256 lookup+gather, scalar seed path vs fused --
+    let mut gtab = ValueTable::zeros(1 << 18, 64).unwrap();
+    gtab.randomize(5, 0.02);
+    let batch = 256usize;
+
+    // seed scalar path: per-query lookup (allocating Vec<Hit>) followed
+    // by a per-query weighted gather — what consumers did before the
+    // engine existed
+    let mut scalar_out = vec![0.0f32; 64];
+    let mut bi = 0;
+    let s_scalar = bench(8, 64, || {
+        let start = (bi & 3) * batch * 8;
+        let results = lk.lookup_batch(&pool[start..start + batch * 8]);
+        for r in &results {
+            let idx: Vec<u64> = r.hits.iter().map(|h| h.index).collect();
+            let w: Vec<f32> = r.hits.iter().map(|h| h.weight as f32).collect();
+            gtab.gather_weighted(&idx, &w, &mut scalar_out);
+        }
+        std::hint::black_box(&scalar_out);
+        bi += 1;
+    });
+    table.row(&[
+        format!("scalar lookup+gather b={batch}"),
+        format!("{:.2} us", s_scalar.median_us()),
+        format!("{:.2} us", s_scalar.p90_ns / 1e3),
+        format!("{:.2} Mq/s", batch as f64 * 1e3 / s_scalar.median_ns),
+    ]);
+    report.entry(
+        "scalar_lookup_gather_b256",
+        &[
+            ("batch", batch as f64),
+            ("median_us", s_scalar.median_us()),
+            ("qps", batch as f64 / (s_scalar.median_ns / 1e9)),
+        ],
+    );
+
+    let mut fused = vec![0.0f32; batch * 64];
+    let mut speedup_t1 = 0.0;
+    for &threads in &thread_opts {
+        let engine = BatchLookupEngine::with_threads(torus(), 32, threads);
+        let s_fused = bench(16, 256, || {
+            let start = (bi & 3) * batch * 8;
+            engine.lookup_gather_into(&pool[start..start + batch * 8], &gtab, &mut soa, &mut fused);
+            bi += 1;
+        });
+        let speedup = s_scalar.median_ns / s_fused.median_ns;
+        if threads == 1 {
+            speedup_t1 = speedup;
+        }
+        table.row(&[
+            format!("engine lookup+gather b={batch} t={threads}"),
+            format!("{:.2} us", s_fused.median_us()),
+            format!("{:.2} us", s_fused.p90_ns / 1e3),
+            format!("{speedup:.2}x vs scalar"),
+        ]);
+        report.entry(
+            &format!("engine_lookup_gather_b{batch}_t{threads}"),
+            &[
+                ("batch", batch as f64),
+                ("threads", threads as f64),
+                ("median_us", s_fused.median_us()),
+                ("qps", batch as f64 / (s_fused.median_ns / 1e9)),
+                ("speedup_vs_scalar", speedup),
+            ],
+        );
+    }
 
     println!("\n== L3 hot-path microbench ==\n");
     table.print();
+    println!(
+        "\nheadline: fused engine b256 t1 is {speedup_t1:.2}x the seed scalar path \
+         (acceptance floor: 3x)"
+    );
+    match report.write("BENCH_lattice.json") {
+        Ok(()) => println!("machine-readable results -> BENCH_lattice.json"),
+        Err(e) => eprintln!("could not write BENCH_lattice.json: {e}"),
+    }
 }

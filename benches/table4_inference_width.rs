@@ -23,7 +23,13 @@ fn main() -> anyhow::Result<()> {
     let locations = args.u64("n", 1 << 18)?;
     let samples = args.usize("samples", 15)?; // paper: median of 15 runs
 
-    let rt = Runtime::new(args.str("artifacts", "artifacts"))?;
+    let rt = match Runtime::new(args.str("artifacts", "artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("Table 4 needs the PJRT runtime + artifacts; skipping ({e:#})");
+            return Ok(());
+        }
+    };
     let mut table = Table::new(&[
         "Width", "Dense us/vec", "LRAM us/vec", "dense/lram", "LRAM params",
     ]);

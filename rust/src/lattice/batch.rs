@@ -1,0 +1,440 @@
+//! Batched SoA lookup→gather engine — the fused L3 hot path.
+//!
+//! [`super::lookup::LatticeLookup`] answers one query at a time and
+//! allocates a `Vec<Hit>` per call; fine as a reference oracle, too slow
+//! to serve traffic.  [`BatchLookupEngine`] processes N queries through
+//! reduce → candidate scoring → top-k → inverse isometry → torus index
+//! (→ optionally the weighted value-table gather) as one allocation-free
+//! pipeline over structure-of-arrays buffers.
+//!
+//! # SoA layout
+//!
+//! Queries arrive row-major (`N x 8` f64).  Results live in flat
+//! parallel arrays (see [`BatchOutput`]), `k = k_top` slots per query:
+//!
+//! ```text
+//! indices:      [N*k] u64   indices[q*k + j] = torus slot of hit j
+//! weights:      [N*k] f32   weights[q*k + j] = kernel weight of hit j
+//! total_weight: [N]   f64   sum of all in-support candidate weights
+//! ```
+//!
+//! Queries with fewer than `k` in-support candidates pad the tail with
+//! `(index 0, weight 0.0)` — the same "zero weight means no access"
+//! convention the memstore gather and `AccessStats` already use.  The
+//! fused gather writes `out: [N*m] f32` with
+//! `out[q] = sum_j weights[q,j] * table[indices[q,j]]`, skipping the
+//! intermediate `k x m` gathered buffer entirely.
+//!
+//! # Why it is fast
+//!
+//! * **Scoring** walks the candidate table in transposed (lane-major)
+//!   order: per lane, one contiguous fused multiply-add pass over 232
+//!   f64s (`d2[c] += (z_j - soa[j][c])^2`), which LLVM autovectorizes;
+//!   the scalar path's unrolled 8-lane loop stays in `lookup.rs` as the
+//!   differential-testing reference.  The per-candidate accumulation
+//!   order (lane 0..7) is identical to the scalar path, so distances —
+//!   and therefore weights — are bit-identical.
+//! * **Top-k** replaces the O(n*k) selection sort with an O(n + k log k)
+//!   quickselect ([`crate::util::topk`]); candidates with `d2 >= 8`
+//!   never enter the selection.
+//! * **Gather** fuses into the same pass with software prefetch of the
+//!   upcoming rows, so index math overlaps the memory latency of the
+//!   O(1) random accesses.
+//! * **Batch sharding** splits the queries across `std::thread` scoped
+//!   workers with per-worker scratch; output shards are disjoint, so
+//!   results are bit-identical for every thread count.
+
+use super::e8::{reduce, Vec8};
+use super::neighbors::{neighbor_table, neighbor_table_soa, N_NEIGHBORS};
+use super::torus::TorusK;
+use crate::memstore::ValueTable;
+use crate::util::topk::partial_top_k_desc;
+
+/// Structure-of-arrays results for a batch of lookups (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct BatchOutput {
+    /// `[N*k]` torus memory slots, `k_top` per query, weight-descending.
+    pub indices: Vec<u64>,
+    /// `[N*k]` kernel weights; `0.0` marks padded (absent) hits.
+    pub weights: Vec<f32>,
+    /// `[N]` total kernel weight over *all* in-support candidates
+    /// (paper bound: `[0.851, 1]`).
+    pub total_weight: Vec<f64>,
+    k_top: usize,
+}
+
+impl BatchOutput {
+    /// Number of queries currently held.
+    pub fn queries(&self) -> usize {
+        self.total_weight.len()
+    }
+
+    /// Hits kept per query.
+    pub fn k_top(&self) -> usize {
+        self.k_top
+    }
+
+    /// The `(indices, weights)` rows of query `q`.
+    pub fn query(&self, q: usize) -> (&[u64], &[f32]) {
+        let lo = q * self.k_top;
+        let hi = lo + self.k_top;
+        (&self.indices[lo..hi], &self.weights[lo..hi])
+    }
+
+    fn reset(&mut self, n: usize, k_top: usize) {
+        self.k_top = k_top;
+        self.indices.resize(n * k_top, 0);
+        self.weights.resize(n * k_top, 0.0);
+        self.total_weight.resize(n, 0.0);
+    }
+}
+
+/// Per-worker scratch: one distance row over the candidate table plus
+/// the in-support `(weight, candidate)` pairs awaiting selection.
+struct Scratch {
+    d2: [f64; N_NEIGHBORS],
+    cand: Vec<(f64, u32)>,
+}
+
+impl Scratch {
+    fn new() -> Self {
+        Scratch { d2: [0.0; N_NEIGHBORS], cand: Vec::with_capacity(N_NEIGHBORS) }
+    }
+}
+
+/// Batched lattice lookup (+ optional fused gather) over a fixed torus.
+///
+/// Construction is cheap; the engine holds no per-batch state, so one
+/// engine can be shared by reference across threads.
+pub struct BatchLookupEngine {
+    pub torus: TorusK,
+    pub k_top: usize,
+    n_threads: usize,
+}
+
+impl BatchLookupEngine {
+    /// Single-threaded engine (the common serving-shard configuration).
+    pub fn new(torus: TorusK, k_top: usize) -> Self {
+        Self::with_threads(torus, k_top, 1)
+    }
+
+    /// Engine sharding each batch across `n_threads` scoped workers.
+    pub fn with_threads(torus: TorusK, k_top: usize, n_threads: usize) -> Self {
+        assert!(k_top >= 1, "k_top must be at least 1");
+        BatchLookupEngine { torus, k_top, n_threads: n_threads.max(1) }
+    }
+
+    /// Engine using all available hardware parallelism.
+    pub fn auto(torus: TorusK, k_top: usize) -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::with_threads(torus, k_top, n)
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Look up a batch of row-major queries (`N x 8` f64) into `out`.
+    ///
+    /// Allocation-free after `out` reaches batch size; results are
+    /// independent of the thread count.
+    pub fn lookup_batch_into(&self, queries: &[f64], out: &mut BatchOutput) {
+        assert_eq!(queries.len() % 8, 0, "queries must be N x 8 row-major");
+        let n = queries.len() / 8;
+        out.reset(n, self.k_top);
+        self.dispatch(queries, out, None, &mut []);
+    }
+
+    /// Convenience wrapper allocating the output.
+    pub fn lookup_batch(&self, queries: &[f64]) -> BatchOutput {
+        let mut out = BatchOutput::default();
+        self.lookup_batch_into(queries, &mut out);
+        out
+    }
+
+    /// Fused lookup → weighted gather: fills `lookup` as
+    /// [`Self::lookup_batch_into`] and accumulates
+    /// `gathered[q] = sum_j w[q,j] * table[idx[q,j]]` (`N x m` f32)
+    /// without materialising any intermediate `k x m` buffer.
+    pub fn lookup_gather_into(
+        &self,
+        queries: &[f64],
+        table: &ValueTable,
+        lookup: &mut BatchOutput,
+        gathered: &mut [f32],
+    ) {
+        assert_eq!(queries.len() % 8, 0, "queries must be N x 8 row-major");
+        let n = queries.len() / 8;
+        assert_eq!(gathered.len(), n * table.dim(), "gather output must be N x m");
+        lookup.reset(n, self.k_top);
+        self.dispatch(queries, lookup, Some(table), gathered);
+    }
+
+    /// Shard the batch across workers (or run inline when one worker or
+    /// one query makes threading pure overhead).
+    fn dispatch(
+        &self,
+        queries: &[f64],
+        out: &mut BatchOutput,
+        table: Option<&ValueTable>,
+        gathered: &mut [f32],
+    ) {
+        let n = queries.len() / 8;
+        if n == 0 {
+            return;
+        }
+        let k = self.k_top;
+        let torus = self.torus;
+        let m = table.map(ValueTable::dim).unwrap_or(0);
+        // keep each shard worth more than its thread-spawn cost: small
+        // batches run inline rather than fanning out for microseconds
+        const MIN_QUERIES_PER_SHARD: usize = 32;
+        let shards = self.n_threads.min(n.div_ceil(MIN_QUERIES_PER_SHARD));
+        if shards <= 1 {
+            let mut scratch = Scratch::new();
+            run_range(
+                torus,
+                k,
+                queries,
+                &mut scratch,
+                &mut out.indices,
+                &mut out.weights,
+                &mut out.total_weight,
+                table,
+                gathered,
+            );
+            return;
+        }
+        let chunk = n.div_ceil(shards);
+        // per-shard windows of the gather output (empty when there is
+        // no fused gather; `&mut []` is 'static by promotion)
+        let mut gs: Vec<&mut [f32]> = Vec::with_capacity(shards);
+        if m == 0 {
+            gs.resize_with(shards, || &mut []);
+        } else {
+            gs.extend(gathered.chunks_mut(chunk * m));
+        }
+        std::thread::scope(|s| {
+            let qs = queries.chunks(chunk * 8);
+            let is = out.indices.chunks_mut(chunk * k);
+            let ws = out.weights.chunks_mut(chunk * k);
+            let ts = out.total_weight.chunks_mut(chunk);
+            for ((((q, idx), wts), tot), g) in qs.zip(is).zip(ws).zip(ts).zip(gs) {
+                s.spawn(move || {
+                    let mut scratch = Scratch::new();
+                    run_range(torus, k, q, &mut scratch, idx, wts, tot, table, g);
+                });
+            }
+        });
+    }
+}
+
+/// Process a contiguous query range into equally-shaped output shards.
+#[allow(clippy::too_many_arguments)]
+fn run_range(
+    torus: TorusK,
+    k_top: usize,
+    queries: &[f64],
+    scratch: &mut Scratch,
+    indices: &mut [u64],
+    weights: &mut [f32],
+    totals: &mut [f64],
+    table: Option<&ValueTable>,
+    gathered: &mut [f32],
+) {
+    let soa = neighbor_table_soa();
+    let nbr = neighbor_table();
+    let m = table.map(ValueTable::dim).unwrap_or(0);
+    for (qi, chunk) in queries.chunks_exact(8).enumerate() {
+        let q: &Vec8 = chunk.try_into().expect("8-lane query row");
+        let idx_row = &mut indices[qi * k_top..(qi + 1) * k_top];
+        let w_row = &mut weights[qi * k_top..(qi + 1) * k_top];
+        totals[qi] = lookup_one(torus, k_top, soa, nbr, q, scratch, idx_row, w_row);
+        if let Some(t) = table {
+            t.gather_weighted(idx_row, w_row, &mut gathered[qi * m..(qi + 1) * m]);
+        }
+    }
+}
+
+/// One query through the fused pipeline; returns the total weight.
+#[allow(clippy::too_many_arguments)]
+fn lookup_one(
+    torus: TorusK,
+    k_top: usize,
+    soa: &[[f64; N_NEIGHBORS]; 8],
+    nbr: &[[i64; 8]; N_NEIGHBORS],
+    q: &Vec8,
+    scratch: &mut Scratch,
+    idx_out: &mut [u64],
+    w_out: &mut [f32],
+) -> f64 {
+    let red = reduce(q);
+
+    // Lane-major squared distances: eight contiguous FMA passes over the
+    // 232-candidate row.  Accumulation order per candidate (lane 0..7)
+    // matches the scalar path's unrolled sum, keeping d2 bit-identical.
+    let d2 = &mut scratch.d2;
+    let mut lanes = red.z.iter().zip(soa.iter());
+    let (&z0, lane0) = lanes.next().expect("8 lanes");
+    for (acc, &c) in d2.iter_mut().zip(lane0.iter()) {
+        let d = z0 - c;
+        *acc = d * d;
+    }
+    for (&zj, lane) in lanes {
+        for (acc, &c) in d2.iter_mut().zip(lane.iter()) {
+            let d = zj - c;
+            *acc += d * d;
+        }
+    }
+
+    // Branchless kernel weights; only in-support candidates (d2 < 8,
+    // i.e. w > 0) enter the selection.  `t^2 * t^2` is the same
+    // operation order as `kernel_f`, so weights stay bit-identical, and
+    // adding exact zeros leaves the total bit-identical to the scalar
+    // path's in-support-only sum.
+    scratch.cand.clear();
+    let mut total = 0.0;
+    for (ci, &d) in d2.iter().enumerate() {
+        let t = (1.0 - d * 0.125).max(0.0);
+        let t2 = t * t;
+        let w = t2 * t2;
+        total += w;
+        if w > 0.0 {
+            scratch.cand.push((w, ci as u32));
+        }
+    }
+
+    let top = partial_top_k_desc(&mut scratch.cand, k_top);
+    for (j, &(w, ci)) in top.iter().enumerate() {
+        let u = red.unmap(&nbr[ci as usize]);
+        idx_out[j] = torus.index(&u);
+        w_out[j] = w as f32;
+    }
+    for j in top.len()..k_top {
+        idx_out[j] = 0;
+        w_out[j] = 0.0;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::kernel::TOTAL_WEIGHT_LOWER;
+    use crate::lattice::LatticeLookup;
+    use crate::util::rng::Rng;
+
+    fn torus() -> TorusK {
+        TorusK::new([16, 16, 8, 8, 8, 8, 8, 8]).unwrap()
+    }
+
+    fn random_queries(rng: &mut Rng, n: usize, span: f64) -> Vec<f64> {
+        (0..n * 8).map(|_| rng.uniform(-span, span)).collect()
+    }
+
+    #[test]
+    fn matches_scalar_oracle_bit_for_bit() {
+        let engine = BatchLookupEngine::new(torus(), 32);
+        let mut oracle = LatticeLookup::new(torus(), 32);
+        let mut rng = Rng::new(77);
+        let queries = random_queries(&mut rng, 64, 9.0);
+        let out = engine.lookup_batch(&queries);
+        assert_eq!(out.queries(), 64);
+        for qi in 0..64 {
+            let q: Vec8 = queries[qi * 8..(qi + 1) * 8].try_into().unwrap();
+            let want = oracle.lookup(&q);
+            let (idx, wts) = out.query(qi);
+            assert_eq!(out.total_weight[qi], want.total_weight, "query {qi}");
+            for (j, hit) in want.hits.iter().enumerate() {
+                assert_eq!(idx[j], hit.index, "query {qi} hit {j}");
+                assert_eq!(wts[j], hit.weight as f32, "query {qi} hit {j}");
+            }
+            for j in want.hits.len()..32 {
+                assert_eq!(idx[j], 0);
+                assert_eq!(wts[j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut rng = Rng::new(5);
+        let queries = random_queries(&mut rng, 101, 12.0);
+        let base = BatchLookupEngine::new(torus(), 32).lookup_batch(&queries);
+        for threads in [2, 3, 8, 64] {
+            let out =
+                BatchLookupEngine::with_threads(torus(), 32, threads).lookup_batch(&queries);
+            assert_eq!(out.indices, base.indices, "{threads} threads");
+            assert_eq!(out.weights, base.weights, "{threads} threads");
+            assert_eq!(out.total_weight, base.total_weight, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn total_weights_stay_in_paper_bounds() {
+        let engine = BatchLookupEngine::with_threads(torus(), 32, 4);
+        let mut rng = Rng::new(13);
+        let queries = random_queries(&mut rng, 500, 10.0);
+        let out = engine.lookup_batch(&queries);
+        for &tw in &out.total_weight {
+            assert!(tw >= TOTAL_WEIGHT_LOWER - 1e-9, "{tw}");
+            assert!(tw <= 1.0 + 1e-9, "{tw}");
+        }
+    }
+
+    #[test]
+    fn fused_gather_equals_lookup_then_gather() {
+        let mut table = ValueTable::zeros(1 << 18, 16).unwrap();
+        table.randomize(21, 0.02);
+        let engine = BatchLookupEngine::with_threads(torus(), 32, 3);
+        let mut rng = Rng::new(99);
+        let queries = random_queries(&mut rng, 40, 8.0);
+        let mut lk = BatchOutput::default();
+        let mut fused = vec![0.0f32; 40 * 16];
+        engine.lookup_gather_into(&queries, &table, &mut lk, &mut fused);
+
+        let plain = engine.lookup_batch(&queries);
+        assert_eq!(lk.indices, plain.indices);
+        assert_eq!(lk.weights, plain.weights);
+        let mut expect = vec![0.0f32; 16];
+        for qi in 0..40 {
+            let (idx, wts) = plain.query(qi);
+            table.gather_weighted(idx, wts, &mut expect);
+            assert_eq!(&fused[qi * 16..(qi + 1) * 16], &expect[..], "query {qi}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_and_reused_output() {
+        let engine = BatchLookupEngine::new(torus(), 8);
+        let mut out = BatchOutput::default();
+        engine.lookup_batch_into(&[], &mut out);
+        assert_eq!(out.queries(), 0);
+        // shrink a previously larger buffer
+        let mut rng = Rng::new(3);
+        engine.lookup_batch_into(&random_queries(&mut rng, 10, 5.0), &mut out);
+        assert_eq!(out.queries(), 10);
+        engine.lookup_batch_into(&random_queries(&mut rng, 2, 5.0), &mut out);
+        assert_eq!(out.queries(), 2);
+        assert_eq!(out.indices.len(), 16);
+    }
+
+    #[test]
+    fn lattice_point_queries_hit_themselves() {
+        let engine = BatchLookupEngine::with_threads(torus(), 32, 2);
+        let k = engine.torus;
+        let ids = [0u64, 1, 1000, 12345];
+        let mut queries = Vec::new();
+        for &idx in &ids {
+            let x = k.representative(idx);
+            queries.extend(x.iter().map(|&v| v as f64));
+        }
+        let out = engine.lookup_batch(&queries);
+        for (qi, &want) in ids.iter().enumerate() {
+            let (idx, wts) = out.query(qi);
+            assert_eq!(idx[0], want);
+            assert!((wts[0] - 1.0).abs() < 1e-6);
+            assert_eq!(wts[1], 0.0, "open-ball kernel: only the point itself");
+        }
+    }
+}

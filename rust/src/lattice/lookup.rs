@@ -1,9 +1,11 @@
 //! The full O(1) lattice lookup: reduce → score 232 candidates → top-k →
 //! inverse isometry → torus memory indices (paper §2.6).
 //!
-//! This is the L3 hot path used by the serving gather, the Table-5
-//! access accounting and the Figure-3 benches; it is allocation-free per
-//! query when driven through [`LatticeLookup::lookup_into`].
+//! This scalar implementation is the *reference oracle*: batched hot
+//! paths run through [`crate::lattice::batch::BatchLookupEngine`], whose
+//! fused SoA pipeline is differential-tested against this module
+//! bit-for-bit (`rust/tests/batch_differential.rs`).  Single queries are
+//! allocation-free through [`LatticeLookup::lookup_into`].
 
 use super::e8::{reduce, Vec8};
 use super::kernel::{kernel_f, top_k_desc};
@@ -80,12 +82,21 @@ impl LatticeLookup {
     }
 
     /// Batch lookup (row-major queries, 8 per row).
+    ///
+    /// **Deprecated in practice**: this is the scalar differential-
+    /// testing oracle, kept for cross-checking.  Hot paths should use
+    /// [`crate::lattice::batch::BatchLookupEngine`], which runs the same
+    /// pipeline fused, allocation-free, over SoA buffers and across
+    /// threads.  A single scratch result is reused across queries here
+    /// so the only per-query allocation is the exact-sized clone.
     pub fn lookup_batch(&mut self, queries: &[f64]) -> Vec<LookupResult> {
         assert_eq!(queries.len() % 8, 0);
         let mut results = Vec::with_capacity(queries.len() / 8);
+        let mut scratch = LookupResult::default();
         for chunk in queries.chunks_exact(8) {
             let q: Vec8 = chunk.try_into().unwrap();
-            results.push(self.lookup(&q));
+            self.lookup_into(&q, &mut scratch);
+            results.push(scratch.clone());
         }
         results
     }

@@ -18,6 +18,7 @@
 //! implementations are cross-checked through
 //! `artifacts/lattice_fixture.json` (see `rust/tests/fixture.rs`).
 
+pub mod batch;
 pub mod e8;
 pub mod exotic;
 pub mod kernel;
@@ -27,6 +28,7 @@ pub mod support;
 pub mod torus;
 pub mod zn;
 
+pub use batch::{BatchLookupEngine, BatchOutput};
 pub use e8::{is_lattice_point, quantize, reduce, Reduction};
 pub use kernel::{kernel_f, TOTAL_WEIGHT_LOWER};
 pub use lookup::{LatticeLookup, LookupResult};

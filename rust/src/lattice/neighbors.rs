@@ -124,6 +124,19 @@ pub fn neighbor_table_f64() -> &'static [[f64; 8]; N_NEIGHBORS] {
     })
 }
 
+/// The neighbour table transposed into structure-of-arrays layout:
+/// `soa[lane][candidate]`.  The batch engine scores one lane across all
+/// 232 candidates per pass, so each pass is a contiguous
+/// multiply-accumulate over a 232-element f64 row — the layout LLVM
+/// autovectorizes (see `lattice::batch`).
+pub fn neighbor_table_soa() -> &'static [[f64; N_NEIGHBORS]; 8] {
+    static TABLE: OnceLock<[[f64; N_NEIGHBORS]; 8]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let t = neighbor_table();
+        std::array::from_fn(|j| std::array::from_fn(|i| t[i][j] as f64))
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +187,17 @@ mod tests {
             }
         }
         assert!((d2 - best).abs() < 1e-3, "dykstra {d2} vs grid {best}");
+    }
+
+    #[test]
+    fn soa_table_is_the_transpose() {
+        let aos = neighbor_table_f64();
+        let soa = neighbor_table_soa();
+        for (i, row) in aos.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                assert_eq!(soa[j][i], v);
+            }
+        }
     }
 
     #[test]

@@ -37,6 +37,15 @@ impl AccessStats {
         }
     }
 
+    /// Batched accounting straight off the serving-path SoA buffers
+    /// (f32 weights, zero = padded hit), avoiding a per-hit call in the
+    /// gather loop.
+    pub fn record_batch_f32(&mut self, indices: &[u64], weights: &[f32]) {
+        for (&i, &w) in indices.iter().zip(weights) {
+            self.record(i, w as f64);
+        }
+    }
+
     pub fn locations(&self) -> u64 {
         self.weighted.len() as u64
     }

@@ -75,13 +75,43 @@ impl ValueTable {
         &mut self.map.as_mut_slice()[start..start + dim]
     }
 
+    /// Hint the CPU to pull row `idx` into cache ahead of use (no-op on
+    /// non-x86_64).  The gathers below prefetch the next row while the
+    /// current one is being consumed, overlapping the random-access
+    /// latency that dominates large-table gathers.
+    #[inline(always)]
+    fn prefetch_row(&self, idx: u64) {
+        if idx >= self.rows {
+            // out-of-range indices must stay a deterministic panic in the
+            // gather itself, never wrapping pointer arithmetic here
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the pointer stays inside the mapping (idx < rows) and
+        // prefetch is only a cache hint, never a dereference.
+        unsafe {
+            use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+            let p = self.map.as_slice().as_ptr().add(idx as usize * self.dim) as *const i8;
+            _mm_prefetch::<{ _MM_HINT_T0 }>(p);
+            if self.dim > 16 {
+                // rows longer than one cache line: grab the second too
+                _mm_prefetch::<{ _MM_HINT_T0 }>(p.add(64));
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        let _ = idx;
+    }
+
     /// Gather `k` weighted rows into `out` (the split-mode hot path):
     /// `out = sum_i weights[i] * table[indices[i]]`.
     pub fn gather_weighted(&self, indices: &[u64], weights: &[f32], out: &mut [f32]) {
         debug_assert_eq!(indices.len(), weights.len());
         debug_assert_eq!(out.len(), self.dim);
         out.fill(0.0);
-        for (&idx, &w) in indices.iter().zip(weights) {
+        for (i, (&idx, &w)) in indices.iter().zip(weights).enumerate() {
+            if let Some(&next) = indices.get(i + 1) {
+                self.prefetch_row(next);
+            }
             if w == 0.0 {
                 continue; // padded top-k entries carry no weight
             }
@@ -92,11 +122,33 @@ impl ValueTable {
         }
     }
 
+    /// Batched weighted gather: `indices`/`weights` hold `k` hits per
+    /// query (`n*k` flat, the [`crate::lattice::batch`] SoA layout) and
+    /// `out` receives `n x dim` combined rows.
+    pub fn gather_weighted_batch(
+        &self,
+        indices: &[u64],
+        weights: &[f32],
+        k: usize,
+        out: &mut [f32],
+    ) {
+        assert!(k > 0, "k must be positive");
+        debug_assert_eq!(indices.len() % k, 0);
+        debug_assert_eq!(out.len(), indices.len() / k * self.dim);
+        let groups = indices.chunks_exact(k).zip(weights.chunks_exact(k));
+        for ((gi, gw), o) in groups.zip(out.chunks_exact_mut(self.dim)) {
+            self.gather_weighted(gi, gw, o);
+        }
+    }
+
     /// Plain gather of `k` rows into a `k x m` buffer (feeds the suffix
     /// artifact, which applies the weights in-graph).
     pub fn gather_rows(&self, indices: &[u64], out: &mut [f32]) {
         debug_assert_eq!(out.len(), indices.len() * self.dim);
         for (i, &idx) in indices.iter().enumerate() {
+            if let Some(&next) = indices.get(i + 1) {
+                self.prefetch_row(next);
+            }
             out[i * self.dim..(i + 1) * self.dim].copy_from_slice(self.row(idx));
         }
     }
@@ -173,6 +225,21 @@ mod tests {
         b.randomize(7, 0.02);
         assert_eq!(a.row(20), b.row(20));
         assert!(a.row(20).iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn gather_weighted_batch_matches_per_query_gather() {
+        let mut t = ValueTable::zeros(32, 4).unwrap();
+        t.randomize(11, 0.5);
+        let indices = [3u64, 7, 0, 12, 31, 5];
+        let weights = [0.5f32, 0.25, 0.0, 1.0, 0.125, 2.0];
+        let mut batched = [0.0f32; 8];
+        t.gather_weighted_batch(&indices, &weights, 3, &mut batched);
+        let mut single = [0.0f32; 4];
+        for g in 0..2 {
+            t.gather_weighted(&indices[g * 3..(g + 1) * 3], &weights[g * 3..(g + 1) * 3], &mut single);
+            assert_eq!(&batched[g * 4..(g + 1) * 4], &single[..]);
+        }
     }
 
     #[test]

@@ -44,14 +44,16 @@ impl PkmScorer {
         let t1 = top_k(&s1, self.k_top);
         let t2 = top_k(&s2, self.k_top);
         // Cartesian product of the two top-k lists -> global top-k
-        let mut cand: Vec<(f32, u64)> = Vec::with_capacity(self.k_top * self.k_top);
+        // (partial quickselect over the k^2 merge, shared tie rule with
+        // the lattice top-k: score desc, index asc)
+        let mut cand: Vec<(f64, u64)> = Vec::with_capacity(self.k_top * self.k_top);
         for &(i1, v1) in &t1 {
             for &(i2, v2) in &t2 {
-                cand.push((v1 + v2, (i1 * self.n_keys + i2) as u64));
+                cand.push(((v1 + v2) as f64, (i1 * self.n_keys + i2) as u64));
             }
         }
-        cand.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        cand.truncate(self.k_top);
+        let kept = crate::util::topk::partial_top_k_desc(&mut cand, self.k_top);
+        let cand: Vec<(f32, u64)> = kept.iter().map(|&(s, i)| (s as f32, i)).collect();
         // softmax over the kept scores
         let mx = cand.iter().map(|c| c.0).fold(f32::MIN, f32::max);
         let mut z = 0.0f32;
@@ -73,10 +75,10 @@ impl PkmScorer {
 }
 
 fn top_k(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
-    let mut idx: Vec<(usize, f32)> = scores.iter().copied().enumerate().collect();
-    idx.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-    idx.truncate(k);
-    idx
+    crate::util::topk::top_k_indices_f32(scores, k)
+        .into_iter()
+        .map(|i| (i, scores[i]))
+        .collect()
 }
 
 /// Table 3 cost model: approximate multiply counts per query vector.

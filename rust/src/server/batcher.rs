@@ -216,11 +216,11 @@ fn extract_predictions(
         let base = row * seq_len * vocab + pos * vocab;
         let scores = &logp[base..base + vocab];
         let k = p.top_k.min(top_k_cap);
-        let mut idx: Vec<usize> = (0..vocab).collect();
-        idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        // partial top-k (shared with the lattice/PKM selection) instead
+        // of sorting the entire vocab per mask position: O(V + k log k)
         masks.push(
-            idx.into_iter()
-                .take(k)
+            crate::util::topk::top_k_indices_f32(scores, k)
+                .into_iter()
                 .map(|i| TokenScore {
                     token: bpe.vocab.token(i as i32).to_string(),
                     logprob: scores[i] as f64,

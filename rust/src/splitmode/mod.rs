@@ -93,15 +93,16 @@ impl SplitLramLayer {
         let wts = outs[1].as_f32()?.to_vec();
         let scale = outs[2].as_f32()?.to_vec();
 
-        // the O(1) random-access gather — the memstore hot path
+        // the O(1) random-access gather — the memstore hot path (rows
+        // are software-prefetched inside gather_rows; the full fused
+        // index+gather pipeline lives in lattice::batch for the
+        // pure-rust path, where the k x m intermediate can be skipped)
         for (i, &ix) in idx.iter().enumerate() {
             self.row_idx[i] = ix as u64;
         }
         self.table.gather_rows(&self.row_idx, &mut self.gathered);
         if let Some(stats) = self.stats.as_mut() {
-            for (&i, &w) in self.row_idx.iter().zip(&wts) {
-                stats.record(i, w as f64);
-            }
+            stats.record_batch_f32(&self.row_idx, &wts);
         }
 
         let outs = self.suffix.call(

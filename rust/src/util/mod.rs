@@ -10,3 +10,4 @@ pub mod logger;
 pub mod mmap;
 pub mod rng;
 pub mod timing;
+pub mod topk;

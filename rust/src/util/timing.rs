@@ -2,9 +2,14 @@
 //!
 //! `bench` runs warmups then samples, reporting median / p10 / p90 —
 //! matching the paper's "median of 15 successive runs" protocol for
-//! Figure 3 and Table 4.
+//! Figure 3 and Table 4.  [`BenchReport`] is the machine-readable side:
+//! benches append named entries of numeric fields and emit a
+//! `BENCH_<name>.json` file that later PRs diff to track the perf
+//! trajectory.
 
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy)]
 pub struct BenchStats {
@@ -88,6 +93,49 @@ impl Table {
     }
 }
 
+/// Machine-readable benchmark output: a named list of entries, each a
+/// flat map of numeric fields, serialised with `util::json` so the
+/// format stays parseable by the same code that reads manifests.
+pub struct BenchReport {
+    name: String,
+    entries: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        BenchReport { name: name.to_string(), entries: Vec::new() }
+    }
+
+    /// Append one entry (e.g. one bench row) of numeric fields.
+    pub fn entry(&mut self, name: &str, fields: &[(&str, f64)]) {
+        self.entries.push((
+            name.to_string(),
+            fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        ));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|(name, fields)| {
+                let mut pairs = vec![("name", Json::Str(name.clone()))];
+                pairs.extend(fields.iter().map(|(k, v)| (k.as_str(), Json::Num(*v))));
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Write `<path>` as pretty-enough single-line JSON.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +148,28 @@ mod tests {
         assert!(s.median_ns > 0.0);
         assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
         assert_eq!(s.samples, 9);
+    }
+
+    #[test]
+    fn bench_report_roundtrips_through_util_json() {
+        // the exact shape benches/lattice_hot_path.rs writes to
+        // BENCH_lattice.json must stay parseable by util::json
+        let mut r = BenchReport::new("lattice_hot_path");
+        r.entry(
+            "engine_lookup_gather_b256_t1",
+            &[("batch", 256.0), ("threads", 1.0), ("median_us", 37.5), ("qps", 6.8e6)],
+        );
+        r.entry("scalar_lookup_gather_b256", &[("batch", 256.0), ("median_us", 140.0)]);
+        let text = r.to_json().to_string();
+        let v = crate::util::json::parse(&text).expect("report parses");
+        assert_eq!(v.req("bench").unwrap().as_str().unwrap(), "lattice_hot_path");
+        let entries = v.req("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(
+            entries[0].req("name").unwrap().as_str().unwrap(),
+            "engine_lookup_gather_b256_t1"
+        );
+        assert_eq!(entries[0].req("batch").unwrap().as_f64().unwrap(), 256.0);
+        assert_eq!(entries[1].req("median_us").unwrap().as_f64().unwrap(), 140.0);
     }
 }

@@ -1,0 +1,118 @@
+//! Shared partial top-k selection (quickselect, not full sorts).
+//!
+//! Three hot paths need "the k largest of n scores" with k << n: the
+//! lattice candidate selection (k = 32 of <= 232), the PKM product-key
+//! merge (k of k^2), and the serving vocab top-k (k of |V|).  All of
+//! them previously paid O(n log n) or O(n*k); these helpers are
+//! O(n + k log k) via `select_nth_unstable_by` and share one tie rule —
+//! **score descending, then payload/index ascending** — which matches
+//! the scan order of the scalar reference implementations exactly, so
+//! differential tests can demand bit-identical outputs.
+
+use std::cmp::Ordering;
+
+/// Total order: score descending, payload ascending on ties.
+#[inline]
+fn cmp_desc<P: Copy + Ord>(a: &(f64, P), b: &(f64, P)) -> Ordering {
+    b.0.partial_cmp(&a.0).unwrap_or(Ordering::Equal).then_with(|| a.1.cmp(&b.1))
+}
+
+/// Partition the `k` largest `(score, payload)` pairs to the front and
+/// return them sorted (score descending, payload ascending on ties).
+///
+/// For distinct scores this is equivalent, element for element, to the
+/// reference partial selection sort in
+/// [`crate::lattice::kernel::top_k_desc`], at O(n + k log k) instead of
+/// O(n*k).  On exact score ties the reference's order depends on its
+/// swap history; this helper uses the canonical payload-ascending rule
+/// instead, so its output is a deterministic function of the input set.
+pub fn partial_top_k_desc<P: Copy + Ord>(items: &mut [(f64, P)], k: usize) -> &[(f64, P)] {
+    let k = k.min(items.len());
+    if k == 0 {
+        return &[];
+    }
+    if k < items.len() {
+        items.select_nth_unstable_by(k - 1, cmp_desc);
+    }
+    items[..k].sort_unstable_by(cmp_desc);
+    &items[..k]
+}
+
+/// Indices of the `k` largest scores, score-descending (index ascending
+/// on ties).  O(n + k log k); replaces full-vocab sorts on the serving
+/// path and codebook sorts in the PKM scorer.
+pub fn top_k_indices_f32(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let cmp = |a: &u32, b: &u32| {
+        scores[*b as usize]
+            .partial_cmp(&scores[*a as usize])
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| a.cmp(b))
+    };
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(cmp);
+    idx.into_iter().map(|i| i as usize).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_reference_selection_sort_on_distinct_scores() {
+        let mut rng = Rng::new(31);
+        for _ in 0..200 {
+            let n = 1 + rng.below(300) as usize;
+            let k = 1 + rng.below(40) as usize;
+            // distinct scores: shuffled injective mapping of the index
+            let mut scores: Vec<f64> = (0..n).map(|i| i as f64 * 0.5).collect();
+            rng.shuffle(&mut scores);
+            let mut items: Vec<(f64, u32)> =
+                scores.into_iter().enumerate().map(|(i, s)| (s, i as u32)).collect();
+            let mut reference = items.clone();
+            let want =
+                crate::lattice::kernel::top_k_desc(&mut reference, k).to_vec();
+            let got = partial_top_k_desc(&mut items, k).to_vec();
+            assert_eq!(got, want, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn tie_rule_is_canonical() {
+        let mut items =
+            vec![(5.0, 7u32), (5.0, 1u32), (9.0, 3u32), (5.0, 4u32), (1.0, 0u32)];
+        let got = partial_top_k_desc(&mut items, 3).to_vec();
+        assert_eq!(got, vec![(9.0, 3), (5.0, 1), (5.0, 4)]);
+    }
+
+    #[test]
+    fn k_larger_than_n_and_zero() {
+        let mut items = vec![(1.0, 0u32), (3.0, 1u32)];
+        assert_eq!(partial_top_k_desc(&mut items, 10), &[(3.0, 1), (1.0, 0)]);
+        assert!(partial_top_k_desc(&mut items, 0).is_empty());
+    }
+
+    #[test]
+    fn indices_match_full_sort() {
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let n = 1 + rng.below(500) as usize;
+            let k = 1 + rng.below(25) as usize;
+            let scores: Vec<f32> = (0..n).map(|_| (rng.below(50) as f32) * 0.5).collect();
+            let mut full: Vec<usize> = (0..n).collect();
+            full.sort_by(|&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+            });
+            full.truncate(k.min(n));
+            assert_eq!(top_k_indices_f32(&scores, k), full, "n={n} k={k}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Differential contract: the fused SoA [`BatchLookupEngine`] must be
+//! indistinguishable from the scalar [`LatticeLookup`] oracle — same
+//! torus indices, bit-identical weights (after the engine's f64 -> f32
+//! narrowing), same totals — across random queries, batch sizes, torus
+//! geometries and thread counts.
+
+use lram::lattice::e8::Vec8;
+use lram::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
+use lram::memstore::ValueTable;
+use lram::util::check::forall;
+use lram::util::rng::Rng;
+
+fn random_torus(rng: &mut Rng) -> TorusK {
+    let choices = [
+        [16, 16, 8, 8, 8, 8, 8, 8],   // paper LRAM-small (2^18)
+        [8, 8, 8, 8, 8, 8, 8, 8],     // uniform 2^16
+        [4, 4, 8, 8, 8, 8, 4, 16],    // mixed small periods (with wrap)
+        [12, 8, 8, 8, 4, 4, 8, 8],    // non-power-of-two period
+    ];
+    TorusK::new(choices[rng.below(choices.len() as u64) as usize]).unwrap()
+}
+
+#[test]
+fn engine_matches_scalar_oracle_across_configs() {
+    forall(40, |rng| {
+        let torus = random_torus(rng);
+        let k_top = [1usize, 4, 16, 32][rng.below(4) as usize];
+        let batch = 1 + rng.below(48) as usize;
+        let threads = 1 + rng.below(6) as usize;
+        let span = 4.0 + rng.uniform(0.0, 20.0);
+        let queries: Vec<f64> =
+            (0..batch * 8).map(|_| rng.uniform(-span, span)).collect();
+
+        let engine = BatchLookupEngine::with_threads(torus, k_top, threads);
+        let out = engine.lookup_batch(&queries);
+        assert_eq!(out.queries(), batch);
+        assert_eq!(out.k_top(), k_top);
+
+        let mut oracle = LatticeLookup::new(torus, k_top);
+        for (qi, chunk) in queries.chunks_exact(8).enumerate() {
+            let q: Vec8 = chunk.try_into().unwrap();
+            let want = oracle.lookup(&q);
+            let (idx, wts) = out.query(qi);
+            assert!(
+                (out.total_weight[qi] - want.total_weight).abs() < 1e-12,
+                "total weight diverged on query {qi}"
+            );
+            assert!(want.hits.len() <= k_top);
+            for (j, hit) in want.hits.iter().enumerate() {
+                assert_eq!(idx[j], hit.index, "index diverged: query {qi} hit {j}");
+                let narrowed = hit.weight as f32;
+                assert!(
+                    (wts[j] - narrowed).abs() as f64 <= 1e-12,
+                    "weight diverged: query {qi} hit {j}: {} vs {narrowed}",
+                    wts[j]
+                );
+            }
+            for j in want.hits.len()..k_top {
+                assert_eq!(idx[j], 0, "padding index: query {qi} slot {j}");
+                assert_eq!(wts[j], 0.0, "padding weight: query {qi} slot {j}");
+            }
+        }
+    });
+}
+
+#[test]
+fn thread_sharding_is_invisible() {
+    forall(20, |rng| {
+        let torus = random_torus(rng);
+        let batch = 1 + rng.below(100) as usize;
+        let queries: Vec<f64> =
+            (0..batch * 8).map(|_| rng.uniform(-10.0, 10.0)).collect();
+        let single = BatchLookupEngine::new(torus, 32).lookup_batch(&queries);
+        let threads = 2 + rng.below(14) as usize;
+        let sharded =
+            BatchLookupEngine::with_threads(torus, 32, threads).lookup_batch(&queries);
+        assert_eq!(single.indices, sharded.indices);
+        assert_eq!(single.weights, sharded.weights);
+        assert_eq!(single.total_weight, sharded.total_weight);
+    });
+}
+
+#[test]
+fn fused_gather_matches_scalar_lookup_plus_gather() {
+    let torus = TorusK::new([16, 16, 8, 8, 8, 8, 8, 8]).unwrap();
+    let mut table = ValueTable::zeros(torus.num_locations(), 32).unwrap();
+    table.randomize(0xBEE, 0.02);
+    forall(15, |rng| {
+        let batch = 1 + rng.below(32) as usize;
+        let threads = 1 + rng.below(4) as usize;
+        let queries: Vec<f64> =
+            (0..batch * 8).map(|_| rng.uniform(-9.0, 9.0)).collect();
+        let engine = BatchLookupEngine::with_threads(torus, 32, threads);
+        let mut lk = BatchOutput::default();
+        let mut fused = vec![0.0f32; batch * 32];
+        engine.lookup_gather_into(&queries, &table, &mut lk, &mut fused);
+
+        let mut oracle = LatticeLookup::new(torus, 32);
+        let mut expect = vec![0.0f32; 32];
+        for (qi, chunk) in queries.chunks_exact(8).enumerate() {
+            let q: Vec8 = chunk.try_into().unwrap();
+            let r = oracle.lookup(&q);
+            let idx: Vec<u64> = r.hits.iter().map(|h| h.index).collect();
+            let wts: Vec<f32> = r.hits.iter().map(|h| h.weight as f32).collect();
+            table.gather_weighted(&idx, &wts, &mut expect);
+            assert_eq!(
+                &fused[qi * 32..(qi + 1) * 32],
+                &expect[..],
+                "fused gather diverged on query {qi}"
+            );
+        }
+    });
+}

@@ -1,0 +1,67 @@
+//! Offline drop-in subset of the `libc` crate: exactly the FFI surface
+//! `util::mmap` needs (anonymous/file mappings plus `mincore` residency
+//! queries) on 64-bit Linux.  Declaring the prototypes locally links
+//! against the system libc that std already pulls in; no crates.io
+//! access is required.
+
+#![allow(non_camel_case_types)]
+
+pub use std::ffi::c_void;
+
+pub type c_int = i32;
+pub type c_char = i8;
+pub type c_uchar = u8;
+pub type size_t = usize;
+pub type off_t = i64;
+
+pub const PROT_READ: c_int = 0x1;
+pub const PROT_WRITE: c_int = 0x2;
+
+pub const MAP_SHARED: c_int = 0x01;
+pub const MAP_PRIVATE: c_int = 0x02;
+pub const MAP_ANONYMOUS: c_int = 0x20;
+pub const MAP_NORESERVE: c_int = 0x4000;
+
+pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+extern "C" {
+    pub fn mmap(
+        addr: *mut c_void,
+        length: size_t,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: off_t,
+    ) -> *mut c_void;
+
+    pub fn munmap(addr: *mut c_void, length: size_t) -> c_int;
+
+    pub fn mincore(addr: *mut c_void, length: size_t, vec: *mut c_uchar) -> c_int;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anonymous_map_roundtrip() {
+        // SAFETY: a plain private anonymous mapping, unmapped at the end.
+        unsafe {
+            let p = mmap(
+                std::ptr::null_mut(),
+                4096,
+                PROT_READ | PROT_WRITE,
+                MAP_PRIVATE | MAP_ANONYMOUS,
+                -1,
+                0,
+            );
+            assert_ne!(p, MAP_FAILED);
+            let bytes = p as *mut u8;
+            *bytes = 7;
+            assert_eq!(*bytes, 7);
+            let mut resident = [0u8; 1];
+            assert_eq!(mincore(p, 4096, resident.as_mut_ptr()), 0);
+            assert_eq!(munmap(p, 4096), 0);
+        }
+    }
+}

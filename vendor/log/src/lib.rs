@@ -1,0 +1,226 @@
+//! Offline drop-in subset of the `log` facade crate.
+//!
+//! Provides the `error!`/`warn!`/`info!`/`debug!`/`trace!` macros, the
+//! [`Log`] trait, [`set_logger`] / [`set_max_level`], and the
+//! [`Record`]/[`Metadata`] types — enough for `util::logger`'s stderr
+//! backend.  Like the real facade, everything is disabled until a
+//! logger and max level are installed.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of one log record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // f.pad so width/alignment specs like "{:5}" work
+        f.pad(match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        })
+    }
+}
+
+/// Global verbosity filter (`Off` disables everything).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Level + target of a record, available before formatting happens.
+#[derive(Debug, Clone)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the preformatted arguments.
+#[derive(Debug, Clone)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging backend.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        false
+    }
+
+    fn log(&self, _: &Record) {}
+
+    fn flush(&self) {}
+}
+
+static NOP: NopLogger = NopLogger;
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+
+/// Returned when [`set_logger`] is called twice.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+pub fn logger() -> &'static dyn Log {
+    LOGGER.get().copied().unwrap_or(&NOP)
+}
+
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments) {
+    if level as usize <= MAX_LEVEL.load(Ordering::Relaxed) {
+        let record = Record { metadata: Metadata { level, target }, args };
+        let l = logger();
+        if l.enabled(record.metadata()) {
+            l.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Error, ::std::module_path!(), ::std::format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Warn, ::std::module_path!(), ::std::format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Info, ::std::module_path!(), ::std::format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Debug, ::std::module_path!(), ::std::format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => {
+        $crate::__log($crate::Level::Trace, ::std::module_path!(), ::std::format_args!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, _: &Metadata) -> bool {
+            true
+        }
+
+        fn log(&self, record: &Record) {
+            assert!(!record.target().is_empty());
+            HITS.fetch_add(1, Ordering::Relaxed);
+        }
+
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn filtering_and_dispatch() {
+        static C: Counter = Counter;
+        set_logger(&C).unwrap();
+        set_max_level(LevelFilter::Info);
+        info!("counted {}", 1);
+        debug!("not counted");
+        assert_eq!(HITS.load(Ordering::Relaxed), 1);
+        assert!(set_logger(&C).is_err());
+    }
+}
