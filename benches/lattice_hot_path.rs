@@ -197,6 +197,39 @@ fn main() {
         );
     }
 
+    // ---- serving throughput: the pure-rust EngineBackend ----------------
+    // full-stack fill-mask batch (embed -> query projection -> fused
+    // lattice lookup+gather -> combine -> vocab log-softmax): what one
+    // serving shard sustains with no artifacts anywhere
+    {
+        use lram::server::{EngineBackend, EngineConfig, InferenceBackend};
+        let cfg = EngineConfig { track_stats: false, ..EngineConfig::default() };
+        let (b_max, seq_len) = (cfg.max_batch, cfg.seq_len);
+        let vocab = 4096usize;
+        let mut backend = EngineBackend::new(cfg, vocab).unwrap();
+        let tokens: Vec<i32> =
+            (0..(b_max * seq_len) as i32).map(|i| 5 + (i * 131) % (vocab as i32 - 5)).collect();
+        let s = bench(4, 24, || {
+            std::hint::black_box(backend.infer(&tokens).unwrap());
+        });
+        let req_s = b_max as f64 / (s.median_ns / 1e9);
+        table.row(&[
+            format!("engine-backend serve b={b_max} seq={seq_len}"),
+            format!("{:.2} ms", s.median_ns / 1e6),
+            format!("{:.2} ms", s.p90_ns / 1e6),
+            format!("{req_s:.0} req/s"),
+        ]);
+        report.entry(
+            "engine_backend_serve_b8",
+            &[
+                ("batch", b_max as f64),
+                ("seq_len", seq_len as f64),
+                ("median_ms", s.median_ns / 1e6),
+                ("requests_per_s", req_s),
+            ],
+        );
+    }
+
     println!("\n== L3 hot-path microbench ==\n");
     table.print();
     println!(

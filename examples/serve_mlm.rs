@@ -3,9 +3,31 @@
 //! stats.  Demonstrates the vLLM-style dynamic batcher with python
 //! nowhere on the request path.
 //!
-//! Run:  cargo run --release --example serve_mlm -- \
-//!           [--variant lram_small] [--checkpoint runs/.../final.ckpt]
-//!           [--requests 12]
+//! # Quickstart (no artifacts, no PJRT — works on any machine)
+//!
+//! ```text
+//! cargo run --release --example serve_mlm -- --backend engine
+//! ```
+//!
+//! The `engine` backend is pure rust: token/position embeddings and a
+//! query projection (the split-mode prefix shape), the fused
+//! `BatchLookupEngine` lattice lookup+gather over a lazily-mapped value
+//! table, and a dense suffix with log-softmax.  It is the paper's O(1)
+//! random-access lookup served end-to-end — `POST /predict` with
+//! `{"text": "the [MASK] sat", "top_k": 3}` returns top-k candidates
+//! per mask, `GET /stats` reports batching, latency and value-table
+//! utilisation, `GET /healthz` liveness.
+//!
+//! # Backends
+//!
+//! * `--backend engine`    pure rust, always available (untrained,
+//!   deterministic weights — the demo is about the serving path)
+//! * `--backend artifact`  AOT PJRT artifact (`infer_logits_<variant>`,
+//!   needs `make artifacts` and a real PJRT runtime)
+//! * `--backend auto`      artifact if available, engine otherwise (default)
+//!
+//! Other flags: `[--variant lram_small] [--checkpoint runs/.../final.ckpt]
+//! [--requests 12] [--addr 127.0.0.1:8077] [--threads N]`
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -13,7 +35,7 @@ use std::sync::Arc;
 
 use lram::data::synth::CorpusSpec;
 use lram::data::DataPipeline;
-use lram::server::{serve, Batcher, BatcherConfig, BatcherInit};
+use lram::server::{serve, ArtifactInit, Batcher, BatcherConfig, EngineConfig};
 use lram::util::cli::Args;
 
 fn http_post(addr: &str, body: &str) -> anyhow::Result<String> {
@@ -33,6 +55,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let variant = args.str("variant", "lram_small");
     let addr = args.str("addr", "127.0.0.1:8077");
+    let backend = args.str("backend", "auto");
     let n_requests = args.usize("requests", 12)?;
 
     let checkpoint = match args.flags.get("checkpoint") {
@@ -41,24 +64,18 @@ fn main() -> anyhow::Result<()> {
     };
     let pipeline = DataPipeline::new(CorpusSpec::default(), 4096, 8, 1, 0.15)?;
     let bpe = Arc::new(pipeline.bpe);
-    let batcher = match Batcher::spawn(
-        BatcherInit {
+
+    let batcher = Batcher::spawn_for_flag(
+        &backend,
+        ArtifactInit {
             artifact_dir: args.str("artifacts", "artifacts"),
             artifact_name: format!("infer_logits_{variant}"),
             checkpoint,
         },
+        EngineConfig { threads: args.usize("threads", 1)?, ..EngineConfig::default() },
         bpe.clone(),
         BatcherConfig::default(),
-    ) {
-        Ok(b) => b,
-        Err(e) => {
-            eprintln!(
-                "serving artifacts unavailable ({e:#});\nrunning the offline batch-engine \
-                 demo instead\n"
-            );
-            return offline_engine_demo();
-        }
-    };
+    )?;
     {
         let batcher = batcher.clone();
         let bpe = bpe.clone();
@@ -94,54 +111,11 @@ fn main() -> anyhow::Result<()> {
         println!("{:6.1} ms  {}\n          -> {}\n", ms, &body[..body.len().min(90)], preview);
     }
 
-    // batching stats
+    // batching + memory stats
     let mut s = TcpStream::connect(&addr)?;
     write!(s, "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n")?;
     let mut resp = String::new();
     s.read_to_string(&mut resp)?;
     println!("router stats: {}", resp.lines().last().unwrap_or(""));
-    Ok(())
-}
-
-/// No artifacts / no PJRT: demonstrate the serving-side hot path that
-/// *is* pure rust — the fused batched lattice lookup+gather engine.
-fn offline_engine_demo() -> anyhow::Result<()> {
-    use lram::lattice::{BatchLookupEngine, BatchOutput, TorusK};
-    use lram::memstore::{AccessStats, ValueTable};
-    use lram::util::rng::Rng;
-
-    let torus = TorusK::new([16, 16, 8, 8, 8, 8, 8, 8])?; // LRAM-small: 2^18 slots
-    let mut table = ValueTable::zeros(torus.num_locations(), 64)?;
-    table.randomize(0xD130, 0.02);
-    let engine = BatchLookupEngine::auto(torus, 32);
-    let mut rng = Rng::new(40);
-    let batch = 256usize;
-    let queries: Vec<f64> = (0..batch * 8).map(|_| rng.uniform(-8.0, 8.0)).collect();
-    let mut lk = BatchOutput::default();
-    let mut out = vec![0.0f32; batch * 64];
-
-    let t0 = std::time::Instant::now();
-    let reps = 200;
-    for _ in 0..reps {
-        engine.lookup_gather_into(&queries, &table, &mut lk, &mut out);
-    }
-    let secs = t0.elapsed().as_secs_f64();
-
-    let mut stats = AccessStats::new(torus.num_locations());
-    stats.record_batch_f32(&lk.indices, &lk.weights);
-    println!(
-        "fused lookup+gather: batch {batch} x {reps} reps on {} threads -> {:.2} Mq/s",
-        engine.n_threads(),
-        (batch * reps) as f64 / secs / 1e6
-    );
-    println!(
-        "one batch touches {} of {} slots (utilisation {:.3}%), total weight per query in \
-         [0.851, 1]: first = {:.4}",
-        (stats.utilization() * torus.num_locations() as f64) as u64,
-        torus.num_locations(),
-        stats.utilization() * 100.0,
-        lk.total_weight[0]
-    );
-    println!("\n(run `make artifacts` to enable the full HTTP serving demo)");
     Ok(())
 }

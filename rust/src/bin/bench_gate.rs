@@ -1,0 +1,79 @@
+//! Perf regression gate over `BENCH_*.json` reports — the CI side of the
+//! ROADMAP "perf trajectory tracking" item.
+//!
+//! Compares one numeric field of one entry between a freshly produced
+//! report and a committed baseline, and fails (exit 1) when the fresh
+//! value drops below `baseline * min_ratio`.  The default floor is
+//! deliberately generous (0.35) so shared CI runners — noisy neighbours,
+//! frequency scaling, cold caches — don't flake the build, while real
+//! regressions (the fused path losing its multi-x headroom over the
+//! scalar seed) still trip it.
+//!
+//! ```text
+//! cargo bench --bench lattice_hot_path          # writes BENCH_lattice.json
+//! cargo run --release --bin bench_gate -- \
+//!     BENCH_lattice.json benches/BENCH_lattice.baseline.json
+//! ```
+//!
+//! Flags: `--entry <name>` (default `engine_lookup_gather_b256_t1`),
+//! `--field <field>` (default `qps`), `--min-ratio <r>` (default 0.35).
+//! Re-record the baseline by copying a fresh `BENCH_lattice.json` over
+//! `benches/BENCH_lattice.baseline.json` on a quiet machine.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use lram::util::cli::Args;
+use lram::util::json;
+
+/// Read `entries[name == entry].<field>` out of a bench report.
+fn read_field(path: &str, entry: &str, field: &str) -> Result<f64> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let v = json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    let entries = v
+        .req("entries")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{path}: 'entries' is not an array"))?;
+    for e in entries {
+        if e.get("name").and_then(|n| n.as_str()) == Some(entry) {
+            return e
+                .req(field)?
+                .as_f64()
+                .ok_or_else(|| anyhow!("{path}: {entry}.{field} is not a number"));
+        }
+    }
+    bail!("{path}: no entry named '{entry}'")
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    if args.positional.len() != 2 {
+        bail!(
+            "usage: bench_gate <current.json> <baseline.json> \
+             [--entry NAME] [--field FIELD] [--min-ratio R]"
+        );
+    }
+    let entry = args.str("entry", "engine_lookup_gather_b256_t1");
+    let field = args.str("field", "qps");
+    let min_ratio = args.f64("min-ratio", 0.35)?;
+    let current = read_field(&args.positional[0], &entry, &field)?;
+    let baseline = read_field(&args.positional[1], &entry, &field)?;
+    if baseline <= 0.0 {
+        bail!("baseline {entry}.{field} is {baseline}: nothing to gate against");
+    }
+    let ratio = current / baseline;
+    println!(
+        "perf gate: {entry}.{field} = {current:.4e} vs baseline {baseline:.4e} \
+         (ratio {ratio:.3}, floor {min_ratio:.2})"
+    );
+    if ratio < min_ratio {
+        eprintln!(
+            "PERF REGRESSION: {entry}.{field} fell to {:.1}% of the recorded baseline \
+             (floor is {:.1}%)",
+            ratio * 100.0,
+            min_ratio * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!("perf gate passed");
+    Ok(())
+}

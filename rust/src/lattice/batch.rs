@@ -163,11 +163,36 @@ impl BatchLookupEngine {
         lookup: &mut BatchOutput,
         gathered: &mut [f32],
     ) {
+        assert_eq!(
+            gathered.len(),
+            queries.len() / 8 * table.dim(),
+            "gather output must be N x m"
+        );
+        self.lookup_gather_ragged_into(queries, table, lookup, gathered);
+    }
+
+    /// [`Self::lookup_gather_into`] sized for ragged final batches:
+    /// `gathered` may be *larger* than `N x m` (serving reuses one
+    /// max-batch-sized buffer while the last batch of a stream is rarely
+    /// full); only the first `N * m` elements are written, the tail is
+    /// left untouched.
+    pub fn lookup_gather_ragged_into(
+        &self,
+        queries: &[f64],
+        table: &ValueTable,
+        lookup: &mut BatchOutput,
+        gathered: &mut [f32],
+    ) {
         assert_eq!(queries.len() % 8, 0, "queries must be N x 8 row-major");
         let n = queries.len() / 8;
-        assert_eq!(gathered.len(), n * table.dim(), "gather output must be N x m");
+        let need = n * table.dim();
+        assert!(
+            gathered.len() >= need,
+            "gather output holds {} floats, batch needs {need}",
+            gathered.len()
+        );
         lookup.reset(n, self.k_top);
-        self.dispatch(queries, lookup, Some(table), gathered);
+        self.dispatch(queries, lookup, Some(table), &mut gathered[..need]);
     }
 
     /// Shard the batch across workers (or run inline when one worker or
@@ -402,6 +427,27 @@ mod tests {
             table.gather_weighted(idx, wts, &mut expect);
             assert_eq!(&fused[qi * 16..(qi + 1) * 16], &expect[..], "query {qi}");
         }
+    }
+
+    #[test]
+    fn ragged_gather_writes_prefix_only() {
+        // serving keeps one max-batch buffer; a ragged final batch must
+        // fill exactly its own rows and leave the tail untouched
+        let mut table = ValueTable::zeros(1 << 18, 8).unwrap();
+        table.randomize(4, 0.1);
+        let engine = BatchLookupEngine::new(torus(), 16);
+        let mut rng = Rng::new(12);
+        let queries = random_queries(&mut rng, 5, 7.0);
+        let sentinel = 123.5f32;
+        let mut ragged = vec![sentinel; 12 * 8]; // max batch 12, fill 5
+        let mut lk = BatchOutput::default();
+        engine.lookup_gather_ragged_into(&queries, &table, &mut lk, &mut ragged);
+        assert_eq!(lk.queries(), 5);
+        let mut exact = vec![0.0f32; 5 * 8];
+        let mut lk2 = BatchOutput::default();
+        engine.lookup_gather_into(&queries, &table, &mut lk2, &mut exact);
+        assert_eq!(&ragged[..5 * 8], &exact[..]);
+        assert!(ragged[5 * 8..].iter().all(|&v| v == sentinel), "tail overwritten");
     }
 
     #[test]

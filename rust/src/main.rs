@@ -23,7 +23,7 @@ use lram::data::DataPipeline;
 use lram::lattice::{exotic, support};
 use lram::pkm::cost;
 use lram::runtime::Runtime;
-use lram::server::{serve, Batcher, BatcherConfig};
+use lram::server::{serve, ArtifactInit, Batcher, BatcherConfig, EngineConfig};
 use lram::util::cli::Args;
 use lram::util::timing::Table;
 
@@ -58,6 +58,8 @@ COMMANDS:
   table3     asymptotic parameter/op counts for dense / PKM / LRAM
   table5     memory utilisation + KL divergence over the validation set
   serve      MLM fill-mask server with dynamic batching
+             (--backend artifact | engine | auto; engine is pure rust,
+              needs no compiled artifacts)
   artifacts  list compiled AOT artifacts
   corpus     print sample paragraphs of the synthetic corpus
 
@@ -228,6 +230,7 @@ fn cmd_table5(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let addr = args.str("addr", "127.0.0.1:8077");
+    let backend = args.str("backend", "auto");
     let checkpoint = match args.flags.get("checkpoint") {
         Some(ckpt) => {
             log::info!("restoring checkpoint {ckpt}");
@@ -240,12 +243,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spec = CorpusSpec { seed: cfg.corpus_seed, ..CorpusSpec::default() };
     let pipeline = DataPipeline::new(spec, cfg.vocab_size, 8, 1, 0.15)?;
     let bpe = Arc::new(pipeline.bpe);
-    let batcher = Batcher::spawn(
-        lram::server::BatcherInit {
+    let batcher = Batcher::spawn_for_flag(
+        &backend,
+        ArtifactInit {
             artifact_dir: cfg.artifact_dir.clone(),
             artifact_name: format!("infer_logits_{}", cfg.variant),
             checkpoint,
         },
+        EngineConfig::default(),
         bpe.clone(),
         BatcherConfig::default(),
     )?;

@@ -5,16 +5,25 @@
 //! a row's bias-correction uses its own update count, the standard
 //! lazy-sparse-Adam approximation (only touched rows pay any work, so a
 //! step costs O(k) regardless of M).
+//!
+//! Every side table — the two moment tables *and* the per-row step
+//! counts — lives in a lazily-populated mmap, so constructing the
+//! optimizer for a billion-row value table is as cheap as constructing
+//! the table itself: physical memory is only paid for rows that are
+//! actually updated.
 
 use anyhow::Result;
 
 use super::table::ValueTable;
+use crate::util::mmap::MmapU32;
 
 pub struct SparseAdam {
     m: ValueTable,
     v: ValueTable,
-    /// per-row update counts (for lazy bias correction)
-    t: Vec<u32>,
+    /// per-row update counts (for lazy bias correction), lazily mapped —
+    /// an eager `vec![0; rows]` here would cost 4 GB resident for a
+    /// billion-row table and defeat the lazy design
+    t: MmapU32,
     pub lr: f32,
     pub beta1: f32,
     pub beta2: f32,
@@ -26,7 +35,7 @@ impl SparseAdam {
         Ok(SparseAdam {
             m: ValueTable::zeros(rows, dim)?,
             v: ValueTable::zeros(rows, dim)?,
-            t: vec![0; rows as usize],
+            t: MmapU32::anon(rows as usize)?,
             lr,
             beta1: 0.9,
             beta2: 0.999,
@@ -37,8 +46,9 @@ impl SparseAdam {
     /// Apply the gradient `grad` to row `idx` of `table`.
     pub fn update_row(&mut self, table: &mut ValueTable, idx: u64, grad: &[f32]) {
         debug_assert_eq!(grad.len(), table.dim());
-        self.t[idx as usize] += 1;
-        let t = self.t[idx as usize] as f32;
+        let steps = &mut self.t.as_mut_slice()[idx as usize];
+        *steps += 1;
+        let t = *steps as f32;
         let bc1 = 1.0 - self.beta1.powf(t);
         let bc2 = 1.0 - self.beta2.powf(t);
         let mrow = self.m.row_mut(idx);
@@ -60,7 +70,15 @@ impl SparseAdam {
 
     /// Accumulated update count of a row (observability).
     pub fn row_steps(&self, idx: u64) -> u32 {
-        self.t[idx as usize]
+        self.t.as_slice()[idx as usize]
+    }
+
+    /// Physically-resident bytes over all optimizer state (moments +
+    /// step counts) — the lazy-allocation regression gauge.
+    pub fn resident_bytes(&self) -> Result<usize> {
+        Ok(self.m.resident_bytes()?
+            + self.v.resident_bytes()?
+            + self.t.resident_bytes()?)
     }
 }
 
@@ -97,5 +115,22 @@ mod tests {
         let r = table.row(0);
         assert!((r[0] + 1e-3).abs() < 1e-5, "{}", r[0]);
         assert!((r[1] - 1e-3).abs() < 1e-5, "{}", r[1]);
+    }
+
+    #[test]
+    fn billion_parameter_optimizer_is_cheap_until_touched() {
+        // the optimizer-side companion of
+        // `billion_parameter_table_is_cheap_until_touched`: 2^24 rows x 64
+        // means 2 x 4 GB of virtual moments plus 64 MB of virtual step
+        // counts — none of it may be resident before rows are updated
+        let mut table = ValueTable::zeros(1 << 24, 64).unwrap();
+        let mut opt = SparseAdam::new(1 << 24, 64, 1e-3).unwrap();
+        let before = opt.resident_bytes().unwrap();
+        assert!(before < 64 << 20, "resident {before} before any update");
+        let grad = [1.0f32; 64];
+        opt.update_row(&mut table, 12_345_678, &grad);
+        assert_eq!(opt.row_steps(12_345_678), 1);
+        let after = opt.resident_bytes().unwrap();
+        assert!(after < 64 << 20, "resident {after} after one sparse update");
     }
 }

@@ -8,6 +8,9 @@ pub struct AccessStats {
     hits: Vec<u64>,
     total_weight: f64,
     total_hits: u64,
+    /// distinct slots hit at least once, maintained incrementally so
+    /// `utilization()` is O(1) — serving polls it after every batch
+    used: u64,
 }
 
 impl AccessStats {
@@ -17,6 +20,7 @@ impl AccessStats {
             hits: vec![0; locations as usize],
             total_weight: 0.0,
             total_hits: 0,
+            used: 0,
         }
     }
 
@@ -26,6 +30,9 @@ impl AccessStats {
             return; // padded top-k entries are not real accesses
         }
         self.weighted[index as usize] += weight;
+        if self.hits[index as usize] == 0 {
+            self.used += 1;
+        }
         self.hits[index as usize] += 1;
         self.total_weight += weight;
         self.total_hits += 1;
@@ -51,10 +58,10 @@ impl AccessStats {
     }
 
     /// Fraction of memory locations accessed at least once ("Memory
-    /// usage %" row of Table 5).
+    /// usage %" row of Table 5).  O(1): the distinct-slot count is
+    /// maintained incrementally by [`Self::record`].
     pub fn utilization(&self) -> f64 {
-        let used = self.hits.iter().filter(|&&h| h > 0).count();
-        used as f64 / self.hits.len() as f64
+        self.used as f64 / self.hits.len() as f64
     }
 
     /// KL(access || uniform) in nats, over the *weighted* distribution
@@ -110,6 +117,17 @@ mod tests {
         s.record(3, 0.0);
         assert_eq!(s.total_accesses(), 0);
         assert_eq!(s.utilization(), 0.0);
+    }
+
+    #[test]
+    fn utilization_counts_distinct_slots_incrementally() {
+        let mut s = AccessStats::new(8);
+        s.record(2, 1.0);
+        s.record(2, 0.5); // repeat hit: still one distinct slot
+        s.record(5, 0.25);
+        s.record(6, 0.0); // zero weight: not an access
+        assert!((s.utilization() - 2.0 / 8.0).abs() < 1e-12);
+        assert_eq!(s.total_accesses(), 3);
     }
 
     #[test]

@@ -27,7 +27,9 @@ impl ValueTable {
 
     /// File-backed table (persists across runs).
     pub fn open(path: &Path, rows: u64, dim: usize) -> Result<Self> {
-        let len = rows as usize * dim;
+        let len = (rows as usize).checked_mul(dim).ok_or_else(|| {
+            anyhow::anyhow!("table size overflow: {rows} x {dim}")
+        })?;
         Ok(ValueTable { map: MmapF32::file(path, len)?, rows, dim })
     }
 
@@ -70,6 +72,7 @@ impl ValueTable {
 
     #[inline]
     pub fn row_mut(&mut self, idx: u64) -> &mut [f32] {
+        debug_assert!(idx < self.rows, "row {idx} out of range ({})", self.rows);
         let start = idx as usize * self.dim;
         let dim = self.dim;
         &mut self.map.as_mut_slice()[start..start + dim]
@@ -240,6 +243,16 @@ mod tests {
             t.gather_weighted(&indices[g * 3..(g + 1) * 3], &weights[g * 3..(g + 1) * 3], &mut single);
             assert_eq!(&batched[g * 4..(g + 1) * 4], &single[..]);
         }
+    }
+
+    #[test]
+    fn open_and_zeros_reject_size_overflow() {
+        // rows * dim overflows usize: must bail, not wrap to a tiny map
+        let path = std::env::temp_dir()
+            .join(format!("lram_overflow_table_{}.bin", std::process::id()));
+        assert!(ValueTable::open(&path, u64::MAX, 16).is_err());
+        assert!(!path.exists(), "overflowing open must not create the file");
+        assert!(ValueTable::zeros(u64::MAX, 16).is_err());
     }
 
     #[test]

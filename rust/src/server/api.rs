@@ -26,16 +26,77 @@ impl PredictRequest {
 }
 
 /// One candidate token for a masked position.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TokenScore {
     pub token: String,
     pub logprob: f64,
 }
 
+/// Outcome for one `[MASK]` position.
+///
+/// A mask that the fixed sequence length truncated away can not be
+/// predicted; that is an explicit per-mask error, never a silent empty
+/// prediction list.
+#[derive(Debug, Clone)]
+pub enum MaskPrediction {
+    /// Top-k candidates, logprob-descending.
+    Scores(Vec<TokenScore>),
+    /// The mask sat at token `position`, beyond the model's `seq_len`.
+    Truncated { position: usize, seq_len: usize },
+}
+
+impl MaskPrediction {
+    /// The candidate list, if this mask was predicted.
+    pub fn scores(&self) -> Option<&[TokenScore]> {
+        match self {
+            MaskPrediction::Scores(s) => Some(s),
+            MaskPrediction::Truncated { .. } => None,
+        }
+    }
+
+    pub fn is_truncated(&self) -> bool {
+        matches!(self, MaskPrediction::Truncated { .. })
+    }
+
+    /// Every mask serialises to an object — `{"scores": [...]}` or
+    /// `{"error": ...}` — so the `masks` array stays homogeneous and
+    /// clients can branch on one key.
+    fn to_json(&self) -> Json {
+        match self {
+            MaskPrediction::Scores(cands) => Json::obj(vec![(
+                "scores",
+                Json::Arr(
+                    cands
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("token", Json::Str(c.token.clone())),
+                                ("logprob", Json::Num(c.logprob)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]),
+            MaskPrediction::Truncated { position, seq_len } => Json::obj(vec![
+                (
+                    "error",
+                    Json::Str(format!(
+                        "mask at token position {position} was truncated \
+                         (model seq_len is {seq_len})"
+                    )),
+                ),
+                ("position", Json::Num(*position as f64)),
+                ("seq_len", Json::Num(*seq_len as f64)),
+            ]),
+        }
+    }
+}
+
 /// Response: predictions per `[MASK]` position, in order of appearance.
 #[derive(Debug, Clone, Default)]
 pub struct PredictResponse {
-    pub masks: Vec<Vec<TokenScore>>,
+    pub masks: Vec<MaskPrediction>,
+    /// true request latency: enqueue → reply, not just batch execution
     pub latency_ms: f64,
     pub batch_size: usize,
 }
@@ -43,27 +104,7 @@ pub struct PredictResponse {
 impl PredictResponse {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            (
-                "masks",
-                Json::Arr(
-                    self.masks
-                        .iter()
-                        .map(|cands| {
-                            Json::Arr(
-                                cands
-                                    .iter()
-                                    .map(|c| {
-                                        Json::obj(vec![
-                                            ("token", Json::Str(c.token.clone())),
-                                            ("logprob", Json::Num(c.logprob)),
-                                        ])
-                                    })
-                                    .collect(),
-                            )
-                        })
-                        .collect(),
-                ),
-            ),
+            ("masks", Json::Arr(self.masks.iter().map(MaskPrediction::to_json).collect())),
             ("latency_ms", Json::Num(self.latency_ms)),
             ("batch_size", Json::Num(self.batch_size as f64)),
         ])
@@ -98,19 +139,42 @@ mod tests {
     #[test]
     fn response_serialises() {
         let resp = PredictResponse {
-            masks: vec![vec![TokenScore { token: "cat".into(), logprob: -0.5 }]],
+            masks: vec![MaskPrediction::Scores(vec![TokenScore {
+                token: "cat".into(),
+                logprob: -0.5,
+            }])],
             latency_ms: 12.0,
             batch_size: 2,
         };
         let j = resp.to_json().to_string();
         let v = json::parse(&j).unwrap();
         assert_eq!(
-            v.get("masks").unwrap().as_arr().unwrap()[0].as_arr().unwrap()[0]
+            v.get("masks").unwrap().as_arr().unwrap()[0]
+                .get("scores")
+                .unwrap()
+                .as_arr()
+                .unwrap()[0]
                 .get("token")
                 .unwrap()
                 .as_str()
                 .unwrap(),
             "cat"
         );
+    }
+
+    #[test]
+    fn truncated_mask_serialises_as_explicit_error() {
+        let resp = PredictResponse {
+            masks: vec![MaskPrediction::Truncated { position: 57, seq_len: 32 }],
+            latency_ms: 1.0,
+            batch_size: 1,
+        };
+        let v = json::parse(&resp.to_json().to_string()).unwrap();
+        let m = &v.get("masks").unwrap().as_arr().unwrap()[0];
+        assert!(m.get("error").unwrap().as_str().unwrap().contains("truncated"));
+        assert_eq!(m.get("position").unwrap().as_usize().unwrap(), 57);
+        assert_eq!(m.get("seq_len").unwrap().as_usize().unwrap(), 32);
+        assert!(resp.masks[0].is_truncated());
+        assert!(resp.masks[0].scores().is_none());
     }
 }

@@ -1,6 +1,8 @@
-//! Dynamic batcher: coalesce concurrent fill-mask requests into the
-//! fixed-shape inference artifact (max-batch-or-timeout policy, the same
-//! shape as vLLM's router loop).
+//! Dynamic batcher: coalesce concurrent fill-mask requests into one
+//! inference-backend batch (max-batch-or-timeout policy, the same shape
+//! as vLLM's router loop).  The backend behind the batch is pluggable
+//! ([`super::backend::InferenceBackend`]): the AOT PJRT artifact or the
+//! pure-rust lattice engine.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -9,10 +11,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::data::mlm::fit_length;
-use crate::runtime::{ArtifactState, HostTensor, Runtime};
 use crate::tokenizer::{Bpe, CLS_ID, MASK_ID, SEP_ID};
 
-use super::api::{PredictRequest, PredictResponse, TokenScore};
+use super::api::{MaskPrediction, PredictRequest, PredictResponse, TokenScore};
+use super::backend::BackendInit;
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -36,7 +38,7 @@ struct Pending {
 }
 
 /// The batcher: submit() from any thread; a scheduler thread drains the
-/// queue into artifact-sized batches.
+/// queue into backend-sized batches.
 pub struct Batcher {
     tx: Sender<Pending>,
     /// rolling access statistics (Table-5 style observability in serving)
@@ -47,53 +49,45 @@ pub struct Batcher {
 pub struct BatchStats {
     pub requests: u64,
     pub batches: u64,
-    pub total_latency_ms: f64,
+    /// sum of true request latencies (enqueue → reply) over `requests`
+    pub total_request_latency_ms: f64,
+    /// sum of backend execution time over `batches`
+    pub total_exec_latency_ms: f64,
     pub max_batch_fill: usize,
-}
-
-/// Everything the executor thread needs to construct its own PJRT state —
-/// the xla crate's handles are not Send, so the thread owns the runtime.
-#[derive(Debug, Clone)]
-pub struct BatcherInit {
-    pub artifact_dir: String,
-    pub artifact_name: String,
-    pub checkpoint: Option<Vec<u8>>,
+    /// masks reported as truncated (explicit per-mask errors)
+    pub truncated_masks: u64,
+    /// backend name ("artifact" / "engine")
+    pub backend: &'static str,
+    /// value-table observability from engine-owned backends (last poll)
+    pub memory_utilization: Option<f64>,
+    pub memory_kl: Option<f64>,
 }
 
 impl Batcher {
-    /// Spawn the scheduler/executor thread.  Blocks until the artifact is
-    /// compiled (or compilation fails).
-    pub fn spawn(init: BatcherInit, bpe: Arc<Bpe>, cfg: BatcherConfig) -> Result<Arc<Batcher>> {
+    /// Spawn the scheduler/executor thread.  Blocks until the backend is
+    /// constructed (or construction fails).  The backend is built *on*
+    /// the executor thread — PJRT handles are not `Send`, and the engine
+    /// backend's scratch has no reason to cross threads either.
+    pub fn spawn(init: BackendInit, bpe: Arc<Bpe>, cfg: BatcherConfig) -> Result<Arc<Batcher>> {
         let (tx, rx): (Sender<Pending>, Receiver<Pending>) = channel();
         let stats = Arc::new(Mutex::new(BatchStats::default()));
         let batcher = Arc::new(Batcher { tx, stats: stats.clone() });
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         std::thread::spawn(move || {
-            // the PJRT client, executable and state all live (and die) on
-            // this thread
-            let setup = (|| -> Result<_> {
-                let rt = Runtime::new(&init.artifact_dir)?;
-                let artifact = rt.load(&init.artifact_name)?;
-                let state = match &init.checkpoint {
-                    Some(bytes) => ArtifactState::from_bytes(&artifact.manifest, bytes)?,
-                    None => artifact.initial_state()?,
-                };
-                Ok((rt, artifact, state))
-            })();
-            let (_rt, artifact, mut state) = match setup {
-                Ok(v) => {
+            let mut backend = match init.build(bpe.vocab_size()) {
+                Ok(b) => {
+                    stats.lock().unwrap().backend = b.name();
                     let _ = ready_tx.send(Ok(()));
-                    v
+                    b
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
                     return;
                 }
             };
-            let b_max = artifact.manifest.batch.b;
-            let seq_len = artifact.manifest.inputs[0].shape[1];
-            let vocab =
-                artifact.manifest.outputs[artifact.manifest.n_state_outputs].shape[2];
+            let b_max = backend.max_batch();
+            let seq_len = backend.seq_len();
+            let vocab = backend.vocab();
             loop {
                 // block for the first request, then collect until full or
                 // the oldest request exceeds max_wait
@@ -115,40 +109,56 @@ impl Batcher {
                 }
                 let t0 = Instant::now();
                 let fill = group.len();
-                // build the fixed-shape batch (pad with empty rows)
-                let mut tokens = Vec::with_capacity(b_max * seq_len);
+                // ragged batch: exactly the filled rows, no padding —
+                // backends own their shape requirements
+                let mut tokens = Vec::with_capacity(fill * seq_len);
                 for p in &group {
                     tokens.extend(fit_length(p.tokens.clone(), seq_len));
                 }
-                for _ in group.len()..b_max {
-                    tokens.extend(std::iter::repeat(0).take(seq_len));
-                }
-                let inputs = vec![HostTensor::I32(tokens, vec![b_max, seq_len])];
-                let result = artifact.call(&mut state, &inputs);
-                let latency = t0.elapsed().as_secs_f64() * 1e3;
+                let result = backend.infer(&tokens);
+                let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
                 {
                     let mut s = stats.lock().unwrap();
                     s.requests += fill as u64;
                     s.batches += 1;
-                    s.total_latency_ms += latency;
+                    s.total_exec_latency_ms += exec_ms;
                     s.max_batch_fill = s.max_batch_fill.max(fill);
+                    if let Some((util, kl)) = backend.memory_stats() {
+                        s.memory_utilization = Some(util);
+                        s.memory_kl = Some(kl);
+                    }
                 }
                 match result {
-                    Ok(outs) => {
-                        let logp = outs[0].as_f32().unwrap_or(&[]).to_vec();
+                    Ok(logp) => {
+                        let mut latency_sum = 0.0;
+                        let mut truncated = 0u64;
                         for (row, p) in group.into_iter().enumerate() {
-                            let resp = extract_predictions(
-                                &logp, row, seq_len, vocab, &p, &bpe, cfg.top_k_cap,
-                                latency, fill,
+                            let mut resp = extract_predictions(
+                                &logp, row, seq_len, vocab, &p, &bpe, cfg.top_k_cap, fill,
                             );
+                            truncated +=
+                                resp.masks.iter().filter(|m| m.is_truncated()).count() as u64;
+                            // true request latency: enqueue → reply, so
+                            // queueing and batch collection are included
+                            let latency = p.enqueued.elapsed().as_secs_f64() * 1e3;
+                            resp.latency_ms = latency;
+                            latency_sum += latency;
                             let _ = p.reply.send(Ok(resp));
                         }
+                        let mut s = stats.lock().unwrap();
+                        s.total_request_latency_ms += latency_sum;
+                        s.truncated_masks += truncated;
                     }
                     Err(e) => {
                         let msg = format!("inference failed: {e:#}");
+                        // failed requests still count toward the latency
+                        // mean (`requests` was already incremented above)
+                        let mut latency_sum = 0.0;
                         for p in group {
+                            latency_sum += p.enqueued.elapsed().as_secs_f64() * 1e3;
                             let _ = p.reply.send(Err(anyhow!(msg.clone())));
                         }
+                        stats.lock().unwrap().total_request_latency_ms += latency_sum;
                     }
                 }
             }
@@ -157,6 +167,36 @@ impl Batcher {
             .recv()
             .map_err(|_| anyhow!("executor thread died during setup"))??;
         Ok(batcher)
+    }
+
+    /// Resolve a `--backend artifact | engine | auto` flag into a
+    /// spawned batcher (shared by `lram serve` and the serving example).
+    /// `auto` tries the artifact executor and falls back to the
+    /// pure-rust engine when artifacts/PJRT are unavailable.
+    pub fn spawn_for_flag(
+        flag: &str,
+        artifact: super::backend::ArtifactInit,
+        engine: super::backend::EngineConfig,
+        bpe: Arc<Bpe>,
+        cfg: BatcherConfig,
+    ) -> Result<Arc<Batcher>> {
+        match flag {
+            "artifact" => Self::spawn(BackendInit::Artifact(artifact), bpe, cfg),
+            "engine" => Self::spawn(BackendInit::Engine(engine), bpe, cfg),
+            "auto" => {
+                match Self::spawn(BackendInit::Artifact(artifact), bpe.clone(), cfg.clone()) {
+                    Ok(b) => Ok(b),
+                    Err(e) => {
+                        log::warn!(
+                            "artifact backend unavailable ({e:#}); serving with the \
+                             pure-rust engine backend"
+                        );
+                        Self::spawn(BackendInit::Engine(engine), bpe, cfg)
+                    }
+                }
+            }
+            other => Err(anyhow!("unknown backend '{other}' (use artifact | engine | auto)")),
+        }
     }
 
     /// Tokenize + enqueue a request; blocks until the response is ready.
@@ -204,13 +244,14 @@ fn extract_predictions(
     p: &Pending,
     bpe: &Bpe,
     top_k_cap: usize,
-    latency_ms: f64,
     batch_size: usize,
 ) -> PredictResponse {
     let mut masks = Vec::with_capacity(p.mask_positions.len());
     for &pos in &p.mask_positions {
         if pos >= seq_len {
-            masks.push(vec![]);
+            // the mask fell off the fixed-length batch row: surface an
+            // explicit error, never a silent empty prediction
+            masks.push(MaskPrediction::Truncated { position: pos, seq_len });
             continue;
         }
         let base = row * seq_len * vocab + pos * vocab;
@@ -218,7 +259,7 @@ fn extract_predictions(
         let k = p.top_k.min(top_k_cap);
         // partial top-k (shared with the lattice/PKM selection) instead
         // of sorting the entire vocab per mask position: O(V + k log k)
-        masks.push(
+        masks.push(MaskPrediction::Scores(
             crate::util::topk::top_k_indices_f32(scores, k)
                 .into_iter()
                 .map(|i| TokenScore {
@@ -226,9 +267,9 @@ fn extract_predictions(
                     logprob: scores[i] as f64,
                 })
                 .collect(),
-        );
+        ));
     }
-    PredictResponse { masks, latency_ms, batch_size }
+    PredictResponse { masks, latency_ms: 0.0, batch_size }
 }
 
 #[cfg(test)]
@@ -259,5 +300,30 @@ mod tests {
         let b = bpe();
         let (_, masks) = encode_with_masks(&b, "the cat sat");
         assert!(masks.is_empty());
+    }
+
+    #[test]
+    fn truncated_mask_position_becomes_explicit_error() {
+        let b = bpe();
+        let (reply, _rx) = channel();
+        let p = Pending {
+            tokens: vec![CLS_ID, 5, MASK_ID, SEP_ID],
+            mask_positions: vec![2, 9], // 9 is beyond seq_len 4
+            top_k: 2,
+            reply,
+            enqueued: Instant::now(),
+        };
+        let vocab = b.vocab_size();
+        let logp = vec![-1.0f32; 4 * vocab];
+        let resp = extract_predictions(&logp, 0, 4, vocab, &p, &b, 5, 1);
+        assert_eq!(resp.masks.len(), 2);
+        assert!(resp.masks[0].scores().is_some());
+        match resp.masks[1] {
+            MaskPrediction::Truncated { position, seq_len } => {
+                assert_eq!(position, 9);
+                assert_eq!(seq_len, 4);
+            }
+            _ => panic!("expected truncation error"),
+        }
     }
 }

@@ -67,12 +67,31 @@ fn handle(mut stream: TcpStream, batcher: &Batcher, bpe: &Bpe) -> Result<()> {
         ("GET", "/healthz") => (200, r#"{"ok": true}"#.to_string()),
         ("GET", "/stats") => {
             let s = batcher.stats.lock().unwrap().clone();
-            let mean = if s.batches > 0 { s.total_latency_ms / s.batches as f64 } else { 0.0 };
+            let mean_req = if s.requests > 0 {
+                s.total_request_latency_ms / s.requests as f64
+            } else {
+                0.0
+            };
+            let mean_exec =
+                if s.batches > 0 { s.total_exec_latency_ms / s.batches as f64 } else { 0.0 };
+            let memory = match (s.memory_utilization, s.memory_kl) {
+                (Some(u), Some(kl)) => {
+                    format!(r#", "memory_utilization": {u:.6}, "memory_kl": {kl:.6}"#)
+                }
+                _ => String::new(),
+            };
             (
                 200,
                 format!(
-                    r#"{{"requests": {}, "batches": {}, "mean_batch_latency_ms": {:.3}, "max_batch_fill": {}}}"#,
-                    s.requests, s.batches, mean, s.max_batch_fill
+                    r#"{{"backend": "{}", "requests": {}, "batches": {}, "mean_request_latency_ms": {:.3}, "mean_exec_latency_ms": {:.3}, "max_batch_fill": {}, "truncated_masks": {}{}}}"#,
+                    s.backend,
+                    s.requests,
+                    s.batches,
+                    mean_req,
+                    mean_exec,
+                    s.max_batch_fill,
+                    s.truncated_masks,
+                    memory
                 ),
             )
         }

@@ -1,15 +1,23 @@
 //! MLM serving: a vLLM-router-style coordinator — TCP front door,
-//! dynamic batcher, PJRT executor — with python nowhere on the path.
+//! dynamic batcher, pluggable inference backend — with python nowhere on
+//! the path.
 //!
 //! Requests (`POST /predict` with `{"text": "... [MASK] ..."}`) are
-//! tokenized, queued, and coalesced by the [`batcher`] into fixed-shape
-//! batches for the `infer_logits_<variant>` artifact; responses carry the
-//! top-k predictions for every `[MASK]` position.
+//! tokenized, queued, and coalesced by the [`batcher`] into (possibly
+//! ragged) batches for an [`InferenceBackend`]; responses carry the
+//! top-k predictions for every `[MASK]` position.  Two backends exist:
+//! the AOT PJRT artifact executor ([`ArtifactBackend`]) and the
+//! artifact-free pure-rust lattice engine ([`EngineBackend`]), which
+//! serves the paper's O(1)-lookup path on any machine.
 
 pub mod api;
+pub mod backend;
 pub mod batcher;
 mod http;
 
-pub use api::{PredictRequest, PredictResponse, TokenScore};
-pub use batcher::{Batcher, BatcherConfig, BatcherInit};
+pub use api::{MaskPrediction, PredictRequest, PredictResponse, TokenScore};
+pub use backend::{
+    ArtifactBackend, ArtifactInit, BackendInit, EngineBackend, EngineConfig, InferenceBackend,
+};
+pub use batcher::{Batcher, BatcherConfig};
 pub use http::serve;

@@ -171,6 +171,7 @@ impl SplitPkmLayer {
 
     pub fn run(&mut self, x: &[f32]) -> Result<Vec<f32>> {
         let b = self.batch;
+        assert_eq!(x.len(), b * self.width, "input must be batch x width");
         let outs = self.score.call(
             &mut self.score_state,
             &[HostTensor::F32(x.to_vec(), vec![b, self.width])],

@@ -3,7 +3,9 @@
 //! The memstore uses lazily-populated anonymous maps so a "billion
 //! parameter" value table costs physical memory only for pages actually
 //! touched — the honest CPU analogue of allocating a huge HBM tensor and
-//! accessing 32 rows per query.
+//! accessing 32 rows per query.  [`MmapF32`] backs the value tables and
+//! optimizer moments; [`MmapU32`] backs per-row integer side tables (the
+//! sparse-Adam step counts) with the same lazy semantics.
 
 use std::fs::OpenOptions;
 use std::os::unix::io::AsRawFd;
@@ -11,25 +13,25 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-/// An owned mmap'd region of `f32`s.
-pub struct MmapF32 {
-    ptr: *mut f32,
-    len: usize, // in f32 elements
+/// An owned raw mmap'd byte region.  The typed wrappers below expose it
+/// as element slices; this struct owns the mapping and its lifetime.
+struct RawMap {
+    ptr: *mut libc::c_void,
+    bytes: usize,
 }
 
 // SAFETY: the region is owned and pages are plain memory; concurrent
 // readers are fine, writers must hold external synchronisation (the
 // memstore shards guarantee this).
-unsafe impl Send for MmapF32 {}
-unsafe impl Sync for MmapF32 {}
+unsafe impl Send for RawMap {}
+unsafe impl Sync for RawMap {}
 
-impl MmapF32 {
-    /// Anonymous zero-initialised map of `len` f32 elements.
-    pub fn anon(len: usize) -> Result<Self> {
-        if len == 0 {
+impl RawMap {
+    /// Anonymous zero-initialised lazily-populated map of `bytes` bytes.
+    fn anon(bytes: usize) -> Result<Self> {
+        if bytes == 0 {
             bail!("mmap of zero length");
         }
-        let bytes = len * 4;
         // SAFETY: standard anonymous private mapping.
         let ptr = unsafe {
             libc::mmap(
@@ -44,23 +46,26 @@ impl MmapF32 {
         if ptr == libc::MAP_FAILED {
             bail!("mmap({} bytes) failed: {}", bytes, std::io::Error::last_os_error());
         }
-        Ok(MmapF32 { ptr: ptr as *mut f32, len })
+        Ok(RawMap { ptr, bytes })
     }
 
     /// File-backed map (created/truncated to size) for persistence.
-    pub fn file(path: &Path, len: usize) -> Result<Self> {
+    fn file(path: &Path, bytes: usize) -> Result<Self> {
+        if bytes == 0 {
+            bail!("mmap of zero length");
+        }
         let f = OpenOptions::new()
             .read(true)
             .write(true)
             .create(true)
             .open(path)
             .with_context(|| format!("opening {}", path.display()))?;
-        f.set_len((len * 4) as u64)?;
+        f.set_len(bytes as u64)?;
         // SAFETY: shared file mapping of the exact file length.
         let ptr = unsafe {
             libc::mmap(
                 std::ptr::null_mut(),
-                len * 4,
+                bytes,
                 libc::PROT_READ | libc::PROT_WRITE,
                 libc::MAP_SHARED,
                 f.as_raw_fd(),
@@ -70,7 +75,53 @@ impl MmapF32 {
         if ptr == libc::MAP_FAILED {
             bail!("mmap file failed: {}", std::io::Error::last_os_error());
         }
-        Ok(MmapF32 { ptr: ptr as *mut f32, len })
+        Ok(RawMap { ptr, bytes })
+    }
+
+    /// Resident-set estimate: how many pages of the map are actually
+    /// backed by physical memory (Table-5-style utilisation accounting).
+    fn resident_bytes(&self) -> Result<usize> {
+        let page = 4096usize;
+        let pages = self.bytes.div_ceil(page);
+        let mut vec = vec![0u8; pages];
+        // SAFETY: mincore over our own mapping.
+        let rc = unsafe { libc::mincore(self.ptr, self.bytes, vec.as_mut_ptr()) };
+        if rc != 0 {
+            bail!("mincore failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(vec.iter().filter(|&&b| b & 1 != 0).count() * page)
+    }
+}
+
+impl Drop for RawMap {
+    fn drop(&mut self) {
+        // SAFETY: unmapping the region we mapped.
+        unsafe {
+            libc::munmap(self.ptr, self.bytes);
+        }
+    }
+}
+
+/// Byte size of `len` 4-byte elements, rejecting address-space overflow.
+fn elem_bytes(len: usize) -> Result<usize> {
+    len.checked_mul(4).ok_or_else(|| anyhow::anyhow!("mmap size overflow: {len} elements"))
+}
+
+/// An owned mmap'd region of `f32`s.
+pub struct MmapF32 {
+    raw: RawMap,
+    len: usize, // in f32 elements
+}
+
+impl MmapF32 {
+    /// Anonymous zero-initialised map of `len` f32 elements.
+    pub fn anon(len: usize) -> Result<Self> {
+        Ok(MmapF32 { raw: RawMap::anon(elem_bytes(len)?)?, len })
+    }
+
+    /// File-backed map (created/truncated to size) for persistence.
+    pub fn file(path: &Path, len: usize) -> Result<Self> {
+        Ok(MmapF32 { raw: RawMap::file(path, elem_bytes(len)?)?, len })
     }
 
     #[inline]
@@ -86,46 +137,67 @@ impl MmapF32 {
     #[inline]
     pub fn as_slice(&self) -> &[f32] {
         // SAFETY: region is valid for len elements for the lifetime of self.
-        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        unsafe { std::slice::from_raw_parts(self.raw.ptr as *const f32, self.len) }
     }
 
     #[inline]
     #[allow(clippy::mut_from_ref)]
     #[allow(dead_code)]
     pub(crate) unsafe fn as_mut_slice_unchecked(&self) -> &mut [f32] {
-        std::slice::from_raw_parts_mut(self.ptr, self.len)
+        std::slice::from_raw_parts_mut(self.raw.ptr as *mut f32, self.len)
     }
 
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
         // SAFETY: exclusive borrow of self.
-        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+        unsafe { std::slice::from_raw_parts_mut(self.raw.ptr as *mut f32, self.len) }
     }
 
-    /// Resident-set estimate: how many pages of the map are actually
-    /// backed by physical memory (Table-5-style utilisation accounting).
+    /// Physically-resident bytes of the mapping.
     pub fn resident_bytes(&self) -> Result<usize> {
-        let page = 4096usize;
-        let bytes = self.len * 4;
-        let pages = bytes.div_ceil(page);
-        let mut vec = vec![0u8; pages];
-        // SAFETY: mincore over our own mapping.
-        let rc = unsafe {
-            libc::mincore(self.ptr as *mut libc::c_void, bytes, vec.as_mut_ptr())
-        };
-        if rc != 0 {
-            bail!("mincore failed: {}", std::io::Error::last_os_error());
-        }
-        Ok(vec.iter().filter(|&&b| b & 1 != 0).count() * page)
+        self.raw.resident_bytes()
     }
 }
 
-impl Drop for MmapF32 {
-    fn drop(&mut self) {
-        // SAFETY: unmapping the region we mapped.
-        unsafe {
-            libc::munmap(self.ptr as *mut libc::c_void, self.len * 4);
-        }
+/// An owned anonymous mmap'd region of `u32`s — lazily-populated integer
+/// side tables (e.g. the sparse-Adam per-row step counts), so a
+/// billion-row optimizer costs physical memory only for rows touched.
+pub struct MmapU32 {
+    raw: RawMap,
+    len: usize, // in u32 elements
+}
+
+impl MmapU32 {
+    /// Anonymous zero-initialised map of `len` u32 elements.
+    pub fn anon(len: usize) -> Result<Self> {
+        Ok(MmapU32 { raw: RawMap::anon(elem_bytes(len)?)?, len })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u32] {
+        // SAFETY: region is valid for len elements for the lifetime of self.
+        unsafe { std::slice::from_raw_parts(self.raw.ptr as *const u32, self.len) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [u32] {
+        // SAFETY: exclusive borrow of self.
+        unsafe { std::slice::from_raw_parts_mut(self.raw.ptr as *mut u32, self.len) }
+    }
+
+    /// Physically-resident bytes of the mapping.
+    pub fn resident_bytes(&self) -> Result<usize> {
+        self.raw.resident_bytes()
     }
 }
 
@@ -165,5 +237,16 @@ mod tests {
         let m = MmapF32::file(&path, 1024).unwrap();
         assert_eq!(m.as_slice()[7], 2.25);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn u32_map_is_lazy_and_writable() {
+        // 1 GB of virtual step counts; only touched pages go resident
+        let mut m = MmapU32::anon(1 << 28).unwrap();
+        assert_eq!(m.as_slice()[999], 0);
+        m.as_mut_slice()[1 << 27] = 42;
+        assert_eq!(m.as_slice()[1 << 27], 42);
+        let resident = m.resident_bytes().unwrap();
+        assert!(resident < (1 << 26), "resident {resident} unexpectedly large");
     }
 }

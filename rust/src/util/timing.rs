@@ -172,4 +172,22 @@ mod tests {
         assert_eq!(entries[0].req("batch").unwrap().as_f64().unwrap(), 256.0);
         assert_eq!(entries[1].req("median_us").unwrap().as_f64().unwrap(), 140.0);
     }
+
+    #[test]
+    fn committed_bench_baseline_has_the_gate_entry() {
+        // CI gates on engine_lookup_gather_b256_t1.qps from the committed
+        // baseline (see rust/src/bin/bench_gate.rs); keep it parseable
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("benches/BENCH_lattice.baseline.json");
+        let text = std::fs::read_to_string(path).expect("baseline file exists");
+        let v = crate::util::json::parse(&text).expect("baseline parses");
+        let entries = v.req("entries").unwrap().as_arr().unwrap();
+        let e = entries
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(|n| n.as_str()) == Some("engine_lookup_gather_b256_t1")
+            })
+            .expect("gate entry present");
+        assert!(e.req("qps").unwrap().as_f64().unwrap() > 0.0);
+    }
 }

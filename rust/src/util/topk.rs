@@ -8,17 +8,54 @@
 //! **score descending, then payload/index ascending** — which matches
 //! the scan order of the scalar reference implementations exactly, so
 //! differential tests can demand bit-identical outputs.
+//!
+//! NaN scores sort **last**, deterministically (mutual ties broken by
+//! payload).  `partial_cmp(..).unwrap_or(Equal)` is *not* a total order
+//! under NaN, and `select_nth_unstable_by` is allowed to return garbage
+//! (or panic) when the comparator is inconsistent — a single NaN logit
+//! from a bad checkpoint must degrade to "ranked below every real
+//! score", never to scrambled top-k.
 
 use std::cmp::Ordering;
 
-/// Total order: score descending, payload ascending on ties.
+/// Float scores orderable with an explicit NaN rule.
+trait Score: PartialOrd + Copy {
+    fn is_nan(self) -> bool;
+}
+
+impl Score for f64 {
+    fn is_nan(self) -> bool {
+        f64::is_nan(self)
+    }
+}
+
+impl Score for f32 {
+    fn is_nan(self) -> bool {
+        f32::is_nan(self)
+    }
+}
+
+/// Total order on scores: descending, NaN after every real value (NaNs
+/// mutually equal — callers break the tie on payload).
+#[inline]
+fn desc_nan_last<F: Score>(a: F, b: F) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (false, false) => b.partial_cmp(&a).unwrap_or(Ordering::Equal),
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+    }
+}
+
+/// Total order: score descending (NaN last), payload ascending on ties.
 #[inline]
 fn cmp_desc<P: Copy + Ord>(a: &(f64, P), b: &(f64, P)) -> Ordering {
-    b.0.partial_cmp(&a.0).unwrap_or(Ordering::Equal).then_with(|| a.1.cmp(&b.1))
+    desc_nan_last(a.0, b.0).then_with(|| a.1.cmp(&b.1))
 }
 
 /// Partition the `k` largest `(score, payload)` pairs to the front and
-/// return them sorted (score descending, payload ascending on ties).
+/// return them sorted (score descending, payload ascending on ties; NaN
+/// scores rank below every real score).
 ///
 /// For distinct scores this is equivalent, element for element, to the
 /// reference partial selection sort in
@@ -39,18 +76,16 @@ pub fn partial_top_k_desc<P: Copy + Ord>(items: &mut [(f64, P)], k: usize) -> &[
 }
 
 /// Indices of the `k` largest scores, score-descending (index ascending
-/// on ties).  O(n + k log k); replaces full-vocab sorts on the serving
-/// path and codebook sorts in the PKM scorer.
+/// on ties, NaN scores ranked last).  O(n + k log k); replaces
+/// full-vocab sorts on the serving path and codebook sorts in the PKM
+/// scorer.
 pub fn top_k_indices_f32(scores: &[f32], k: usize) -> Vec<usize> {
     let k = k.min(scores.len());
     if k == 0 {
         return Vec::new();
     }
     let cmp = |a: &u32, b: &u32| {
-        scores[*b as usize]
-            .partial_cmp(&scores[*a as usize])
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| a.cmp(b))
+        desc_nan_last(scores[*a as usize], scores[*b as usize]).then_with(|| a.cmp(b))
     };
     let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
     if k < idx.len() {
@@ -64,6 +99,7 @@ pub fn top_k_indices_f32(scores: &[f32], k: usize) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::check::forall;
     use crate::util::rng::Rng;
 
     #[test]
@@ -114,5 +150,69 @@ mod tests {
             full.truncate(k.min(n));
             assert_eq!(top_k_indices_f32(&scores, k), full, "n={n} k={k}");
         }
+    }
+
+    #[test]
+    fn nan_indices_sort_last_deterministically() {
+        // property: with NaNs sprinkled in, top-k equals a full sort
+        // under the same NaN-last rule, and no NaN index outranks a real
+        // score while real candidates remain
+        forall(150, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let k = 1 + rng.below(24) as usize;
+            let scores: Vec<f32> = (0..n)
+                .map(|_| {
+                    if rng.bool(0.2) {
+                        f32::NAN
+                    } else {
+                        (rng.below(30) as f32) * 0.5
+                    }
+                })
+                .collect();
+            let got = top_k_indices_f32(&scores, k);
+            let mut full: Vec<usize> = (0..n).collect();
+            full.sort_by(|&a, &b| desc_nan_last(scores[a], scores[b]).then(a.cmp(&b)));
+            full.truncate(k.min(n));
+            assert_eq!(got, full, "n={n} k={k}");
+            let non_nan = scores.iter().filter(|s| !s.is_nan()).count();
+            for (rank, &i) in got.iter().enumerate() {
+                if rank < non_nan {
+                    assert!(!scores[i].is_nan(), "NaN at rank {rank} of {non_nan} real");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn nan_pairs_sort_last_deterministically() {
+        // same property for the (score, payload) selection: output is a
+        // deterministic function of the input set even under NaN
+        forall(150, |rng| {
+            let n = 1 + rng.below(150) as usize;
+            let k = 1 + rng.below(20) as usize;
+            let mut items: Vec<(f64, u32)> = (0..n)
+                .map(|i| {
+                    let s = if rng.bool(0.25) { f64::NAN } else { rng.below(20) as f64 };
+                    (s, i as u32)
+                })
+                .collect();
+            let mut reference = items.clone();
+            reference.sort_by(cmp_desc);
+            reference.truncate(k.min(n));
+            let got = partial_top_k_desc(&mut items, k).to_vec();
+            // compare through bits so NaN entries compare equal to themselves
+            let key =
+                |v: &[(f64, u32)]| v.iter().map(|&(s, p)| (s.to_bits(), p)).collect::<Vec<_>>();
+            assert_eq!(key(&got), key(&reference), "n={n} k={k}");
+        });
+    }
+
+    #[test]
+    fn all_nan_input_keeps_payload_order() {
+        let mut items = vec![(f64::NAN, 2u32), (f64::NAN, 0u32), (f64::NAN, 1u32)];
+        let got: Vec<u32> = partial_top_k_desc(&mut items, 2).iter().map(|&(_, p)| p).collect();
+        assert_eq!(got, vec![0, 1]);
+        let scores = [f32::NAN, f32::NAN];
+        assert_eq!(top_k_indices_f32(&scores, 2), vec![0, 1]);
     }
 }

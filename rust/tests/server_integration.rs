@@ -1,5 +1,9 @@
-//! Serving-path integration: dynamic batcher over the inference artifact,
-//! HTTP front door end-to-end on a loopback socket.
+//! Serving-path integration: dynamic batcher over a pluggable inference
+//! backend, HTTP front door end-to-end on a loopback socket.
+//!
+//! The engine-backend tests run everywhere — no artifacts, no PJRT —
+//! which is the point of the pure-rust serving path.  The artifact
+//! tests still skip gracefully when compiled artifacts are absent.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -7,7 +11,10 @@ use std::sync::Arc;
 
 use lram::data::synth::CorpusSpec;
 use lram::data::DataPipeline;
-use lram::server::{serve, Batcher, BatcherConfig, BatcherInit, PredictRequest};
+use lram::server::{
+    serve, ArtifactInit, BackendInit, Batcher, BatcherConfig, EngineBackend, EngineConfig,
+    PredictRequest,
+};
 
 fn artifact_dir() -> Option<String> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -32,13 +39,20 @@ fn build_bpe() -> Arc<lram::tokenizer::Bpe> {
     Arc::new(p.bpe)
 }
 
-fn spawn_batcher(dir: &str) -> Option<Arc<Batcher>> {
+/// Small tokenizer for the engine tests (they never skip, so debug-mode
+/// runtime matters; the data-pipeline unit tests use the same scale).
+fn build_small_bpe() -> Arc<lram::tokenizer::Bpe> {
+    let p = DataPipeline::new(CorpusSpec::default(), 512, 8, 1, 0.15).unwrap();
+    Arc::new(p.bpe)
+}
+
+fn spawn_artifact_batcher(dir: &str) -> Option<Arc<Batcher>> {
     match Batcher::spawn(
-        BatcherInit {
+        BackendInit::Artifact(ArtifactInit {
             artifact_dir: dir.to_string(),
             artifact_name: "infer_logits_baseline".into(),
             checkpoint: None,
-        },
+        }),
         build_bpe(),
         BatcherConfig::default(),
     ) {
@@ -50,31 +64,53 @@ fn spawn_batcher(dir: &str) -> Option<Arc<Batcher>> {
     }
 }
 
+/// Small engine config so tests spend milliseconds, not seconds.
+fn engine_cfg() -> EngineConfig {
+    EngineConfig { max_batch: 4, seq_len: 24, width: 32, m: 32, ..EngineConfig::default() }
+}
+
+fn spawn_engine_batcher(bpe: Arc<lram::tokenizer::Bpe>) -> Arc<Batcher> {
+    Batcher::spawn(BackendInit::Engine(engine_cfg()), bpe, BatcherConfig::default())
+        .expect("engine backend needs no artifacts")
+}
+
+// ---------------------------------------------------------------------
+// engine backend: runs everywhere, never skips
+// ---------------------------------------------------------------------
+
 #[test]
-fn batcher_answers_fill_mask_requests() {
-    let dir = require!(artifact_dir());
-    let batcher = require!(spawn_batcher(&dir));
-    let bpe = build_bpe();
+fn engine_batcher_answers_fill_mask_requests() {
+    let bpe = build_small_bpe();
+    let batcher = spawn_engine_batcher(bpe.clone());
     let req = PredictRequest { text: "the [MASK] of the".into(), top_k: 5 };
     let resp = batcher.submit(&bpe, &req).unwrap();
     assert_eq!(resp.masks.len(), 1);
-    assert_eq!(resp.masks[0].len(), 5);
+    let scores = resp.masks[0].scores().expect("in-range mask is predicted");
+    assert_eq!(scores.len(), 5);
     // log-probs descending and finite
-    let lps: Vec<f64> = resp.masks[0].iter().map(|c| c.logprob).collect();
+    let lps: Vec<f64> = scores.iter().map(|c| c.logprob).collect();
     for w in lps.windows(2) {
         assert!(w[0] >= w[1]);
     }
     assert!(lps.iter().all(|l| l.is_finite() && *l <= 0.0));
+    // true request latency: enqueue → reply includes the batch window
+    assert!(resp.latency_ms > 0.0, "latency {}", resp.latency_ms);
+    let stats = batcher.stats.lock().unwrap().clone();
+    assert_eq!(stats.backend, "engine");
+    assert_eq!(stats.requests, 1);
+    assert!(stats.total_request_latency_ms >= stats.total_exec_latency_ms);
+    let util = stats.memory_utilization.expect("engine backend tracks memory stats");
+    assert!(util > 0.0, "no slots touched?");
 }
 
 #[test]
-fn batcher_coalesces_concurrent_requests() {
-    let dir = require!(artifact_dir());
-    let batcher = require!(spawn_batcher(&dir));
+fn engine_batcher_coalesces_concurrent_requests() {
+    let bpe = build_small_bpe();
+    let batcher = spawn_engine_batcher(bpe.clone());
     let mut handles = vec![];
     for i in 0..4 {
         let b = batcher.clone();
-        let bpe = build_bpe();
+        let bpe = bpe.clone();
         handles.push(std::thread::spawn(move || {
             let req = PredictRequest {
                 text: format!("request {i} says [MASK] ."),
@@ -86,7 +122,7 @@ fn batcher_coalesces_concurrent_requests() {
     for h in handles {
         let resp = h.join().unwrap();
         assert_eq!(resp.masks.len(), 1);
-        assert_eq!(resp.masks[0].len(), 3);
+        assert_eq!(resp.masks[0].scores().unwrap().len(), 3);
     }
     let stats = batcher.stats.lock().unwrap().clone();
     assert_eq!(stats.requests, 4);
@@ -95,9 +131,116 @@ fn batcher_coalesces_concurrent_requests() {
 }
 
 #[test]
+fn engine_batcher_reports_truncated_masks() {
+    let bpe = build_small_bpe();
+    let batcher = spawn_engine_batcher(bpe.clone());
+    // enough filler words to push the second mask past seq_len = 24
+    let mut text = String::from("the [MASK] sat");
+    for _ in 0..40 {
+        text.push_str(" cat");
+    }
+    text.push_str(" [MASK]");
+    let resp = batcher.submit(&bpe, &PredictRequest { text, top_k: 3 }).unwrap();
+    assert_eq!(resp.masks.len(), 2);
+    assert!(resp.masks[0].scores().is_some(), "early mask predicted");
+    assert!(resp.masks[1].is_truncated(), "late mask must be an explicit error");
+    let stats = batcher.stats.lock().unwrap().clone();
+    assert_eq!(stats.truncated_masks, 1);
+}
+
+#[test]
+fn engine_request_without_mask_errors() {
+    let bpe = build_small_bpe();
+    let batcher = spawn_engine_batcher(bpe.clone());
+    let req = PredictRequest { text: "no mask here".into(), top_k: 3 };
+    assert!(batcher.submit(&bpe, &req).is_err());
+}
+
+#[test]
+fn engine_http_end_to_end() {
+    let bpe = build_small_bpe();
+    let batcher = spawn_engine_batcher(bpe.clone());
+    let addr = "127.0.0.1:18473";
+    {
+        let batcher = batcher.clone();
+        let bpe = bpe.clone();
+        std::thread::spawn(move || {
+            let _ = serve(addr, batcher, bpe);
+        });
+    }
+    let mut stream = None;
+    for _ in 0..50 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            stream = Some(s);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let mut stream = stream.expect("server did not start");
+    let body = r#"{"text": "the [MASK] sat", "top_k": 2}"#;
+    write!(
+        stream,
+        "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("\"masks\""), "{resp}");
+
+    // stats endpoint reports the backend and memory observability
+    let mut s2 = TcpStream::connect(addr).unwrap();
+    write!(s2, "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut r2 = String::new();
+    s2.read_to_string(&mut r2).unwrap();
+    assert!(r2.contains(r#""backend": "engine""#), "{r2}");
+    assert!(r2.contains("memory_utilization"), "{r2}");
+}
+
+#[test]
+fn engine_backend_matches_scalar_oracle_end_to_end() {
+    // the serving-path differential test: the full forward pass with the
+    // fused batched engine must be bit-identical to the same pass with
+    // the scalar LatticeLookup oracle driving the memory stage
+    let cfg = engine_cfg();
+    let seq_len = cfg.seq_len;
+    let mut fused = EngineBackend::new(cfg.clone(), 4096).unwrap();
+    let mut oracle = EngineBackend::new(cfg, 4096).unwrap();
+    let tokens: Vec<i32> = (0..2 * seq_len as i32).map(|i| 5 + (i * 37) % 4000).collect();
+    let a = fused.infer(&tokens).unwrap();
+    let b = oracle.infer_with_scalar_oracle(&tokens).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "logp {i}: {x} vs {y}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// artifact backend: exercises the PJRT path when artifacts exist
+// ---------------------------------------------------------------------
+
+#[test]
+fn batcher_answers_fill_mask_requests() {
+    let dir = require!(artifact_dir());
+    let batcher = require!(spawn_artifact_batcher(&dir));
+    let bpe = build_bpe();
+    let req = PredictRequest { text: "the [MASK] of the".into(), top_k: 5 };
+    let resp = batcher.submit(&bpe, &req).unwrap();
+    assert_eq!(resp.masks.len(), 1);
+    let scores = resp.masks[0].scores().unwrap();
+    assert_eq!(scores.len(), 5);
+    let lps: Vec<f64> = scores.iter().map(|c| c.logprob).collect();
+    for w in lps.windows(2) {
+        assert!(w[0] >= w[1]);
+    }
+    assert!(lps.iter().all(|l| l.is_finite() && *l <= 0.0));
+}
+
+#[test]
 fn request_without_mask_errors() {
     let dir = require!(artifact_dir());
-    let batcher = require!(spawn_batcher(&dir));
+    let batcher = require!(spawn_artifact_batcher(&dir));
     let bpe = build_bpe();
     let req = PredictRequest { text: "no mask here".into(), top_k: 3 };
     assert!(batcher.submit(&bpe, &req).is_err());
@@ -106,7 +249,7 @@ fn request_without_mask_errors() {
 #[test]
 fn http_end_to_end() {
     let dir = require!(artifact_dir());
-    let batcher = require!(spawn_batcher(&dir));
+    let batcher = require!(spawn_artifact_batcher(&dir));
     let bpe = build_bpe();
     let addr = "127.0.0.1:18471";
     {
