@@ -20,13 +20,16 @@
 //!
 //! # Backends
 //!
-//! * `--backend engine`    pure rust, always available (untrained,
-//!   deterministic weights — the demo is about the serving path)
+//! * `--backend engine`    pure rust, always available; serves a trained
+//!   `--checkpoint DIR` (from `lram train --backend engine --save DIR`),
+//!   or untrained deterministic seed weights behind an explicit
+//!   `--random-init`
 //! * `--backend artifact`  AOT PJRT artifact (`infer_logits_<variant>`,
 //!   needs `make artifacts` and a real PJRT runtime)
-//! * `--backend auto`      artifact if available, engine otherwise (default)
+//! * `--backend auto`      checkpoint > artifact > seed engine (default;
+//!   the seed fallback warns loudly)
 //!
-//! Other flags: `[--variant lram_small] [--checkpoint runs/.../final.ckpt]
+//! Other flags: `[--variant lram_small] [--checkpoint ckpt/ | runs/.../final.ckpt]
 //! [--requests 12] [--addr 127.0.0.1:8077] [--threads N]`
 
 use std::io::{Read, Write};
@@ -58,9 +61,10 @@ fn main() -> anyhow::Result<()> {
     let backend = args.str("backend", "auto");
     let n_requests = args.usize("requests", 12)?;
 
-    let checkpoint = match args.flags.get("checkpoint") {
-        Some(p) => Some(std::fs::read(p)?),
-        None => None,
+    // --checkpoint: engine checkpoint directory or legacy artifact blob
+    let (engine_ckpt, artifact_ckpt) = match args.flags.get("checkpoint") {
+        Some(p) => lram::server::resolve_checkpoint_flag(p, args.usize("threads", 1)?)?,
+        None => (None, None),
     };
     let pipeline = DataPipeline::new(CorpusSpec::default(), 4096, 8, 1, 0.15)?;
     let bpe = Arc::new(pipeline.bpe);
@@ -70,9 +74,11 @@ fn main() -> anyhow::Result<()> {
         ArtifactInit {
             artifact_dir: args.str("artifacts", "artifacts"),
             artifact_name: format!("infer_logits_{variant}"),
-            checkpoint,
+            checkpoint: artifact_ckpt,
         },
         EngineConfig { threads: args.usize("threads", 1)?, ..EngineConfig::default() },
+        engine_ckpt,
+        args.bool("random-init", false)?,
         bpe.clone(),
         BatcherConfig::default(),
     )?;

@@ -89,6 +89,7 @@ impl TrainConfig {
         self.eval_every = args.u64("eval-every", self.eval_every)?;
         self.eval_batches = args.u64("eval-batches", self.eval_batches)?;
         self.corpus_seed = args.u64("corpus-seed", self.corpus_seed)?;
+        self.vocab_size = args.usize("vocab-size", self.vocab_size)?;
         self.mask_prob = args.f64("mask-prob", self.mask_prob)?;
         Ok(())
     }

@@ -1,0 +1,504 @@
+//! Pure-rust trainer for the [`LramMlm`] engine model — the training
+//! side of "train → save → serve trained weights artifact-free".
+//!
+//! The forward pass is *the* shared [`crate::model::LramMlm::forward`];
+//! the backward pass here is hand-derived for exactly that graph, so the
+//! logits a checkpoint serves later are bit-identical to what the
+//! trainer computed (the `checkpoint_roundtrip` harness asserts it).
+//!
+//! Gradient flow (masked cross-entropy over the masked positions):
+//!
+//! * output projection `w_out`, head-combine `wo`, token/position
+//!   embeddings — dense SGD;
+//! * value-table rows — [`SparseAdam`] (paper §3.2: memory parameters
+//!   use lr 1e-3 to compensate for sparse access), only touched rows
+//!   pay any work;
+//! * the query projection `wq` is **frozen**: its gradient would have to
+//!   flow through the kernel weights' dependence on the query (the
+//!   routing derivative), which the straight-through treatment of the
+//!   lattice lookup deliberately drops — lookup indices and kernel
+//!   weights are treated as constants of the forward pass, the same
+//!   approximation memory-layer training uses at scale.  Values,
+//!   embeddings and the dense suffix carry the learning signal.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::checkpoint::{Checkpoint, Manifest};
+use crate::data::synth::CorpusSpec;
+use crate::data::DataPipeline;
+use crate::memstore::SparseAdam;
+use crate::model::{tensor_names, EngineConfig, LramMlm};
+
+/// Configuration for a pure-rust engine training run.
+#[derive(Debug, Clone)]
+pub struct EngineTrainConfig {
+    /// Model geometry (the checkpoint records this).
+    pub model: EngineConfig,
+    /// Training steps.
+    pub steps: u64,
+    /// Rows per training batch (`<= model.max_batch`).
+    pub batch: usize,
+    /// SGD learning rate for the dense parameters.
+    pub lr_dense: f32,
+    /// SparseAdam learning rate for value-table rows (paper: 1e-3).
+    pub lr_values: f32,
+    /// Synthetic-corpus seed (must match serving so tokenizers agree).
+    pub corpus_seed: u64,
+    /// BPE vocabulary target (the *trained* size may come out smaller;
+    /// the checkpoint stores the actual one).
+    pub vocab_size: usize,
+    pub mask_prob: f64,
+    /// Validation batches for the end-of-run evaluation.
+    pub eval_batches: u64,
+    /// Save a checkpoint every N steps into `save_dir` (0 = final only).
+    pub save_every: u64,
+    /// Checkpoint directory; `None` trains without saving.
+    pub save_dir: Option<PathBuf>,
+}
+
+impl Default for EngineTrainConfig {
+    fn default() -> Self {
+        EngineTrainConfig {
+            model: EngineConfig::default(),
+            steps: 200,
+            batch: 8,
+            lr_dense: 0.05,
+            lr_values: 1e-3,
+            corpus_seed: 1234,
+            vocab_size: 4096,
+            mask_prob: 0.15,
+            eval_batches: 4,
+            save_every: 0,
+            save_dir: None,
+        }
+    }
+}
+
+/// Outcome of an engine training run.
+#[derive(Debug, Clone)]
+pub struct EngineTrainOutcome {
+    pub steps: u64,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub val_ppl: f64,
+    /// Manifest of the final checkpoint, when one was saved.
+    pub manifest: Option<Manifest>,
+}
+
+/// The pure-rust trainer: owns the model, the sparse optimizer over the
+/// value table, and the data pipeline.
+pub struct EngineTrainer {
+    pub cfg: EngineTrainConfig,
+    pub model: LramMlm,
+    opt: SparseAdam,
+    pipeline: DataPipeline,
+    step: u64,
+    // dense-gradient scratch, zeroed each step
+    g_embed: Vec<f32>,
+    g_pos: Vec<f32>,
+    g_wo: Vec<f32>,
+    g_wout: Vec<f32>,
+    // value-row gradient accumulation (BTreeMap: deterministic order)
+    row_grads: BTreeMap<u64, Vec<f32>>,
+}
+
+impl EngineTrainer {
+    pub fn new(cfg: EngineTrainConfig) -> Result<Self> {
+        ensure!(
+            cfg.batch >= 1 && cfg.batch <= cfg.model.max_batch,
+            "batch {} must be in [1, max_batch = {}]",
+            cfg.batch,
+            cfg.model.max_batch
+        );
+        ensure!(cfg.steps >= 1, "steps must be at least 1");
+        let pipeline = Self::build_pipeline(&cfg)?;
+        // the *actual* trained vocabulary (BPE may converge below the
+        // target); serving uses the same rule, so sizes always agree
+        let vocab = pipeline.bpe.vocab_size();
+        let model = LramMlm::seeded(cfg.model.clone(), vocab)?;
+        let opt = SparseAdam::new(model.table.rows(), cfg.model.m, cfg.lr_values)?;
+        Ok(Self::assemble(cfg, model, opt, pipeline, 0))
+    }
+
+    /// Resume training from a checkpoint: model weights, value table
+    /// *and* sparse-Adam state (moments + per-row step counts) come back
+    /// exactly, so a resumed run is bit-identical to an uninterrupted
+    /// one — `checkpoint_roundtrip.rs` asserts that too.
+    pub fn from_checkpoint(mut cfg: EngineTrainConfig, dir: &Path) -> Result<Self> {
+        let ck = Checkpoint::open(dir)?;
+        // geometry comes from the checkpoint, not the (possibly default)
+        // cfg — resuming must not silently reshape the model, and the
+        // data pipeline must be built with the checkpoint's seq_len
+        cfg.model = EngineConfig::from_desc(&ck.manifest.model, cfg.model.threads, false);
+        ensure!(
+            cfg.batch >= 1 && cfg.batch <= cfg.model.max_batch,
+            "batch {} must be in [1, max_batch = {}]",
+            cfg.batch,
+            cfg.model.max_batch
+        );
+        let pipeline = Self::build_pipeline(&cfg)?;
+        let hash = pipeline.bpe.fingerprint();
+        if ck.manifest.tokenizer_hash != hash {
+            bail!(
+                "checkpoint {} was trained with tokenizer {} but this run built {} — \
+                 corpus_seed/vocab_size must match to resume",
+                ck.manifest.checkpoint_id,
+                ck.manifest.tokenizer_hash,
+                hash
+            );
+        }
+        let model = LramMlm::from_checkpoint(&ck, cfg.model.threads)?;
+        let opt = if ck.manifest.has_tensor(tensor_names::ADAM_M) {
+            SparseAdam::from_state(
+                ck.map_table(tensor_names::ADAM_M)?,
+                ck.map_table(tensor_names::ADAM_V)?,
+                ck.map_u32(tensor_names::ADAM_T)?,
+                cfg.lr_values,
+            )
+            .context("restoring sparse-Adam state")?
+        } else {
+            SparseAdam::new(model.table.rows(), cfg.model.m, cfg.lr_values)?
+        };
+        let step = ck.manifest.step;
+        Ok(Self::assemble(cfg, model, opt, pipeline, step))
+    }
+
+    fn build_pipeline(cfg: &EngineTrainConfig) -> Result<DataPipeline> {
+        let spec = CorpusSpec { seed: cfg.corpus_seed, ..CorpusSpec::default() };
+        DataPipeline::new(spec, cfg.vocab_size, cfg.model.seq_len, cfg.batch, cfg.mask_prob)
+    }
+
+    fn assemble(
+        cfg: EngineTrainConfig,
+        model: LramMlm,
+        opt: SparseAdam,
+        pipeline: DataPipeline,
+        step: u64,
+    ) -> Self {
+        let (vocab, width) = (model.vocab, cfg.model.width);
+        let hm = cfg.model.heads * cfg.model.m;
+        EngineTrainer {
+            g_embed: vec![0.0; vocab * width],
+            g_pos: vec![0.0; cfg.model.seq_len * width],
+            g_wo: vec![0.0; width * hm],
+            g_wout: vec![0.0; vocab * width],
+            row_grads: BTreeMap::new(),
+            cfg,
+            model,
+            opt,
+            pipeline,
+            step,
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    pub fn pipeline(&self) -> &DataPipeline {
+        &self.pipeline
+    }
+
+    /// The serving-identical forward pass (fused engine path) — exactly
+    /// what an [`crate::server::EngineBackend`] restored from this
+    /// trainer's checkpoint computes.
+    pub fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.model.forward(tokens, false, None)
+    }
+
+    /// One training step; returns the masked cross-entropy loss.
+    pub fn train_step(&mut self) -> Result<f64> {
+        let batch = self.pipeline.train_batch(self.step);
+        let (b, s) = (batch.b, batch.s);
+        let logp = self.model.forward(&batch.tokens, false, None)?;
+
+        let (width, heads, m) = (self.cfg.model.width, self.cfg.model.heads, self.cfg.model.m);
+        let (hm, vocab, k_top) = (heads * m, self.model.vocab, self.model.engine.k_top);
+        let total_weight: f64 = batch.weights.iter().map(|&w| w as f64).sum();
+        if total_weight == 0.0 {
+            // no position was masked (possible at tiny mask_prob): the
+            // loss and every gradient are exactly zero
+            self.step += 1;
+            return Ok(0.0);
+        }
+
+        self.g_embed.fill(0.0);
+        self.g_pos.fill(0.0);
+        self.g_wo.fill(0.0);
+        self.g_wout.fill(0.0);
+        self.row_grads.clear();
+
+        let mut loss = 0.0f64;
+        let mut y = vec![0.0f32; width];
+        let mut coef = vec![0.0f32; vocab];
+        let mut dy = vec![0.0f32; width];
+        let mut dv = vec![0.0f32; hm];
+        for p in 0..b * s {
+            let w_p = batch.weights[p];
+            if w_p == 0.0 {
+                continue; // unmasked positions carry no loss
+            }
+            let target = batch.targets[p];
+            ensure!(
+                (0..vocab as i32).contains(&target),
+                "target {target} out of vocab {vocab}"
+            );
+            let lrow = &logp[p * vocab..(p + 1) * vocab];
+            let scale = (w_p as f64 / total_weight) as f32;
+            loss -= lrow[target as usize] as f64 * scale as f64;
+
+            // d loss / d logit = (softmax - onehot) * w_p / W
+            for (t, c) in coef.iter_mut().enumerate() {
+                *c = ((lrow[t] as f64).exp() as f32) * scale;
+            }
+            coef[target as usize] -= scale;
+
+            // logits = w_out · y  (y recomputed from stored h, gathered)
+            self.model.recompute_y(p, &mut y);
+            dy.fill(0.0);
+            for (t, &c) in coef.iter().enumerate() {
+                if c == 0.0 {
+                    continue;
+                }
+                let wrow = &self.model.w_out[t * width..(t + 1) * width];
+                let grow = &mut self.g_wout[t * width..(t + 1) * width];
+                for w in 0..width {
+                    grow[w] += c * y[w];
+                    dy[w] += c * wrow[w];
+                }
+            }
+
+            // y = h + wo · v: residual into dh, projection into dv/g_wo
+            let v = &self.model.gathered[p * hm..(p + 1) * hm];
+            dv.fill(0.0);
+            for (w, &dyw) in dy.iter().enumerate() {
+                let wo_row = &self.model.wo[w * hm..(w + 1) * hm];
+                let go_row = &mut self.g_wo[w * hm..(w + 1) * hm];
+                for j in 0..hm {
+                    dv[j] += dyw * wo_row[j];
+                    go_row[j] += dyw * v[j];
+                }
+            }
+
+            // memory stage (straight-through): v[head] = Σ_j w_j T[idx_j]
+            // → value rows get w_j * dv[head]; idx/w_j are constants
+            for head in 0..heads {
+                let (idx_row, w_row) = self.model.lk.query(p * heads + head);
+                let dvh = &dv[head * m..(head + 1) * m];
+                for j in 0..k_top {
+                    let wgt = w_row[j];
+                    if wgt == 0.0 {
+                        continue; // padded hit: no access, no gradient
+                    }
+                    let g = self
+                        .row_grads
+                        .entry(idx_row[j])
+                        .or_insert_with(|| vec![0.0; m]);
+                    for (gi, &d) in g.iter_mut().zip(dvh) {
+                        *gi += wgt * d;
+                    }
+                }
+            }
+
+            // h = embed[t] + pos[c] + 0.5 embed[left] + 0.5 embed[right];
+            // dh = dy via the residual path
+            let c = p % s;
+            let t = clamp_token(batch.tokens[p], vocab);
+            add_scaled(&mut self.g_embed[t * width..(t + 1) * width], &dy, 1.0);
+            add_scaled(&mut self.g_pos[c * width..(c + 1) * width], &dy, 1.0);
+            if c > 0 {
+                let lt = clamp_token(batch.tokens[p - 1], vocab);
+                add_scaled(&mut self.g_embed[lt * width..(lt + 1) * width], &dy, 0.5);
+            }
+            if c + 1 < s {
+                let rt = clamp_token(batch.tokens[p + 1], vocab);
+                add_scaled(&mut self.g_embed[rt * width..(rt + 1) * width], &dy, 0.5);
+            }
+        }
+
+        // apply: SparseAdam on touched value rows, SGD on dense params
+        for (row, grad) in std::mem::take(&mut self.row_grads) {
+            self.opt.update_row(&mut self.model.table, row, &grad);
+        }
+        let lr = self.cfg.lr_dense;
+        sgd(&mut self.model.embed, &self.g_embed, lr);
+        sgd(&mut self.model.pos, &self.g_pos, lr);
+        sgd(&mut self.model.wo, &self.g_wo, lr);
+        sgd(&mut self.model.w_out, &self.g_wout, lr);
+        // wq deliberately frozen — see module docs
+
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Masked cross-entropy perplexity over `n_batches` deterministic
+    /// validation batches (no gradients applied).
+    pub fn evaluate(&mut self, n_batches: u64) -> Result<f64> {
+        let mut total = 0.0f64;
+        let mut weight = 0.0f64;
+        for bi in 0..n_batches {
+            let batch = self.pipeline.val_batch(bi);
+            let logp = self.model.forward(&batch.tokens, false, None)?;
+            let vocab = self.model.vocab;
+            for p in 0..batch.b * batch.s {
+                let w = batch.weights[p] as f64;
+                if w == 0.0 {
+                    continue;
+                }
+                let t = batch.targets[p];
+                if (0..vocab as i32).contains(&t) {
+                    total -= logp[p * vocab + t as usize] as f64 * w;
+                    weight += w;
+                }
+            }
+        }
+        if weight == 0.0 {
+            return Ok(f64::NAN);
+        }
+        Ok((total / weight).exp())
+    }
+
+    /// Save a checkpoint (model weights + optimizer state + tokenizer
+    /// fingerprint + geometry) at the current step.
+    pub fn save_checkpoint(&self, dir: &Path) -> Result<Manifest> {
+        self.model.save_checkpoint(
+            dir,
+            self.step,
+            &self.pipeline.bpe.fingerprint(),
+            Some(&self.opt),
+        )
+    }
+
+    /// Full run: `cfg.steps` training steps with periodic checkpoints
+    /// every `cfg.save_every` steps and a final one (when `save_dir` is
+    /// set), then a validation pass.
+    pub fn run(&mut self) -> Result<EngineTrainOutcome> {
+        let mut first_loss = f64::NAN;
+        let mut final_loss = f64::NAN;
+        let t0 = std::time::Instant::now();
+        for i in 0..self.cfg.steps {
+            let loss = self.train_step()?;
+            if i == 0 {
+                first_loss = loss;
+            }
+            final_loss = loss;
+            let periodic = self.cfg.save_every > 0 && (i + 1) % self.cfg.save_every == 0;
+            if periodic {
+                if let Some(dir) = self.cfg.save_dir.clone() {
+                    let m = self.save_checkpoint(&dir)?;
+                    log::info!("step {}: saved checkpoint {}", self.step, m.checkpoint_id);
+                }
+            }
+            if (i + 1) % 50 == 0 || i + 1 == self.cfg.steps {
+                log::info!(
+                    "[engine] step {}/{} loss {:.4} ({:.1}s)",
+                    i + 1,
+                    self.cfg.steps,
+                    loss,
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+        }
+        let manifest = match self.cfg.save_dir.clone() {
+            Some(dir) => Some(self.save_checkpoint(&dir)?),
+            None => None,
+        };
+        let val_ppl = self.evaluate(self.cfg.eval_batches)?;
+        Ok(EngineTrainOutcome {
+            steps: self.cfg.steps,
+            first_loss,
+            final_loss,
+            val_ppl,
+            manifest,
+        })
+    }
+}
+
+#[inline]
+fn clamp_token(t: i32, vocab: usize) -> usize {
+    if t < 0 || t as usize >= vocab {
+        (crate::tokenizer::UNK_ID as usize).min(vocab - 1)
+    } else {
+        t as usize
+    }
+}
+
+#[inline]
+fn add_scaled(dst: &mut [f32], src: &[f32], scale: f32) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += scale * s;
+    }
+}
+
+#[inline]
+fn sgd(params: &mut [f32], grads: &[f32], lr: f32) {
+    for (p, &g) in params.iter_mut().zip(grads) {
+        *p -= lr * g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> EngineTrainConfig {
+        EngineTrainConfig {
+            model: EngineConfig {
+                max_batch: 4,
+                seq_len: 12,
+                width: 16,
+                heads: 2,
+                m: 8,
+                k_top: 8,
+                torus_k: [4; 8],
+                ..EngineConfig::default()
+            },
+            steps: 10,
+            batch: 4,
+            vocab_size: 256,
+            ..EngineTrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn loss_decreases_on_the_synthetic_task() {
+        let mut t = EngineTrainer::new(tiny_cfg()).unwrap();
+        let mut losses = Vec::new();
+        for i in 0..30 {
+            let loss = t.train_step().unwrap();
+            assert!(loss.is_finite(), "step {i}: loss {loss}");
+            losses.push(loss);
+        }
+        // averaged over 3 steps so one noisy batch can't mask descent
+        let head: f64 = losses[..3].iter().sum::<f64>() / 3.0;
+        let tail: f64 = losses[27..].iter().sum::<f64>() / 3.0;
+        assert!(
+            tail < head,
+            "training did not reduce the loss: first~{head:.4}, last~{tail:.4}"
+        );
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let mut a = EngineTrainer::new(tiny_cfg()).unwrap();
+        let mut b = EngineTrainer::new(tiny_cfg()).unwrap();
+        for _ in 0..3 {
+            assert_eq!(
+                a.train_step().unwrap().to_bits(),
+                b.train_step().unwrap().to_bits()
+            );
+        }
+        let tokens = a.pipeline().val_batch(0).tokens;
+        assert_eq!(a.forward(&tokens).unwrap(), b.forward(&tokens).unwrap());
+    }
+
+    #[test]
+    fn batch_larger_than_max_batch_is_rejected() {
+        let mut cfg = tiny_cfg();
+        cfg.batch = 8; // model.max_batch is 4
+        assert!(EngineTrainer::new(cfg).is_err());
+    }
+}

@@ -1,9 +1,13 @@
-//! The L3 coordinator: drives training and evaluation over the AOT
-//! artifacts, owns checkpoints and run logs.  Python never runs here —
-//! the compiled HLO plus the rust data pipeline is the whole loop.
+//! The L3 coordinator: drives training and evaluation, owns checkpoints
+//! and run logs.  Python never runs here — two trainers exist: the
+//! artifact [`Trainer`] executing AOT'd HLO, and the pure-rust
+//! [`EngineTrainer`] over the shared [`crate::model::LramMlm`], whose
+//! checkpoints the serving engine restores bit-identically.
 
+mod engine_trainer;
 mod eval;
 mod trainer;
 
+pub use engine_trainer::{EngineTrainConfig, EngineTrainOutcome, EngineTrainer};
 pub use eval::{evaluate, EvalReport};
 pub use trainer::{TrainOutcome, Trainer};

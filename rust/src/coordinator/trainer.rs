@@ -139,6 +139,9 @@ impl Trainer {
                 );
                 curve.flush()?;
                 losses.flush()?;
+                // rolling periodic checkpoint (crash recovery): the
+                // final state additionally lands in final.ckpt below
+                self.save_checkpoint(&run_dir.join("latest.ckpt"))?;
             }
         }
         let final_val = self.evaluate_val()?;

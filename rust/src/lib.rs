@@ -15,12 +15,14 @@
 //!   through the PJRT CPU client ([`runtime`]). Python never runs on the
 //!   request path.
 
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod lattice;
 pub mod memstore;
 pub mod metrics;
+pub mod model;
 pub mod pkm;
 pub mod runtime;
 pub mod server;

@@ -16,8 +16,9 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use lram::checkpoint::Checkpoint;
 use lram::config::TrainConfig;
-use lram::coordinator::Trainer;
+use lram::coordinator::{EngineTrainConfig, EngineTrainer, Trainer};
 use lram::data::synth::CorpusSpec;
 use lram::data::DataPipeline;
 use lram::lattice::{exotic, support};
@@ -38,6 +39,7 @@ fn main() -> Result<()> {
         "table3" => cmd_table3(&args),
         "table5" => cmd_table5(&args),
         "serve" => cmd_serve(&args),
+        "checkpoint" => cmd_checkpoint(&args),
         "artifacts" => cmd_artifacts(&args),
         "corpus" => cmd_corpus(&args),
         _ => {
@@ -53,13 +55,19 @@ USAGE: lram <command> [--flags]
 
 COMMANDS:
   train      train one variant (Table 2 / Figure 2 data point)
+             --backend artifact | engine | auto (engine is pure rust;
+             --save DIR writes a servable checkpoint, --save-every N
+             checkpoints periodically, --resume DIR continues a run)
   table1     lattice comparison: packing/covering radii + kernel support
   table2     train all five variants and print the perplexity table
   table3     asymptotic parameter/op counts for dense / PKM / LRAM
   table5     memory utilisation + KL divergence over the validation set
   serve      MLM fill-mask server with dynamic batching
-             (--backend artifact | engine | auto; engine is pure rust,
-              needs no compiled artifacts)
+             (--backend artifact | engine | auto; --checkpoint DIR serves
+              trained engine weights; --random-init opts into untrained
+              seed weights)
+  checkpoint inspect a checkpoint directory:
+             lram checkpoint inspect DIR [--verify]
   artifacts  list compiled AOT artifacts
   corpus     print sample paragraphs of the synthetic corpus
 
@@ -68,6 +76,10 @@ COMMON FLAGS:
   --variant NAME    baseline | lram_small | lram_medium | lram_large | pkm
   --steps N         training steps (default 300)
   --config FILE     JSON config (CLI flags override)
+
+TRAIN-THEN-SERVE QUICKSTART (no artifacts, no PJRT):
+  lram train --backend engine --steps 200 --save ckpt/
+  lram serve --checkpoint ckpt/
 ";
 
 fn load_config(args: &Args) -> Result<TrainConfig> {
@@ -82,10 +94,59 @@ fn load_config(args: &Args) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
+/// Engine model geometry from CLI flags (defaults = `EngineConfig`).
+fn engine_model_from_args(args: &Args) -> Result<EngineConfig> {
+    let d = EngineConfig::default();
+    let tk = args.u64_list("torus", &d.torus_k.map(|k| k as u64))?;
+    anyhow::ensure!(tk.len() == 8, "--torus needs 8 comma-separated side lengths");
+    let mut torus_k = [0i64; 8];
+    for (o, &v) in torus_k.iter_mut().zip(&tk) {
+        *o = v as i64;
+    }
+    Ok(EngineConfig {
+        max_batch: args.usize("max-batch", d.max_batch)?,
+        seq_len: args.usize("seq-len", d.seq_len)?,
+        width: args.usize("width", d.width)?,
+        heads: args.usize("heads", d.heads)?,
+        m: args.usize("m", d.m)?,
+        k_top: args.usize("k-top", d.k_top)?,
+        torus_k,
+        threads: args.usize("threads", d.threads)?,
+        query_scale: args.f64("query-scale", d.query_scale)?,
+        ..d
+    })
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    match args.str("backend", "auto").as_str() {
+        "artifact" => cmd_train_artifact(args),
+        "engine" => cmd_train_engine(args),
+        "auto" => {
+            let cfg = load_config(args)?;
+            match Runtime::new(&cfg.artifact_dir)
+                .and_then(|rt| Trainer::new(Arc::new(rt), cfg.clone()))
+            {
+                Ok(trainer) => run_artifact_train(trainer),
+                Err(e) => {
+                    log::warn!(
+                        "artifact trainer unavailable ({e:#}); training the pure-rust \
+                         engine model instead"
+                    );
+                    cmd_train_engine(args)
+                }
+            }
+        }
+        other => bail!("unknown backend '{other}' (use artifact | engine | auto)"),
+    }
+}
+
+fn cmd_train_artifact(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let rt = Arc::new(Runtime::new(&cfg.artifact_dir)?);
-    let mut trainer = Trainer::new(rt, cfg)?;
+    run_artifact_train(Trainer::new(rt, cfg)?)
+}
+
+fn run_artifact_train(mut trainer: Trainer) -> Result<()> {
     let out = trainer.run()?;
     println!(
         "{}: steps={} train_loss={:.4} best_val_ppl={:.3} final_val_ppl={:.3} wall={:.1}s",
@@ -94,6 +155,46 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let test = trainer.evaluate_test()?;
     println!("test_ppl={:.3}", test.perplexity);
+    Ok(())
+}
+
+/// Train the pure-rust engine model; `--save DIR` writes a checkpoint
+/// that `lram serve --checkpoint DIR` then serves bit-identically.
+fn cmd_train_engine(args: &Args) -> Result<()> {
+    // config file + CLI overrides, same precedence as the artifact path
+    // (base.steps already folds in --config and --steps)
+    let base = load_config(args)?;
+    let cfg = EngineTrainConfig {
+        model: engine_model_from_args(args)?,
+        steps: base.steps,
+        batch: args.usize("batch", 8)?,
+        lr_dense: args.f64("lr", 0.05)? as f32,
+        lr_values: args.f64("value-lr", 1e-3)? as f32,
+        corpus_seed: base.corpus_seed,
+        vocab_size: base.vocab_size,
+        mask_prob: base.mask_prob,
+        eval_batches: base.eval_batches,
+        save_every: args.u64("save-every", 0)?,
+        save_dir: args.flags.get("save").map(std::path::PathBuf::from),
+    };
+    let mut trainer = match args.flags.get("resume") {
+        Some(dir) => EngineTrainer::from_checkpoint(cfg, std::path::Path::new(dir))?,
+        None => EngineTrainer::new(cfg)?,
+    };
+    let out = trainer.run()?;
+    println!(
+        "engine: steps={} first_loss={:.4} final_loss={:.4} val_ppl={:.3}",
+        out.steps, out.first_loss, out.final_loss, out.val_ppl
+    );
+    match out.manifest {
+        Some(m) => println!(
+            "saved checkpoint {} at step {} ({} tensors)",
+            m.checkpoint_id,
+            m.step,
+            m.tensors.len()
+        ),
+        None => println!("(no --save DIR given: weights were discarded)"),
+    }
     Ok(())
 }
 
@@ -231,15 +332,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let addr = args.str("addr", "127.0.0.1:8077");
     let backend = args.str("backend", "auto");
-    let checkpoint = match args.flags.get("checkpoint") {
-        Some(ckpt) => {
-            log::info!("restoring checkpoint {ckpt}");
-            Some(std::fs::read(ckpt)?)
-        }
-        None => None,
+    let random_init = args.bool("random-init", false)?;
+    let (engine_ckpt, artifact_ckpt) = match args.flags.get("checkpoint") {
+        Some(ckpt) => lram::server::resolve_checkpoint_flag(ckpt, args.usize("threads", 1)?)?,
+        None => (None, None),
     };
     // the tokenizer must match the training pipeline: rebuild it from the
-    // same corpus spec
+    // same corpus spec (a checkpoint's recorded fingerprint is validated
+    // against this at backend construction)
     let spec = CorpusSpec { seed: cfg.corpus_seed, ..CorpusSpec::default() };
     let pipeline = DataPipeline::new(spec, cfg.vocab_size, 8, 1, 0.15)?;
     let bpe = Arc::new(pipeline.bpe);
@@ -248,13 +348,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ArtifactInit {
             artifact_dir: cfg.artifact_dir.clone(),
             artifact_name: format!("infer_logits_{}", cfg.variant),
-            checkpoint,
+            checkpoint: artifact_ckpt,
         },
-        EngineConfig::default(),
+        EngineConfig { threads: args.usize("threads", 1)?, ..EngineConfig::default() },
+        engine_ckpt,
+        random_init,
         bpe.clone(),
         BatcherConfig::default(),
     )?;
     serve(&addr, batcher, bpe)
+}
+
+/// `lram checkpoint inspect DIR [--verify]` — print the manifest
+/// (id, step, tokenizer hash, geometry, tensor index); `--verify`
+/// re-hashes every blob, including ones too large for the eager
+/// verification at open.
+fn cmd_checkpoint(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    if sub != "inspect" {
+        bail!("usage: lram checkpoint inspect DIR [--verify]");
+    }
+    let dir = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow::anyhow!("usage: lram checkpoint inspect DIR [--verify]"))?;
+    let ck = Checkpoint::open(std::path::Path::new(dir))?;
+    let m = &ck.manifest;
+    println!("checkpoint   {}", m.checkpoint_id);
+    println!("format       {} v{}", lram::checkpoint::FORMAT_TAG, m.version);
+    println!("step         {}", m.step);
+    println!("tokenizer    {}", m.tokenizer_hash);
+    let d = &m.model;
+    println!(
+        "model        vocab={} width={} heads={} m={} k_top={} seq_len={} max_batch={}",
+        d.vocab, d.width, d.heads, d.m, d.k_top, d.seq_len, d.max_batch
+    );
+    // the same validation + formula the loader uses, never a reimplementation
+    let locations = match lram::lattice::TorusK::new(d.torus_k) {
+        Ok(t) => t.num_locations().to_string(),
+        Err(e) => format!("INVALID: {e}"),
+    };
+    println!("torus        {:?} ({locations} locations)", d.torus_k);
+    let mut t = Table::new(&["tensor", "dtype", "shape", "MiB", "checksum"]);
+    let mut total_bytes = 0u64;
+    for spec in &m.tensors {
+        let bytes = spec.byte_len()?;
+        total_bytes += bytes;
+        t.row(&[
+            spec.name.clone(),
+            format!("{:?}", spec.dtype).to_lowercase(),
+            format!("{:?}", spec.shape),
+            format!("{:.2}", bytes as f64 / (1 << 20) as f64),
+            spec.checksum.clone(),
+        ]);
+    }
+    t.print();
+    println!("total        {:.2} MiB across {} tensors", total_bytes as f64 / (1 << 20) as f64, m.tensors.len());
+    if args.bool("verify", false)? {
+        ck.verify()?;
+        println!("verify       all tensor checksums OK");
+    }
+    Ok(())
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

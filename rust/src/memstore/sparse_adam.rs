@@ -68,6 +68,40 @@ impl SparseAdam {
         }
     }
 
+    /// Rebuild an optimizer from checkpointed state (the moment tables
+    /// typically arrive as copy-on-write maps of the checkpoint blobs,
+    /// so resuming a billion-row optimizer is as lazy as creating one).
+    pub fn from_state(m: ValueTable, v: ValueTable, t: MmapU32, lr: f32) -> Result<Self> {
+        anyhow::ensure!(
+            m.rows() == v.rows() && m.dim() == v.dim(),
+            "moment tables disagree: {}x{} vs {}x{}",
+            m.rows(),
+            m.dim(),
+            v.rows(),
+            v.dim()
+        );
+        anyhow::ensure!(
+            t.len() as u64 == m.rows(),
+            "step-count table has {} rows, moments have {}",
+            t.len(),
+            m.rows()
+        );
+        Ok(SparseAdam { m, v, t, lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 })
+    }
+
+    /// Checkpoint accessors: first/second moment tables and step counts.
+    pub fn first_moment(&self) -> &ValueTable {
+        &self.m
+    }
+
+    pub fn second_moment(&self) -> &ValueTable {
+        &self.v
+    }
+
+    pub fn step_counts(&self) -> &[u32] {
+        self.t.as_slice()
+    }
+
     /// Accumulated update count of a row (observability).
     pub fn row_steps(&self, idx: u64) -> u32 {
         self.t.as_slice()[idx as usize]
@@ -115,6 +149,41 @@ mod tests {
         let r = table.row(0);
         assert!((r[0] + 1e-3).abs() < 1e-5, "{}", r[0]);
         assert!((r[1] - 1e-3).abs() < 1e-5, "{}", r[1]);
+    }
+
+    #[test]
+    fn from_state_resumes_bias_correction() {
+        // an optimizer rebuilt from its own state must continue exactly
+        // where the original would have gone
+        let mut table_a = ValueTable::zeros(8, 2).unwrap();
+        let mut table_b = ValueTable::zeros(8, 2).unwrap();
+        let mut opt = SparseAdam::new(8, 2, 1e-2).unwrap();
+        for _ in 0..5 {
+            opt.update_row(&mut table_a, 3, &[1.0, -1.0]);
+            table_b.row_mut(3).copy_from_slice(table_a.row(3));
+        }
+        // clone state into a fresh optimizer
+        let mut m = ValueTable::zeros(8, 2).unwrap();
+        let mut v = ValueTable::zeros(8, 2).unwrap();
+        let mut t = MmapU32::anon(8).unwrap();
+        for r in 0..8u64 {
+            m.row_mut(r).copy_from_slice(opt.first_moment().row(r));
+            v.row_mut(r).copy_from_slice(opt.second_moment().row(r));
+        }
+        t.as_mut_slice().copy_from_slice(opt.step_counts());
+        let mut resumed = SparseAdam::from_state(m, v, t, 1e-2).unwrap();
+        assert_eq!(resumed.row_steps(3), 5);
+        opt.update_row(&mut table_a, 3, &[0.5, 0.5]);
+        resumed.update_row(&mut table_b, 3, &[0.5, 0.5]);
+        assert_eq!(table_a.row(3), table_b.row(3));
+    }
+
+    #[test]
+    fn from_state_rejects_mismatched_shapes() {
+        let m = ValueTable::zeros(8, 2).unwrap();
+        let v = ValueTable::zeros(4, 2).unwrap();
+        let t = MmapU32::anon(8).unwrap();
+        assert!(SparseAdam::from_state(m, v, t, 1e-3).is_err());
     }
 
     #[test]

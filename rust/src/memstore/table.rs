@@ -33,6 +33,23 @@ impl ValueTable {
         Ok(ValueTable { map: MmapF32::file(path, len)?, rows, dim })
     }
 
+    /// Copy-on-write view of a checkpointed table blob: rows are read
+    /// zero-copy from the page cache (a multi-GB table costs physical
+    /// memory only for rows actually served); training writes would land
+    /// in private pages and never reach the checkpoint.  Rejects
+    /// `rows * dim` overflow exactly like [`ValueTable::open`].
+    pub fn open_cow(path: &Path, rows: u64, dim: usize) -> Result<Self> {
+        let len = (rows as usize).checked_mul(dim).ok_or_else(|| {
+            anyhow::anyhow!("table size overflow: {rows} x {dim}")
+        })?;
+        Ok(ValueTable { map: MmapF32::open_cow(path, len)?, rows, dim })
+    }
+
+    /// The full `rows * dim` flat storage (checkpoint serialisation).
+    pub fn data(&self) -> &[f32] {
+        self.map.as_slice()
+    }
+
     /// Gaussian init matching `model.py` (std 0.02), deterministic.
     pub fn randomize(&mut self, seed: u64, std: f32) {
         let rows = self.rows;

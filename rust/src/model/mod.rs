@@ -1,0 +1,570 @@
+//! The pure-rust LRAM masked-language model — one definition of the
+//! forward pass shared by *serving* ([`crate::server::EngineBackend`])
+//! and *training* ([`crate::coordinator::EngineTrainer`]).
+//!
+//! That sharing is the point: the checkpoint round-trip guarantee
+//! ("served logits are bit-identical to the trainer's forward pass")
+//! only holds if there is exactly one forward implementation, so the
+//! model lives here and both sides borrow it.
+//!
+//! Architecture (split-mode shapes, all pure rust):
+//!
+//! ```text
+//! tokens ─embed+pos+neighbour─► h ─wq─► queries ─lattice lookup+gather─► v
+//!                               │                                        │
+//!                               └────────residual── y = h + wo·v ◄───────┘
+//!                                                   y ─w_out─► log-softmax
+//! ```
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::checkpoint::{Checkpoint, CheckpointWriter, Manifest, ModelDesc};
+use crate::lattice::e8::Vec8;
+use crate::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
+use crate::memstore::{AccessStats, SparseAdam, ValueTable};
+use crate::util::rng::Rng;
+
+/// Configuration of the pure-rust LRAM MLM.
+///
+/// The default shapes mirror split-mode's LRAM-small layer: `2^18` torus
+/// slots, 32 hits per query, `m = 64`-dim values — small enough to build
+/// in milliseconds, structured exactly like the billion-slot case (the
+/// value table is lazily mapped, so only touched rows go resident).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub max_batch: usize,
+    pub seq_len: usize,
+    /// dense model width (split-mode `w`)
+    pub width: usize,
+    /// independent lattice query heads per position
+    pub heads: usize,
+    /// value-table row dimension (split-mode `m`)
+    pub m: usize,
+    /// hits kept per query
+    pub k_top: usize,
+    /// torus side lengths (each a positive multiple of 4)
+    pub torus_k: [i64; 8],
+    /// engine worker threads; 0 = all available parallelism
+    pub threads: usize,
+    /// deterministic weight-init seed
+    pub seed: u64,
+    /// scale applied to projected queries so they spread over the torus
+    pub query_scale: f64,
+    /// track per-slot access statistics (Table-5 serving observability)
+    pub track_stats: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 8,
+            seq_len: 32,
+            width: 64,
+            heads: 2,
+            m: 64,
+            k_top: 32,
+            torus_k: [16, 16, 8, 8, 8, 8, 8, 8],
+            threads: 1,
+            seed: 0xE85E44E,
+            query_scale: 4.0,
+            track_stats: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The checkpoint-manifest description of this geometry.
+    pub fn to_desc(&self, vocab: usize) -> ModelDesc {
+        ModelDesc {
+            vocab,
+            width: self.width,
+            heads: self.heads,
+            m: self.m,
+            k_top: self.k_top,
+            seq_len: self.seq_len,
+            max_batch: self.max_batch,
+            torus_k: self.torus_k,
+            query_scale: self.query_scale,
+        }
+    }
+
+    /// Rebuild a config from a checkpoint description.  `threads`,
+    /// `track_stats` and the init `seed` are runtime knobs, not model
+    /// geometry — they come from the caller.
+    pub fn from_desc(desc: &ModelDesc, threads: usize, track_stats: bool) -> Self {
+        EngineConfig {
+            max_batch: desc.max_batch,
+            seq_len: desc.seq_len,
+            width: desc.width,
+            heads: desc.heads,
+            m: desc.m,
+            k_top: desc.k_top,
+            torus_k: desc.torus_k,
+            threads,
+            seed: 0, // unused: weights come from the checkpoint
+            query_scale: desc.query_scale,
+            track_stats,
+        }
+    }
+}
+
+/// Checkpoint tensor names for the MLM weights.
+pub mod tensor_names {
+    pub const EMBED: &str = "embed";
+    pub const POS: &str = "pos";
+    pub const WQ: &str = "wq";
+    pub const WO: &str = "wo";
+    pub const W_OUT: &str = "w_out";
+    pub const VALUES: &str = "values";
+    pub const ADAM_M: &str = "adam_m";
+    pub const ADAM_V: &str = "adam_v";
+    pub const ADAM_T: &str = "adam_t";
+}
+
+/// The LRAM MLM: dense prefix → fused lattice lookup+gather → dense
+/// suffix, all pure rust.  Construct with deterministic seed weights
+/// ([`LramMlm::seeded`]) or from trained weights
+/// ([`LramMlm::from_checkpoint`]).
+pub struct LramMlm {
+    pub cfg: EngineConfig,
+    pub vocab: usize,
+    /// token embeddings, `vocab x width`
+    pub embed: Vec<f32>,
+    /// position embeddings, `seq_len x width`
+    pub pos: Vec<f32>,
+    /// query projection, `(heads * 8) x width`
+    pub wq: Vec<f32>,
+    /// head-combine projection, `width x (heads * m)`
+    pub wo: Vec<f32>,
+    /// output projection, `vocab x width`
+    pub w_out: Vec<f32>,
+    pub engine: BatchLookupEngine,
+    pub table: ValueTable,
+    // reusable scratch, allocated once at max-batch size; pub(crate) so
+    // the trainer's backward pass can read the forward intermediates
+    pub(crate) h: Vec<f32>,
+    pub(crate) queries: Vec<f64>,
+    pub(crate) lk: BatchOutput,
+    pub(crate) gathered: Vec<f32>,
+}
+
+impl LramMlm {
+    fn resolve_threads(cfg: &EngineConfig) -> usize {
+        if cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.threads
+        }
+    }
+
+    fn validate_shape(cfg: &EngineConfig, vocab: usize) -> Result<()> {
+        ensure!(vocab > 0, "vocab must be positive");
+        ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        ensure!(cfg.seq_len >= 2, "seq_len must be at least 2");
+        ensure!(cfg.width > 0 && cfg.heads > 0 && cfg.m > 0, "degenerate shape");
+        Ok(())
+    }
+
+    /// Deterministic seed-weight model (an untrained but well-formed
+    /// model — the serving-path contract is shape, determinism and
+    /// throughput, not perplexity).
+    pub fn seeded(cfg: EngineConfig, vocab: usize) -> Result<Self> {
+        Self::validate_shape(&cfg, vocab)?;
+        let torus = TorusK::new(cfg.torus_k)?;
+        let engine = BatchLookupEngine::with_threads(torus, cfg.k_top, Self::resolve_threads(&cfg));
+        let locations = torus.num_locations();
+        let mut table = ValueTable::zeros(locations, cfg.m)?;
+        // deterministic non-zero values; initialisation capped so huge
+        // tori stay lazily mapped (untouched rows read as zero)
+        table.randomize_rows(cfg.seed ^ 0xE8, 0.02, locations.min(1 << 15));
+
+        let mut rng = Rng::new(cfg.seed);
+        let mut normal = |n: usize, std: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.normal() * std) as f32).collect()
+        };
+        let inv_sqrt_w = 1.0 / (cfg.width as f64).sqrt();
+        let embed = normal(vocab * cfg.width, 1.0);
+        let pos = normal(cfg.seq_len * cfg.width, 0.5);
+        let wq = normal(cfg.heads * 8 * cfg.width, inv_sqrt_w);
+        let wo = normal(cfg.width * cfg.heads * cfg.m, 0.05);
+        let w_out = normal(vocab * cfg.width, inv_sqrt_w);
+        Self::assemble(cfg, vocab, embed, pos, wq, wo, w_out, engine, table)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        cfg: EngineConfig,
+        vocab: usize,
+        embed: Vec<f32>,
+        pos: Vec<f32>,
+        wq: Vec<f32>,
+        wo: Vec<f32>,
+        w_out: Vec<f32>,
+        engine: BatchLookupEngine,
+        table: ValueTable,
+    ) -> Result<Self> {
+        let max_positions = cfg.max_batch * cfg.seq_len;
+        Ok(LramMlm {
+            vocab,
+            embed,
+            pos,
+            wq,
+            wo,
+            w_out,
+            engine,
+            table,
+            h: vec![0.0; max_positions * cfg.width],
+            queries: vec![0.0; max_positions * cfg.heads * 8],
+            lk: BatchOutput::default(),
+            gathered: vec![0.0; max_positions * cfg.heads * cfg.m],
+            cfg,
+        })
+    }
+
+    /// Load trained weights from an opened checkpoint.  The dense
+    /// tensors are read (and checksum-verified) into memory; the value
+    /// table is mapped copy-on-write — zero-copy, so a multi-GB table
+    /// costs physical memory only for rows actually served.  Every
+    /// shape is validated against the manifest geometry; mismatches are
+    /// loud errors, never silently misweighted models.
+    pub fn from_checkpoint(ck: &Checkpoint, threads: usize) -> Result<Self> {
+        use tensor_names::*;
+        let desc = &ck.manifest.model;
+        let cfg = EngineConfig::from_desc(desc, threads, false);
+        let vocab = desc.vocab;
+        Self::validate_shape(&cfg, vocab)
+            .with_context(|| format!("checkpoint {}: bad geometry", ck.manifest.checkpoint_id))?;
+        let torus = TorusK::new(cfg.torus_k).context("checkpoint torus geometry")?;
+        ensure!(
+            cfg.k_top > 0,
+            "checkpoint {}: k_top must be positive",
+            ck.manifest.checkpoint_id
+        );
+        let engine = BatchLookupEngine::with_threads(torus, cfg.k_top, Self::resolve_threads(&cfg));
+
+        let expect_2d = |name: &str, rows: u64, cols: u64| -> Result<()> {
+            let spec = ck.manifest.tensor(name)?;
+            ensure!(
+                spec.shape == [rows, cols],
+                "tensor '{name}': checkpoint shape {:?} does not match the manifest \
+                 geometry [{rows}, {cols}] — config-incompatible checkpoint",
+                spec.shape
+            );
+            Ok(())
+        };
+        let (w, hd, m) = (cfg.width as u64, cfg.heads as u64, cfg.m as u64);
+        expect_2d(EMBED, vocab as u64, w)?;
+        expect_2d(POS, cfg.seq_len as u64, w)?;
+        expect_2d(WQ, hd * 8, w)?;
+        expect_2d(WO, w, hd * m)?;
+        expect_2d(W_OUT, vocab as u64, w)?;
+        expect_2d(VALUES, torus.num_locations(), m)?;
+
+        let table = ck.map_table(VALUES)?;
+        Self::assemble(
+            cfg,
+            vocab,
+            ck.read_f32(EMBED)?,
+            ck.read_f32(POS)?,
+            ck.read_f32(WQ)?,
+            ck.read_f32(WO)?,
+            ck.read_f32(W_OUT)?,
+            engine,
+            table,
+        )
+    }
+
+    /// Save the model (and optionally the sparse-Adam state over the
+    /// value table) as a checkpoint directory.  Blobs first, manifest
+    /// last, so a crashed save can never be opened.
+    pub fn save_checkpoint(
+        &self,
+        dir: &Path,
+        step: u64,
+        tokenizer_hash: &str,
+        opt: Option<&SparseAdam>,
+    ) -> Result<Manifest> {
+        use tensor_names::*;
+        let mut w = CheckpointWriter::new(dir)?;
+        let (wd, hd, m) = (self.cfg.width as u64, self.cfg.heads as u64, self.cfg.m as u64);
+        w.write_f32(EMBED, &[self.vocab as u64, wd], &self.embed)?;
+        w.write_f32(POS, &[self.cfg.seq_len as u64, wd], &self.pos)?;
+        w.write_f32(WQ, &[hd * 8, wd], &self.wq)?;
+        w.write_f32(WO, &[wd, hd * m], &self.wo)?;
+        w.write_f32(W_OUT, &[self.vocab as u64, wd], &self.w_out)?;
+        let rows = self.table.rows();
+        w.write_f32(VALUES, &[rows, m], self.table.data())?;
+        if let Some(opt) = opt {
+            ensure!(
+                opt.first_moment().rows() == rows && opt.first_moment().dim() == self.cfg.m,
+                "optimizer state shape does not match the value table"
+            );
+            w.write_f32(ADAM_M, &[rows, m], opt.first_moment().data())?;
+            w.write_f32(ADAM_V, &[rows, m], opt.second_moment().data())?;
+            w.write_u32(ADAM_T, &[rows], opt.step_counts())?;
+        }
+        w.finish(step, tokenizer_hash, self.cfg.to_desc(self.vocab))
+    }
+
+    /// Total parameters reachable through the value table.
+    pub fn param_count(&self) -> u64 {
+        self.table.param_count()
+    }
+
+    fn clamp_token(&self, t: i32) -> usize {
+        if t < 0 || t as usize >= self.vocab {
+            (crate::tokenizer::UNK_ID as usize).min(self.vocab - 1)
+        } else {
+            t as usize
+        }
+    }
+
+    /// One forward pass: `rows * seq_len` token ids in, `rows * seq_len
+    /// * vocab` log-probabilities out (row-major, ragged rows
+    /// first-class).  `use_oracle` routes the memory stage through the
+    /// scalar [`LatticeLookup`] reference instead of the fused engine —
+    /// differential tests demand bit-identical output either way.
+    pub fn forward(
+        &mut self,
+        tokens: &[i32],
+        use_oracle: bool,
+        mut stats: Option<&mut AccessStats>,
+    ) -> Result<Vec<f32>> {
+        let (seq_len, width, heads, m) =
+            (self.cfg.seq_len, self.cfg.width, self.cfg.heads, self.cfg.m);
+        let rows = tokens.len() / seq_len;
+        ensure!(
+            rows >= 1 && rows <= self.cfg.max_batch && tokens.len() == rows * seq_len,
+            "batch of {} tokens does not fit {} x {seq_len}",
+            tokens.len(),
+            self.cfg.max_batch
+        );
+        let positions = rows * seq_len;
+
+        // dense prefix 1/2: token + position embeddings with a cheap
+        // neighbour mix so mask predictions depend on their context
+        for r in 0..rows {
+            for c in 0..seq_len {
+                let p = r * seq_len + c;
+                // resolve neighbour ids before borrowing the h row
+                let t = self.clamp_token(tokens[p]);
+                let left = (c > 0).then(|| self.clamp_token(tokens[p - 1]));
+                let right = (c + 1 < seq_len).then(|| self.clamp_token(tokens[p + 1]));
+                let e = &self.embed[t * width..(t + 1) * width];
+                let pe = &self.pos[c * width..(c + 1) * width];
+                let h = &mut self.h[p * width..(p + 1) * width];
+                for w in 0..width {
+                    h[w] = e[w] + pe[w];
+                }
+                if let Some(lt) = left {
+                    let le = &self.embed[lt * width..(lt + 1) * width];
+                    for w in 0..width {
+                        h[w] += 0.5 * le[w];
+                    }
+                }
+                if let Some(rt) = right {
+                    let re = &self.embed[rt * width..(rt + 1) * width];
+                    for w in 0..width {
+                        h[w] += 0.5 * re[w];
+                    }
+                }
+            }
+        }
+
+        // dense prefix 2/2: project each position to `heads` 8-d lattice
+        // queries (the split-mode prefix shape), f64 for the engine
+        for p in 0..positions {
+            let h = &self.h[p * width..(p + 1) * width];
+            for head in 0..heads {
+                for d in 0..8 {
+                    let wrow = &self.wq[(head * 8 + d) * width..(head * 8 + d + 1) * width];
+                    let mut acc = 0.0f64;
+                    for w in 0..width {
+                        acc += wrow[w] as f64 * h[w] as f64;
+                    }
+                    self.queries[(p * heads + head) * 8 + d] = acc * self.cfg.query_scale;
+                }
+            }
+        }
+
+        // the O(1) memory stage: fused lookup+gather (or the scalar
+        // oracle, bit-identical, for differential testing)
+        let n_queries = positions * heads;
+        if use_oracle {
+            let k_top = self.engine.k_top;
+            let mut oracle = LatticeLookup::new(self.engine.torus, k_top);
+            let mut idx_row = vec![0u64; k_top];
+            let mut w_row = vec![0.0f32; k_top];
+            for qi in 0..n_queries {
+                let q: Vec8 = self.queries[qi * 8..(qi + 1) * 8].try_into().unwrap();
+                let r = oracle.lookup(&q);
+                for j in 0..k_top {
+                    match r.hits.get(j) {
+                        Some(hit) => {
+                            idx_row[j] = hit.index;
+                            w_row[j] = hit.weight as f32;
+                        }
+                        None => {
+                            idx_row[j] = 0;
+                            w_row[j] = 0.0;
+                        }
+                    }
+                }
+                self.table.gather_weighted(
+                    &idx_row,
+                    &w_row,
+                    &mut self.gathered[qi * m..(qi + 1) * m],
+                );
+                if let Some(stats) = stats.as_deref_mut() {
+                    stats.record_batch_f32(&idx_row, &w_row);
+                }
+            }
+        } else {
+            self.engine.lookup_gather_ragged_into(
+                &self.queries[..n_queries * 8],
+                &self.table,
+                &mut self.lk,
+                &mut self.gathered,
+            );
+            if let Some(stats) = stats.as_deref_mut() {
+                stats.record_batch_f32(&self.lk.indices, &self.lk.weights);
+            }
+        }
+
+        // dense suffix: head combine + residual, tied output projection,
+        // log-softmax per position
+        let hm = heads * m;
+        let mut out = vec![0.0f32; positions * self.vocab];
+        let mut y = vec![0.0f32; width];
+        for p in 0..positions {
+            let h = &self.h[p * width..(p + 1) * width];
+            let v = &self.gathered[p * hm..(p + 1) * hm];
+            for (w, yw) in y.iter_mut().enumerate() {
+                let wo_row = &self.wo[w * hm..(w + 1) * hm];
+                let mut acc = h[w];
+                for j in 0..hm {
+                    acc += wo_row[j] * v[j];
+                }
+                *yw = acc;
+            }
+            let orow = &mut out[p * self.vocab..(p + 1) * self.vocab];
+            let mut maxv = f32::NEG_INFINITY;
+            for (t, o) in orow.iter_mut().enumerate() {
+                let wrow = &self.w_out[t * width..(t + 1) * width];
+                let mut acc = 0.0f32;
+                for w in 0..width {
+                    acc += wrow[w] * y[w];
+                }
+                *o = acc;
+                if acc > maxv {
+                    maxv = acc;
+                }
+            }
+            let mut sum = 0.0f64;
+            for &o in orow.iter() {
+                sum += ((o - maxv) as f64).exp();
+            }
+            let lse = maxv as f64 + sum.ln();
+            for o in orow.iter_mut() {
+                *o = (*o as f64 - lse) as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Recompute `y = h + wo·v` for position `p` of the *last* forward
+    /// pass (the trainer's backward pass needs it; recomputing one
+    /// width-vector is cheaper than storing `positions x width`).
+    pub(crate) fn recompute_y(&self, p: usize, y: &mut [f32]) {
+        let (width, hm) = (self.cfg.width, self.cfg.heads * self.cfg.m);
+        let h = &self.h[p * width..(p + 1) * width];
+        let v = &self.gathered[p * hm..(p + 1) * hm];
+        for (w, yw) in y.iter_mut().enumerate() {
+            let wo_row = &self.wo[w * hm..(w + 1) * hm];
+            let mut acc = h[w];
+            for j in 0..hm {
+                acc += wo_row[j] * v[j];
+            }
+            *yw = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> EngineConfig {
+        EngineConfig {
+            max_batch: 2,
+            seq_len: 8,
+            width: 16,
+            m: 8,
+            k_top: 8,
+            torus_k: [4; 8],
+            ..EngineConfig::default()
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "lram_model_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_identical() {
+        let dir = tmp_dir("rt");
+        let mut a = LramMlm::seeded(tiny_cfg(), 64).unwrap();
+        a.save_checkpoint(&dir, 7, "feedbeef00000000", None).unwrap();
+        let ck = Checkpoint::open(&dir).unwrap();
+        assert_eq!(ck.manifest.step, 7);
+        let mut b = LramMlm::from_checkpoint(&ck, 1).unwrap();
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 7) % 60 + 2).collect();
+        let la = a.forward(&tokens, false, None).unwrap();
+        let lb = b.forward(&tokens, false, None).unwrap();
+        assert_eq!(la.len(), lb.len());
+        for (x, y) in la.iter().zip(&lb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn geometry_mismatch_is_rejected() {
+        let dir = tmp_dir("geom");
+        let a = LramMlm::seeded(tiny_cfg(), 64).unwrap();
+        a.save_checkpoint(&dir, 0, "feedbeef00000000", None).unwrap();
+        // tamper: claim a different width in the manifest
+        let path = dir.join(crate::checkpoint::MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"width\":16", "\"width\":32")).unwrap();
+        let ck = Checkpoint::open(&dir).unwrap(); // blobs still self-consistent
+        let err = format!("{:#}", LramMlm::from_checkpoint(&ck, 1).unwrap_err());
+        assert!(err.contains("config-incompatible"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn optimizer_state_rides_along() {
+        let dir = tmp_dir("opt");
+        let mut a = LramMlm::seeded(tiny_cfg(), 64).unwrap();
+        let rows = a.table.rows();
+        let mut opt = SparseAdam::new(rows, 8, 1e-3).unwrap();
+        let grad = [0.5f32; 8];
+        opt.update_row(&mut a.table, 5, &grad);
+        a.save_checkpoint(&dir, 1, "feedbeef00000000", Some(&opt)).unwrap();
+        let ck = Checkpoint::open(&dir).unwrap();
+        assert!(ck.manifest.has_tensor(tensor_names::ADAM_M));
+        let t = ck.map_u32(tensor_names::ADAM_T).unwrap();
+        assert_eq!(t.as_slice()[5], 1);
+        assert_eq!(t.as_slice()[4], 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

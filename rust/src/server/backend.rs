@@ -6,26 +6,31 @@
 //! * [`ArtifactBackend`] — the original path: an AOT-compiled PJRT
 //!   artifact (`infer_logits_<variant>`) executed through [`crate::runtime`].
 //!   Requires compiled artifacts on disk and a working PJRT runtime.
-//! * [`EngineBackend`] — pure rust, no artifacts anywhere: a small dense
-//!   prefix (token/position embeddings + query projection, the same
-//!   `batch x width -> heads x 8` shape split-mode's prefix artifact
-//!   produces), the fused [`BatchLookupEngine`] lookup→gather over a
-//!   lazily-mapped [`ValueTable`], and a dense suffix (head combine +
-//!   residual + tied output projection + log-softmax).  This is the
-//!   paper's O(1)-lookup serving claim made end-to-end servable on any
-//!   machine.
+//! * [`EngineBackend`] — pure rust, no artifacts anywhere: the shared
+//!   [`LramMlm`] model (dense prefix → fused [`BatchLookupEngine`]
+//!   lookup→gather over a lazily-mapped [`ValueTable`] → dense suffix).
+//!   It serves either deterministic seed weights
+//!   ([`EngineBackend::new`], explicit opt-in on the CLI via
+//!   `--random-init`) or *trained* weights restored from a checkpoint
+//!   directory ([`EngineBackend::from_checkpoint`]) — the paper's
+//!   O(1)-lookup serving claim, end to end, with the weights you
+//!   actually trained.
 //!
 //! Backends are constructed *on the executor thread* via [`BackendInit`]
 //! (the xla crate's handles are not `Send`), which is why the enum —
 //! not the built backend — crosses the thread boundary.
+//!
+//! [`BatchLookupEngine`]: crate::lattice::BatchLookupEngine
+//! [`ValueTable`]: crate::memstore::ValueTable
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
-use crate::lattice::e8::Vec8;
-use crate::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
-use crate::memstore::{AccessStats, ValueTable};
+use crate::checkpoint::Checkpoint;
+use crate::memstore::AccessStats;
+use crate::model::LramMlm;
+pub use crate::model::EngineConfig;
 use crate::runtime::{Artifact, ArtifactState, HostTensor, Runtime};
-use crate::util::rng::Rng;
+use crate::tokenizer::Bpe;
 
 /// A serving inference engine: token batches in, log-probabilities out.
 ///
@@ -48,6 +53,12 @@ pub trait InferenceBackend {
     fn memory_stats(&self) -> Option<(f64, f64)> {
         None
     }
+    /// Id of the checkpoint the backend serves, if it was restored from
+    /// one (surfaced in `/stats` so operators can tell *which* trained
+    /// weights are live).
+    fn checkpoint_id(&self) -> Option<&str> {
+        None
+    }
 }
 
 /// Everything needed to construct an [`ArtifactBackend`] on the executor
@@ -59,24 +70,72 @@ pub struct ArtifactInit {
     pub checkpoint: Option<Vec<u8>>,
 }
 
+/// Everything needed to restore an [`EngineBackend`] from a checkpoint
+/// directory on the executor thread.
+#[derive(Debug, Clone)]
+pub struct CheckpointInit {
+    /// Checkpoint directory (contains `manifest.json`).
+    pub dir: String,
+    /// Engine worker threads; 0 = all available parallelism.
+    pub threads: usize,
+    /// Track per-slot access statistics (Table-5 serving observability).
+    pub track_stats: bool,
+}
+
+impl CheckpointInit {
+    pub fn new(dir: impl Into<String>) -> Self {
+        CheckpointInit { dir: dir.into(), threads: 1, track_stats: true }
+    }
+}
+
+/// Classify a `--checkpoint` CLI value (shared by `lram serve` and the
+/// serving example): a directory containing a manifest is an engine
+/// checkpoint; a plain file is a legacy artifact-state blob for the
+/// PJRT path.  Returns `(engine, artifact_bytes)` — exactly one is
+/// `Some`.
+pub fn resolve_checkpoint_flag(
+    path: &str,
+    threads: usize,
+) -> Result<(Option<CheckpointInit>, Option<Vec<u8>>)> {
+    use anyhow::Context as _;
+    let p = std::path::Path::new(path);
+    if p.join(crate::checkpoint::MANIFEST_FILE).is_file() {
+        log::info!("serving engine checkpoint {path}");
+        Ok((Some(CheckpointInit { dir: path.to_string(), threads, track_stats: true }), None))
+    } else {
+        log::info!("restoring legacy artifact checkpoint {path}");
+        let bytes = std::fs::read(p)
+            .with_context(|| format!("reading artifact checkpoint {path}"))?;
+        Ok((None, Some(bytes)))
+    }
+}
+
 /// Which backend the executor thread should build.
 #[derive(Debug, Clone)]
 pub enum BackendInit {
     /// AOT PJRT artifact executor (requires artifacts + PJRT runtime).
     Artifact(ArtifactInit),
-    /// Pure-rust engine-backed model (works everywhere).
+    /// Pure-rust engine-backed model with deterministic *seed* weights
+    /// (untrained; tests, benches and explicit `--random-init` serving).
     Engine(EngineConfig),
+    /// Pure-rust engine-backed model restored from a trained checkpoint.
+    EngineCheckpoint(CheckpointInit),
 }
 
 impl BackendInit {
-    /// Build the backend.  `vocab` is the tokenizer's vocabulary size —
-    /// the engine backend sizes its embedding/output projections by it;
-    /// the artifact backend reads its own from the manifest.
-    pub fn build(&self, vocab: usize) -> Result<Box<dyn InferenceBackend>> {
+    /// Build the backend.  The tokenizer is the serving pipeline's: the
+    /// engine backends size their embedding/output projections by its
+    /// vocabulary, and a checkpoint restore validates its fingerprint
+    /// against the hash recorded at training time; the artifact backend
+    /// reads its own vocabulary from the manifest.
+    pub fn build(&self, bpe: &Bpe) -> Result<Box<dyn InferenceBackend>> {
         match self {
             BackendInit::Artifact(init) => Ok(Box::new(ArtifactBackend::new(init)?)),
             BackendInit::Engine(cfg) => {
-                Ok(Box::new(EngineBackend::new(cfg.clone(), vocab)?))
+                Ok(Box::new(EngineBackend::new(cfg.clone(), bpe.vocab_size())?))
+            }
+            BackendInit::EngineCheckpoint(init) => {
+                Ok(Box::new(EngineBackend::from_checkpoint(init, bpe)?))
             }
         }
     }
@@ -144,298 +203,81 @@ impl InferenceBackend for ArtifactBackend {
     }
 }
 
-/// Configuration of the pure-rust [`EngineBackend`].
-///
-/// The default shapes mirror split-mode's LRAM-small layer: `2^18` torus
-/// slots, 32 hits per query, `m = 64`-dim values — small enough to build
-/// in milliseconds, structured exactly like the billion-slot case (the
-/// value table is lazily mapped, so only touched rows go resident).
-#[derive(Debug, Clone)]
-pub struct EngineConfig {
-    pub max_batch: usize,
-    pub seq_len: usize,
-    /// dense model width (split-mode `w`)
-    pub width: usize,
-    /// independent lattice query heads per position
-    pub heads: usize,
-    /// value-table row dimension (split-mode `m`)
-    pub m: usize,
-    /// hits kept per query
-    pub k_top: usize,
-    /// torus side lengths (each a positive multiple of 4)
-    pub torus_k: [i64; 8],
-    /// engine worker threads; 0 = all available parallelism
-    pub threads: usize,
-    /// deterministic weight-init seed
-    pub seed: u64,
-    /// scale applied to projected queries so they spread over the torus
-    pub query_scale: f64,
-    /// track per-slot access statistics (Table-5 serving observability)
-    pub track_stats: bool,
-}
-
-impl Default for EngineConfig {
-    fn default() -> Self {
-        EngineConfig {
-            max_batch: 8,
-            seq_len: 32,
-            width: 64,
-            heads: 2,
-            m: 64,
-            k_top: 32,
-            torus_k: [16, 16, 8, 8, 8, 8, 8, 8],
-            threads: 1,
-            seed: 0xE85E44E,
-            query_scale: 4.0,
-            track_stats: true,
-        }
-    }
-}
-
-/// Artifact-free MLM serving: dense prefix → fused lattice lookup+gather
-/// → dense suffix, all pure rust.  Weights are deterministic from
-/// `cfg.seed` (an untrained but well-formed model — the serving-path
-/// contract is shape, determinism and throughput, not perplexity).
+/// Artifact-free MLM serving over the shared [`LramMlm`] model: either
+/// deterministic seed weights or a trained checkpoint.
 pub struct EngineBackend {
-    cfg: EngineConfig,
-    vocab: usize,
-    /// token embeddings, `vocab x width`
-    embed: Vec<f32>,
-    /// position embeddings, `seq_len x width`
-    pos: Vec<f32>,
-    /// query projection, `(heads * 8) x width`
-    wq: Vec<f32>,
-    /// head-combine projection, `width x (heads * m)`
-    wo: Vec<f32>,
-    /// output projection, `vocab x width`
-    w_out: Vec<f32>,
-    engine: BatchLookupEngine,
-    table: ValueTable,
+    model: LramMlm,
     stats: Option<AccessStats>,
-    // reusable scratch, allocated once at max-batch size
-    h: Vec<f32>,
-    queries: Vec<f64>,
-    lk: BatchOutput,
-    gathered: Vec<f32>,
+    checkpoint_id: Option<String>,
 }
 
 impl EngineBackend {
+    /// Deterministic seed-weight backend (untrained but well-formed —
+    /// the serving-path contract is shape, determinism and throughput,
+    /// not perplexity).
     pub fn new(cfg: EngineConfig, vocab: usize) -> Result<Self> {
-        ensure!(vocab > 0, "vocab must be positive");
-        ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
-        ensure!(cfg.seq_len >= 2, "seq_len must be at least 2");
-        ensure!(cfg.width > 0 && cfg.heads > 0 && cfg.m > 0, "degenerate shape");
-        let torus = TorusK::new(cfg.torus_k)?;
-        let threads = if cfg.threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            cfg.threads
-        };
-        let engine = BatchLookupEngine::with_threads(torus, cfg.k_top, threads);
-        let locations = torus.num_locations();
-        let mut table = ValueTable::zeros(locations, cfg.m)?;
-        // deterministic non-zero values; initialisation capped so huge
-        // tori stay lazily mapped (untouched rows read as zero)
-        table.randomize_rows(cfg.seed ^ 0xE8, 0.02, locations.min(1 << 15));
+        let track = cfg.track_stats;
+        let model = LramMlm::seeded(cfg, vocab)?;
+        let stats = track.then(|| AccessStats::new(model.table.rows()));
+        Ok(EngineBackend { model, stats, checkpoint_id: None })
+    }
 
-        let mut rng = Rng::new(cfg.seed);
-        let mut normal = |n: usize, std: f64| -> Vec<f32> {
-            (0..n).map(|_| (rng.normal() * std) as f32).collect()
-        };
-        let inv_sqrt_w = 1.0 / (cfg.width as f64).sqrt();
-        let embed = normal(vocab * cfg.width, 1.0);
-        let pos = normal(cfg.seq_len * cfg.width, 0.5);
-        let wq = normal(cfg.heads * 8 * cfg.width, inv_sqrt_w);
-        let wo = normal(cfg.width * cfg.heads * cfg.m, 0.05);
-        let w_out = normal(vocab * cfg.width, inv_sqrt_w);
-
-        let max_positions = cfg.max_batch * cfg.seq_len;
-        Ok(EngineBackend {
-            vocab,
-            embed,
-            pos,
-            wq,
-            wo,
-            w_out,
-            engine,
-            table,
-            stats: cfg.track_stats.then(|| AccessStats::new(locations)),
-            h: vec![0.0; max_positions * cfg.width],
-            queries: vec![0.0; max_positions * cfg.heads * 8],
-            lk: BatchOutput::default(),
-            gathered: vec![0.0; max_positions * cfg.heads * cfg.m],
-            cfg,
-        })
+    /// Restore trained weights from a checkpoint directory, validating
+    /// it against the serving tokenizer.  Every mismatch — tokenizer
+    /// fingerprint, vocabulary size, tensor shapes vs the recorded
+    /// geometry — is a loud construction error: serving silently
+    /// mispaired weights would be worse than not serving at all.
+    pub fn from_checkpoint(init: &CheckpointInit, bpe: &Bpe) -> Result<Self> {
+        let ck = Checkpoint::open(std::path::Path::new(&init.dir))?;
+        let manifest = &ck.manifest;
+        let served = bpe.fingerprint();
+        if manifest.tokenizer_hash != served {
+            bail!(
+                "checkpoint {} was trained with tokenizer {} but the serving pipeline \
+                 built tokenizer {} — same corpus/vocab settings required (an id↔token \
+                 drift would serve wrong predictions for every request)",
+                manifest.checkpoint_id,
+                manifest.tokenizer_hash,
+                served
+            );
+        }
+        ensure!(
+            manifest.model.vocab == bpe.vocab_size(),
+            "checkpoint {} has vocab {} but the serving tokenizer has {}",
+            manifest.checkpoint_id,
+            manifest.model.vocab,
+            bpe.vocab_size()
+        );
+        let model = LramMlm::from_checkpoint(&ck, init.threads)?;
+        let stats = init.track_stats.then(|| AccessStats::new(model.table.rows()));
+        log::info!(
+            "engine backend restored checkpoint {} (step {}, {} params)",
+            manifest.checkpoint_id,
+            manifest.step,
+            model.param_count()
+        );
+        Ok(EngineBackend { model, stats, checkpoint_id: Some(manifest.checkpoint_id.clone()) })
     }
 
     /// The lattice engine this backend drives (differential tests pit it
     /// against the scalar oracle on the same torus).
-    pub fn engine(&self) -> &BatchLookupEngine {
-        &self.engine
+    pub fn engine(&self) -> &crate::lattice::BatchLookupEngine {
+        &self.model.engine
     }
 
     /// Total parameters reachable through the value table.
     pub fn param_count(&self) -> u64 {
-        self.table.param_count()
+        self.model.param_count()
     }
 
     /// `infer`, but with the memory stage run through the scalar
     /// [`LatticeLookup`] oracle instead of the fused engine — the
     /// serving-path differential test (`rust/tests/server_integration.rs`)
     /// demands bit-identical output to [`InferenceBackend::infer`].
+    ///
+    /// [`LatticeLookup`]: crate::lattice::LatticeLookup
     pub fn infer_with_scalar_oracle(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        self.forward(tokens, true)
-    }
-
-    fn clamp_token(&self, t: i32) -> usize {
-        if t < 0 || t as usize >= self.vocab {
-            (crate::tokenizer::UNK_ID as usize).min(self.vocab - 1)
-        } else {
-            t as usize
-        }
-    }
-
-    fn forward(&mut self, tokens: &[i32], use_oracle: bool) -> Result<Vec<f32>> {
-        let (seq_len, width, heads, m) =
-            (self.cfg.seq_len, self.cfg.width, self.cfg.heads, self.cfg.m);
-        let rows = tokens.len() / seq_len;
-        ensure!(
-            rows >= 1 && rows <= self.cfg.max_batch && tokens.len() == rows * seq_len,
-            "batch of {} tokens does not fit {} x {seq_len}",
-            tokens.len(),
-            self.cfg.max_batch
-        );
-        let positions = rows * seq_len;
-
-        // dense prefix 1/2: token + position embeddings with a cheap
-        // neighbour mix so mask predictions depend on their context
-        for r in 0..rows {
-            for c in 0..seq_len {
-                let p = r * seq_len + c;
-                // resolve neighbour ids before borrowing the h row
-                let t = self.clamp_token(tokens[p]);
-                let left = (c > 0).then(|| self.clamp_token(tokens[p - 1]));
-                let right = (c + 1 < seq_len).then(|| self.clamp_token(tokens[p + 1]));
-                let e = &self.embed[t * width..(t + 1) * width];
-                let pe = &self.pos[c * width..(c + 1) * width];
-                let h = &mut self.h[p * width..(p + 1) * width];
-                for w in 0..width {
-                    h[w] = e[w] + pe[w];
-                }
-                if let Some(lt) = left {
-                    let le = &self.embed[lt * width..(lt + 1) * width];
-                    for w in 0..width {
-                        h[w] += 0.5 * le[w];
-                    }
-                }
-                if let Some(rt) = right {
-                    let re = &self.embed[rt * width..(rt + 1) * width];
-                    for w in 0..width {
-                        h[w] += 0.5 * re[w];
-                    }
-                }
-            }
-        }
-
-        // dense prefix 2/2: project each position to `heads` 8-d lattice
-        // queries (the split-mode prefix shape), f64 for the engine
-        for p in 0..positions {
-            let h = &self.h[p * width..(p + 1) * width];
-            for head in 0..heads {
-                for d in 0..8 {
-                    let wrow = &self.wq[(head * 8 + d) * width..(head * 8 + d + 1) * width];
-                    let mut acc = 0.0f64;
-                    for w in 0..width {
-                        acc += wrow[w] as f64 * h[w] as f64;
-                    }
-                    self.queries[(p * heads + head) * 8 + d] = acc * self.cfg.query_scale;
-                }
-            }
-        }
-
-        // the O(1) memory stage: fused lookup+gather (or the scalar
-        // oracle, bit-identical, for differential testing)
-        let n_queries = positions * heads;
-        if use_oracle {
-            let k_top = self.engine.k_top;
-            let mut oracle = LatticeLookup::new(self.engine.torus, k_top);
-            let mut idx_row = vec![0u64; k_top];
-            let mut w_row = vec![0.0f32; k_top];
-            for qi in 0..n_queries {
-                let q: Vec8 = self.queries[qi * 8..(qi + 1) * 8].try_into().unwrap();
-                let r = oracle.lookup(&q);
-                for j in 0..k_top {
-                    match r.hits.get(j) {
-                        Some(hit) => {
-                            idx_row[j] = hit.index;
-                            w_row[j] = hit.weight as f32;
-                        }
-                        None => {
-                            idx_row[j] = 0;
-                            w_row[j] = 0.0;
-                        }
-                    }
-                }
-                self.table.gather_weighted(
-                    &idx_row,
-                    &w_row,
-                    &mut self.gathered[qi * m..(qi + 1) * m],
-                );
-                if let Some(stats) = self.stats.as_mut() {
-                    stats.record_batch_f32(&idx_row, &w_row);
-                }
-            }
-        } else {
-            self.engine.lookup_gather_ragged_into(
-                &self.queries[..n_queries * 8],
-                &self.table,
-                &mut self.lk,
-                &mut self.gathered,
-            );
-            if let Some(stats) = self.stats.as_mut() {
-                stats.record_batch_f32(&self.lk.indices, &self.lk.weights);
-            }
-        }
-
-        // dense suffix: head combine + residual, tied output projection,
-        // log-softmax per position
-        let hm = heads * m;
-        let mut out = vec![0.0f32; positions * self.vocab];
-        let mut y = vec![0.0f32; width];
-        for p in 0..positions {
-            let h = &self.h[p * width..(p + 1) * width];
-            let v = &self.gathered[p * hm..(p + 1) * hm];
-            for (w, yw) in y.iter_mut().enumerate() {
-                let wo_row = &self.wo[w * hm..(w + 1) * hm];
-                let mut acc = h[w];
-                for j in 0..hm {
-                    acc += wo_row[j] * v[j];
-                }
-                *yw = acc;
-            }
-            let orow = &mut out[p * self.vocab..(p + 1) * self.vocab];
-            let mut maxv = f32::NEG_INFINITY;
-            for (t, o) in orow.iter_mut().enumerate() {
-                let wrow = &self.w_out[t * width..(t + 1) * width];
-                let mut acc = 0.0f32;
-                for w in 0..width {
-                    acc += wrow[w] * y[w];
-                }
-                *o = acc;
-                if acc > maxv {
-                    maxv = acc;
-                }
-            }
-            let mut sum = 0.0f64;
-            for &o in orow.iter() {
-                sum += ((o - maxv) as f64).exp();
-            }
-            let lse = maxv as f64 + sum.ln();
-            for o in orow.iter_mut() {
-                *o = (*o as f64 - lse) as f32;
-            }
-        }
-        Ok(out)
+        self.model.forward(tokens, true, self.stats.as_mut())
     }
 }
 
@@ -445,23 +287,27 @@ impl InferenceBackend for EngineBackend {
     }
 
     fn max_batch(&self) -> usize {
-        self.cfg.max_batch
+        self.model.cfg.max_batch
     }
 
     fn seq_len(&self) -> usize {
-        self.cfg.seq_len
+        self.model.cfg.seq_len
     }
 
     fn vocab(&self) -> usize {
-        self.vocab
+        self.model.vocab
     }
 
     fn infer(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        self.forward(tokens, false)
+        self.model.forward(tokens, false, self.stats.as_mut())
     }
 
     fn memory_stats(&self) -> Option<(f64, f64)> {
         self.stats.as_ref().map(|s| (s.utilization(), s.kl_from_uniform()))
+    }
+
+    fn checkpoint_id(&self) -> Option<&str> {
+        self.checkpoint_id.as_deref()
     }
 }
 
@@ -522,5 +368,11 @@ mod tests {
         let tokens = vec![-3i32, 9999, 5, 5, 5, 5, 5, 5];
         let logp = b.infer(&tokens).unwrap();
         assert!(logp.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn seed_backend_reports_no_checkpoint() {
+        let b = EngineBackend::new(tiny_cfg(), 64).unwrap();
+        assert!(b.checkpoint_id().is_none());
     }
 }

@@ -58,6 +58,8 @@ pub struct BatchStats {
     pub truncated_masks: u64,
     /// backend name ("artifact" / "engine")
     pub backend: &'static str,
+    /// id of the checkpoint the backend serves, when restored from one
+    pub checkpoint: Option<String>,
     /// value-table observability from engine-owned backends (last poll)
     pub memory_utilization: Option<f64>,
     pub memory_kl: Option<f64>,
@@ -74,9 +76,12 @@ impl Batcher {
         let batcher = Arc::new(Batcher { tx, stats: stats.clone() });
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         std::thread::spawn(move || {
-            let mut backend = match init.build(bpe.vocab_size()) {
+            let mut backend = match init.build(&bpe) {
                 Ok(b) => {
-                    stats.lock().unwrap().backend = b.name();
+                    let mut s = stats.lock().unwrap();
+                    s.backend = b.name();
+                    s.checkpoint = b.checkpoint_id().map(str::to_string);
+                    drop(s);
                     let _ = ready_tx.send(Ok(()));
                     b
                 }
@@ -171,27 +176,61 @@ impl Batcher {
 
     /// Resolve a `--backend artifact | engine | auto` flag into a
     /// spawned batcher (shared by `lram serve` and the serving example).
-    /// `auto` tries the artifact executor and falls back to the
-    /// pure-rust engine when artifacts/PJRT are unavailable.
+    ///
+    /// When `checkpoint` is set, the engine path serves *trained*
+    /// weights from that directory.  Without one, `--backend engine`
+    /// requires the explicit `random_init` opt-in (seed weights are for
+    /// tests, benches and demos — serving them by accident would look
+    /// exactly like a trained model with terrible predictions).  `auto`
+    /// prefers checkpoint > artifact > seed engine (with a loud warning
+    /// on the last fallback).
     pub fn spawn_for_flag(
         flag: &str,
         artifact: super::backend::ArtifactInit,
         engine: super::backend::EngineConfig,
+        checkpoint: Option<super::backend::CheckpointInit>,
+        random_init: bool,
         bpe: Arc<Bpe>,
         cfg: BatcherConfig,
     ) -> Result<Arc<Batcher>> {
+        let engine_init = |random_ok: bool| -> Result<BackendInit> {
+            match (&checkpoint, random_ok) {
+                (Some(ck), _) => Ok(BackendInit::EngineCheckpoint(ck.clone())),
+                (None, true) => Ok(BackendInit::Engine(engine.clone())),
+                (None, false) => Err(anyhow!(
+                    "the engine backend serves trained weights from a checkpoint; \
+                     pass --checkpoint DIR, or --random-init to explicitly serve \
+                     deterministic untrained seed weights"
+                )),
+            }
+        };
         match flag {
-            "artifact" => Self::spawn(BackendInit::Artifact(artifact), bpe, cfg),
-            "engine" => Self::spawn(BackendInit::Engine(engine), bpe, cfg),
+            "artifact" => {
+                // an *engine* checkpoint cannot drive the artifact
+                // executor; ignoring it would serve different weights
+                // than the operator just asked for
+                if checkpoint.is_some() {
+                    return Err(anyhow!(
+                        "--checkpoint points at an engine checkpoint directory, which \
+                         --backend artifact cannot serve; use --backend engine (or auto)"
+                    ));
+                }
+                Self::spawn(BackendInit::Artifact(artifact), bpe, cfg)
+            }
+            "engine" => Self::spawn(engine_init(random_init)?, bpe, cfg),
             "auto" => {
+                if checkpoint.is_some() {
+                    return Self::spawn(engine_init(random_init)?, bpe, cfg);
+                }
                 match Self::spawn(BackendInit::Artifact(artifact), bpe.clone(), cfg.clone()) {
                     Ok(b) => Ok(b),
                     Err(e) => {
                         log::warn!(
-                            "artifact backend unavailable ({e:#}); serving with the \
-                             pure-rust engine backend"
+                            "artifact backend unavailable ({e:#}); serving the pure-rust \
+                             engine backend with UNTRAINED seed weights — train and pass \
+                             --checkpoint DIR for a real model"
                         );
-                        Self::spawn(BackendInit::Engine(engine), bpe, cfg)
+                        Self::spawn(BackendInit::Engine(engine.clone()), bpe, cfg)
                     }
                 }
             }

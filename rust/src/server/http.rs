@@ -80,10 +80,19 @@ fn handle(mut stream: TcpStream, batcher: &Batcher, bpe: &Bpe) -> Result<()> {
                 }
                 _ => String::new(),
             };
+            // which trained weights are live (absent on seed/artifact);
+            // the id comes from a user-editable manifest, so emit it
+            // through the JSON writer rather than raw interpolation
+            let checkpoint = match &s.checkpoint {
+                Some(id) => {
+                    format!(r#", "checkpoint": {}"#, json::Json::Str(id.clone()).to_string())
+                }
+                None => String::new(),
+            };
             (
                 200,
                 format!(
-                    r#"{{"backend": "{}", "requests": {}, "batches": {}, "mean_request_latency_ms": {:.3}, "mean_exec_latency_ms": {:.3}, "max_batch_fill": {}, "truncated_masks": {}{}}}"#,
+                    r#"{{"backend": "{}", "requests": {}, "batches": {}, "mean_request_latency_ms": {:.3}, "mean_exec_latency_ms": {:.3}, "max_batch_fill": {}, "truncated_masks": {}{}{}}}"#,
                     s.backend,
                     s.requests,
                     s.batches,
@@ -91,7 +100,8 @@ fn handle(mut stream: TcpStream, batcher: &Batcher, bpe: &Bpe) -> Result<()> {
                     mean_exec,
                     s.max_batch_fill,
                     s.truncated_masks,
-                    memory
+                    memory,
+                    checkpoint
                 ),
             )
         }

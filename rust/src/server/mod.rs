@@ -17,7 +17,8 @@ mod http;
 
 pub use api::{MaskPrediction, PredictRequest, PredictResponse, TokenScore};
 pub use backend::{
-    ArtifactBackend, ArtifactInit, BackendInit, EngineBackend, EngineConfig, InferenceBackend,
+    resolve_checkpoint_flag, ArtifactBackend, ArtifactInit, BackendInit, CheckpointInit,
+    EngineBackend, EngineConfig, InferenceBackend,
 };
 pub use batcher::{Batcher, BatcherConfig};
 pub use http::serve;

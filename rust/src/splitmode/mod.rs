@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::checkpoint::{CheckpointWriter, Manifest as CkptManifest};
 use crate::memstore::{AccessStats, ValueTable};
 use crate::runtime::{Artifact, ArtifactState, HostTensor, Runtime};
 
@@ -79,6 +80,50 @@ impl SplitLramLayer {
     /// Total parameters reachable by this layer (the Figure-3 x-axis).
     pub fn param_count(&self) -> u64 {
         self.table.param_count()
+    }
+
+    /// Export the layer's weights — every f32 prefix/suffix state tensor
+    /// plus the value table — as a checkpoint directory (tensors named
+    /// `prefix/<name>` / `suffix/<name>` / `values`).
+    ///
+    /// A split layer is geometry-in-the-artifact: the torus lives inside
+    /// the compiled prefix, and there is no tokenizer, so the manifest's
+    /// MLM-only fields (vocab, seq_len, torus) are recorded as zero /
+    /// placeholder — this is a *weight dump* for artifact-based serving
+    /// and offline analysis, not an [`crate::model::LramMlm`] checkpoint.
+    pub fn export_checkpoint(&self, dir: &std::path::Path, step: u64) -> Result<CkptManifest> {
+        let mut w = CheckpointWriter::new(dir)?;
+        w.write_f32(
+            "values",
+            &[self.table.rows(), self.table.dim() as u64],
+            self.table.data(),
+        )?;
+        for (tag, state, artifact) in [
+            ("prefix", &self.prefix_state, &self.prefix),
+            ("suffix", &self.suffix_state, &self.suffix),
+        ] {
+            for (lit, spec) in state.tensors.iter().zip(&artifact.manifest.state) {
+                if spec.dtype != crate::runtime::Dtype::F32 {
+                    continue; // integer side state (e.g. rng keys) is rebuilt, not shipped
+                }
+                let host = crate::runtime::HostTensor::from_literal(lit)?;
+                let shape: Vec<u64> = spec.shape.iter().map(|&d| d as u64).collect();
+                let shape = if shape.is_empty() { vec![1] } else { shape };
+                w.write_f32(&format!("{tag}/{}", spec.name), &shape, host.as_f32()?)?;
+            }
+        }
+        let desc = crate::checkpoint::ModelDesc {
+            vocab: 0,
+            width: self.width,
+            heads: self.heads,
+            m: self.m,
+            k_top: self.k_top,
+            seq_len: 0,
+            max_batch: self.batch,
+            torus_k: [4; 8], // placeholder: the torus is baked into the prefix HLO
+            query_scale: 0.0,
+        };
+        w.finish(step, "", desc)
     }
 
     /// Run the full split pipeline on x (batch x width).

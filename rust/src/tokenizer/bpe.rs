@@ -224,6 +224,15 @@ impl Bpe {
         self.vocab.len()
     }
 
+    /// Content fingerprint of the trained tokenizer (FNV-1a 64 over the
+    /// canonical serialisation, hex).  A checkpoint stores this so a
+    /// server can refuse to pair trained weights with a tokenizer whose
+    /// id↔token mapping has drifted — same vocabulary *size* is not
+    /// enough, the merges and ordering must match too.
+    pub fn fingerprint(&self) -> String {
+        format!("{:016x}", crate::util::fnv1a64(self.to_text().as_bytes()))
+    }
+
     /// Serialize: one token per line, then merges.
     pub fn to_text(&self) -> String {
         let mut s = String::new();

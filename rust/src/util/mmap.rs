@@ -49,6 +49,49 @@ impl RawMap {
         Ok(RawMap { ptr, bytes })
     }
 
+    /// Copy-on-write map of an *existing* file: reads come zero-copy from
+    /// the page cache, writes land in private anonymous pages and never
+    /// reach the file.  This is how checkpoints serve a multi-GB value
+    /// table without reading it into RAM — and without any risk of a
+    /// serving-path write corrupting the checkpoint on disk.
+    ///
+    /// The file must be exactly `bytes` long; a shorter file is a
+    /// truncated checkpoint and mapping it would turn reads past EOF
+    /// into SIGBUS, so the mismatch is an explicit error instead.
+    fn file_cow(path: &Path, bytes: usize) -> Result<Self> {
+        if bytes == 0 {
+            bail!("mmap of zero length");
+        }
+        let f = OpenOptions::new()
+            .read(true)
+            .open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let actual = f.metadata()?.len();
+        if actual != bytes as u64 {
+            bail!(
+                "{}: expected {} bytes, file has {} (truncated or corrupt checkpoint?)",
+                path.display(),
+                bytes,
+                actual
+            );
+        }
+        // SAFETY: private (copy-on-write) mapping of the exact file length.
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                bytes,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_PRIVATE | libc::MAP_NORESERVE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap cow failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(RawMap { ptr, bytes })
+    }
+
     /// File-backed map (created/truncated to size) for persistence.
     fn file(path: &Path, bytes: usize) -> Result<Self> {
         if bytes == 0 {
@@ -124,6 +167,12 @@ impl MmapF32 {
         Ok(MmapF32 { raw: RawMap::file(path, elem_bytes(len)?)?, len })
     }
 
+    /// Copy-on-write map of an existing file of exactly `len` f32s —
+    /// zero-copy checkpoint reads; writes never touch the file.
+    pub fn open_cow(path: &Path, len: usize) -> Result<Self> {
+        Ok(MmapF32 { raw: RawMap::file_cow(path, elem_bytes(len)?)?, len })
+    }
+
     #[inline]
     pub fn len(&self) -> usize {
         self.len
@@ -171,6 +220,12 @@ impl MmapU32 {
     /// Anonymous zero-initialised map of `len` u32 elements.
     pub fn anon(len: usize) -> Result<Self> {
         Ok(MmapU32 { raw: RawMap::anon(elem_bytes(len)?)?, len })
+    }
+
+    /// Copy-on-write map of an existing file of exactly `len` u32s
+    /// (checkpointed optimizer step counts).
+    pub fn open_cow(path: &Path, len: usize) -> Result<Self> {
+        Ok(MmapU32 { raw: RawMap::file_cow(path, elem_bytes(len)?)?, len })
     }
 
     #[inline]
@@ -236,6 +291,37 @@ mod tests {
         }
         let m = MmapF32::file(&path, 1024).unwrap();
         assert_eq!(m.as_slice()[7], 2.25);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cow_map_reads_file_but_never_writes_it() {
+        let dir = std::env::temp_dir().join(format!("lram_cow_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cow.bin");
+        {
+            let mut m = MmapF32::file(&path, 256).unwrap();
+            m.as_mut_slice()[3] = 1.5;
+        }
+        let mut cow = MmapF32::open_cow(&path, 256).unwrap();
+        assert_eq!(cow.as_slice()[3], 1.5);
+        cow.as_mut_slice()[3] = 99.0; // private page, not the file
+        drop(cow);
+        let again = MmapF32::open_cow(&path, 256).unwrap();
+        assert_eq!(again.as_slice()[3], 1.5, "cow write leaked into the file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cow_map_rejects_wrong_length() {
+        let dir = std::env::temp_dir().join(format!("lram_cowlen_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("short.bin");
+        std::fs::write(&path, [0u8; 100]).unwrap();
+        // 100 bytes is not 256 f32s: must error, not SIGBUS later
+        let err = MmapF32::open_cow(&path, 256).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        assert!(MmapU32::open_cow(&path, 256).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

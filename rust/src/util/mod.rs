@@ -11,3 +11,26 @@ pub mod mmap;
 pub mod rng;
 pub mod timing;
 pub mod topk;
+
+/// FNV-1a 64-bit hash — content fingerprints for checkpoints and
+/// tokenizers (not cryptographic; detects corruption and drift, not
+/// adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // published FNV-1a test vectors
+        assert_eq!(super::fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(super::fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(super::fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -1,0 +1,327 @@
+//! The checkpoint subsystem's end-to-end contract, locked in as a test
+//! harness: **train → save → serve trained weights, artifact-free, with
+//! bit-identical logits**.
+//!
+//! A tiny synthetic MLM is trained for a few steps with the pure-rust
+//! [`EngineTrainer`], checkpointed, restored into the serving
+//! [`EngineBackend`], and the served `/fill-mask` scores are compared
+//! bit-for-bit (f32 logits and the f64 log-probs that cross the HTTP
+//! JSON boundary) against the trainer's own forward pass.  Negative
+//! tests pin down the failure discipline: corruption, truncation and
+//! version skew all refuse to load with explicit errors.
+//!
+//! Everything here runs everywhere — no artifacts, no PJRT.
+//!
+//! Set `LRAM_CKPT_OUT=<dir>` to keep the trained tiny checkpoint (CI
+//! uploads it as a build artifact so regressions are reproducible).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use lram::checkpoint::{Checkpoint, MANIFEST_FILE};
+use lram::coordinator::{EngineTrainConfig, EngineTrainer};
+use lram::data::mlm::fit_length;
+use lram::model::EngineConfig;
+use lram::server::batcher::encode_with_masks;
+use lram::server::{
+    serve, BackendInit, Batcher, BatcherConfig, CheckpointInit, EngineBackend, InferenceBackend,
+    PredictRequest,
+};
+use lram::util::json;
+
+fn tiny_model() -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        seq_len: 16,
+        width: 16,
+        heads: 2,
+        m: 8,
+        k_top: 8,
+        torus_k: [4; 8], // 256 memory slots: milliseconds, same structure
+        threads: 1,
+        ..EngineConfig::default()
+    }
+}
+
+fn tiny_train_cfg() -> EngineTrainConfig {
+    EngineTrainConfig {
+        model: tiny_model(),
+        steps: 12,
+        batch: 4,
+        vocab_size: 512,
+        ..EngineTrainConfig::default()
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "lram_ckpt_rt_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        std::fs::copy(entry.path(), dst.join(entry.file_name())).unwrap();
+    }
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "logit count mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "logit {i}: {x} vs {y}");
+    }
+}
+
+/// Train a tiny model for a few steps and save it; returns the trainer
+/// (for reference forward passes) and the checkpoint directory.
+fn train_and_save(tag: &str, steps: u64) -> (EngineTrainer, PathBuf) {
+    let mut trainer = EngineTrainer::new(tiny_train_cfg()).unwrap();
+    let mut losses = Vec::with_capacity(steps as usize);
+    for i in 0..steps {
+        let loss = trainer.train_step().unwrap();
+        assert!(loss.is_finite(), "step {i}: loss {loss}");
+        losses.push(loss);
+    }
+    if steps >= 10 {
+        // the model must actually be learning (averaged over 3 steps so
+        // a single noisy batch can't mask steady descent)
+        let head: f64 = losses[..3].iter().sum::<f64>() / 3.0;
+        let tail: f64 = losses[losses.len() - 3..].iter().sum::<f64>() / 3.0;
+        assert!(tail < head, "training went nowhere: first~{head:.4}, last~{tail:.4}");
+    }
+    let dir = tmp(tag);
+    let manifest = trainer.save_checkpoint(&dir).unwrap();
+    assert_eq!(manifest.step, steps);
+    assert!(manifest.checkpoint_id.starts_with("ck-"));
+    (trainer, dir)
+}
+
+// ---------------------------------------------------------------------
+// the headline: train → save → serve, bit-identical
+// ---------------------------------------------------------------------
+
+#[test]
+fn trained_logits_served_from_checkpoint_are_bit_identical() {
+    let (mut trainer, dir) = train_and_save("headline", 12);
+
+    // the trainer's own (serving-identical, fused-engine) forward pass
+    let tokens = trainer.pipeline().val_batch(0).tokens;
+    let want = trainer.forward(&tokens).unwrap();
+
+    // restore into the serving backend and infer the same batch
+    let bpe = trainer.pipeline().bpe.clone();
+    let mut backend =
+        EngineBackend::from_checkpoint(&CheckpointInit::new(dir.to_str().unwrap()), &bpe).unwrap();
+    assert_eq!(backend.seq_len(), 16);
+    let got = backend.infer(&tokens).unwrap();
+    assert_bits_equal(&want, &got);
+
+    // a ragged single row must match too (serving never pads)
+    let row = &tokens[..16];
+    let want_row = trainer.forward(row).unwrap();
+    let got_row = backend.infer(row).unwrap();
+    assert_bits_equal(&want_row, &got_row);
+
+    // optionally keep the trained checkpoint (CI uploads it)
+    match std::env::var_os("LRAM_CKPT_OUT") {
+        Some(out) => {
+            copy_dir(&dir, Path::new(&out));
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        None => {
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+#[test]
+fn served_fill_mask_response_matches_trainer_end_to_end() {
+    let (mut trainer, dir) = train_and_save("fillmask", 10);
+    let bpe = Arc::new(trainer.pipeline().bpe.clone());
+
+    // full serving path: batcher over the checkpoint-restored backend
+    let batcher = Batcher::spawn(
+        BackendInit::EngineCheckpoint(CheckpointInit::new(dir.to_str().unwrap())),
+        bpe.clone(),
+        BatcherConfig::default(),
+    )
+    .expect("checkpoint backend must start (hash and config match by construction)");
+
+    let text = "the [MASK] of the";
+    let top_k = 3usize;
+    let resp = batcher.submit(&bpe, &PredictRequest { text: text.into(), top_k }).unwrap();
+    assert_eq!(resp.masks.len(), 1);
+    let served = resp.masks[0].scores().expect("in-range mask is predicted");
+    assert_eq!(served.len(), top_k);
+
+    // reference: the trainer runs the exact request row itself
+    let (ids, mask_positions) = encode_with_masks(&bpe, text);
+    let row = fit_length(ids, 16);
+    let logp = trainer.forward(&row).unwrap();
+    let vocab = bpe.vocab_size();
+    let pos = mask_positions[0];
+    let scores = &logp[pos * vocab..(pos + 1) * vocab];
+    let want: Vec<(String, f64)> = lram::util::topk::top_k_indices_f32(scores, top_k)
+        .into_iter()
+        .map(|i| (bpe.vocab.token(i as i32).to_string(), scores[i] as f64))
+        .collect();
+    for (s, (token, logprob)) in served.iter().zip(&want) {
+        assert_eq!(&s.token, token, "served a different candidate token");
+        assert_eq!(
+            s.logprob.to_bits(),
+            logprob.to_bits(),
+            "served log-prob drifted: {} vs {}",
+            s.logprob,
+            logprob
+        );
+    }
+
+    // ... and once more over a real socket: the /fill-mask HTTP response
+    let addr = "127.0.0.1:18475";
+    {
+        let batcher = batcher.clone();
+        let bpe = bpe.clone();
+        std::thread::spawn(move || {
+            let _ = serve(addr, batcher, bpe);
+        });
+    }
+    let mut stream = None;
+    for _ in 0..50 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            stream = Some(s);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let mut stream = stream.expect("server did not start");
+    let body = format!(r#"{{"text": "{text}", "top_k": {top_k}}}"#);
+    write!(
+        stream,
+        "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut http_resp = String::new();
+    stream.read_to_string(&mut http_resp).unwrap();
+    assert!(http_resp.starts_with("HTTP/1.1 200"), "{http_resp}");
+    let payload = json::parse(http_resp.lines().last().unwrap()).unwrap();
+    let got = payload.get("masks").unwrap().as_arr().unwrap()[0]
+        .get("scores")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert_eq!(got.len(), top_k);
+    for (g, (token, logprob)) in got.iter().zip(&want) {
+        assert_eq!(g.get("token").unwrap().as_str().unwrap(), token);
+        // f64 survives the JSON round-trip bit-exactly (shortest-repr)
+        let served_lp = g.get("logprob").unwrap().as_f64().unwrap();
+        assert_eq!(
+            served_lp.to_bits(),
+            logprob.to_bits(),
+            "HTTP log-prob drifted: {served_lp} vs {logprob}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// optimizer state: resume == uninterrupted
+// ---------------------------------------------------------------------
+
+#[test]
+fn resumed_training_is_bit_identical_to_uninterrupted() {
+    // A trains 6 steps and checkpoints (weights + sparse-Adam state);
+    // B resumes from the checkpoint; both train 4 more steps — every
+    // loss and the final logits must agree bit-for-bit, or optimizer
+    // state is not really round-tripping
+    let (mut a, dir) = train_and_save("resume", 6);
+    let mut b = EngineTrainer::from_checkpoint(tiny_train_cfg(), &dir).unwrap();
+    assert_eq!(b.step_count(), 6);
+    for step in 0..4 {
+        let la = a.train_step().unwrap();
+        let lb = b.train_step().unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits(), "step {step}: loss {la} vs {lb}");
+    }
+    let tokens = a.pipeline().val_batch(1).tokens;
+    let fa = a.forward(&tokens).unwrap();
+    let fb = b.forward(&tokens).unwrap();
+    assert_bits_equal(&fa, &fb);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// failure discipline: corruption / truncation / version skew
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_truncated_and_skewed_checkpoints_fail_loudly() {
+    let (trainer, dir) = train_and_save("negative", 4);
+    let bpe = trainer.pipeline().bpe.clone();
+    let open = |d: &Path| {
+        EngineBackend::from_checkpoint(&CheckpointInit::new(d.to_str().unwrap()), &bpe)
+    };
+
+    // pristine copy loads fine
+    let good = tmp("negative_good");
+    copy_dir(&dir, &good);
+    assert!(open(&good).is_ok());
+
+    // corruption: flip one byte of the embedding blob
+    let corrupt = tmp("negative_corrupt");
+    copy_dir(&dir, &corrupt);
+    let path = corrupt.join("embed.bin");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", open(&corrupt).unwrap_err());
+    assert!(err.contains("checksum"), "corruption must name the checksum: {err}");
+
+    // truncation: chop the tail off the value table
+    let trunc = tmp("negative_trunc");
+    copy_dir(&dir, &trunc);
+    let path = trunc.join("values.bin");
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
+    let err = format!("{:#}", open(&trunc).unwrap_err());
+    assert!(err.contains("truncated"), "truncation must be explicit: {err}");
+
+    // version skew: a future format version must refuse, not guess
+    let skew = tmp("negative_skew");
+    copy_dir(&dir, &skew);
+    let path = skew.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replace("\"version\":1", "\"version\":2")).unwrap();
+    let err = format!("{:#}", open(&skew).unwrap_err());
+    assert!(err.contains("version 2") && err.contains("not supported"), "{err}");
+
+    for d in [&dir, &good, &corrupt, &trunc, &skew] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn inspect_surface_reads_what_was_saved() {
+    // the `lram checkpoint inspect` code path: open + verify + geometry
+    let (trainer, dir) = train_and_save("inspect", 4);
+    let ck = Checkpoint::open(&dir).unwrap();
+    ck.verify().unwrap(); // full checksums, including the value table
+    let m = &ck.manifest;
+    assert_eq!(m.step, 4);
+    assert_eq!(m.model.width, 16);
+    assert_eq!(m.model.torus_k, [4; 8]);
+    assert_eq!(m.tokenizer_hash, trainer.pipeline().bpe.fingerprint());
+    // model weights + 3 optimizer tensors
+    for name in ["embed", "pos", "wq", "wo", "w_out", "values", "adam_m", "adam_v", "adam_t"] {
+        assert!(m.has_tensor(name), "missing tensor {name}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -11,9 +11,10 @@ use std::sync::Arc;
 
 use lram::data::synth::CorpusSpec;
 use lram::data::DataPipeline;
+use lram::model::LramMlm;
 use lram::server::{
-    serve, ArtifactInit, BackendInit, Batcher, BatcherConfig, EngineBackend, EngineConfig,
-    PredictRequest,
+    serve, ArtifactInit, BackendInit, Batcher, BatcherConfig, CheckpointInit, EngineBackend,
+    EngineConfig, PredictRequest,
 };
 
 fn artifact_dir() -> Option<String> {
@@ -214,6 +215,133 @@ fn engine_backend_matches_scalar_oracle_end_to_end() {
     for (i, (x, y)) in a.iter().zip(&b).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(), "logp {i}: {x} vs {y}");
     }
+}
+
+// ---------------------------------------------------------------------
+// engine backend from a checkpoint: trained-weight serving path
+// ---------------------------------------------------------------------
+
+/// Save a seeded tiny model as a checkpoint stamped with `bpe`'s
+/// fingerprint (the weights don't need to be *trained* for these server
+/// tests — `checkpoint_roundtrip.rs` owns the trained-logits contract).
+fn save_tiny_checkpoint(tag: &str, bpe: &lram::tokenizer::Bpe) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lram_srv_ckpt_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = EngineConfig { torus_k: [4; 8], k_top: 8, ..engine_cfg() };
+    let model = LramMlm::seeded(cfg, bpe.vocab_size()).unwrap();
+    model.save_checkpoint(&dir, 3, &bpe.fingerprint(), None).unwrap();
+    dir
+}
+
+#[test]
+fn tokenizer_hash_mismatch_is_a_clean_startup_error() {
+    // checkpoint trained with tokenizer A, server pipeline builds
+    // tokenizer B: Batcher::spawn must return Err (no panic, no serving)
+    let train_bpe = build_small_bpe();
+    let dir = save_tiny_checkpoint("mismatch", &train_bpe);
+    let other = DataPipeline::new(CorpusSpec { seed: 99, ..CorpusSpec::default() }, 512, 8, 1, 0.15)
+        .unwrap();
+    let serving_bpe = Arc::new(other.bpe);
+    assert_ne!(train_bpe.fingerprint(), serving_bpe.fingerprint(), "seeds must differ");
+    let result = Batcher::spawn(
+        BackendInit::EngineCheckpoint(CheckpointInit::new(dir.to_str().unwrap())),
+        serving_bpe,
+        BatcherConfig::default(),
+    );
+    let err = format!("{:#}", result.err().expect("mismatched tokenizer must refuse to serve"));
+    assert!(err.contains("tokenizer"), "error must name the tokenizer: {err}");
+    // the matching tokenizer still works
+    let ok = Batcher::spawn(
+        BackendInit::EngineCheckpoint(CheckpointInit::new(dir.to_str().unwrap())),
+        train_bpe.clone(),
+        BatcherConfig::default(),
+    );
+    assert!(ok.is_ok(), "{:?}", ok.err().map(|e| format!("{e:#}")));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stats_report_the_loaded_checkpoint_id() {
+    let bpe = build_small_bpe();
+    let dir = save_tiny_checkpoint("stats", &bpe);
+    let expected_id =
+        lram::checkpoint::Checkpoint::open(&dir).unwrap().manifest.checkpoint_id;
+    let batcher = Batcher::spawn(
+        BackendInit::EngineCheckpoint(CheckpointInit::new(dir.to_str().unwrap())),
+        bpe.clone(),
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(
+        batcher.stats.lock().unwrap().checkpoint.as_deref(),
+        Some(expected_id.as_str())
+    );
+
+    // and over HTTP: /stats carries the id so operators can tell which
+    // trained weights are live
+    let addr = "127.0.0.1:18477";
+    {
+        let batcher = batcher.clone();
+        let bpe = bpe.clone();
+        std::thread::spawn(move || {
+            let _ = serve(addr, batcher, bpe);
+        });
+    }
+    let mut stream = None;
+    for _ in 0..50 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            stream = Some(s);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let mut s = stream.expect("server did not start");
+    write!(s, "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    assert!(
+        resp.contains(&format!(r#""checkpoint": "{expected_id}""#)),
+        "/stats must name the checkpoint: {resp}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn seed_engine_requires_explicit_random_init_on_the_flag_path() {
+    // the spawn_for_flag surface behind `lram serve`: engine without a
+    // checkpoint must demand --random-init, and accept it when given
+    let bpe = build_small_bpe();
+    let artifact = ArtifactInit {
+        artifact_dir: "does-not-exist".into(),
+        artifact_name: "infer_logits_baseline".into(),
+        checkpoint: None,
+    };
+    let refused = Batcher::spawn_for_flag(
+        "engine",
+        artifact.clone(),
+        engine_cfg(),
+        None,
+        false,
+        bpe.clone(),
+        BatcherConfig::default(),
+    );
+    let err = format!("{:#}", refused.err().expect("seed weights need explicit opt-in"));
+    assert!(err.contains("random-init"), "{err}");
+    let accepted = Batcher::spawn_for_flag(
+        "engine",
+        artifact,
+        engine_cfg(),
+        None,
+        true,
+        bpe,
+        BatcherConfig::default(),
+    );
+    assert!(accepted.is_ok());
+    assert!(accepted.unwrap().stats.lock().unwrap().checkpoint.is_none());
 }
 
 // ---------------------------------------------------------------------
