@@ -1,12 +1,13 @@
-//! Serving demo: start the fill-mask router, fire a few concurrent
-//! requests at it from client threads, print predictions + batching
-//! stats.  Demonstrates the vLLM-style dynamic batcher with python
-//! nowhere on the request path.
+//! Serving demo: start the fill-mask router behind the keep-alive
+//! worker-pool front door, fire concurrent requests at it from
+//! persistent client connections, print predictions + batching stats.
+//! Demonstrates the vLLM-style dynamic batcher with python nowhere on
+//! the request path.
 //!
 //! # Quickstart (no artifacts, no PJRT — works on any machine)
 //!
 //! ```text
-//! cargo run --release --example serve_mlm -- --backend engine
+//! cargo run --release --example serve_mlm -- --backend engine --random-init
 //! ```
 //!
 //! The `engine` backend is pure rust: token/position embeddings and a
@@ -15,8 +16,8 @@
 //! table, and a dense suffix with log-softmax.  It is the paper's O(1)
 //! random-access lookup served end-to-end — `POST /predict` with
 //! `{"text": "the [MASK] sat", "top_k": 3}` returns top-k candidates
-//! per mask, `GET /stats` reports batching, latency and value-table
-//! utilisation, `GET /healthz` liveness.
+//! per mask, `GET /stats` reports batching, latency percentiles, queue
+//! depth and value-table utilisation, `GET /healthz` liveness.
 //!
 //! # Backends
 //!
@@ -29,28 +30,63 @@
 //! * `--backend auto`      checkpoint > artifact > seed engine (default;
 //!   the seed fallback warns loudly)
 //!
-//! Other flags: `[--variant lram_small] [--checkpoint ckpt/ | runs/.../final.ckpt]
-//! [--requests 12] [--addr 127.0.0.1:8077] [--threads N]`
+//! Front-door flags (see docs/serving.md): `--http-workers N`,
+//! `--max-pending N`, `--keep-alive-timeout SECS`.  Other flags:
+//! `[--variant lram_small] [--checkpoint ckpt/ | runs/.../final.ckpt]
+//! [--clients 4] [--requests-per-client 3] [--addr 127.0.0.1:8077]
+//! [--threads N]`
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
 use lram::data::synth::CorpusSpec;
 use lram::data::DataPipeline;
-use lram::server::{serve, ArtifactInit, Batcher, BatcherConfig, EngineConfig};
+use lram::server::{ArtifactInit, Batcher, BatcherConfig, EngineConfig, HttpConfig, Server};
 use lram::util::cli::Args;
 
-fn http_post(addr: &str, body: &str) -> anyhow::Result<String> {
-    let mut s = TcpStream::connect(addr)?;
-    write!(
-        s,
-        "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-        body.len()
-    )?;
-    let mut resp = String::new();
-    s.read_to_string(&mut resp)?;
-    Ok(resp)
+/// Minimal keep-alive HTTP client: send a request, read exactly one
+/// response (status line, headers, `Content-Length` body), leave the
+/// connection open for the next call.
+fn http_roundtrip(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    request: &str,
+) -> anyhow::Result<(u16, String)> {
+    use anyhow::Context as _;
+    stream.write_all(request.as_bytes())?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .context("bad status line")?
+        .parse()
+        .context("non-numeric status")?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn post_predict(request_body: &str) -> String {
+    format!(
+        "POST /predict HTTP/1.1\r\nHost: demo\r\nContent-Length: {}\r\n\r\n{request_body}",
+        request_body.len()
+    )
 }
 
 fn main() -> anyhow::Result<()> {
@@ -59,7 +95,8 @@ fn main() -> anyhow::Result<()> {
     let variant = args.str("variant", "lram_small");
     let addr = args.str("addr", "127.0.0.1:8077");
     let backend = args.str("backend", "auto");
-    let n_requests = args.usize("requests", 12)?;
+    let n_clients = args.usize("clients", 4)?;
+    let per_client = args.usize("requests-per-client", 3)?;
 
     // --checkpoint: engine checkpoint directory or legacy artifact blob
     let (engine_ckpt, artifact_ckpt) = match args.flags.get("checkpoint") {
@@ -69,6 +106,10 @@ fn main() -> anyhow::Result<()> {
     let pipeline = DataPipeline::new(CorpusSpec::default(), 4096, 8, 1, 0.15)?;
     let bpe = Arc::new(pipeline.bpe);
 
+    let batcher_cfg = BatcherConfig {
+        max_pending: args.usize("max-pending", BatcherConfig::default().max_pending)?,
+        ..BatcherConfig::default()
+    };
     let batcher = Batcher::spawn_for_flag(
         &backend,
         ArtifactInit {
@@ -80,48 +121,73 @@ fn main() -> anyhow::Result<()> {
         engine_ckpt,
         args.bool("random-init", false)?,
         bpe.clone(),
-        BatcherConfig::default(),
+        batcher_cfg,
     )?;
-    {
-        let batcher = batcher.clone();
-        let bpe = bpe.clone();
-        let addr = addr.clone();
-        std::thread::spawn(move || serve(&addr, batcher, bpe));
-    }
-    std::thread::sleep(std::time::Duration::from_millis(300));
-    println!("server on http://{addr}; firing {n_requests} concurrent requests\n");
+    let http = HttpConfig::default();
+    let http = HttpConfig {
+        workers: args.usize("http-workers", http.workers)?,
+        keep_alive_timeout: std::time::Duration::from_secs_f64(
+            args.f64("keep-alive-timeout", http.keep_alive_timeout.as_secs_f64())?,
+        ),
+        ..http
+    };
+    let server = Server::bind(&addr, batcher, bpe, http)?;
+    let addr = server.local_addr().to_string();
+    println!(
+        "server on http://{addr}; firing {n_clients} keep-alive clients x \
+         {per_client} requests each\n"
+    );
 
     let corpus = lram::data::synth::SynthCorpus::new(CorpusSpec::default());
     let mut handles = vec![];
-    for i in 0..n_requests {
+    for c in 0..n_clients {
         let addr = addr.clone();
-        // mask one word of a real corpus sentence
-        let text = corpus.paragraph(i as u64 + 50);
-        let words: Vec<&str> = text.split_whitespace().take(12).collect();
-        let mut masked = words.clone();
-        let pos = 2 + i % 6;
-        if pos < masked.len() {
-            masked[pos] = "[MASK]";
-        }
-        let body = format!(r#"{{"text": "{}", "top_k": 3}}"#, masked.join(" "));
-        handles.push(std::thread::spawn(move || {
-            let t0 = std::time::Instant::now();
-            let resp = http_post(&addr, &body).unwrap_or_default();
-            (body, resp, t0.elapsed().as_secs_f64() * 1e3)
+        // mask one word of a few real corpus sentences; all requests of
+        // a client ride the same persistent connection
+        let bodies: Vec<String> = (0..per_client)
+            .map(|i| {
+                let text = corpus.paragraph((c * per_client + i) as u64 + 50);
+                let words: Vec<&str> = text.split_whitespace().take(12).collect();
+                let mut masked = words.clone();
+                let pos = 2 + (c + i) % 6;
+                if pos < masked.len() {
+                    masked[pos] = "[MASK]";
+                }
+                format!(r#"{{"text": "{}", "top_k": 3}}"#, masked.join(" "))
+            })
+            .collect();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<(String, String, f64)>> {
+            let mut stream = TcpStream::connect(&addr)?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut out = Vec::new();
+            for body in bodies {
+                let t0 = std::time::Instant::now();
+                let (status, resp) =
+                    http_roundtrip(&mut stream, &mut reader, &post_predict(&body))?;
+                anyhow::ensure!(status == 200, "request failed with {status}: {resp}");
+                out.push((body, resp, t0.elapsed().as_secs_f64() * 1e3));
+            }
+            Ok(out)
         }));
     }
     for h in handles {
-        let (body, resp, ms) = h.join().unwrap();
-        let line = resp.lines().last().unwrap_or("");
-        let preview: String = line.chars().take(120).collect();
-        println!("{:6.1} ms  {}\n          -> {}\n", ms, &body[..body.len().min(90)], preview);
+        for (body, resp, ms) in h.join().expect("client thread panicked")? {
+            let preview: String = resp.chars().take(120).collect();
+            println!("{:6.1} ms  {}\n          -> {}\n", ms, &body[..body.len().min(90)], preview);
+        }
     }
 
-    // batching + memory stats
-    let mut s = TcpStream::connect(&addr)?;
-    write!(s, "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n")?;
-    let mut resp = String::new();
-    s.read_to_string(&mut resp)?;
-    println!("router stats: {}", resp.lines().last().unwrap_or(""));
+    // batching + latency + front-door stats over the same kind of
+    // persistent connection
+    let mut stream = TcpStream::connect(&addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let (_, stats) = http_roundtrip(
+        &mut stream,
+        &mut reader,
+        "GET /stats HTTP/1.1\r\nHost: demo\r\nConnection: close\r\n\r\n",
+    )?;
+    println!("router stats: {stats}");
+    // demo over: drain gracefully so in-flight batches complete
+    server.shutdown();
     Ok(())
 }

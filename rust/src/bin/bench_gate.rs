@@ -19,11 +19,19 @@
 //! `--field <field>` (default `qps`), `--min-ratio <r>` (default 0.35).
 //! Re-record the baseline by copying a fresh `BENCH_lattice.json` over
 //! `benches/BENCH_lattice.baseline.json` on a quiet machine.
+//!
+//! `--report` switches to visibility mode: instead of gating one field,
+//! it prints *every* baseline-vs-current field of *every* entry in one
+//! table (ratio included) and always exits 0 — CI runs it once per
+//! workflow so regressions in non-gated fields at least show in logs.
+
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use lram::util::cli::Args;
 use lram::util::json;
+use lram::util::timing::Table;
 
 /// Read `entries[name == entry].<field>` out of a bench report.
 fn read_field(path: &str, entry: &str, field: &str) -> Result<f64> {
@@ -44,13 +52,76 @@ fn read_field(path: &str, entry: &str, field: &str) -> Result<f64> {
     bail!("{path}: no entry named '{entry}'")
 }
 
+/// `entry name → field → value` for every numeric field of a report.
+fn read_all(path: &str) -> Result<BTreeMap<String, BTreeMap<String, f64>>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let v = json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    let entries = v
+        .req("entries")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{path}: 'entries' is not an array"))?;
+    let mut out = BTreeMap::new();
+    for e in entries {
+        let name = e
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("{path}: entry without a 'name'"))?;
+        let obj = e.as_obj().ok_or_else(|| anyhow!("{path}: entry is not an object"))?;
+        let fields: BTreeMap<String, f64> = obj
+            .iter()
+            .filter_map(|(k, val)| val.as_f64().map(|f| (k.clone(), f)))
+            .collect();
+        out.insert(name.to_string(), fields);
+    }
+    Ok(out)
+}
+
+/// `--report`: every baseline-vs-current field of every entry, one
+/// table, no gating.
+fn print_report(current_path: &str, baseline_path: &str) -> Result<()> {
+    let current = read_all(current_path)?;
+    let baseline = read_all(baseline_path)?;
+    let fmt = |v: Option<f64>| v.map(|f| format!("{f:.4e}")).unwrap_or_else(|| "-".into());
+    let mut t = Table::new(&["entry", "field", "baseline", "current", "ratio"]);
+    let entry_names: Vec<&String> = baseline
+        .keys()
+        .chain(current.keys().filter(|k| !baseline.contains_key(*k)))
+        .collect();
+    for name in entry_names {
+        let b = baseline.get(name);
+        let c = current.get(name);
+        let mut fields: Vec<&String> = Vec::new();
+        if let Some(b) = b {
+            fields.extend(b.keys());
+        }
+        if let Some(c) = c {
+            fields.extend(c.keys().filter(|k| !fields.contains(k)));
+        }
+        for field in fields {
+            let bv = b.and_then(|m| m.get(field)).copied();
+            let cv = c.and_then(|m| m.get(field)).copied();
+            let ratio = match (bv, cv) {
+                (Some(b), Some(c)) if b != 0.0 => format!("{:.3}", c / b),
+                _ => "-".into(),
+            };
+            t.row(&[name.clone(), field.clone(), fmt(bv), fmt(cv), ratio]);
+        }
+    }
+    println!("bench report: {current_path} vs baseline {baseline_path}");
+    t.print();
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse();
     if args.positional.len() != 2 {
         bail!(
             "usage: bench_gate <current.json> <baseline.json> \
-             [--entry NAME] [--field FIELD] [--min-ratio R]"
+             [--entry NAME] [--field FIELD] [--min-ratio R] [--report]"
         );
+    }
+    if args.bool("report", false)? {
+        return print_report(&args.positional[0], &args.positional[1]);
     }
     let entry = args.str("entry", "engine_lookup_gather_b256_t1");
     let field = args.str("field", "qps");

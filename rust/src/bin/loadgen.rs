@@ -1,0 +1,367 @@
+//! `loadgen` — keep-alive load generator for the serving front door.
+//!
+//! Opens `--connections` persistent HTTP/1.1 connections and fires
+//! fill-mask requests back-to-back on each for `--duration-secs`,
+//! then reports throughput, exact client-side latency percentiles, and
+//! the shed rate.  This is the measurement half of the front-door CI
+//! gate (`serve-load-smoke`): the serving path must sustain concurrent
+//! keep-alive traffic with zero 5xx, and any load shedding must arrive
+//! as a *well-formed* 429 (`Retry-After` header + JSON error body).
+//!
+//! ```text
+//! lram serve --backend engine --random-init --addr 127.0.0.1:8077 &
+//! cargo run --release --bin loadgen -- \
+//!     --addr 127.0.0.1:8077 --connections 32 --duration-secs 10 \
+//!     --fail-on-5xx --out serve-load.json
+//! ```
+//!
+//! Flags: `--addr HOST:PORT` (default `127.0.0.1:8077`),
+//! `--connections N` (32), `--duration-secs S` (10), `--top-k K` (3),
+//! `--text STR` (must contain `[MASK]`), `--wait-healthz-secs S` (30;
+//! polls `GET /healthz` before starting so a just-booted server isn't
+//! counted as failure), `--out FILE` (machine-readable JSON report),
+//! `--fail-on-5xx` (exit 1 on any 5xx or malformed 429),
+//! `--connection-close` (send `Connection: close` and reconnect per
+//! request — the seed server's behavior, kept as a measurable baseline
+//! for what keep-alive buys).
+//!
+//! Exit codes: 0 ok; 1 gate failure (`--fail-on-5xx`); 2 the run
+//! produced no successful request at all (nothing to measure).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use lram::util::cli::Args;
+use lram::util::json::Json;
+use lram::util::timing::{BenchReport, Table};
+
+struct HttpResponse {
+    status: u16,
+    /// lowercased header names
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+    close: bool,
+}
+
+impl HttpResponse {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn read_response(r: &mut BufReader<TcpStream>) -> Result<HttpResponse> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        bail!("connection closed before status line");
+    }
+    let mut parts = line.split_whitespace();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/") {
+        bail!("bad status line '{}'", line.trim());
+    }
+    let status: u16 = parts
+        .next()
+        .context("status line missing code")?
+        .parse()
+        .context("non-numeric status code")?;
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        if r.read_line(&mut h)? == 0 {
+            bail!("connection closed mid-headers");
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let resp = HttpResponse { status, headers, body: Vec::new(), close: false };
+    let content_length: usize = resp
+        .header("content-length")
+        .context("response missing Content-Length")?
+        .parse()
+        .context("bad Content-Length")?;
+    let close = resp
+        .header("connection")
+        .map(|v| v.to_ascii_lowercase().contains("close"))
+        .unwrap_or(false);
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).context("reading response body")?;
+    Ok(HttpResponse { body, close, ..resp })
+}
+
+#[derive(Default)]
+struct ClientReport {
+    /// latencies of successful (200) requests, ms
+    latencies_ms: Vec<f64>,
+    ok: u64,
+    shed: u64,
+    other_4xx: u64,
+    server_5xx: u64,
+    /// 429s missing Retry-After or a parseable JSON error body
+    malformed_shed: u64,
+    reconnects: u64,
+    io_errors: u64,
+}
+
+impl ClientReport {
+    fn merge(&mut self, other: ClientReport) {
+        self.latencies_ms.extend(other.latencies_ms);
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.other_4xx += other.other_4xx;
+        self.server_5xx += other.server_5xx;
+        self.malformed_shed += other.malformed_shed;
+        self.reconnects += other.reconnects;
+        self.io_errors += other.io_errors;
+    }
+
+    fn requests(&self) -> u64 {
+        self.ok + self.shed + self.other_4xx + self.server_5xx
+    }
+}
+
+fn connect(addr: &str) -> Result<(TcpStream, BufReader<TcpStream>)> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let reader = BufReader::new(stream.try_clone()?);
+    Ok((stream, reader))
+}
+
+/// A 429 is only a *well-formed* shed if it carries `Retry-After` and a
+/// JSON body with an `error` field — clients must be able to act on it.
+fn shed_is_well_formed(resp: &HttpResponse) -> bool {
+    let retry_after_ok = resp
+        .header("retry-after")
+        .map(|v| v.parse::<u64>().is_ok())
+        .unwrap_or(false);
+    let body_ok = std::str::from_utf8(&resp.body)
+        .ok()
+        .and_then(|t| lram::util::json::parse(t).ok())
+        .map(|v| v.get("error").and_then(|e| e.as_str()).is_some())
+        .unwrap_or(false);
+    retry_after_ok && body_ok
+}
+
+fn client_loop(addr: &str, request: &str, deadline: Instant) -> ClientReport {
+    let mut rep = ClientReport::default();
+    let mut conn: Option<(TcpStream, BufReader<TcpStream>)> = None;
+    let mut connected_once = false;
+    while Instant::now() < deadline {
+        if conn.is_none() {
+            match connect(addr) {
+                Ok(c) => {
+                    if connected_once {
+                        rep.reconnects += 1;
+                    }
+                    connected_once = true;
+                    conn = Some(c);
+                }
+                Err(_) => {
+                    rep.io_errors += 1;
+                    std::thread::sleep(Duration::from_millis(50));
+                    continue;
+                }
+            }
+        }
+        let (stream, reader) = conn.as_mut().expect("connection just established");
+        let t0 = Instant::now();
+        if stream.write_all(request.as_bytes()).is_err() {
+            rep.io_errors += 1;
+            conn = None;
+            continue;
+        }
+        let resp = match read_response(reader) {
+            Ok(r) => r,
+            Err(_) => {
+                // server closed the socket (keep-alive timeout, drain);
+                // reconnect and keep going
+                rep.io_errors += 1;
+                conn = None;
+                continue;
+            }
+        };
+        match resp.status {
+            200 => {
+                rep.ok += 1;
+                rep.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            429 => {
+                rep.shed += 1;
+                if !shed_is_well_formed(&resp) {
+                    rep.malformed_shed += 1;
+                }
+            }
+            s if (400..500).contains(&s) => rep.other_4xx += 1,
+            _ => rep.server_5xx += 1,
+        }
+        if resp.close {
+            conn = None;
+        }
+    }
+    rep
+}
+
+/// Poll `GET /healthz` until the server answers 200 (a just-booted
+/// server must not count as a failed run).
+fn wait_healthz(addr: &str, budget: Duration) -> Result<()> {
+    let deadline = Instant::now() + budget;
+    loop {
+        if let Ok((mut stream, mut reader)) = connect(addr) {
+            let req =
+                "GET /healthz HTTP/1.1\r\nHost: loadgen\r\nConnection: close\r\n\r\n".to_string();
+            if stream.write_all(req.as_bytes()).is_ok() {
+                if let Ok(resp) = read_response(&mut reader) {
+                    if resp.status == 200 {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+        if Instant::now() >= deadline {
+            bail!("server at {addr} did not answer /healthz within {budget:?}");
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+fn main() -> Result<()> {
+    lram::util::logger::init();
+    let args = Args::parse();
+    let addr = args.str("addr", "127.0.0.1:8077");
+    let connections = args.usize("connections", 32)?.max(1);
+    let duration = Duration::from_secs_f64(args.f64("duration-secs", 10.0)?);
+    let top_k = args.usize("top-k", 3)?;
+    let text = args.str("text", "the [MASK] sat on the mat");
+    let fail_on_5xx = args.bool("fail-on-5xx", false)?;
+    let connection_close = args.bool("connection-close", false)?;
+    if !text.contains("[MASK]") {
+        bail!("--text must contain a [MASK] token");
+    }
+
+    wait_healthz(&addr, Duration::from_secs_f64(args.f64("wait-healthz-secs", 30.0)?))?;
+
+    let body = Json::obj(vec![
+        ("text", Json::Str(text.clone())),
+        ("top_k", Json::Num(top_k as f64)),
+    ])
+    .to_string();
+    let conn_header = if connection_close { "Connection: close\r\n" } else { "" };
+    let request = format!(
+        "POST /predict HTTP/1.1\r\nHost: loadgen\r\nContent-Type: application/json\r\n\
+         {conn_header}Content-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+
+    println!(
+        "loadgen: {connections} {} connections against http://{addr} for {:.1}s",
+        if connection_close { "close-per-request (seed-style)" } else { "keep-alive" },
+        duration.as_secs_f64()
+    );
+    let t0 = Instant::now();
+    let deadline = t0 + duration;
+    let mut handles = Vec::with_capacity(connections);
+    for _ in 0..connections {
+        let addr = addr.clone();
+        let request = request.clone();
+        handles.push(std::thread::spawn(move || client_loop(&addr, &request, deadline)));
+    }
+    let mut total = ClientReport::default();
+    for h in handles {
+        total.merge(h.join().expect("client thread panicked"));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    total.latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let qps = total.ok as f64 / elapsed;
+    let p50 = percentile(&total.latencies_ms, 0.50);
+    let p95 = percentile(&total.latencies_ms, 0.95);
+    let p99 = percentile(&total.latencies_ms, 0.99);
+    let max = total.latencies_ms.last().copied().unwrap_or(0.0);
+    let mean = if total.ok > 0 {
+        total.latencies_ms.iter().sum::<f64>() / total.ok as f64
+    } else {
+        0.0
+    };
+    let requests = total.requests();
+    let shed_rate = if requests > 0 { total.shed as f64 / requests as f64 } else { 0.0 };
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["qps (successful)".into(), format!("{qps:.1}")]);
+    t.row(&["requests".into(), requests.to_string()]);
+    t.row(&["ok (200)".into(), total.ok.to_string()]);
+    t.row(&["shed (429)".into(), total.shed.to_string()]);
+    t.row(&["shed rate".into(), format!("{:.2}%", shed_rate * 100.0)]);
+    t.row(&["malformed 429".into(), total.malformed_shed.to_string()]);
+    t.row(&["other 4xx".into(), total.other_4xx.to_string()]);
+    t.row(&["5xx".into(), total.server_5xx.to_string()]);
+    t.row(&["p50 latency (ms)".into(), format!("{p50:.2}")]);
+    t.row(&["p95 latency (ms)".into(), format!("{p95:.2}")]);
+    t.row(&["p99 latency (ms)".into(), format!("{p99:.2}")]);
+    t.row(&["max latency (ms)".into(), format!("{max:.2}")]);
+    t.row(&["reconnects".into(), total.reconnects.to_string()]);
+    t.row(&["io errors".into(), total.io_errors.to_string()]);
+    t.print();
+
+    if let Some(out) = args.flags.get("out") {
+        let mut report = BenchReport::new("serve_load");
+        report.entry(
+            "loadgen",
+            &[
+                ("connections", connections as f64),
+                ("keep_alive", if connection_close { 0.0 } else { 1.0 }),
+                ("duration_s", elapsed),
+                ("requests", requests as f64),
+                ("ok", total.ok as f64),
+                ("shed", total.shed as f64),
+                ("shed_rate", shed_rate),
+                ("malformed_shed", total.malformed_shed as f64),
+                ("other_4xx", total.other_4xx as f64),
+                ("server_5xx", total.server_5xx as f64),
+                ("reconnects", total.reconnects as f64),
+                ("io_errors", total.io_errors as f64),
+                ("qps", qps),
+                ("p50_ms", p50),
+                ("p95_ms", p95),
+                ("p99_ms", p99),
+                ("max_ms", max),
+                ("mean_ms", mean),
+            ],
+        );
+        report.write(out).with_context(|| format!("writing {out}"))?;
+        println!("report written to {out}");
+    }
+
+    if total.ok == 0 {
+        eprintln!("LOADGEN FAILURE: no successful request in {elapsed:.1}s");
+        std::process::exit(2);
+    }
+    if fail_on_5xx && (total.server_5xx > 0 || total.malformed_shed > 0) {
+        eprintln!(
+            "LOADGEN GATE FAILURE: {} 5xx responses, {} malformed 429s",
+            total.server_5xx, total.malformed_shed
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -21,9 +21,17 @@
 //! Failure discipline: every load-path mismatch — missing file, size
 //! mismatch (truncation), checksum mismatch (corruption), version skew,
 //! tokenizer drift — is a loud [`anyhow::Error`], never a silently
-//! misweighted model.  Save ordering writes the manifest *last*, so a
-//! crashed save leaves an unopenable directory instead of a plausible
-//! but incomplete checkpoint.
+//! misweighted model.  Saves are *staged*: blobs and the manifest are
+//! written into a `<dir>.tmp-*` sibling and atomically `rename`d into
+//! place at [`CheckpointWriter::finish`], so a save killed at any point
+//! while writing leaves an existing checkpoint at `<dir>` untouched and
+//! openable (the manifest is still written last within the stage, so a
+//! half-staged directory can never be opened either).  A kill in the
+//! one non-atomic commit window (between moving the old checkpoint
+//! aside and moving the stage in) leaves two *complete* copies at
+//! sibling names; the next save restores one to the live name before
+//! staging.  Stale debris is swept only right after a successful
+//! commit, when a complete checkpoint is guaranteed at `<dir>`.
 //!
 //! Checksums are FNV-1a 64 (corruption detection, not cryptography).
 //! Tensors up to [`EAGER_VERIFY_BYTES`] are verified at open; larger
@@ -320,7 +328,12 @@ fn blob_file_name(name: &str) -> String {
 
 // -- writer ----------------------------------------------------------------
 
-/// Streams tensors into a checkpoint directory, then seals the manifest.
+/// Streams tensors into a *staging* directory next to the target, then
+/// seals the manifest and atomically renames the stage into place.
+/// Overwriting an existing checkpoint is crash-safe: until the final
+/// rename, the old checkpoint at `dir` stays untouched and openable; a
+/// save killed mid-write leaves only a `<dir>.tmp-*` sibling, which the
+/// next save sweeps.
 ///
 /// ```no_run
 /// # use lram::checkpoint::{CheckpointWriter, ModelDesc};
@@ -332,25 +345,126 @@ fn blob_file_name(name: &str) -> String {
 /// # Ok(()) }
 /// ```
 pub struct CheckpointWriter {
-    dir: PathBuf,
+    /// Where the checkpoint lands at [`Self::finish`].
+    final_dir: PathBuf,
+    /// Where blobs are written until then.
+    stage: PathBuf,
     tensors: Vec<TensorSpec>,
+    committed: bool,
+}
+
+/// Monotonic suffix so sequential (or accidentally overlapping) writers
+/// in one process never share a staging directory.  Note that
+/// *concurrent* saves into the same final path are still unsupported:
+/// whichever commits last wins, and its post-commit sweep removes the
+/// other's leftovers.
+static STAGE_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// `<dir>.{tag}-<pid>-<n>`, as a sibling of `dir`.
+fn sibling_dir(dir: &Path, tag: &str) -> PathBuf {
+    let n = STAGE_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let mut name = dir.as_os_str().to_os_string();
+    name.push(format!(".{tag}-{}-{n}", std::process::id()));
+    PathBuf::from(name)
+}
+
+/// `<dir>.tmp-*` / `<dir>.old-*` siblings left by saves that were
+/// killed mid-write or mid-commit.
+fn stale_commit_siblings(dir: &Path) -> Vec<PathBuf> {
+    let parent = match dir.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    let name = match dir.file_name().and_then(|n| n.to_str()) {
+        Some(n) => n,
+        None => return Vec::new(),
+    };
+    let entries = match std::fs::read_dir(parent) {
+        Ok(e) => e,
+        Err(_) => return Vec::new(),
+    };
+    entries
+        .flatten()
+        .filter(|e| {
+            e.file_name().to_str().is_some_and(|n| {
+                n.starts_with(&format!("{name}.tmp-")) || n.starts_with(&format!("{name}.old-"))
+            })
+        })
+        .map(|e| e.path())
+        .collect()
+}
+
+/// Best-effort sweep of stale commit debris.  Only called right after a
+/// successful commit, when a complete checkpoint sits at `dir` — never
+/// while `dir` might be missing, so recovery copies are never destroyed.
+fn sweep_stale_stages(dir: &Path) {
+    for p in stale_commit_siblings(dir) {
+        let _ = std::fs::remove_dir_all(p);
+    }
+}
+
+/// Repair a save that was killed *between* the two commit renames: the
+/// live name is empty but a complete previous checkpoint (manifest
+/// present) sits at a `<dir>.old-*` sibling.  Restore it so the live
+/// name always holds the best complete checkpoint available.  A
+/// complete-but-uncommitted `<dir>.tmp-*` stage is restored only if no
+/// `.old-*` exists (prefer the checkpoint that was actually committed
+/// once over one that never was).
+fn recover_interrupted_commit(dir: &Path) {
+    if dir.exists() {
+        return;
+    }
+    let mut old = None;
+    let mut tmp = None;
+    for p in stale_commit_siblings(dir) {
+        if !p.join(MANIFEST_FILE).is_file() {
+            continue; // incomplete stage: not a usable checkpoint
+        }
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+        if name.contains(".old-") && old.is_none() {
+            old = Some(p);
+        } else if name.contains(".tmp-") && tmp.is_none() {
+            tmp = Some(p);
+        }
+    }
+    if let Some(source) = old.or(tmp) {
+        match std::fs::rename(&source, dir) {
+            Ok(()) => log::warn!(
+                "recovered checkpoint {} from interrupted save ({})",
+                dir.display(),
+                source.display()
+            ),
+            Err(e) => log::warn!(
+                "could not recover {} from {}: {e}",
+                dir.display(),
+                source.display()
+            ),
+        }
+    }
 }
 
 impl CheckpointWriter {
     pub fn new(dir: &Path) -> Result<Self> {
-        std::fs::create_dir_all(dir)
-            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
-        // re-saving into an existing checkpoint dir: retract the old
-        // manifest *first*, so a crash mid-save leaves an unopenable
-        // directory rather than an old manifest over a mix of old and
-        // new blobs (large blobs are only length-checked at open, so
-        // that mix could otherwise load as silently mispaired weights)
-        let manifest = dir.join(MANIFEST_FILE);
-        if manifest.exists() {
-            std::fs::remove_file(&manifest)
-                .with_context(|| format!("retracting stale {}", manifest.display()))?;
+        if let Some(parent) = dir.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
         }
-        Ok(CheckpointWriter { dir: dir.to_path_buf(), tensors: Vec::new() })
+        // a previous save may have been killed between its two commit
+        // renames, leaving the live name empty but a complete checkpoint
+        // at a sibling: restore it first (never delete recovery copies
+        // here — sweeping happens only after a successful commit)
+        recover_interrupted_commit(dir);
+        let stage = sibling_dir(dir, "tmp");
+        std::fs::create_dir_all(&stage)
+            .with_context(|| format!("creating checkpoint staging dir {}", stage.display()))?;
+        Ok(CheckpointWriter {
+            final_dir: dir.to_path_buf(),
+            stage,
+            tensors: Vec::new(),
+            committed: false,
+        })
     }
 
     fn write_blob(
@@ -383,7 +497,7 @@ impl CheckpointWriter {
             bytes.len(),
             shape
         );
-        let path = self.dir.join(&spec.file);
+        let path = self.stage.join(&spec.file);
         std::fs::write(&path, bytes).with_context(|| format!("writing {}", path.display()))?;
         self.tensors.push(spec);
         Ok(())
@@ -397,26 +511,70 @@ impl CheckpointWriter {
         self.write_blob(name, shape, TensorDtype::U32, &u32s_as_le_bytes(data))
     }
 
-    /// Seal the checkpoint: derive the content id and write the manifest
-    /// (last, so partial saves can never be opened).
-    pub fn finish(self, step: u64, tokenizer_hash: &str, model: ModelDesc) -> Result<Manifest> {
+    /// Seal the checkpoint: derive the content id, write the manifest
+    /// (last, so a half-staged directory can never be opened), then
+    /// atomically rename the stage over `dir`.  An existing checkpoint
+    /// at `dir` stays openable right up to the commit renames.
+    pub fn finish(mut self, step: u64, tokenizer_hash: &str, model: ModelDesc) -> Result<Manifest> {
         let mut manifest = Manifest {
             version: FORMAT_VERSION,
             checkpoint_id: String::new(),
             step,
             tokenizer_hash: tokenizer_hash.to_string(),
             model,
-            tensors: self.tensors,
+            tensors: std::mem::take(&mut self.tensors),
         };
         // content id over the manifest with the id field still empty:
         // any change to config, step, tokenizer or tensor bytes (via the
         // per-tensor checksums) changes the id
         manifest.checkpoint_id =
             format!("ck-{:016x}", fnv1a64(manifest.to_json().to_string().as_bytes()));
-        let path = self.dir.join(MANIFEST_FILE);
+        let path = self.stage.join(MANIFEST_FILE);
         std::fs::write(&path, manifest.to_json().to_string())
             .with_context(|| format!("writing {}", path.display()))?;
+        // commit: the stage is complete, swap it into place.  rename()
+        // cannot replace a non-empty directory, so an existing
+        // checkpoint is first moved aside (atomic), then the stage moves
+        // in (atomic), then the old copy is deleted.  A kill between
+        // the two renames is the one non-atomic window: it leaves the
+        // complete old copy at `<dir>.old-*` and the complete new one at
+        // `<dir>.tmp-*` — never a torn mix under the live name.
+        if self.final_dir.exists() {
+            let old = sibling_dir(&self.final_dir, "old");
+            std::fs::rename(&self.final_dir, &old).with_context(|| {
+                format!("moving previous checkpoint {} aside", self.final_dir.display())
+            })?;
+            if let Err(e) = std::fs::rename(&self.stage, &self.final_dir) {
+                // put the old checkpoint back rather than leaving nothing
+                // at the live name
+                let _ = std::fs::rename(&old, &self.final_dir);
+                return Err(e).with_context(|| {
+                    format!("committing checkpoint into {}", self.final_dir.display())
+                });
+            }
+            let _ = std::fs::remove_dir_all(&old);
+        } else {
+            std::fs::rename(&self.stage, &self.final_dir).with_context(|| {
+                format!("committing checkpoint into {}", self.final_dir.display())
+            })?;
+        }
+        self.committed = true;
+        // a complete checkpoint now sits at the live name: stale debris
+        // from earlier killed saves is safe to sweep.  (Concurrent saves
+        // into the same path are not supported — last committer wins.)
+        sweep_stale_stages(&self.final_dir);
         Ok(manifest)
+    }
+}
+
+impl Drop for CheckpointWriter {
+    fn drop(&mut self) {
+        // a writer abandoned without finish() (error path) must not
+        // leave its staging directory behind; a SIGKILL mid-save does,
+        // and the next save into the same path sweeps it
+        if !self.committed {
+            let _ = std::fs::remove_dir_all(&self.stage);
+        }
     }
 }
 
@@ -766,21 +924,129 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// `<dir>.tmp-*` / `<dir>.old-*` siblings of a checkpoint path.
+    fn stale_siblings(dir: &Path) -> Vec<PathBuf> {
+        let parent = dir.parent().unwrap();
+        let name = dir.file_name().unwrap().to_str().unwrap();
+        std::fs::read_dir(parent)
+            .unwrap()
+            .flatten()
+            .filter(|e| {
+                let n = e.file_name();
+                let n = n.to_str().unwrap_or("");
+                n.starts_with(&format!("{name}.tmp-")) || n.starts_with(&format!("{name}.old-"))
+            })
+            .map(|e| e.path())
+            .collect()
+    }
+
     #[test]
-    fn resave_retracts_the_old_manifest_first() {
-        // starting a save into an existing checkpoint dir must make it
-        // unopenable until finish() — otherwise a crash mid-save leaves
-        // the OLD manifest over a mix of old and new blobs, which can
-        // open cleanly (large blobs are only length-checked) and serve
-        // silently mispaired weights
-        let dir = tmp_dir("resave");
-        write_demo(&dir);
+    fn overwrite_keeps_the_old_checkpoint_openable_until_commit() {
+        // the whole point of staged saves: while a re-save is writing
+        // blobs, the existing checkpoint stays intact and openable
+        let dir = tmp_dir("staged");
+        let original = write_demo(&dir);
+        let mut w = CheckpointWriter::new(&dir).unwrap();
+        w.write_f32("embed", &[8, 8], &[1.5; 64]).unwrap();
+        let mid = Checkpoint::open(&dir).expect("old checkpoint must open mid-save");
+        assert_eq!(mid.manifest, original, "mid-save open must see the OLD manifest");
+        assert_eq!(mid.read_f32("embed").unwrap()[2], -2.0, "old blob bytes, not new");
+        // completing the save swaps the new content in and leaves no
+        // staging or backup debris behind
+        w.write_f32("values", &[16, 4], &vec![0.25; 64]).unwrap();
+        w.write_u32("adam_t", &[16], &(0..16u32).collect::<Vec<_>>()).unwrap();
+        let new = w.finish(43, "0123456789abcdef", demo_model()).unwrap();
+        assert_ne!(new.checkpoint_id, original.checkpoint_id);
+        let after = Checkpoint::open(&dir).unwrap();
+        assert_eq!(after.manifest, new);
+        assert_eq!(after.read_f32("embed").unwrap()[2], 1.5);
+        assert!(stale_siblings(&dir).is_empty(), "{:?}", stale_siblings(&dir));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mid_save_kill_leaves_the_old_checkpoint_intact() {
+        // SIGKILL simulation: a killed process runs no Drop, so forget()
+        // reproduces its exact filesystem state — blobs half-staged in
+        // <dir>.tmp-*, nothing committed
+        let dir = tmp_dir("killed");
+        let original = write_demo(&dir);
+        let before = Checkpoint::open(&dir).unwrap().read_f32("embed").unwrap();
+        let mut w = CheckpointWriter::new(&dir).unwrap();
+        w.write_f32("embed", &[8, 8], &[9.0; 64]).unwrap();
+        std::mem::forget(w); // <- the "kill"
+        assert_eq!(stale_siblings(&dir).len(), 1, "the killed save left its stage");
+        // the original checkpoint is bit-identical and opens cleanly
+        let ck = Checkpoint::open(&dir).expect("old checkpoint survives the kill");
+        assert_eq!(ck.manifest, original);
+        assert_eq!(ck.read_f32("embed").unwrap(), before);
+        ck.verify().unwrap();
+        // the next save into the same path sweeps the stale stage and
+        // completes normally
+        let resaved = write_demo(&dir);
+        assert_eq!(resaved.checkpoint_id, original.checkpoint_id);
+        Checkpoint::open(&dir).unwrap();
+        assert!(stale_siblings(&dir).is_empty(), "{:?}", stale_siblings(&dir));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kill_between_commit_renames_is_recovered_on_next_save() {
+        // the one non-atomic window in finish(): the old checkpoint was
+        // moved aside but the process died before the stage moved in —
+        // the live name is empty, a complete copy sits at <dir>.old-*
+        let dir = tmp_dir("window");
+        let original = write_demo(&dir);
+        let name = dir.file_name().unwrap().to_str().unwrap().to_string();
+        let old = dir.parent().unwrap().join(format!("{name}.old-999-0"));
+        std::fs::rename(&dir, &old).unwrap();
+        // an incomplete stage (no manifest) from the same crash must
+        // never be chosen for recovery
+        let junk = dir.parent().unwrap().join(format!("{name}.tmp-999-0"));
+        std::fs::create_dir_all(&junk).unwrap();
+        std::fs::write(junk.join("embed.bin"), [0u8; 8]).unwrap();
+        assert!(Checkpoint::open(&dir).is_err(), "the kill left nothing at the live name");
+        // starting the next save restores the committed copy first...
         let w = CheckpointWriter::new(&dir).unwrap();
-        assert!(Checkpoint::open(&dir).is_err(), "mid-save checkpoint must not open");
+        let recovered = Checkpoint::open(&dir).expect("recovery must restore the old checkpoint");
+        assert_eq!(recovered.manifest, original);
         drop(w);
-        write_demo(&dir); // a *completed* re-save opens again
+        // ...and completing a save leaves a clean directory layout
+        let resaved = write_demo(&dir);
+        assert_eq!(resaved.checkpoint_id, original.checkpoint_id);
+        Checkpoint::open(&dir).unwrap();
+        assert!(stale_siblings(&dir).is_empty(), "{:?}", stale_siblings(&dir));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn abandoned_writer_cleans_its_staging_dir() {
+        // the error path (writer dropped without finish) must not
+        // accumulate staging directories
+        let dir = tmp_dir("abandon");
+        write_demo(&dir);
+        let mut w = CheckpointWriter::new(&dir).unwrap();
+        w.write_f32("embed", &[8, 8], &[0.0; 64]).unwrap();
+        drop(w);
+        assert!(stale_siblings(&dir).is_empty(), "{:?}", stale_siblings(&dir));
         Checkpoint::open(&dir).unwrap();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn first_save_into_a_fresh_path_needs_no_existing_dir() {
+        // CheckpointWriter::new used to create the final dir eagerly;
+        // the staged writer must still handle a target that never
+        // existed (and a nested parent)
+        let dir = tmp_dir("fresh").join("nested").join("ckpt");
+        let saved = {
+            let mut w = CheckpointWriter::new(&dir).unwrap();
+            let data: Vec<f32> = (0..64).map(|i| i as f32 * 0.5 - 3.0).collect();
+            w.write_f32("embed", &[8, 8], &data).unwrap();
+            w.finish(1, "0123456789abcdef", demo_model()).unwrap()
+        };
+        assert_eq!(Checkpoint::open(&dir).unwrap().manifest, saved);
+        std::fs::remove_dir_all(dir.parent().unwrap().parent().unwrap()).ok();
     }
 
     #[test]

@@ -94,13 +94,19 @@ impl Trainer {
         )
     }
 
-    /// Save the current state as a checkpoint.
+    /// Save the current state as a checkpoint.  The write is staged to a
+    /// temp sibling and `rename`d into place, so a crash mid-save never
+    /// truncates an existing `latest.ckpt` in place.
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
         let bytes = self.state.to_bytes(&self.train_art.manifest)?;
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        std::fs::write(path, bytes)?;
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(format!(".tmp-{}", std::process::id()));
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, path)?;
         Ok(())
     }
 

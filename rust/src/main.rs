@@ -24,7 +24,7 @@ use lram::data::DataPipeline;
 use lram::lattice::{exotic, support};
 use lram::pkm::cost;
 use lram::runtime::Runtime;
-use lram::server::{serve, ArtifactInit, Batcher, BatcherConfig, EngineConfig};
+use lram::server::{serve_with, ArtifactInit, Batcher, BatcherConfig, EngineConfig, HttpConfig};
 use lram::util::cli::Args;
 use lram::util::timing::Table;
 
@@ -65,7 +65,9 @@ COMMANDS:
   serve      MLM fill-mask server with dynamic batching
              (--backend artifact | engine | auto; --checkpoint DIR serves
               trained engine weights; --random-init opts into untrained
-              seed weights)
+              seed weights; --http-workers N, --max-pending N and
+              --keep-alive-timeout SECS tune the keep-alive worker-pool
+              front door — see docs/serving.md)
   checkpoint inspect a checkpoint directory:
              lram checkpoint inspect DIR [--verify]
   artifacts  list compiled AOT artifacts
@@ -343,6 +345,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spec = CorpusSpec { seed: cfg.corpus_seed, ..CorpusSpec::default() };
     let pipeline = DataPipeline::new(spec, cfg.vocab_size, 8, 1, 0.15)?;
     let bpe = Arc::new(pipeline.bpe);
+    // front-door tunables: worker-pool size, bounded admission, and the
+    // keep-alive idle timeout (see docs/serving.md)
+    let http = HttpConfig::default();
+    let http = HttpConfig {
+        workers: args.usize("http-workers", http.workers)?,
+        keep_alive_timeout: std::time::Duration::from_secs_f64(
+            args.f64("keep-alive-timeout", http.keep_alive_timeout.as_secs_f64())?,
+        ),
+        ..http
+    };
+    let batcher_cfg = BatcherConfig {
+        max_pending: args.usize("max-pending", BatcherConfig::default().max_pending)?,
+        ..BatcherConfig::default()
+    };
     let batcher = Batcher::spawn_for_flag(
         &backend,
         ArtifactInit {
@@ -354,9 +370,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine_ckpt,
         random_init,
         bpe.clone(),
-        BatcherConfig::default(),
+        batcher_cfg,
     )?;
-    serve(&addr, batcher, bpe)
+    serve_with(&addr, batcher, bpe, http)
 }
 
 /// `lram checkpoint inspect DIR [--verify]` — print the manifest

@@ -4,6 +4,7 @@
 //! ([`super::backend::InferenceBackend`]): the AOT PJRT artifact or the
 //! pure-rust lattice engine.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -12,6 +13,7 @@ use anyhow::{anyhow, Result};
 
 use crate::data::mlm::fit_length;
 use crate::tokenizer::{Bpe, CLS_ID, MASK_ID, SEP_ID};
+use crate::util::hist::Histogram;
 
 use super::api::{MaskPrediction, PredictRequest, PredictResponse, TokenScore};
 use super::backend::BackendInit;
@@ -21,13 +23,49 @@ pub struct BatcherConfig {
     /// Max time a request waits for batch-mates.
     pub max_wait: Duration,
     pub top_k_cap: usize,
+    /// Bounded admission: max requests admitted but not yet replied to
+    /// (queued + in-flight).  Submissions beyond this are shed with
+    /// [`SubmitError::Overloaded`] — the HTTP layer turns that into a
+    /// `429 Too Many Requests` with `Retry-After` — instead of growing
+    /// an unbounded queue whose tail latency nobody survives.
+    pub max_pending: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_wait: Duration::from_millis(20), top_k_cap: 20 }
+        BatcherConfig { max_wait: Duration::from_millis(20), top_k_cap: 20, max_pending: 1024 }
     }
 }
+
+/// Why a submission did not produce predictions.  The split is the HTTP
+/// status boundary: the front door maps `BadRequest` to 400,
+/// `Overloaded` to 429 + `Retry-After`, and `Internal` to 500.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The request itself is invalid (e.g. no `[MASK]` token).
+    BadRequest(String),
+    /// The bounded admission queue is full; the request was shed
+    /// *before* tokenization and never reached the backend.
+    Overloaded { queue_depth: usize, max_pending: usize },
+    /// The batcher or backend failed; the request was admitted but
+    /// could not be answered.
+    Internal(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::BadRequest(m) => write!(f, "{m}"),
+            SubmitError::Overloaded { queue_depth, max_pending } => write!(
+                f,
+                "server overloaded: {queue_depth} requests pending (admission cap {max_pending})"
+            ),
+            SubmitError::Internal(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 struct Pending {
     tokens: Vec<i32>,
@@ -38,9 +76,15 @@ struct Pending {
 }
 
 /// The batcher: submit() from any thread; a scheduler thread drains the
-/// queue into backend-sized batches.
+/// queue into backend-sized batches.  Admission is bounded: at most
+/// `max_pending` requests may be queued or in flight at once, the rest
+/// are shed at the door.
 pub struct Batcher {
     tx: Sender<Pending>,
+    /// requests admitted but not yet replied to (queued + in-flight);
+    /// incremented at admission, decremented by the executor at reply
+    pending: Arc<AtomicUsize>,
+    max_pending: usize,
     /// rolling access statistics (Table-5 style observability in serving)
     pub stats: Arc<Mutex<BatchStats>>,
 }
@@ -56,6 +100,12 @@ pub struct BatchStats {
     pub max_batch_fill: usize,
     /// masks reported as truncated (explicit per-mask errors)
     pub truncated_masks: u64,
+    /// requests shed at admission (bounded queue full, 429 to clients);
+    /// shed requests never reach the backend and are not in `requests`
+    pub shed: u64,
+    /// request latency distribution (enqueue → reply), for p50/p95/p99
+    /// in `/stats`
+    pub latency: Histogram,
     /// backend name ("artifact" / "engine")
     pub backend: &'static str,
     /// id of the checkpoint the backend serves, when restored from one
@@ -73,7 +123,13 @@ impl Batcher {
     pub fn spawn(init: BackendInit, bpe: Arc<Bpe>, cfg: BatcherConfig) -> Result<Arc<Batcher>> {
         let (tx, rx): (Sender<Pending>, Receiver<Pending>) = channel();
         let stats = Arc::new(Mutex::new(BatchStats::default()));
-        let batcher = Arc::new(Batcher { tx, stats: stats.clone() });
+        let pending = Arc::new(AtomicUsize::new(0));
+        let batcher = Arc::new(Batcher {
+            tx,
+            pending: pending.clone(),
+            max_pending: cfg.max_pending,
+            stats: stats.clone(),
+        });
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         std::thread::spawn(move || {
             let mut backend = match init.build(&bpe) {
@@ -135,7 +191,7 @@ impl Batcher {
                 }
                 match result {
                     Ok(logp) => {
-                        let mut latency_sum = 0.0;
+                        let mut latencies = Vec::with_capacity(fill);
                         let mut truncated = 0u64;
                         for (row, p) in group.into_iter().enumerate() {
                             let mut resp = extract_predictions(
@@ -147,23 +203,36 @@ impl Batcher {
                             // queueing and batch collection are included
                             let latency = p.enqueued.elapsed().as_secs_f64() * 1e3;
                             resp.latency_ms = latency;
-                            latency_sum += latency;
+                            latencies.push(latency);
+                            // release the admission slot *before* the
+                            // reply wakes the client: a client that
+                            // pipelines its next request immediately
+                            // must never be shed against its own slot
+                            pending.fetch_sub(1, Ordering::AcqRel);
                             let _ = p.reply.send(Ok(resp));
                         }
                         let mut s = stats.lock().unwrap();
-                        s.total_request_latency_ms += latency_sum;
+                        for &l in &latencies {
+                            s.total_request_latency_ms += l;
+                            s.latency.record(l);
+                        }
                         s.truncated_masks += truncated;
                     }
                     Err(e) => {
                         let msg = format!("inference failed: {e:#}");
                         // failed requests still count toward the latency
                         // mean (`requests` was already incremented above)
-                        let mut latency_sum = 0.0;
+                        let mut latencies = Vec::with_capacity(fill);
                         for p in group {
-                            latency_sum += p.enqueued.elapsed().as_secs_f64() * 1e3;
+                            latencies.push(p.enqueued.elapsed().as_secs_f64() * 1e3);
+                            pending.fetch_sub(1, Ordering::AcqRel);
                             let _ = p.reply.send(Err(anyhow!(msg.clone())));
                         }
-                        stats.lock().unwrap().total_request_latency_ms += latency_sum;
+                        let mut s = stats.lock().unwrap();
+                        for &l in &latencies {
+                            s.total_request_latency_ms += l;
+                            s.latency.record(l);
+                        }
                     }
                 }
             }
@@ -238,23 +307,81 @@ impl Batcher {
         }
     }
 
+    /// Requests admitted but not yet replied to (queued + in-flight).
+    pub fn queue_depth(&self) -> usize {
+        self.pending.load(Ordering::Relaxed)
+    }
+
+    /// The bounded-admission cap this batcher sheds beyond.
+    pub fn max_pending(&self) -> usize {
+        self.max_pending
+    }
+
     /// Tokenize + enqueue a request; blocks until the response is ready.
+    /// Convenience wrapper over [`Self::submit_bounded`] that flattens
+    /// the typed error (tests and non-HTTP callers).
     pub fn submit(&self, bpe: &Bpe, req: &PredictRequest) -> Result<PredictResponse> {
+        self.submit_bounded(bpe, req).map_err(anyhow::Error::from)
+    }
+
+    /// Tokenize + enqueue a request under bounded admission; blocks
+    /// until the response is ready or the request is shed.
+    ///
+    /// Admission is checked *first* — shedding under overload must be
+    /// the cheapest path through this function, and a shed request
+    /// never reaches the backend (it is not even tokenized).
+    pub fn submit_bounded(
+        &self,
+        bpe: &Bpe,
+        req: &PredictRequest,
+    ) -> Result<PredictResponse, SubmitError> {
+        // claim an admission slot (lock-free; contended only at the cap)
+        let mut cur = self.pending.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_pending {
+                self.stats.lock().unwrap().shed += 1;
+                return Err(SubmitError::Overloaded {
+                    queue_depth: cur,
+                    max_pending: self.max_pending,
+                });
+            }
+            match self.pending.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        let release = |this: &Self| {
+            this.pending.fetch_sub(1, Ordering::AcqRel);
+        };
         let (tokens, mask_positions) = encode_with_masks(bpe, &req.text);
         if mask_positions.is_empty() {
-            return Err(anyhow!("request contains no [MASK] token"));
+            release(self);
+            return Err(SubmitError::BadRequest("request contains no [MASK] token".into()));
         }
         let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(Pending {
-                tokens,
-                mask_positions,
-                top_k: req.top_k,
-                reply: reply_tx,
-                enqueued: Instant::now(),
-            })
-            .map_err(|_| anyhow!("batcher is shut down"))?;
-        reply_rx.recv().map_err(|_| anyhow!("batcher dropped the request"))?
+        let sent = self.tx.send(Pending {
+            tokens,
+            mask_positions,
+            top_k: req.top_k,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+        });
+        if sent.is_err() {
+            release(self);
+            return Err(SubmitError::Internal("batcher is shut down".into()));
+        }
+        // the executor owns the slot now: it decrements after replying,
+        // so queue depth counts in-flight work, not just the channel
+        match reply_rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(SubmitError::Internal(format!("{e:#}"))),
+            Err(_) => Err(SubmitError::Internal("batcher dropped the request".into())),
+        }
     }
 }
 

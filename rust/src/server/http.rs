@@ -1,149 +1,836 @@
-//! Minimal threaded HTTP/1.1 front door for the serving router
-//! (std::net; tokio is unavailable offline).  One thread per connection —
-//! batching happens downstream in [`super::batcher`], which is where the
-//! coordination actually matters.
+//! Production HTTP/1.1 front door for the serving router (std::net;
+//! tokio is unavailable offline).
+//!
+//! The seed server spawned one thread per connection and closed the
+//! socket after every response, so under concurrent load the engine's
+//! fused lookup idled behind connection churn.  This front door is the
+//! shape production serving actually needs:
+//!
+//! * **fixed worker pool** — `workers` threads own connections taken
+//!   from a **bounded accept queue** (`conn_backlog`); when the queue is
+//!   full, new connections are shed immediately with a well-formed
+//!   `429 Too Many Requests` + `Retry-After` instead of piling into an
+//!   unbounded backlog,
+//! * **persistent keep-alive connections** — each worker runs a
+//!   pipelined request loop per connection (requests already buffered
+//!   are served back-to-back), honours `Connection: close`, and closes
+//!   idle connections after `keep_alive_timeout`,
+//! * **bounded admission** in front of the batcher — `/predict` goes
+//!   through [`Batcher::submit_bounded`]; once `max_pending` requests
+//!   are in flight the batcher sheds and the front door answers 429
+//!   with `Retry-After`, so overload degrades into fast, explicit
+//!   rejections rather than a latency collapse,
+//! * **graceful drain** — [`Server::shutdown`] stops the acceptor,
+//!   lets every in-flight request complete (workers finish the current
+//!   response, the batcher finishes the current batch), then joins all
+//!   threads.
+//!
+//! Endpoints:
+//!   POST /predict  {"text": "... [MASK] ...", "top_k": 5}
+//!   GET  /healthz
+//!   GET  /stats    batching, latency percentiles, queue/shed/connection
+//!                  counters, memory observability
 
-use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context as _, Result};
 
 use crate::tokenizer::Bpe;
-use crate::util::json;
+use crate::util::json::{self, Json};
 
 use super::api::PredictRequest;
-use super::batcher::Batcher;
+use super::batcher::{Batcher, SubmitError};
 
-/// Serve until the process is killed.  Endpoints:
-///   POST /predict  {"text": "... [MASK] ...", "top_k": 5}
-///   GET  /healthz
-///   GET  /stats
+/// Socket-level read poll interval: short enough that idle workers
+/// notice shutdown and keep-alive deadlines promptly.
+const READ_POLL: Duration = Duration::from_millis(250);
+/// Once a request line has arrived, the rest of the request must too.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
+/// A stuck or dead client must not pin a worker on write.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Request-line / header-line length cap.
+const MAX_LINE_BYTES: usize = 8 << 10;
+/// Header count cap per request.
+const MAX_HEADERS: usize = 100;
+/// `Retry-After` seconds suggested on shed responses.
+const RETRY_AFTER_SECS: u64 = 1;
+
+/// Front-door tunables (`--http-workers`, `--keep-alive-timeout`; the
+/// admission cap lives in [`super::BatcherConfig::max_pending`]).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Fixed worker-pool size; each worker serves one connection at a
+    /// time, so this bounds concurrent keep-alive connections.
+    pub workers: usize,
+    /// Idle keep-alive connections are closed after this long.
+    pub keep_alive_timeout: Duration,
+    /// Accepted connections waiting for a free worker; beyond this the
+    /// acceptor sheds with 429 + `Retry-After`.
+    pub conn_backlog: usize,
+    /// Request bodies larger than this are rejected with 413.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            workers: 32,
+            keep_alive_timeout: Duration::from_secs(5),
+            conn_backlog: 256,
+            max_body_bytes: 1 << 20,
+        }
+    }
+}
+
+/// Front-door counters, surfaced in `/stats` next to the batcher's.
+#[derive(Debug, Default)]
+pub struct HttpStats {
+    pub connections_accepted: AtomicU64,
+    /// connections shed at accept time (worker queue full)
+    pub connections_shed: AtomicU64,
+    pub active_connections: AtomicUsize,
+    /// requests served over all connections (keep-alive reuse shows up
+    /// as `http_requests` ≫ `connections_accepted`)
+    pub requests: AtomicU64,
+}
+
+/// A running front door.  Dropping the handle does *not* stop the
+/// server; call [`Server::shutdown`] for a graceful drain or
+/// [`Server::join`] to block forever (daemon mode).
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    http: Arc<HttpStats>,
+}
+
+/// Clonable trigger for a graceful drain from another thread.
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    flag: Arc<AtomicBool>,
+}
+
+impl ShutdownHandle {
+    pub fn shutdown(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Server {
+    /// Bind and start the worker pool.  `addr` may use port 0 to bind an
+    /// ephemeral port (see [`Server::local_addr`]).
+    pub fn bind(
+        addr: &str,
+        batcher: Arc<Batcher>,
+        bpe: Arc<Bpe>,
+        cfg: HttpConfig,
+    ) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding http listener on {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let workers = cfg.workers.max(1);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let http = Arc::new(HttpStats::default());
+        let router = Arc::new(Router {
+            batcher,
+            bpe,
+            http: http.clone(),
+            workers,
+            keep_alive_timeout: cfg.keep_alive_timeout,
+            max_body_bytes: cfg.max_body_bytes,
+        });
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.conn_backlog.max(1));
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut threads = Vec::with_capacity(workers + 1);
+        for i in 0..workers {
+            let rx = conn_rx.clone();
+            let router = router.clone();
+            let shutdown = shutdown.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("http-worker-{i}"))
+                    .spawn(move || worker_loop(&rx, &router, &shutdown))?,
+            );
+        }
+        {
+            let shutdown = shutdown.clone();
+            let http = http.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("http-acceptor".into())
+                    .spawn(move || acceptor_loop(&listener, &conn_tx, &http, &shutdown))?,
+            );
+        }
+        log::info!(
+            "serving on http://{local} ({workers} workers, keep-alive {:.0}s, \
+             conn backlog {}, admission cap {})",
+            cfg.keep_alive_timeout.as_secs_f64(),
+            cfg.conn_backlog.max(1),
+            router.batcher.max_pending()
+        );
+        Ok(Server { addr: local, shutdown, threads, http })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Front-door counters (shared with the worker threads).
+    pub fn http_stats(&self) -> Arc<HttpStats> {
+        self.http.clone()
+    }
+
+    /// A clonable handle that can trigger a graceful drain while some
+    /// other thread blocks in [`Server::join`].
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { flag: self.shutdown.clone() }
+    }
+
+    /// Graceful drain: stop accepting, let in-flight requests (and the
+    /// batches carrying them) complete, close connections, join all
+    /// threads.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Block until the server stops (i.e. until a [`ShutdownHandle`]
+    /// fires — or forever in daemon mode).
+    pub fn join(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve until the process is killed (daemon entry point used by `lram
+/// serve` and the examples).
 pub fn serve(addr: &str, batcher: Arc<Batcher>, bpe: Arc<Bpe>) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    log::info!("serving on http://{addr} (POST /predict)");
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(s) => s,
+    serve_with(addr, batcher, bpe, HttpConfig::default())
+}
+
+/// [`serve`] with explicit front-door tunables.
+pub fn serve_with(
+    addr: &str,
+    batcher: Arc<Batcher>,
+    bpe: Arc<Bpe>,
+    cfg: HttpConfig,
+) -> Result<()> {
+    Server::bind(addr, batcher, bpe, cfg)?.join();
+    Ok(())
+}
+
+// -- acceptor --------------------------------------------------------------
+
+fn acceptor_loop(
+    listener: &TcpListener,
+    conn_tx: &SyncSender<TcpStream>,
+    http: &HttpStats,
+    shutdown: &AtomicBool,
+) {
+    // conn_tx is dropped when this loop exits, which is what lets idle
+    // workers drain the queue and stop
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                http.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                match conn_tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(stream)) => {
+                        // every worker busy and the backlog full: shed at
+                        // the door with a well-formed 429 instead of
+                        // queueing unboundedly
+                        http.connections_shed.fetch_add(1, Ordering::Relaxed);
+                        shed_connection(stream);
+                    }
+                    Err(TrySendError::Disconnected(_)) => return,
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
             Err(e) => {
                 log::warn!("accept failed: {e}");
-                continue;
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Best-effort 429 to a connection we cannot serve; errors are ignored
+/// (the peer may already be gone).  The brief post-response drain keeps
+/// the close from turning into a TCP reset that wipes the 429 on the
+/// client side (the peer usually has its request in flight already);
+/// its tight read timeout bounds how long a shed can stall the
+/// acceptor — under sustained overload that stall is itself
+/// backpressure on the accept rate.
+fn shed_connection(mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let body = error_body("server overloaded: connection backlog full");
+    let _ = respond(&mut stream, 429, &body, true, 0);
+    drain_briefly(&mut stream);
+}
+
+// -- workers ---------------------------------------------------------------
+
+fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, router: &Router, shutdown: &AtomicBool) {
+    loop {
+        // hold the lock only while waiting; a poisoned lock (panicked
+        // sibling) must not take the whole pool down
+        let next = {
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv_timeout(Duration::from_millis(100))
+        };
+        match next {
+            Ok(stream) => {
+                router.http.active_connections.fetch_add(1, Ordering::AcqRel);
+                if let Err(e) = handle_connection(stream, router, shutdown) {
+                    log::debug!("connection error: {e:#}");
+                }
+                router.http.active_connections.fetch_sub(1, Ordering::AcqRel);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            // acceptor gone and queue drained
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// The per-connection keep-alive request loop.
+fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) -> Result<()> {
+    // accepted sockets inherit the listener's non-blocking mode on
+    // BSD/macOS/Windows, which would defeat SO_RCVTIMEO and busy-spin
+    // the poll loop; force blocking mode first (no-op on Linux)
+    stream.set_nonblocking(false)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(READ_POLL))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let keep_alive_secs = router.keep_alive_timeout.as_secs().max(1);
+    loop {
+        let req = match read_request(
+            &mut reader,
+            router.keep_alive_timeout,
+            shutdown,
+            router.max_body_bytes,
+        ) {
+            Ok(req) => req,
+            // clean end of a keep-alive connection: peer closed between
+            // requests, idle past the deadline, or server draining
+            Err(ReadError::Idle) => return Ok(()),
+            Err(ReadError::Bad { status, message }) => {
+                let _ = respond(&mut stream, status, &error_body(&message), true, 0);
+                // drain what the client is still sending (e.g. the body
+                // of an oversized POST) before closing, so the error
+                // response isn't wiped out by a TCP reset on unread data
+                drain_briefly(&mut reader);
+                return Ok(());
+            }
+            Err(ReadError::Io(e)) => {
+                return Err(anyhow!(e).context("reading request"));
             }
         };
-        let batcher = batcher.clone();
-        let bpe = bpe.clone();
-        std::thread::spawn(move || {
-            if let Err(e) = handle(stream, &batcher, &bpe) {
-                log::debug!("connection error: {e:#}");
+        router.http.requests.fetch_add(1, Ordering::Relaxed);
+        let (status, body) = router.route(&req);
+        // a draining server finishes this response, then closes
+        let close = !req.keep_alive || shutdown.load(Ordering::Relaxed);
+        respond(&mut stream, status, &body, close, keep_alive_secs)
+            .map_err(|e| anyhow!(e).context("writing response"))?;
+        if close {
+            return Ok(());
+        }
+    }
+}
+
+// -- request parsing -------------------------------------------------------
+
+#[derive(Debug)]
+struct HttpRequest {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+#[derive(Debug)]
+enum ReadError {
+    /// Clean end of the connection: EOF between requests, idle past the
+    /// keep-alive deadline, or shutdown while idle.
+    Idle,
+    /// The peer sent something we must reject; respond and close.
+    Bad { status: u16, message: String },
+    /// Transport failure mid-request; close without responding.
+    Io(std::io::Error),
+}
+
+fn transient(kind: ErrorKind) -> bool {
+    matches!(kind, ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted)
+}
+
+/// Best-effort, bounded read-and-discard of whatever the peer is still
+/// sending, so closing after an error response doesn't turn into a TCP
+/// reset that discards the response on the client side.  Capped in both
+/// bytes and wall time; all errors end the drain.
+fn drain_briefly<R: Read>(r: &mut R) {
+    const DRAIN_CAP_BYTES: usize = 256 << 10;
+    const DRAIN_CAP_TIME: Duration = Duration::from_millis(300);
+    let deadline = Instant::now() + DRAIN_CAP_TIME;
+    let mut scratch = [0u8; 8192];
+    let mut drained = 0usize;
+    while drained < DRAIN_CAP_BYTES && Instant::now() < deadline {
+        match r.read(&mut scratch) {
+            Ok(0) => return,
+            Ok(n) => drained += n,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Read one CRLF-terminated line through `fill_buf`/`consume`, riding
+/// out socket read timeouts until `deadline`.  `idle_ok` marks the
+/// between-requests wait, where EOF / deadline / shutdown are a clean
+/// [`ReadError::Idle`] rather than an error.
+fn read_line_bounded<R: BufRead>(
+    r: &mut R,
+    deadline: Instant,
+    shutdown: &AtomicBool,
+    idle_ok: bool,
+) -> Result<String, ReadError> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let (consumed, done) = {
+            let buf = match r.fill_buf() {
+                Ok(b) => b,
+                Err(e) if transient(e.kind()) => {
+                    if line.is_empty() && idle_ok && shutdown.load(Ordering::Relaxed) {
+                        return Err(ReadError::Idle);
+                    }
+                    if Instant::now() >= deadline {
+                        return if line.is_empty() && idle_ok {
+                            Err(ReadError::Idle)
+                        } else {
+                            Err(ReadError::Bad {
+                                status: 408,
+                                message: "request timed out".into(),
+                            })
+                        };
+                    }
+                    continue;
+                }
+                Err(e) => return Err(ReadError::Io(e)),
+            };
+            if buf.is_empty() {
+                // EOF: clean between requests, fatal mid-request
+                return if line.is_empty() && idle_ok {
+                    Err(ReadError::Idle)
+                } else {
+                    Err(ReadError::Io(std::io::Error::new(
+                        ErrorKind::UnexpectedEof,
+                        "connection closed mid-request",
+                    )))
+                };
             }
-        });
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    line.extend_from_slice(&buf[..pos]);
+                    (pos + 1, true)
+                }
+                None => {
+                    line.extend_from_slice(buf);
+                    (buf.len(), false)
+                }
+            }
+        };
+        r.consume(consumed);
+        if line.len() > MAX_LINE_BYTES {
+            return Err(ReadError::Bad {
+                status: 431,
+                message: format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+            });
+        }
+        // enforce the deadline on successful reads too: a slow-drip
+        // client that keeps one byte per poll flowing must not be able
+        // to pin a worker past the request deadline
+        if !done && Instant::now() >= deadline {
+            return Err(ReadError::Bad { status: 408, message: "request timed out".into() });
+        }
+        if done {
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return String::from_utf8(line).map_err(|_| ReadError::Bad {
+                status: 400,
+                message: "request is not utf-8".into(),
+            });
+        }
+    }
+}
+
+fn read_exact_bounded<R: BufRead>(
+    r: &mut R,
+    buf: &mut [u8],
+    deadline: Instant,
+) -> Result<(), ReadError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(ReadError::Io(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "connection closed mid-body",
+                )))
+            }
+            Ok(n) => {
+                filled += n;
+                // slow-drip bodies must hit the deadline even when
+                // every read succeeds
+                if filled < buf.len() && Instant::now() >= deadline {
+                    return Err(ReadError::Bad {
+                        status: 408,
+                        message: "request body timed out".into(),
+                    });
+                }
+            }
+            Err(e) if transient(e.kind()) => {
+                if Instant::now() >= deadline {
+                    return Err(ReadError::Bad {
+                        status: 408,
+                        message: "request body timed out".into(),
+                    });
+                }
+            }
+            Err(e) => return Err(ReadError::Io(e)),
+        }
     }
     Ok(())
 }
 
-fn handle(mut stream: TcpStream, batcher: &Batcher, bpe: &Bpe) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
+/// Parse one HTTP/1.x request off the connection.  Keep-alive defaults
+/// on for HTTP/1.1 and off for HTTP/1.0; a `Connection` header
+/// overrides either way.
+fn read_request<R: BufRead>(
+    r: &mut R,
+    idle_timeout: Duration,
+    shutdown: &AtomicBool,
+    max_body: usize,
+) -> Result<HttpRequest, ReadError> {
+    let idle_deadline = Instant::now() + idle_timeout;
+    let line = read_line_bounded(r, idle_deadline, shutdown, true)?;
+    // the request line is in: the rest must arrive promptly
+    let deadline = Instant::now() + REQUEST_DEADLINE;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
-
-    // headers: we only need Content-Length
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/") {
+        return Err(ReadError::Bad {
+            status: 400,
+            message: format!("malformed request line '{line}'"),
+        });
+    }
+    let mut keep_alive = version == "HTTP/1.1";
     let mut content_length = 0usize;
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim();
+    let mut headers_done = false;
+    // one extra iteration so exactly MAX_HEADERS headers (plus the
+    // terminating blank line) are accepted
+    for _ in 0..=MAX_HEADERS {
+        let h = read_line_bounded(r, deadline, shutdown, false)?;
         if h.is_empty() {
+            headers_done = true;
             break;
         }
-        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
+        if let Some((name, value)) = h.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.parse().map_err(|_| ReadError::Bad {
+                    status: 400,
+                    message: format!("bad Content-Length '{value}'"),
+                })?;
+            } else if name.eq_ignore_ascii_case("connection") {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+        }
+    }
+    if !headers_done {
+        return Err(ReadError::Bad {
+            status: 431,
+            message: format!("more than {MAX_HEADERS} request headers"),
+        });
+    }
+    if content_length > max_body {
+        return Err(ReadError::Bad {
+            status: 413,
+            message: format!("request body of {content_length} bytes exceeds {max_body}"),
+        });
+    }
+    let mut body = vec![0u8; content_length];
+    read_exact_bounded(r, &mut body, deadline)?;
+    Ok(HttpRequest { method, path, keep_alive, body })
+}
+
+// -- routing ---------------------------------------------------------------
+
+struct Router {
+    batcher: Arc<Batcher>,
+    bpe: Arc<Bpe>,
+    http: Arc<HttpStats>,
+    workers: usize,
+    keep_alive_timeout: Duration,
+    max_body_bytes: usize,
+}
+
+impl Router {
+    fn route(&self, req: &HttpRequest) -> (u16, String) {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => (200, r#"{"ok": true}"#.to_string()),
+            ("GET", "/stats") => (200, self.stats_json()),
+            ("POST", "/predict") => self.predict(&req.body),
+            _ => (404, r#"{"error": "not found"}"#.to_string()),
         }
     }
 
-    let (status, body) = match (method.as_str(), path.as_str()) {
-        ("GET", "/healthz") => (200, r#"{"ok": true}"#.to_string()),
-        ("GET", "/stats") => {
-            let s = batcher.stats.lock().unwrap().clone();
-            let mean_req = if s.requests > 0 {
-                s.total_request_latency_ms / s.requests as f64
-            } else {
-                0.0
-            };
-            let mean_exec =
-                if s.batches > 0 { s.total_exec_latency_ms / s.batches as f64 } else { 0.0 };
-            let memory = match (s.memory_utilization, s.memory_kl) {
-                (Some(u), Some(kl)) => {
-                    format!(r#", "memory_utilization": {u:.6}, "memory_kl": {kl:.6}"#)
-                }
-                _ => String::new(),
-            };
-            // which trained weights are live (absent on seed/artifact);
-            // the id comes from a user-editable manifest, so emit it
-            // through the JSON writer rather than raw interpolation
-            let checkpoint = match &s.checkpoint {
-                Some(id) => {
-                    format!(r#", "checkpoint": {}"#, json::Json::Str(id.clone()).to_string())
-                }
-                None => String::new(),
-            };
-            (
-                200,
-                format!(
-                    r#"{{"backend": "{}", "requests": {}, "batches": {}, "mean_request_latency_ms": {:.3}, "mean_exec_latency_ms": {:.3}, "max_batch_fill": {}, "truncated_masks": {}{}{}}}"#,
-                    s.backend,
-                    s.requests,
-                    s.batches,
-                    mean_req,
-                    mean_exec,
-                    s.max_batch_fill,
-                    s.truncated_masks,
-                    memory,
-                    checkpoint
-                ),
-            )
+    fn predict(&self, body: &[u8]) -> (u16, String) {
+        let text = match std::str::from_utf8(body) {
+            Ok(t) => t,
+            Err(_) => return (400, error_body("body is not utf-8")),
+        };
+        let parsed = json::parse(text)
+            .map_err(|e| anyhow!(e))
+            .and_then(|v| PredictRequest::from_json(&v));
+        let req = match parsed {
+            Ok(r) => r,
+            Err(e) => return (400, error_body(&format!("{e:#}"))),
+        };
+        match self.batcher.submit_bounded(&self.bpe, &req) {
+            Ok(resp) => (200, resp.to_json().to_string()),
+            Err(SubmitError::BadRequest(m)) => (400, error_body(&m)),
+            Err(e @ SubmitError::Overloaded { .. }) => (429, error_body(&e.to_string())),
+            Err(SubmitError::Internal(m)) => (500, error_body(&m)),
         }
-        ("POST", "/predict") => {
-            let mut raw = vec![0u8; content_length];
-            reader.read_exact(&mut raw)?;
-            handle_post(&raw, batcher, bpe)
-        }
-        _ => (404, r#"{"error": "not found"}"#.to_string()),
-    };
-    respond(&mut stream, status, &body)
+    }
+
+    fn stats_json(&self) -> String {
+        let s = self.batcher.stats.lock().unwrap().clone();
+        let mean_req = if s.requests > 0 {
+            s.total_request_latency_ms / s.requests as f64
+        } else {
+            0.0
+        };
+        let mean_exec =
+            if s.batches > 0 { s.total_exec_latency_ms / s.batches as f64 } else { 0.0 };
+        let memory = match (s.memory_utilization, s.memory_kl) {
+            (Some(u), Some(kl)) => {
+                format!(r#", "memory_utilization": {u:.6}, "memory_kl": {kl:.6}"#)
+            }
+            _ => String::new(),
+        };
+        // which trained weights are live (absent on seed/artifact);
+        // the id comes from a user-editable manifest, so emit it
+        // through the JSON writer rather than raw interpolation
+        let checkpoint = match &s.checkpoint {
+            Some(id) => {
+                format!(r#", "checkpoint": {}"#, Json::Str(id.clone()).to_string())
+            }
+            None => String::new(),
+        };
+        format!(
+            r#"{{"backend": "{}", "requests": {}, "batches": {}, "mean_request_latency_ms": {:.3}, "mean_exec_latency_ms": {:.3}, "latency_p50_ms": {:.3}, "latency_p95_ms": {:.3}, "latency_p99_ms": {:.3}, "max_batch_fill": {}, "truncated_masks": {}, "shed": {}, "queue_depth": {}, "max_pending": {}, "http_workers": {}, "active_connections": {}, "connections_accepted": {}, "connections_shed": {}, "http_requests": {}{}{}}}"#,
+            s.backend,
+            s.requests,
+            s.batches,
+            mean_req,
+            mean_exec,
+            s.latency.percentile_ms(0.50),
+            s.latency.percentile_ms(0.95),
+            s.latency.percentile_ms(0.99),
+            s.max_batch_fill,
+            s.truncated_masks,
+            s.shed,
+            self.batcher.queue_depth(),
+            self.batcher.max_pending(),
+            self.workers,
+            self.http.active_connections.load(Ordering::Relaxed),
+            self.http.connections_accepted.load(Ordering::Relaxed),
+            self.http.connections_shed.load(Ordering::Relaxed),
+            self.http.requests.load(Ordering::Relaxed),
+            memory,
+            checkpoint
+        )
+    }
 }
 
-fn respond(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
-    let reason = match status {
+// -- responses -------------------------------------------------------------
+
+fn error_body(message: &str) -> String {
+    Json::obj(vec![("error", Json::Str(message.to_string()))]).to_string()
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
-    };
-    write!(
-        stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    )?;
-    stream.flush()?;
-    Ok(())
+    }
 }
 
-fn handle_post(body: &[u8], batcher: &Batcher, bpe: &Bpe) -> (u16, String) {
-    let text = match std::str::from_utf8(body) {
-        Ok(t) => t,
-        Err(_) => return (400, r#"{"error": "body is not utf-8"}"#.into()),
-    };
-    let parsed = json::parse(text)
-        .map_err(|e| anyhow!(e))
-        .and_then(|v| PredictRequest::from_json(&v));
-    match parsed {
-        Ok(req) => match batcher.submit(bpe, &req) {
-            Ok(resp) => (200, resp.to_json().to_string()),
-            Err(e) => (400, format!(r#"{{"error": "{e}"}}"#)),
-        },
-        Err(e) => (400, format!(r#"{{"error": "{e}"}}"#)),
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    close: bool,
+    keep_alive_secs: u64,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
+        reason(status),
+        body.len()
+    );
+    if status == 429 {
+        head.push_str(&format!("Retry-After: {RETRY_AFTER_SECS}\r\n"));
+    }
+    if close {
+        head.push_str("Connection: close\r\n\r\n");
+    } else {
+        head.push_str(&format!(
+            "Connection: keep-alive\r\nKeep-Alive: timeout={keep_alive_secs}\r\n\r\n"
+        ));
+    }
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn no_shutdown() -> AtomicBool {
+        AtomicBool::new(false)
+    }
+
+    fn parse(raw: &str) -> Result<HttpRequest, ReadError> {
+        let mut c = Cursor::new(raw.as_bytes().to_vec());
+        read_request(&mut c, Duration::from_secs(1), &no_shutdown(), 1 << 20)
+    }
+
+    #[test]
+    fn parses_post_with_body_and_keeps_alive_by_default() {
+        let req = parse("POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello")
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/predict");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn connection_close_is_honoured() {
+        let req =
+            parse("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!req.keep_alive);
+    }
+
+    #[test]
+    fn http_10_defaults_to_close_but_can_opt_in() {
+        assert!(!parse("GET / HTTP/1.0\r\n\r\n").unwrap().keep_alive);
+        assert!(
+            parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+                .unwrap()
+                .keep_alive
+        );
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\nPOST /predict HTTP/1.1\r\nContent-Length: 2\r\n\r\nok";
+        let mut c = Cursor::new(raw.as_bytes().to_vec());
+        let s = no_shutdown();
+        let a = read_request(&mut c, Duration::from_secs(1), &s, 1 << 20).unwrap();
+        assert_eq!(a.path, "/healthz");
+        let b = read_request(&mut c, Duration::from_secs(1), &s, 1 << 20).unwrap();
+        assert_eq!(b.path, "/predict");
+        assert_eq!(b.body, b"ok");
+    }
+
+    #[test]
+    fn eof_between_requests_is_clean_idle() {
+        match parse("") {
+            Err(ReadError::Idle) => {}
+            other => panic!("expected Idle, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_request_line_is_400() {
+        match parse("NOT-HTTP\r\n\r\n") {
+            Err(ReadError::Bad { status: 400, .. }) => {}
+            other => panic!("expected 400, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_413_before_reading_it() {
+        let mut c = Cursor::new(
+            b"POST /predict HTTP/1.1\r\nContent-Length: 99\r\n\r\n".to_vec(),
+        );
+        match read_request(&mut c, Duration::from_secs(1), &no_shutdown(), 10) {
+            Err(ReadError::Bad { status: 413, .. }) => {}
+            other => panic!("expected 413, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_content_length_is_400() {
+        match parse("POST /p HTTP/1.1\r\nContent-Length: nope\r\n\r\n") {
+            Err(ReadError::Bad { status: 400, .. }) => {}
+            other => panic!("expected 400, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_an_io_error() {
+        match parse("POST /p HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort") {
+            Err(ReadError::Io(e)) => assert_eq!(e.kind(), ErrorKind::UnexpectedEof),
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_body_escapes_via_json_writer() {
+        let b = error_body("a \"quoted\" failure");
+        let v = json::parse(&b).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "a \"quoted\" failure");
     }
 }

@@ -1,6 +1,7 @@
-//! MLM serving: a vLLM-router-style coordinator — TCP front door,
-//! dynamic batcher, pluggable inference backend — with python nowhere on
-//! the path.
+//! MLM serving: a vLLM-router-style coordinator — keep-alive worker-pool
+//! HTTP front door with bounded admission and load shedding, dynamic
+//! batcher, pluggable inference backend — with python nowhere on the
+//! path.  See `docs/serving.md` for the operator view.
 //!
 //! Requests (`POST /predict` with `{"text": "... [MASK] ..."}`) are
 //! tokenized, queued, and coalesced by the [`batcher`] into (possibly
@@ -20,5 +21,5 @@ pub use backend::{
     resolve_checkpoint_flag, ArtifactBackend, ArtifactInit, BackendInit, CheckpointInit,
     EngineBackend, EngineConfig, InferenceBackend,
 };
-pub use batcher::{Batcher, BatcherConfig};
-pub use http::serve;
+pub use batcher::{Batcher, BatcherConfig, SubmitError};
+pub use http::{serve, serve_with, HttpConfig, HttpStats, Server, ShutdownHandle};

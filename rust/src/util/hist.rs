@@ -1,0 +1,181 @@
+//! Log-bucketed latency histogram for serving observability.
+//!
+//! Fixed memory (one `u64` per bucket), O(1) record, and percentile
+//! queries with bounded relative error: bucket edges grow geometrically
+//! by [`GROWTH`], so any reported quantile is within one bucket —
+//! ≤ 15% — of the true value.  That trade is deliberate: the serving
+//! hot path records one sample per request under the stats mutex, and a
+//! fixed array clones cheaply into `/stats` snapshots, where an exact
+//! reservoir would not.
+//!
+//! Values are milliseconds.  Everything below [`LOW_MS`] lands in the
+//! first bucket (sub-50µs requests are all "instant" for serving
+//! purposes); everything above the last edge (~5 minutes) is counted in
+//! an overflow bucket and reported as the exact observed maximum.
+
+/// Lower edge of the first bucket (ms): 50µs.
+pub const LOW_MS: f64 = 0.05;
+/// Geometric growth factor between bucket edges.
+pub const GROWTH: f64 = 1.15;
+/// Bucket count: `LOW_MS * GROWTH^112` ≈ 316s caps the tracked range.
+pub const BUCKETS: usize = 112;
+
+/// Streaming latency histogram (milliseconds, log-spaced buckets).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    overflow: u64,
+    total: u64,
+    sum_ms: f64,
+    max_ms: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: vec![0; BUCKETS], overflow: 0, total: 0, sum_ms: 0.0, max_ms: 0.0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample; negative / non-finite values are dropped (a
+    /// clock that stepped backwards must not poison the distribution).
+    pub fn record(&mut self, ms: f64) {
+        if !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        self.total += 1;
+        self.sum_ms += ms;
+        if ms > self.max_ms {
+            self.max_ms = ms;
+        }
+        let idx = if ms <= LOW_MS {
+            0
+        } else {
+            ((ms / LOW_MS).ln() / GROWTH.ln()).ceil() as usize
+        };
+        if idx < BUCKETS {
+            self.counts[idx] += 1;
+        } else {
+            self.overflow += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.total as f64
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    /// The `p`-quantile (`p` in `[0, 1]`), as the upper edge of the
+    /// bucket holding the rank-`ceil(p * count)` sample — an
+    /// overestimate by at most one bucket width (≤ 15% relative).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 1.0);
+        let target = ((p * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return LOW_MS * GROWTH.powi(i as i32);
+            }
+        }
+        // rank fell in the overflow bucket: the exact max is the best
+        // bound we have
+        self.max_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.percentile_ms(0.5), 0.0);
+        assert_eq!(h.percentile_ms(0.99), 0.0);
+    }
+
+    #[test]
+    fn single_value_is_within_one_bucket() {
+        let mut h = Histogram::new();
+        h.record(12.0);
+        for p in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            let got = h.percentile_ms(p);
+            assert!(got >= 12.0 && got <= 12.0 * GROWTH * 1.001, "p{p}: {got}");
+        }
+        assert_eq!(h.mean_ms(), 12.0);
+        assert_eq!(h.max_ms(), 12.0);
+    }
+
+    #[test]
+    fn garbage_samples_are_dropped() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(-3.0);
+        assert_eq!(h.count(), 0);
+        h.record(1.0);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn overflow_reports_the_exact_max() {
+        let mut h = Histogram::new();
+        h.record(1e9); // far beyond the last edge
+        assert_eq!(h.percentile_ms(0.99), 1e9);
+    }
+
+    #[test]
+    fn percentiles_track_exact_ranks_within_bucket_error() {
+        // property: against an exact sorted-rank oracle, every reported
+        // quantile is within one geometric bucket of the true sample
+        forall(32, |rng| {
+            let n = 50 + rng.below(500) as usize;
+            let mut samples: Vec<f64> = (0..n)
+                .map(|_| {
+                    // span sub-bucket to multi-second latencies
+                    let exp = rng.uniform(-1.0, 4.0);
+                    10f64.powf(exp)
+                })
+                .collect();
+            let mut h = Histogram::new();
+            for &s in &samples {
+                h.record(s);
+            }
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for p in [0.5, 0.9, 0.95, 0.99] {
+                let rank = ((p * n as f64).ceil() as usize).max(1) - 1;
+                let exact = samples[rank];
+                let got = h.percentile_ms(p);
+                assert!(
+                    got >= exact * 0.999 && got <= exact * GROWTH * 1.001,
+                    "p{p}: exact {exact} vs histogram {got}"
+                );
+            }
+            assert_eq!(h.count(), n as u64);
+            let mean: f64 = samples.iter().sum::<f64>() / n as f64;
+            assert!((h.mean_ms() - mean).abs() < 1e-9 * mean.max(1.0));
+        });
+    }
+}

@@ -26,8 +26,8 @@ use lram::data::mlm::fit_length;
 use lram::model::EngineConfig;
 use lram::server::batcher::encode_with_masks;
 use lram::server::{
-    serve, BackendInit, Batcher, BatcherConfig, CheckpointInit, EngineBackend, InferenceBackend,
-    PredictRequest,
+    BackendInit, Batcher, BatcherConfig, CheckpointInit, EngineBackend, HttpConfig,
+    InferenceBackend, PredictRequest, Server,
 };
 use lram::util::json;
 
@@ -185,27 +185,15 @@ fn served_fill_mask_response_matches_trainer_end_to_end() {
     }
 
     // ... and once more over a real socket: the /fill-mask HTTP response
-    let addr = "127.0.0.1:18475";
-    {
-        let batcher = batcher.clone();
-        let bpe = bpe.clone();
-        std::thread::spawn(move || {
-            let _ = serve(addr, batcher, bpe);
-        });
-    }
-    let mut stream = None;
-    for _ in 0..50 {
-        if let Ok(s) = TcpStream::connect(addr) {
-            stream = Some(s);
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(100));
-    }
-    let mut stream = stream.expect("server did not start");
+    // (ephemeral port; Connection: close so read_to_string terminates)
+    let server = Server::bind("127.0.0.1:0", batcher.clone(), bpe.clone(), HttpConfig::default())
+        .expect("binding an ephemeral port");
+    let addr = server.local_addr().to_string();
+    let mut stream = TcpStream::connect(&addr).expect("connecting to test server");
     let body = format!(r#"{{"text": "{text}", "top_k": {top_k}}}"#);
     write!(
         stream,
-        "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST /predict HTTP/1.1\r\nHost: x\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .unwrap();
@@ -229,6 +217,7 @@ fn served_fill_mask_response_matches_trainer_end_to_end() {
             "HTTP log-prob drifted: {served_lp} vs {logprob}"
         );
     }
+    server.shutdown();
     std::fs::remove_dir_all(&dir).ok();
 }
 

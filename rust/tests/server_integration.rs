@@ -1,20 +1,24 @@
 //! Serving-path integration: dynamic batcher over a pluggable inference
-//! backend, HTTP front door end-to-end on a loopback socket.
+//! backend, keep-alive worker-pool HTTP front door end-to-end on a
+//! loopback socket — including bounded admission (429 + `Retry-After`
+//! under overload, shed requests never reaching the backend), keep-alive
+//! connection reuse, and graceful drain.
 //!
 //! The engine-backend tests run everywhere — no artifacts, no PJRT —
 //! which is the point of the pure-rust serving path.  The artifact
 //! tests still skip gracefully when compiled artifacts are absent.
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::Duration;
 
 use lram::data::synth::CorpusSpec;
 use lram::data::DataPipeline;
 use lram::model::LramMlm;
 use lram::server::{
-    serve, ArtifactInit, BackendInit, Batcher, BatcherConfig, CheckpointInit, EngineBackend,
-    EngineConfig, PredictRequest,
+    ArtifactInit, BackendInit, Batcher, BatcherConfig, CheckpointInit, EngineBackend,
+    EngineConfig, HttpConfig, PredictRequest, Server, SubmitError,
 };
 
 fn artifact_dir() -> Option<String> {
@@ -75,6 +79,93 @@ fn spawn_engine_batcher(bpe: Arc<lram::tokenizer::Bpe>) -> Arc<Batcher> {
         .expect("engine backend needs no artifacts")
 }
 
+/// Bind the front door on an ephemeral loopback port.
+fn start_server(batcher: Arc<Batcher>, bpe: Arc<lram::tokenizer::Bpe>) -> Server {
+    start_server_with(batcher, bpe, HttpConfig::default())
+}
+
+fn start_server_with(
+    batcher: Arc<Batcher>,
+    bpe: Arc<lram::tokenizer::Bpe>,
+    cfg: HttpConfig,
+) -> Server {
+    Server::bind("127.0.0.1:0", batcher, bpe, cfg).expect("binding an ephemeral port")
+}
+
+/// A persistent client connection: write half + buffered read half.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// One parsed HTTP response (headers lowercased).
+struct Resp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Resp {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to test server");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    /// Send one request and read exactly one response, leaving the
+    /// connection open (keep-alive).
+    fn roundtrip(&mut self, raw: &str) -> Resp {
+        self.stream.write_all(raw.as_bytes()).expect("writing request");
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("reading status line");
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .unwrap_or_else(|| panic!("bad status line {line:?}"))
+            .parse()
+            .expect("numeric status");
+        let mut headers = Vec::new();
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).expect("reading header");
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+            }
+        }
+        let len: usize = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .map(|(_, v)| v.parse().expect("numeric content-length"))
+            .expect("response carries Content-Length");
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body).expect("reading body");
+        Resp { status, headers, body: String::from_utf8(body).expect("utf-8 body") }
+    }
+
+    fn predict(&mut self, text: &str, top_k: usize) -> Resp {
+        let body = format!(r#"{{"text": "{text}", "top_k": {top_k}}}"#);
+        self.roundtrip(&format!(
+            "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ))
+    }
+
+    fn get(&mut self, path: &str) -> Resp {
+        self.roundtrip(&format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+    }
+}
+
 // ---------------------------------------------------------------------
 // engine backend: runs everywhere, never skips
 // ---------------------------------------------------------------------
@@ -100,8 +191,14 @@ fn engine_batcher_answers_fill_mask_requests() {
     assert_eq!(stats.backend, "engine");
     assert_eq!(stats.requests, 1);
     assert!(stats.total_request_latency_ms >= stats.total_exec_latency_ms);
+    // the latency histogram saw the same request
+    assert_eq!(stats.latency.count(), 1);
+    assert!(stats.latency.percentile_ms(0.5) > 0.0);
     let util = stats.memory_utilization.expect("engine backend tracks memory stats");
     assert!(util > 0.0, "no slots touched?");
+    // nothing shed, nothing left in the queue
+    assert_eq!(stats.shed, 0);
+    assert_eq!(batcher.queue_depth(), 0);
 }
 
 #[test]
@@ -154,6 +251,13 @@ fn engine_request_without_mask_errors() {
     let bpe = build_small_bpe();
     let batcher = spawn_engine_batcher(bpe.clone());
     let req = PredictRequest { text: "no mask here".into(), top_k: 3 };
+    match batcher.submit_bounded(&bpe, &req) {
+        Err(SubmitError::BadRequest(m)) => assert!(m.contains("[MASK]"), "{m}"),
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+    // the rejection released its admission slot
+    assert_eq!(batcher.queue_depth(), 0);
+    // and the flattening wrapper still errors
     assert!(batcher.submit(&bpe, &req).is_err());
 }
 
@@ -161,42 +265,235 @@ fn engine_request_without_mask_errors() {
 fn engine_http_end_to_end() {
     let bpe = build_small_bpe();
     let batcher = spawn_engine_batcher(bpe.clone());
-    let addr = "127.0.0.1:18473";
-    {
-        let batcher = batcher.clone();
-        let bpe = bpe.clone();
-        std::thread::spawn(move || {
-            let _ = serve(addr, batcher, bpe);
-        });
+    let server = start_server(batcher, bpe);
+    let addr = server.local_addr().to_string();
+
+    let mut c = Client::connect(&addr);
+    let resp = c.predict("the [MASK] sat", 2);
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert!(resp.body.contains("\"masks\""), "{}", resp.body);
+
+    // stats endpoint reports the backend, front-door counters, latency
+    // percentiles and memory observability — over the same connection
+    let stats = c.get("/stats");
+    assert_eq!(stats.status, 200);
+    let body = stats.body;
+    assert!(body.contains(r#""backend": "engine""#), "{body}");
+    assert!(body.contains("memory_utilization"), "{body}");
+    assert!(body.contains("latency_p50_ms"), "{body}");
+    assert!(body.contains("latency_p99_ms"), "{body}");
+    assert!(body.contains("queue_depth"), "{body}");
+    assert!(body.contains("http_workers"), "{body}");
+    // it parses as JSON, and the front door saw exactly one connection
+    let v = lram::util::json::parse(&body).unwrap();
+    assert_eq!(v.get("connections_accepted").unwrap().as_usize().unwrap(), 1);
+    assert!(v.get("http_requests").unwrap().as_usize().unwrap() >= 2);
+    assert_eq!(v.get("shed").unwrap().as_usize().unwrap(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn keep_alive_connection_serves_many_requests_on_one_socket() {
+    let bpe = build_small_bpe();
+    let batcher = spawn_engine_batcher(bpe.clone());
+    let server = start_server(batcher, bpe);
+    let addr = server.local_addr().to_string();
+    let http = server.http_stats();
+
+    let mut c = Client::connect(&addr);
+    for i in 0..3 {
+        let resp = c.predict(&format!("round {i} the [MASK] sat"), 2);
+        assert_eq!(resp.status, 200, "request {i}: {}", resp.body);
+        assert_eq!(
+            resp.header("connection"),
+            Some("keep-alive"),
+            "response must advertise keep-alive"
+        );
+        assert!(resp.header("keep-alive").is_some(), "Keep-Alive header with the timeout");
     }
-    let mut stream = None;
-    for _ in 0..50 {
-        if let Ok(s) = TcpStream::connect(addr) {
-            stream = Some(s);
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(100));
-    }
-    let mut stream = stream.expect("server did not start");
+    let health = c.get("/healthz");
+    assert_eq!(health.status, 200);
+
+    use std::sync::atomic::Ordering;
+    assert_eq!(
+        http.connections_accepted.load(Ordering::Relaxed),
+        1,
+        "four requests must reuse one connection"
+    );
+    assert_eq!(http.requests.load(Ordering::Relaxed), 4);
+    server.shutdown();
+}
+
+#[test]
+fn connection_close_is_honored_on_request() {
+    let bpe = build_small_bpe();
+    let batcher = spawn_engine_batcher(bpe.clone());
+    let server = start_server(batcher, bpe);
+    let addr = server.local_addr().to_string();
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
     let body = r#"{"text": "the [MASK] sat", "top_k": 2}"#;
     write!(
         stream,
-        "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST /predict HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .unwrap();
+    // the server closes after responding, so read_to_string terminates
     let mut resp = String::new();
     stream.read_to_string(&mut resp).unwrap();
     assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("Connection: close"), "{resp}");
     assert!(resp.contains("\"masks\""), "{resp}");
+    server.shutdown();
+}
 
-    // stats endpoint reports the backend and memory observability
-    let mut s2 = TcpStream::connect(addr).unwrap();
-    write!(s2, "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
-    let mut r2 = String::new();
-    s2.read_to_string(&mut r2).unwrap();
-    assert!(r2.contains(r#""backend": "engine""#), "{r2}");
-    assert!(r2.contains("memory_utilization"), "{r2}");
+#[test]
+fn overload_sheds_429_with_retry_after_and_never_reaches_backend() {
+    let bpe = build_small_bpe();
+    // admission cap of 1 and a long batch window: the first request
+    // parks in the batcher for ~400ms, every request arriving meanwhile
+    // must shed
+    let batcher = Batcher::spawn(
+        BackendInit::Engine(engine_cfg()),
+        bpe.clone(),
+        BatcherConfig {
+            max_wait: Duration::from_millis(400),
+            max_pending: 1,
+            ..BatcherConfig::default()
+        },
+    )
+    .unwrap();
+    let server = start_server(batcher.clone(), bpe.clone());
+    let addr = server.local_addr().to_string();
+
+    // occupy the single admission slot
+    let first = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr);
+            c.predict("the [MASK] sat", 2).status
+        })
+    };
+    // wait until the first request actually holds the admission slot
+    // (queue_depth counts admitted-but-unreplied requests), so the
+    // sheds below are deterministic, not a race
+    for _ in 0..100 {
+        if batcher.queue_depth() == 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(batcher.queue_depth(), 1, "first request admitted and in flight");
+
+    let mut c = Client::connect(&addr);
+    for i in 0..2 {
+        let resp = c.predict("the [MASK] sat", 2);
+        assert_eq!(resp.status, 429, "request {i} must shed: {}", resp.body);
+        // a well-formed shed: Retry-After header + JSON error body
+        let retry = resp.header("retry-after").expect("429 carries Retry-After");
+        assert!(retry.parse::<u64>().is_ok(), "Retry-After '{retry}' must be seconds");
+        let v = lram::util::json::parse(&resp.body).expect("429 body is JSON");
+        assert!(
+            v.get("error").unwrap().as_str().unwrap().contains("overloaded"),
+            "{}",
+            resp.body
+        );
+        // shedding must not kill the keep-alive connection (the client
+        // is told when to retry, on the same socket) — proven by the
+        // next loop iteration reusing `c`
+    }
+    assert_eq!(first.join().unwrap(), 200, "the admitted request completes fine");
+
+    let stats = batcher.stats.lock().unwrap().clone();
+    assert_eq!(stats.shed, 2, "both overflow requests counted as shed");
+    assert_eq!(
+        stats.requests, 1,
+        "shed requests must never reach the backend (only the admitted one did)"
+    );
+    assert_eq!(batcher.queue_depth(), 0, "slots all released");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_keep_alive_clients_are_served_without_error() {
+    let bpe = build_small_bpe();
+    let batcher = spawn_engine_batcher(bpe.clone());
+    let server = start_server_with(
+        batcher,
+        bpe,
+        HttpConfig { workers: 8, ..HttpConfig::default() },
+    );
+    let addr = server.local_addr().to_string();
+    let http = server.http_stats();
+
+    const CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 4;
+    let mut handles = vec![];
+    for cid in 0..CLIENTS {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr);
+            for r in 0..PER_CLIENT {
+                let resp = c.predict(&format!("client {cid} round {r} [MASK] ."), 3);
+                assert_eq!(resp.status, 200, "client {cid} round {r}: {}", resp.body);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(http.connections_accepted.load(Ordering::Relaxed), CLIENTS as u64);
+    assert_eq!(http.requests.load(Ordering::Relaxed), (CLIENTS * PER_CLIENT) as u64);
+    assert_eq!(http.connections_shed.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let bpe = build_small_bpe();
+    // a wide batch window keeps the request in flight while we shut down
+    let batcher = Batcher::spawn(
+        BackendInit::Engine(engine_cfg()),
+        bpe.clone(),
+        BatcherConfig { max_wait: Duration::from_millis(300), ..BatcherConfig::default() },
+    )
+    .unwrap();
+    let server = start_server(batcher, bpe);
+    let addr = server.local_addr().to_string();
+
+    let inflight = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr);
+            let resp = c.predict("the [MASK] sat", 2);
+            (resp.status, resp.body)
+        })
+    };
+    // let the request reach the batcher, then drain while it waits for
+    // batch-mates
+    std::thread::sleep(Duration::from_millis(100));
+    server.shutdown();
+
+    let (status, body) = inflight.join().expect("in-flight client must not be dropped");
+    assert_eq!(status, 200, "in-flight request completes during drain: {body}");
+    assert!(body.contains("\"masks\""), "{body}");
+
+    // after the drain the listener is gone: new connections are refused
+    // (or at best connect and then fail immediately)
+    match TcpStream::connect(&addr) {
+        Err(_) => {}
+        Ok(mut s) => {
+            let _ = write!(s, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+            let mut buf = String::new();
+            s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            assert!(
+                s.read_to_string(&mut buf).map(|n| n == 0).unwrap_or(true),
+                "a drained server must not serve: {buf}"
+            );
+        }
+    }
 }
 
 #[test]
@@ -283,30 +580,15 @@ fn stats_report_the_loaded_checkpoint_id() {
 
     // and over HTTP: /stats carries the id so operators can tell which
     // trained weights are live
-    let addr = "127.0.0.1:18477";
-    {
-        let batcher = batcher.clone();
-        let bpe = bpe.clone();
-        std::thread::spawn(move || {
-            let _ = serve(addr, batcher, bpe);
-        });
-    }
-    let mut stream = None;
-    for _ in 0..50 {
-        if let Ok(s) = TcpStream::connect(addr) {
-            stream = Some(s);
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(100));
-    }
-    let mut s = stream.expect("server did not start");
-    write!(s, "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
-    let mut resp = String::new();
-    s.read_to_string(&mut resp).unwrap();
+    let server = start_server(batcher, bpe);
+    let mut c = Client::connect(&server.local_addr().to_string());
+    let resp = c.get("/stats");
     assert!(
-        resp.contains(&format!(r#""checkpoint": "{expected_id}""#)),
-        "/stats must name the checkpoint: {resp}"
+        resp.body.contains(&format!(r#""checkpoint": "{expected_id}""#)),
+        "/stats must name the checkpoint: {}",
+        resp.body
     );
+    server.shutdown();
     std::fs::remove_dir_all(&dir).ok();
 }
 
@@ -379,40 +661,15 @@ fn http_end_to_end() {
     let dir = require!(artifact_dir());
     let batcher = require!(spawn_artifact_batcher(&dir));
     let bpe = build_bpe();
-    let addr = "127.0.0.1:18471";
-    {
-        let batcher = batcher.clone();
-        let bpe = bpe.clone();
-        std::thread::spawn(move || {
-            let _ = serve(addr, batcher, bpe);
-        });
-    }
-    // wait for the listener
-    let mut stream = None;
-    for _ in 0..50 {
-        if let Ok(s) = TcpStream::connect(addr) {
-            stream = Some(s);
-            break;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(100));
-    }
-    let mut stream = stream.expect("server did not start");
-    let body = r#"{"text": "the [MASK] sat", "top_k": 2}"#;
-    write!(
-        stream,
-        "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-        body.len()
-    )
-    .unwrap();
-    let mut resp = String::new();
-    stream.read_to_string(&mut resp).unwrap();
-    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
-    assert!(resp.contains("\"masks\""), "{resp}");
+    let server = start_server(batcher, bpe);
+    let mut c = Client::connect(&server.local_addr().to_string());
+    let resp = c.predict("the [MASK] sat", 2);
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    assert!(resp.body.contains("\"masks\""), "{}", resp.body);
 
-    // health endpoint
-    let mut s2 = TcpStream::connect(addr).unwrap();
-    write!(s2, "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
-    let mut r2 = String::new();
-    s2.read_to_string(&mut r2).unwrap();
-    assert!(r2.contains(r#"{"ok": true}"#), "{r2}");
+    // health endpoint, same keep-alive socket
+    let health = c.get("/healthz");
+    assert_eq!(health.status, 200);
+    assert!(health.body.contains(r#"{"ok": true}"#), "{}", health.body);
+    server.shutdown();
 }
