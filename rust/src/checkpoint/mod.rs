@@ -52,10 +52,19 @@ use crate::util::mmap::MmapU32;
 
 /// Format tag in every manifest; a different tag is not ours.
 pub const FORMAT_TAG: &str = "lram-checkpoint";
-/// Current format version; readers reject anything else (version skew
-/// must fail loudly — a "best effort" load of a future layout would
-/// serve garbage weights).
-pub const FORMAT_VERSION: i64 = 1;
+/// Current format version, written into every manifest.  Version 2 is
+/// the routing-gradient minor bump: the blob layout is unchanged, the
+/// optional routing-optimizer tensors (`wq_adam_*`) may appear in the
+/// index.  Readers accept [`MIN_READ_VERSION`]`..=FORMAT_VERSION` —
+/// version-1 checkpoints load fine (the routing slot simply starts
+/// fresh) — and refuse anything newer loudly: version-1-era readers
+/// equality-check the field, so they refuse version-2 checkpoints
+/// rather than silently dropping state they do not understand, and this
+/// reader extends the same courtesy to whatever version 3 brings (a
+/// "best effort" load of a future layout would serve garbage weights).
+pub const FORMAT_VERSION: i64 = 2;
+/// Oldest manifest version this reader still accepts.
+pub const MIN_READ_VERSION: i64 = 1;
 /// Manifest file name inside a checkpoint directory.
 pub const MANIFEST_FILE: &str = "manifest.json";
 /// Tensors at most this large get their checksum verified at open.
@@ -253,9 +262,10 @@ impl Manifest {
             .as_i64()
             .ok_or_else(|| anyhow!("'version' must be a number"))?;
         ensure!(
-            version == FORMAT_VERSION,
-            "checkpoint format version {version} is not supported \
-             (this build reads version {FORMAT_VERSION}); refusing to guess at the layout"
+            (MIN_READ_VERSION..=FORMAT_VERSION).contains(&version),
+            "checkpoint format version {version} is not supported (this build reads \
+             versions {MIN_READ_VERSION} through {FORMAT_VERSION}); refusing to guess \
+             at the layout — if a newer lram wrote it, upgrade this reader"
         );
         let tensors = v
             .req("tensors")?
@@ -351,6 +361,9 @@ pub struct CheckpointWriter {
     stage: PathBuf,
     tensors: Vec<TensorSpec>,
     committed: bool,
+    /// fsync blobs, the manifest, and the directories on commit (see
+    /// [`Self::with_fsync`]).
+    fsync: bool,
 }
 
 /// Monotonic suffix so sequential (or accidentally overlapping) writers
@@ -464,7 +477,22 @@ impl CheckpointWriter {
             stage,
             tensors: Vec::new(),
             committed: false,
+            fsync: false,
         })
+    }
+
+    /// Opt into fsyncing every blob, the manifest, and the enclosing
+    /// directories around the commit renames.  The staged-rename
+    /// protocol already survives process *crashes*; with fsync the
+    /// committed checkpoint also survives *power loss* — without it,
+    /// the rename can hit the journal before the blob data does, and a
+    /// badly-timed outage leaves a committed name over zero-length
+    /// blobs (which `open` would at least refuse loudly, but the
+    /// checkpoint is gone).  Costs one `fsync` per blob plus two
+    /// directory syncs; exposed as `lram train --fsync`.
+    pub fn with_fsync(mut self, on: bool) -> Self {
+        self.fsync = on;
+        self
     }
 
     fn write_blob(
@@ -498,7 +526,7 @@ impl CheckpointWriter {
             shape
         );
         let path = self.stage.join(&spec.file);
-        std::fs::write(&path, bytes).with_context(|| format!("writing {}", path.display()))?;
+        write_file(&path, bytes, self.fsync)?;
         self.tensors.push(spec);
         Ok(())
     }
@@ -530,8 +558,12 @@ impl CheckpointWriter {
         manifest.checkpoint_id =
             format!("ck-{:016x}", fnv1a64(manifest.to_json().to_string().as_bytes()));
         let path = self.stage.join(MANIFEST_FILE);
-        std::fs::write(&path, manifest.to_json().to_string())
-            .with_context(|| format!("writing {}", path.display()))?;
+        write_file(&path, manifest.to_json().to_string().as_bytes(), self.fsync)?;
+        if self.fsync {
+            // make the staged *directory entries* durable before the
+            // commit renames can possibly hit the journal
+            sync_dir(&self.stage)?;
+        }
         // commit: the stage is complete, swap it into place.  rename()
         // cannot replace a non-empty directory, so an existing
         // checkpoint is first moved aside (atomic), then the stage moves
@@ -559,12 +591,42 @@ impl CheckpointWriter {
             })?;
         }
         self.committed = true;
+        if self.fsync {
+            // the renames themselves become durable when the parent
+            // directory is synced
+            let parent = match self.final_dir.parent() {
+                Some(p) if !p.as_os_str().is_empty() => p,
+                _ => Path::new("."),
+            };
+            sync_dir(parent)?;
+        }
         // a complete checkpoint now sits at the live name: stale debris
         // from earlier killed saves is safe to sweep.  (Concurrent saves
         // into the same path are not supported — last committer wins.)
         sweep_stale_stages(&self.final_dir);
         Ok(manifest)
     }
+}
+
+/// Write `bytes` to `path`, optionally fsyncing before close.
+fn write_file(path: &Path, bytes: &[u8], fsync: bool) -> Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(bytes).with_context(|| format!("writing {}", path.display()))?;
+    if fsync {
+        f.sync_all().with_context(|| format!("fsyncing {}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// fsync a directory so its entries (blob files, commit renames) are
+/// durable, not merely written.
+fn sync_dir(dir: &Path) -> Result<()> {
+    std::fs::File::open(dir)
+        .with_context(|| format!("opening {} to fsync it", dir.display()))?
+        .sync_all()
+        .with_context(|| format!("fsyncing directory {}", dir.display()))
 }
 
 impl Drop for CheckpointWriter {
@@ -863,17 +925,79 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// Patch the manifest's version field in place (skew simulations).
+    fn patch_version(dir: &Path, to: i64) {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let from = format!("\"version\":{FORMAT_VERSION}");
+        assert!(text.contains(&from), "manifest must carry the current version");
+        std::fs::write(&path, text.replace(&from, &format!("\"version\":{to}"))).unwrap();
+    }
+
     #[test]
     fn version_skew_fails_open_loudly() {
         let dir = tmp_dir("skew");
         write_demo(&dir);
-        let path = dir.join(MANIFEST_FILE);
-        let text = std::fs::read_to_string(&path).unwrap();
-        std::fs::write(&path, text.replace("\"version\":1", "\"version\":9000")).unwrap();
+        patch_version(&dir, 9000);
         let err = format!("{:#}", Checkpoint::open(&dir).unwrap_err());
         assert!(err.contains("version 9000"), "{err}");
         assert!(err.contains("not supported"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn previous_format_version_still_opens() {
+        // PR-3-era checkpoints carry version 1 with the same blob
+        // layout; the version-2 (routing) reader must keep loading them
+        let dir = tmp_dir("back_compat");
+        write_demo(&dir);
+        patch_version(&dir, MIN_READ_VERSION);
+        let ck = Checkpoint::open(&dir).expect("version-1 checkpoints must keep loading");
+        assert_eq!(ck.manifest.version, MIN_READ_VERSION);
+        assert_eq!(ck.read_f32("embed").unwrap()[2], -2.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn next_format_version_is_refused_with_upgrade_guidance() {
+        // the other skew direction: this reader meeting a version-3
+        // manifest must refuse and tell the operator what to do
+        let dir = tmp_dir("fwd_skew");
+        write_demo(&dir);
+        patch_version(&dir, FORMAT_VERSION + 1);
+        let err = format!("{:#}", Checkpoint::open(&dir).unwrap_err());
+        assert!(err.contains(&format!("version {}", FORMAT_VERSION + 1)), "{err}");
+        assert!(err.contains("not supported"), "{err}");
+        assert!(err.contains("upgrade"), "refusal must point at the fix: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fsync_save_is_bit_identical_to_a_plain_save() {
+        // the durability flag changes *when* bytes are durable, never
+        // which bytes: same content-derived id, same verified blobs
+        let plain = tmp_dir("fsync_plain");
+        let durable = tmp_dir("fsync_durable");
+        let a = write_demo(&plain);
+        let b = {
+            let mut w = CheckpointWriter::new(&durable).unwrap().with_fsync(true);
+            let data: Vec<f32> = (0..64).map(|i| i as f32 * 0.5 - 3.0).collect();
+            w.write_f32("embed", &[8, 8], &data).unwrap();
+            w.write_f32("values", &[16, 4], &vec![0.25; 64]).unwrap();
+            w.write_u32("adam_t", &[16], &(0..16u32).collect::<Vec<_>>()).unwrap();
+            w.finish(42, "0123456789abcdef", demo_model()).unwrap()
+        };
+        assert_eq!(a.checkpoint_id, b.checkpoint_id);
+        let ck = Checkpoint::open(&durable).unwrap();
+        ck.verify().unwrap();
+        assert_eq!(ck.manifest, b);
+        // overwrite path with fsync: the rename protocol is unchanged
+        let mut w = CheckpointWriter::new(&durable).unwrap().with_fsync(true);
+        w.write_f32("embed", &[8, 8], &[1.0; 64]).unwrap();
+        w.finish(43, "0123456789abcdef", demo_model()).unwrap();
+        assert_eq!(Checkpoint::open(&durable).unwrap().read_f32("embed").unwrap()[0], 1.0);
+        std::fs::remove_dir_all(&plain).ok();
+        std::fs::remove_dir_all(&durable).ok();
     }
 
     #[test]

@@ -13,13 +13,24 @@
 //! * value-table rows — [`SparseAdam`] (paper §3.2: memory parameters
 //!   use lr 1e-3 to compensate for sparse access), only touched rows
 //!   pay any work;
-//! * the query projection `wq` is **frozen**: its gradient would have to
-//!   flow through the kernel weights' dependence on the query (the
-//!   routing derivative), which the straight-through treatment of the
-//!   lattice lookup deliberately drops — lookup indices and kernel
-//!   weights are treated as constants of the forward pass, the same
-//!   approximation memory-layer training uses at scale.  Values,
-//!   embeddings and the dense suffix carry the learning signal.
+//! * the query projection `wq` — trained **through the lattice kernel**
+//!   (the paper's whole premise: the memory is differentiable).  The
+//!   gathered value `v = sum_j w_j T[idx_j]` depends on the query via
+//!   `w_j = f(d2_j)`, so `dw_j/dq = f'(d2_j) * 2 (q - p_j)` flows the
+//!   loss back into the query (`backward_gather_ragged_into` on
+//!   [`crate::lattice::BatchLookupEngine`], reusing the forward's SoA
+//!   candidate scratch), then through `q = query_scale * wq h` into
+//!   `wq` (its own
+//!   dense-Adam slot) *and* into `h`, i.e. the embeddings see the
+//!   routing path too.  The hit *indices* remain straight-through — the
+//!   selected set is treated as constant, which is exact wherever the
+//!   top-k set is locally stable (the kernel is C^3 at the support
+//!   boundary, so entering/leaving hits carry zero weight and zero
+//!   derivative).  `EngineTrainConfig::train_routing = false`
+//!   (`--freeze-routing`) restores the PR-3 behavior of a frozen `wq`.
+//!
+//! Every gradient here is locked against central finite differences of
+//! an f64 reference forward by `rust/tests/grad_check.rs`.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -28,8 +39,8 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::checkpoint::{Checkpoint, Manifest};
 use crate::data::synth::CorpusSpec;
-use crate::data::DataPipeline;
-use crate::memstore::SparseAdam;
+use crate::data::{Batch, DataPipeline};
+use crate::memstore::{DenseAdam, SparseAdam};
 use crate::model::{tensor_names, EngineConfig, LramMlm};
 
 /// Configuration for a pure-rust engine training run.
@@ -45,6 +56,13 @@ pub struct EngineTrainConfig {
     pub lr_dense: f32,
     /// SparseAdam learning rate for value-table rows (paper: 1e-3).
     pub lr_values: f32,
+    /// Train the routing: flow d(loss)/d(query) through the lattice
+    /// kernel into `wq` (default).  `false` freezes `wq` — the straight-
+    /// through treatment the trainer had before the routing gradient
+    /// existed (`--freeze-routing`).
+    pub train_routing: bool,
+    /// Dense-Adam learning rate for the routing projection `wq`.
+    pub lr_routing: f32,
     /// Synthetic-corpus seed (must match serving so tokenizers agree).
     pub corpus_seed: u64,
     /// BPE vocabulary target (the *trained* size may come out smaller;
@@ -57,6 +75,9 @@ pub struct EngineTrainConfig {
     pub save_every: u64,
     /// Checkpoint directory; `None` trains without saving.
     pub save_dir: Option<PathBuf>,
+    /// fsync checkpoint blobs + directories on commit, so saves survive
+    /// power loss and not just process crashes (`lram train --fsync`).
+    pub fsync: bool,
 }
 
 impl Default for EngineTrainConfig {
@@ -67,12 +88,15 @@ impl Default for EngineTrainConfig {
             batch: 8,
             lr_dense: 0.05,
             lr_values: 1e-3,
+            train_routing: true,
+            lr_routing: 1e-3,
             corpus_seed: 1234,
             vocab_size: 4096,
             mask_prob: 0.15,
             eval_batches: 4,
             save_every: 0,
             save_dir: None,
+            fsync: false,
         }
     }
 }
@@ -88,21 +112,48 @@ pub struct EngineTrainOutcome {
     pub manifest: Option<Manifest>,
 }
 
+/// Read-only view of the gradients computed by the last
+/// [`EngineTrainer::forward_backward`] call — the finite-difference
+/// harness (`rust/tests/grad_check.rs`) compares these against numeric
+/// gradients of an f64 reference forward.
+pub struct GradView<'a> {
+    pub embed: &'a [f32],
+    pub pos: &'a [f32],
+    pub wq: &'a [f32],
+    pub wo: &'a [f32],
+    pub w_out: &'a [f32],
+    /// value-table row gradients, keyed by slot (deterministic order)
+    pub rows: &'a BTreeMap<u64, Vec<f32>>,
+}
+
 /// The pure-rust trainer: owns the model, the sparse optimizer over the
-/// value table, and the data pipeline.
+/// value table, the dense-Adam routing slot, and the data pipeline.
 pub struct EngineTrainer {
     pub cfg: EngineTrainConfig,
     pub model: LramMlm,
     opt: SparseAdam,
+    /// routing slot: dense Adam over `wq` (unused when routing frozen)
+    opt_wq: DenseAdam,
     pipeline: DataPipeline,
     step: u64,
     // dense-gradient scratch, zeroed each step
     g_embed: Vec<f32>,
     g_pos: Vec<f32>,
+    g_wq: Vec<f32>,
     g_wo: Vec<f32>,
     g_wout: Vec<f32>,
+    /// d(loss)/d(gathered value rows), `max_positions x heads*m` — the
+    /// upstream gradient of the batched lattice backward
+    g_gathered: Vec<f32>,
+    /// d(loss)/d(query), `max_positions x heads x 8`
+    dq: Vec<f64>,
     // value-row gradient accumulation (BTreeMap: deterministic order)
     row_grads: BTreeMap<u64, Vec<f32>>,
+    /// whether the last [`Self::forward_backward`] saw any masked
+    /// position; gates [`Self::apply_grads`] so a mask-free batch is a
+    /// true no-op (an Adam step on all-zero gradients would still decay
+    /// moments and move `wq`)
+    had_loss: bool,
 }
 
 impl EngineTrainer {
@@ -120,13 +171,17 @@ impl EngineTrainer {
         let vocab = pipeline.bpe.vocab_size();
         let model = LramMlm::seeded(cfg.model.clone(), vocab)?;
         let opt = SparseAdam::new(model.table.rows(), cfg.model.m, cfg.lr_values)?;
-        Ok(Self::assemble(cfg, model, opt, pipeline, 0))
+        let opt_wq = DenseAdam::new(model.wq.len(), cfg.lr_routing);
+        Ok(Self::assemble(cfg, model, opt, opt_wq, pipeline, 0))
     }
 
     /// Resume training from a checkpoint: model weights, value table
-    /// *and* sparse-Adam state (moments + per-row step counts) come back
-    /// exactly, so a resumed run is bit-identical to an uninterrupted
-    /// one — `checkpoint_roundtrip.rs` asserts that too.
+    /// *and* the optimizer state (sparse-Adam moments + per-row step
+    /// counts, routing dense-Adam moments + step) come back exactly, so
+    /// a resumed run is bit-identical to an uninterrupted one —
+    /// `checkpoint_roundtrip.rs` asserts that too.  Checkpoints written
+    /// before the routing slot existed (format version 1, or saved with
+    /// `--freeze-routing`) simply start a fresh routing slot.
     pub fn from_checkpoint(mut cfg: EngineTrainConfig, dir: &Path) -> Result<Self> {
         let ck = Checkpoint::open(dir)?;
         // geometry comes from the checkpoint, not the (possibly default)
@@ -162,8 +217,25 @@ impl EngineTrainer {
         } else {
             SparseAdam::new(model.table.rows(), cfg.model.m, cfg.lr_values)?
         };
+        let opt_wq = if ck.manifest.has_tensor(tensor_names::WQ_ADAM_M) {
+            let m = ck.read_f32(tensor_names::WQ_ADAM_M)?;
+            let v = ck.read_f32(tensor_names::WQ_ADAM_V)?;
+            let t = ck.read_u32(tensor_names::WQ_ADAM_T)?;
+            ensure!(
+                m.len() == model.wq.len(),
+                "routing optimizer state has {} entries, wq has {}",
+                m.len(),
+                model.wq.len()
+            );
+            ensure!(t.len() == 1, "routing step count must be a single entry");
+            DenseAdam::from_state(m, v, t[0] as u64, cfg.lr_routing)
+                .context("restoring routing (dense-Adam) state")?
+        } else {
+            // pre-routing checkpoint (or a --freeze-routing run): fresh slot
+            DenseAdam::new(model.wq.len(), cfg.lr_routing)
+        };
         let step = ck.manifest.step;
-        Ok(Self::assemble(cfg, model, opt, pipeline, step))
+        Ok(Self::assemble(cfg, model, opt, opt_wq, pipeline, step))
     }
 
     fn build_pipeline(cfg: &EngineTrainConfig) -> Result<DataPipeline> {
@@ -175,20 +247,27 @@ impl EngineTrainer {
         cfg: EngineTrainConfig,
         model: LramMlm,
         opt: SparseAdam,
+        opt_wq: DenseAdam,
         pipeline: DataPipeline,
         step: u64,
     ) -> Self {
         let (vocab, width) = (model.vocab, cfg.model.width);
         let hm = cfg.model.heads * cfg.model.m;
+        let max_positions = cfg.model.max_batch * cfg.model.seq_len;
         EngineTrainer {
             g_embed: vec![0.0; vocab * width],
             g_pos: vec![0.0; cfg.model.seq_len * width],
+            g_wq: vec![0.0; model.wq.len()],
             g_wo: vec![0.0; width * hm],
             g_wout: vec![0.0; vocab * width],
+            g_gathered: vec![0.0; max_positions * hm],
+            dq: vec![0.0; max_positions * cfg.model.heads * 8],
             row_grads: BTreeMap::new(),
+            had_loss: false,
             cfg,
             model,
             opt,
+            opt_wq,
             pipeline,
             step,
         }
@@ -209,34 +288,67 @@ impl EngineTrainer {
         self.model.forward(tokens, false, None)
     }
 
+    /// Read-only view of the gradients the last
+    /// [`Self::forward_backward`] call computed (grad-check harness).
+    pub fn grads(&self) -> GradView<'_> {
+        GradView {
+            embed: &self.g_embed,
+            pos: &self.g_pos,
+            wq: &self.g_wq,
+            wo: &self.g_wo,
+            w_out: &self.g_wout,
+            rows: &self.row_grads,
+        }
+    }
+
     /// One training step; returns the masked cross-entropy loss.
     pub fn train_step(&mut self) -> Result<f64> {
         let batch = self.pipeline.train_batch(self.step);
+        let total_weight: f64 = batch.weights.iter().map(|&w| w as f64).sum();
+        if total_weight == 0.0 {
+            // no position was masked (possible at tiny mask_prob): the
+            // loss and every gradient are exactly zero; skip the
+            // optimizers too so their moments stay untouched
+            self.step += 1;
+            return Ok(0.0);
+        }
+        let loss = self.forward_backward(&batch)?;
+        self.apply_grads();
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Forward + full backward over `batch`, filling the gradient
+    /// buffers ([`Self::grads`]) **without** applying any update — the
+    /// unit the finite-difference harness checks.  [`Self::train_step`]
+    /// is exactly this followed by [`Self::apply_grads`].
+    pub fn forward_backward(&mut self, batch: &Batch) -> Result<f64> {
         let (b, s) = (batch.b, batch.s);
         let logp = self.model.forward(&batch.tokens, false, None)?;
 
         let (width, heads, m) = (self.cfg.model.width, self.cfg.model.heads, self.cfg.model.m);
         let (hm, vocab, k_top) = (heads * m, self.model.vocab, self.model.engine.k_top);
+        let positions = b * s;
         let total_weight: f64 = batch.weights.iter().map(|&w| w as f64).sum();
-        if total_weight == 0.0 {
-            // no position was masked (possible at tiny mask_prob): the
-            // loss and every gradient are exactly zero
-            self.step += 1;
-            return Ok(0.0);
-        }
 
         self.g_embed.fill(0.0);
         self.g_pos.fill(0.0);
+        self.g_wq.fill(0.0);
         self.g_wo.fill(0.0);
         self.g_wout.fill(0.0);
+        self.g_gathered[..positions * hm].fill(0.0);
         self.row_grads.clear();
+        self.had_loss = total_weight != 0.0;
+        if !self.had_loss {
+            return Ok(0.0);
+        }
 
         let mut loss = 0.0f64;
         let mut y = vec![0.0f32; width];
         let mut coef = vec![0.0f32; vocab];
         let mut dy = vec![0.0f32; width];
         let mut dv = vec![0.0f32; hm];
-        for p in 0..b * s {
+        for p in 0..positions {
             let w_p = batch.weights[p];
             if w_p == 0.0 {
                 continue; // unmasked positions carry no loss
@@ -282,8 +394,10 @@ impl EngineTrainer {
                     go_row[j] += dyw * v[j];
                 }
             }
+            // the routing backward needs d(loss)/d(gathered) per query
+            self.g_gathered[p * hm..(p + 1) * hm].copy_from_slice(&dv);
 
-            // memory stage (straight-through): v[head] = Σ_j w_j T[idx_j]
+            // memory stage, value side: v[head] = Σ_j w_j T[idx_j]
             // → value rows get w_j * dv[head]; idx/w_j are constants
             for head in 0..heads {
                 let (idx_row, w_row) = self.model.lk.query(p * heads + head);
@@ -304,22 +418,82 @@ impl EngineTrainer {
             }
 
             // h = embed[t] + pos[c] + 0.5 embed[left] + 0.5 embed[right];
-            // dh = dy via the residual path
-            let c = p % s;
-            let t = clamp_token(batch.tokens[p], vocab);
-            add_scaled(&mut self.g_embed[t * width..(t + 1) * width], &dy, 1.0);
-            add_scaled(&mut self.g_pos[c * width..(c + 1) * width], &dy, 1.0);
-            if c > 0 {
-                let lt = clamp_token(batch.tokens[p - 1], vocab);
-                add_scaled(&mut self.g_embed[lt * width..(lt + 1) * width], &dy, 0.5);
-            }
-            if c + 1 < s {
-                let rt = clamp_token(batch.tokens[p + 1], vocab);
-                add_scaled(&mut self.g_embed[rt * width..(rt + 1) * width], &dy, 0.5);
+            // dh = dy via the residual path (the routing path adds its
+            // own dh term below, once dq is known)
+            accumulate_dh(
+                &mut self.g_embed,
+                &mut self.g_pos,
+                &batch.tokens,
+                p,
+                s,
+                vocab,
+                width,
+                &dy,
+            );
+        }
+
+        // memory stage, routing side: flow d(loss)/d(gathered) back
+        // through the kernel weights into the queries (batched, sharded,
+        // reusing the forward's SoA scratch)...
+        if self.cfg.train_routing {
+            let n_queries = positions * heads;
+            self.model.backward_queries(
+                n_queries,
+                &self.g_gathered[..n_queries * m],
+                &mut self.dq,
+            );
+            // ...then through q = query_scale * wq h into wq (outer
+            // product with h) and into h (and so the embeddings again)
+            let qscale = self.cfg.model.query_scale;
+            let mut dh_r = vec![0.0f32; width];
+            for p in 0..positions {
+                if batch.weights[p] == 0.0 {
+                    continue; // zero upstream ⇒ zero dq ⇒ nothing to add
+                }
+                dh_r.fill(0.0);
+                for head in 0..heads {
+                    for d in 0..8 {
+                        let gq = self.dq[(p * heads + head) * 8 + d] * qscale;
+                        if gq == 0.0 {
+                            continue;
+                        }
+                        let r = head * 8 + d;
+                        let h = &self.model.h[p * width..(p + 1) * width];
+                        let wrow = &self.model.wq[r * width..(r + 1) * width];
+                        let grow = &mut self.g_wq[r * width..(r + 1) * width];
+                        for w in 0..width {
+                            grow[w] += (gq * h[w] as f64) as f32;
+                            dh_r[w] += (gq * wrow[w] as f64) as f32;
+                        }
+                    }
+                }
+                accumulate_dh(
+                    &mut self.g_embed,
+                    &mut self.g_pos,
+                    &batch.tokens,
+                    p,
+                    s,
+                    vocab,
+                    width,
+                    &dh_r,
+                );
             }
         }
 
-        // apply: SparseAdam on touched value rows, SGD on dense params
+        Ok(loss)
+    }
+
+    /// Apply the gradients of the last [`Self::forward_backward`]:
+    /// SparseAdam on touched value rows, SGD on the dense parameters,
+    /// dense Adam on `wq` (when routing is trained).  A mask-free batch
+    /// (no loss) applies nothing at all — in particular no dense-Adam
+    /// step, whose moment decay would otherwise move `wq` on an
+    /// all-zero gradient — keeping this split exactly equivalent to
+    /// [`Self::train_step`]'s early return.
+    fn apply_grads(&mut self) {
+        if !self.had_loss {
+            return;
+        }
         for (row, grad) in std::mem::take(&mut self.row_grads) {
             self.opt.update_row(&mut self.model.table, row, &grad);
         }
@@ -328,10 +502,10 @@ impl EngineTrainer {
         sgd(&mut self.model.pos, &self.g_pos, lr);
         sgd(&mut self.model.wo, &self.g_wo, lr);
         sgd(&mut self.model.w_out, &self.g_wout, lr);
-        // wq deliberately frozen — see module docs
-
-        self.step += 1;
-        Ok(loss)
+        if self.cfg.train_routing {
+            self.opt_wq.step(&mut self.model.wq, &self.g_wq);
+        }
+        // with routing frozen, wq stays exactly at its restored/seed bits
     }
 
     /// Masked cross-entropy perplexity over `n_batches` deterministic
@@ -362,13 +536,17 @@ impl EngineTrainer {
     }
 
     /// Save a checkpoint (model weights + optimizer state + tokenizer
-    /// fingerprint + geometry) at the current step.
+    /// fingerprint + geometry) at the current step.  The routing slot is
+    /// saved only when it is live (`train_routing`), so frozen-routing
+    /// checkpoints carry no routing tensors.
     pub fn save_checkpoint(&self, dir: &Path) -> Result<Manifest> {
         self.model.save_checkpoint(
             dir,
             self.step,
             &self.pipeline.bpe.fingerprint(),
             Some(&self.opt),
+            self.cfg.train_routing.then_some(&self.opt_wq),
+            self.cfg.fsync,
         )
     }
 
@@ -414,6 +592,37 @@ impl EngineTrainer {
             val_ppl,
             manifest,
         })
+    }
+}
+
+/// Accumulate a d(loss)/d(h) contribution for position `p` into the
+/// embedding/position gradients — the inverse of the forward's
+/// `h = embed[t] + pos[c] + 0.5 embed[left] + 0.5 embed[right]`.
+/// Shared by the residual path (`dh = dy`) and the routing path
+/// (`dh = query_scale * wq^T dq`).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn accumulate_dh(
+    g_embed: &mut [f32],
+    g_pos: &mut [f32],
+    tokens: &[i32],
+    p: usize,
+    s: usize,
+    vocab: usize,
+    width: usize,
+    dh: &[f32],
+) {
+    let c = p % s;
+    let t = clamp_token(tokens[p], vocab);
+    add_scaled(&mut g_embed[t * width..(t + 1) * width], dh, 1.0);
+    add_scaled(&mut g_pos[c * width..(c + 1) * width], dh, 1.0);
+    if c > 0 {
+        let lt = clamp_token(tokens[p - 1], vocab);
+        add_scaled(&mut g_embed[lt * width..(lt + 1) * width], dh, 0.5);
+    }
+    if c + 1 < s {
+        let rt = clamp_token(tokens[p + 1], vocab);
+        add_scaled(&mut g_embed[rt * width..(rt + 1) * width], dh, 0.5);
     }
 }
 
@@ -491,6 +700,41 @@ mod tests {
                 b.train_step().unwrap().to_bits()
             );
         }
+        let tokens = a.pipeline().val_batch(0).tokens;
+        assert_eq!(a.forward(&tokens).unwrap(), b.forward(&tokens).unwrap());
+    }
+
+    #[test]
+    fn routing_trains_wq_and_freezing_keeps_it_bit_identical() {
+        let mut trained = EngineTrainer::new(tiny_cfg()).unwrap();
+        let mut frozen =
+            EngineTrainer::new(EngineTrainConfig { train_routing: false, ..tiny_cfg() })
+                .unwrap();
+        let wq0 = frozen.model.wq.clone();
+        assert_eq!(trained.model.wq, wq0, "same seed, same init");
+        for _ in 0..5 {
+            trained.train_step().unwrap();
+            frozen.train_step().unwrap();
+        }
+        let same_bits = |a: &[f32], b: &[f32]| {
+            a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        };
+        assert!(same_bits(&frozen.model.wq, &wq0), "--freeze-routing must not move wq");
+        assert!(!same_bits(&trained.model.wq, &wq0), "trained routing must move wq");
+    }
+
+    #[test]
+    fn forward_backward_then_apply_equals_train_step() {
+        // the grad-check harness relies on this split being exactly the
+        // training step
+        let mut a = EngineTrainer::new(tiny_cfg()).unwrap();
+        let mut b = EngineTrainer::new(tiny_cfg()).unwrap();
+        let la = a.train_step().unwrap();
+        let batch = b.pipeline.train_batch(0);
+        let lb = b.forward_backward(&batch).unwrap();
+        b.apply_grads();
+        b.step += 1;
+        assert_eq!(la.to_bits(), lb.to_bits());
         let tokens = a.pipeline().val_batch(0).tokens;
         assert_eq!(a.forward(&tokens).unwrap(), b.forward(&tokens).unwrap());
     }

@@ -8,6 +8,6 @@ mod engine_trainer;
 mod eval;
 mod trainer;
 
-pub use engine_trainer::{EngineTrainConfig, EngineTrainOutcome, EngineTrainer};
+pub use engine_trainer::{EngineTrainConfig, EngineTrainOutcome, EngineTrainer, GradView};
 pub use eval::{evaluate, EvalReport};
 pub use trainer::{TrainOutcome, Trainer};

@@ -44,7 +44,8 @@
 //!   workers with per-worker scratch; output shards are disjoint, so
 //!   results are bit-identical for every thread count.
 
-use super::e8::{reduce, Vec8};
+use super::e8::{reduce, Reduction, Vec8};
+use super::kernel::kernel_df_dd2;
 use super::neighbors::{neighbor_table, neighbor_table_soa, N_NEIGHBORS};
 use super::torus::TorusK;
 use crate::memstore::ValueTable;
@@ -195,6 +196,87 @@ impl BatchLookupEngine {
         self.dispatch(queries, lookup, Some(table), &mut gathered[..need]);
     }
 
+    /// Backward of the fused lookup→gather with respect to the
+    /// *queries* — the routing gradient that lets the query projection
+    /// train through the memory layer (ROADMAP "Routing gradient /
+    /// trained `wq`").
+    ///
+    /// The forward computes `out[q] = sum_j w_j * T[idx_j]` with
+    /// `w_j = f(d2_j)` and `d2_j = |q - p_j|^2` for the selected
+    /// original-frame lattice points `p_j` (the reduction is an
+    /// isometry, so reduced-frame distances *are* original-frame
+    /// distances).  Given the upstream gradient `d_gathered = dL/d(out)`
+    /// this accumulates, per query,
+    ///
+    /// ```text
+    /// dL/dq = sum_j <d_gathered[q], T[idx_j]> * f'(d2_j) * 2 (q - p_j)
+    /// ```
+    ///
+    /// over exactly the hits the forward selected: the candidate
+    /// scoring and top-k selection are recomputed here with the same
+    /// scratch and the same operation order, so the selected set is
+    /// bit-identical to the forward's.  The raw kernel weights are the
+    /// gather coefficients (there is no normalising denominator in the
+    /// forward — `total_weight` is observability, not part of the
+    /// output), so no quotient-rule term appears.
+    ///
+    /// Ragged like the forward: `d_gathered` may be larger than `N x m`
+    /// (only the prefix is read) and `d_queries` larger than `N x 8`
+    /// (only the prefix is written).  Queries whose upstream gradient
+    /// row is entirely zero — unmasked positions, the common case in a
+    /// training batch — skip the pipeline outright.  Allocation-free
+    /// per worker and sharded exactly like the forward dispatch;
+    /// results are independent of the thread count.
+    pub fn backward_gather_ragged_into(
+        &self,
+        queries: &[f64],
+        table: &ValueTable,
+        d_gathered: &[f32],
+        d_queries: &mut [f64],
+    ) {
+        assert_eq!(queries.len() % 8, 0, "queries must be N x 8 row-major");
+        let n = queries.len() / 8;
+        let m = table.dim();
+        assert!(
+            d_gathered.len() >= n * m,
+            "upstream gradient holds {} floats, batch needs {}",
+            d_gathered.len(),
+            n * m
+        );
+        assert!(
+            d_queries.len() >= n * 8,
+            "query-gradient output holds {} floats, batch needs {}",
+            d_queries.len(),
+            n * 8
+        );
+        if n == 0 {
+            return;
+        }
+        let k = self.k_top;
+        let torus = self.torus;
+        let d_gathered = &d_gathered[..n * m];
+        let d_queries = &mut d_queries[..n * 8];
+        const MIN_QUERIES_PER_SHARD: usize = 32;
+        let shards = self.n_threads.min(n.div_ceil(MIN_QUERIES_PER_SHARD));
+        if shards <= 1 {
+            let mut scratch = Scratch::new();
+            backward_range(torus, k, queries, table, d_gathered, &mut scratch, d_queries);
+            return;
+        }
+        let chunk = n.div_ceil(shards);
+        std::thread::scope(|s| {
+            let qs = queries.chunks(chunk * 8);
+            let gs = d_gathered.chunks(chunk * m);
+            let dqs = d_queries.chunks_mut(chunk * 8);
+            for ((q, g), dq) in qs.zip(gs).zip(dqs) {
+                s.spawn(move || {
+                    let mut scratch = Scratch::new();
+                    backward_range(torus, k, q, table, g, &mut scratch, dq);
+                });
+            }
+        });
+    }
+
     /// Shard the batch across workers (or run inline when one worker or
     /// one query makes threading pure overhead).
     fn dispatch(
@@ -281,20 +363,16 @@ fn run_range(
     }
 }
 
-/// One query through the fused pipeline; returns the total weight.
-#[allow(clippy::too_many_arguments)]
-fn lookup_one(
-    torus: TorusK,
-    k_top: usize,
+/// Candidate scoring shared by forward and backward: lane-major squared
+/// distances into `scratch.d2`, in-support `(weight, candidate)` pairs
+/// into `scratch.cand`; returns the total kernel weight.  Forward and
+/// backward run the exact same operations in the same order here, so the
+/// backward's recomputed selection is bit-identical to the forward's.
+fn score_candidates(
+    red: &Reduction,
     soa: &[[f64; N_NEIGHBORS]; 8],
-    nbr: &[[i64; 8]; N_NEIGHBORS],
-    q: &Vec8,
     scratch: &mut Scratch,
-    idx_out: &mut [u64],
-    w_out: &mut [f32],
 ) -> f64 {
-    let red = reduce(q);
-
     // Lane-major squared distances: eight contiguous FMA passes over the
     // 232-candidate row.  Accumulation order per candidate (lane 0..7)
     // matches the scalar path's unrolled sum, keeping d2 bit-identical.
@@ -328,6 +406,23 @@ fn lookup_one(
             scratch.cand.push((w, ci as u32));
         }
     }
+    total
+}
+
+/// One query through the fused pipeline; returns the total weight.
+#[allow(clippy::too_many_arguments)]
+fn lookup_one(
+    torus: TorusK,
+    k_top: usize,
+    soa: &[[f64; N_NEIGHBORS]; 8],
+    nbr: &[[i64; 8]; N_NEIGHBORS],
+    q: &Vec8,
+    scratch: &mut Scratch,
+    idx_out: &mut [u64],
+    w_out: &mut [f32],
+) -> f64 {
+    let red = reduce(q);
+    let total = score_candidates(&red, soa, scratch);
 
     let top = partial_top_k_desc(&mut scratch.cand, k_top);
     for (j, &(w, ci)) in top.iter().enumerate() {
@@ -340,6 +435,55 @@ fn lookup_one(
         w_out[j] = 0.0;
     }
     total
+}
+
+/// The routing gradient for a contiguous query range (see
+/// [`BatchLookupEngine::backward_gather_ragged_into`]): recompute the
+/// forward's scoring + selection, then accumulate
+/// `dL/dq = sum_j <dg, T[idx_j]> * f'(d2_j) * 2 (q - p_j)` over the
+/// selected hits, with `p_j = unmap(c_j)` the original-frame lattice
+/// point (`|q - p_j|^2 = d2_j` because the reduction is an isometry).
+fn backward_range(
+    torus: TorusK,
+    k_top: usize,
+    queries: &[f64],
+    table: &ValueTable,
+    d_gathered: &[f32],
+    scratch: &mut Scratch,
+    d_queries: &mut [f64],
+) {
+    let soa = neighbor_table_soa();
+    let nbr = neighbor_table();
+    let m = table.dim();
+    for (qi, chunk) in queries.chunks_exact(8).enumerate() {
+        let q: &Vec8 = chunk.try_into().expect("8-lane query row");
+        let dq = &mut d_queries[qi * 8..(qi + 1) * 8];
+        dq.fill(0.0);
+        let dg = &d_gathered[qi * m..(qi + 1) * m];
+        // no-loss queries (unmasked positions) skip the whole pipeline
+        if dg.iter().all(|&g| g == 0.0) {
+            continue;
+        }
+        let red = reduce(q);
+        score_candidates(&red, soa, scratch);
+        let top = partial_top_k_desc(&mut scratch.cand, k_top);
+        for &(_w, ci) in top {
+            let df = kernel_df_dd2(scratch.d2[ci as usize]);
+            let u = red.unmap(&nbr[ci as usize]);
+            let row = table.row(torus.index(&u));
+            let mut dldw = 0.0f64;
+            for (&g, &r) in dg.iter().zip(row) {
+                dldw += g as f64 * r as f64;
+            }
+            let coef = 2.0 * dldw * df;
+            if coef == 0.0 {
+                continue; // e.g. the hit's value row is all zeros
+            }
+            for (d, out) in dq.iter_mut().enumerate() {
+                *out += coef * (q[d] - u[d] as f64);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -463,6 +607,94 @@ mod tests {
         engine.lookup_batch_into(&random_queries(&mut rng, 2, 5.0), &mut out);
         assert_eq!(out.queries(), 2);
         assert_eq!(out.indices.len(), 16);
+    }
+
+    /// `loss = <dg, gathered(q)>` — the scalar probe the backward's
+    /// query gradient is checked against by central finite differences.
+    fn probe_loss(
+        engine: &BatchLookupEngine,
+        table: &ValueTable,
+        queries: &[f64],
+        dg: &[f32],
+        lk: &mut BatchOutput,
+        gathered: &mut [f32],
+    ) -> f64 {
+        engine.lookup_gather_into(queries, table, lk, gathered);
+        gathered.iter().zip(dg).map(|(&v, &g)| v as f64 * g as f64).sum()
+    }
+
+    #[test]
+    fn backward_matches_finite_difference_of_the_fused_gather() {
+        // k_top = 232 keeps every in-support candidate selected, so the
+        // gather is a smooth function of the query (the kernel is C^3 at
+        // the support boundary) and a central difference converges
+        let mut table = ValueTable::zeros(1 << 18, 8).unwrap();
+        table.randomize(7, 0.5);
+        let engine = BatchLookupEngine::new(torus(), N_NEIGHBORS);
+        let mut rng = Rng::new(31);
+        let n = 12;
+        let queries = random_queries(&mut rng, n, 6.0);
+        let dg: Vec<f32> = (0..n * 8).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut dq = vec![0.0f64; n * 8];
+        engine.backward_gather_ragged_into(&queries, &table, &dg, &mut dq);
+
+        let mut lk = BatchOutput::default();
+        let mut gathered = vec![0.0f32; n * 8];
+        // the forward gathers in f32, so the step must sit well above
+        // the f32 rounding floor of the loss difference
+        let h = 1e-3;
+        let mut probe = queries.clone();
+        for i in 0..n * 8 {
+            probe[i] = queries[i] + h;
+            let up = probe_loss(&engine, &table, &probe, &dg, &mut lk, &mut gathered);
+            probe[i] = queries[i] - h;
+            let down = probe_loss(&engine, &table, &probe, &dg, &mut lk, &mut gathered);
+            probe[i] = queries[i];
+            let fd = (up - down) / (2.0 * h);
+            let tol = 1e-3 + 1e-2 * fd.abs().max(dq[i].abs());
+            assert!(
+                (fd - dq[i]).abs() <= tol,
+                "lane {i}: analytic {} vs finite difference {fd}",
+                dq[i]
+            );
+        }
+    }
+
+    #[test]
+    fn backward_zero_upstream_gradient_writes_zeros_and_leaves_the_tail() {
+        let mut table = ValueTable::zeros(1 << 18, 4).unwrap();
+        table.randomize(3, 0.2);
+        let engine = BatchLookupEngine::new(torus(), 32);
+        let mut rng = Rng::new(8);
+        let queries = random_queries(&mut rng, 5, 6.0);
+        // ragged buffers (max batch 9, fill 5) prefilled with sentinels:
+        // stale prefix values must be overwritten, the tail untouched
+        let dg = vec![0.0f32; 9 * 4];
+        let mut dq = vec![7.5f64; 9 * 8];
+        engine.backward_gather_ragged_into(&queries, &table, &dg, &mut dq);
+        assert!(dq[..5 * 8].iter().all(|&v| v == 0.0), "zero upstream must mean zero grad");
+        assert!(dq[5 * 8..].iter().all(|&v| v == 7.5), "tail overwritten");
+    }
+
+    #[test]
+    fn backward_thread_count_does_not_change_results() {
+        let mut table = ValueTable::zeros(1 << 18, 16).unwrap();
+        table.randomize(11, 0.1);
+        let mut rng = Rng::new(40);
+        let n = 101;
+        let queries = random_queries(&mut rng, n, 10.0);
+        let dg: Vec<f32> = (0..n * 16).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut base = vec![0.0f64; n * 8];
+        BatchLookupEngine::new(torus(), 32)
+            .backward_gather_ragged_into(&queries, &table, &dg, &mut base);
+        for threads in [2, 3, 8] {
+            let mut dq = vec![0.0f64; n * 8];
+            BatchLookupEngine::with_threads(torus(), 32, threads)
+                .backward_gather_ragged_into(&queries, &table, &dg, &mut dq);
+            for (i, (a, b)) in dq.iter().zip(&base).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads, lane {i}");
+            }
+        }
     }
 
     #[test]

@@ -82,6 +82,42 @@ mod tests {
     }
 
     #[test]
+    fn derivative_matches_finite_difference_across_the_support() {
+        // property: everywhere in (and beyond) the support, the analytic
+        // derivative agrees with a central difference of kernel_f — the
+        // routing gradient (lattice::batch backward) rides this function
+        crate::util::check::forall(500, |rng| {
+            let d2 = rng.uniform(0.0, 10.0);
+            let h = 1e-6;
+            let fd = (kernel_f(d2 + h) - kernel_f(d2 - h)) / (2.0 * h);
+            let df = kernel_df_dd2(d2);
+            assert!(
+                (fd - df).abs() <= 1e-8 + 1e-6 * fd.abs(),
+                "d2 = {d2}: analytic {df} vs finite difference {fd}"
+            );
+        });
+    }
+
+    #[test]
+    fn derivative_vanishes_continuously_at_the_support_boundary() {
+        // f = (1 - d2/8)^4 is C^3 at d2 = 8: the derivative approaches 0
+        // from inside (like -(eps/8)^3 / 2) and is exactly 0 outside, so
+        // the routing gradient never jumps as a hit leaves the support
+        assert_eq!(kernel_df_dd2(8.0), 0.0);
+        assert_eq!(kernel_df_dd2(9.0), 0.0);
+        for eps in [1e-3, 1e-6, 1e-9] {
+            let inside = kernel_df_dd2(8.0 - eps);
+            assert!(inside < 0.0, "still descending just inside (eps = {eps})");
+            assert!(inside.abs() <= 1e-8 + eps.powi(3), "eps = {eps}: {inside}");
+            assert_eq!(kernel_df_dd2(8.0 + eps), 0.0, "hard zero outside");
+        }
+        // a central difference straddling the boundary still converges
+        let h = 1e-5;
+        let fd = (kernel_f(8.0 + h) - kernel_f(8.0 - h)) / (2.0 * h);
+        assert!(fd.abs() < 1e-9, "{fd}");
+    }
+
+    #[test]
     fn top_k_selects_descending() {
         let mut items: Vec<(f64, usize)> =
             (0..100).map(|i| (((i * 37) % 100) as f64, i)).collect();

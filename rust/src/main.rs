@@ -24,7 +24,9 @@ use lram::data::DataPipeline;
 use lram::lattice::{exotic, support};
 use lram::pkm::cost;
 use lram::runtime::Runtime;
-use lram::server::{serve_with, ArtifactInit, Batcher, BatcherConfig, EngineConfig, HttpConfig};
+use lram::server::{
+    serve_until_signaled, ArtifactInit, Batcher, BatcherConfig, EngineConfig, HttpConfig,
+};
 use lram::util::cli::Args;
 use lram::util::timing::Table;
 
@@ -57,7 +59,11 @@ COMMANDS:
   train      train one variant (Table 2 / Figure 2 data point)
              --backend artifact | engine | auto (engine is pure rust;
              --save DIR writes a servable checkpoint, --save-every N
-             checkpoints periodically, --resume DIR continues a run)
+             checkpoints periodically, --resume DIR continues a run;
+             routing is trained through the lattice kernel by default —
+             --freeze-routing keeps wq fixed, --routing-lr X tunes its
+             dense-Adam rate (default 1e-3); --fsync makes checkpoint
+             commits power-loss durable)
   table1     lattice comparison: packing/covering radii + kernel support
   table2     train all five variants and print the perplexity table
   table3     asymptotic parameter/op counts for dense / PKM / LRAM
@@ -67,7 +73,8 @@ COMMANDS:
               trained engine weights; --random-init opts into untrained
               seed weights; --http-workers N, --max-pending N and
               --keep-alive-timeout SECS tune the keep-alive worker-pool
-              front door — see docs/serving.md)
+              front door; SIGTERM/SIGINT drain gracefully — see
+              docs/serving.md)
   checkpoint inspect a checkpoint directory:
              lram checkpoint inspect DIR [--verify]
   artifacts  list compiled AOT artifacts
@@ -166,18 +173,28 @@ fn cmd_train_engine(args: &Args) -> Result<()> {
     // config file + CLI overrides, same precedence as the artifact path
     // (base.steps already folds in --config and --steps)
     let base = load_config(args)?;
+    // routing is trained by default (the paper's differentiable-memory
+    // premise); --freeze-routing wins over an explicit --train-routing
+    let train_routing = if args.bool("freeze-routing", false)? {
+        false
+    } else {
+        args.bool("train-routing", true)?
+    };
     let cfg = EngineTrainConfig {
         model: engine_model_from_args(args)?,
         steps: base.steps,
         batch: args.usize("batch", 8)?,
         lr_dense: args.f64("lr", 0.05)? as f32,
         lr_values: args.f64("value-lr", 1e-3)? as f32,
+        train_routing,
+        lr_routing: args.f64("routing-lr", 1e-3)? as f32,
         corpus_seed: base.corpus_seed,
         vocab_size: base.vocab_size,
         mask_prob: base.mask_prob,
         eval_batches: base.eval_batches,
         save_every: args.u64("save-every", 0)?,
         save_dir: args.flags.get("save").map(std::path::PathBuf::from),
+        fsync: args.bool("fsync", false)?,
     };
     let mut trainer = match args.flags.get("resume") {
         Some(dir) => EngineTrainer::from_checkpoint(cfg, std::path::Path::new(dir))?,
@@ -372,7 +389,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bpe.clone(),
         batcher_cfg,
     )?;
-    serve_with(&addr, batcher, bpe, http)
+    // daemon loop: SIGTERM/SIGINT trigger a graceful drain (in-flight
+    // requests complete) instead of killing mid-response
+    serve_until_signaled(&addr, batcher, bpe, http)
 }
 
 /// `lram checkpoint inspect DIR [--verify]` — print the manifest

@@ -1,0 +1,143 @@
+//! Dense Adam for small per-model tensors — the routing projection `wq`.
+//!
+//! [`super::SparseAdam`] exists to amortise optimizer state over
+//! billion-row value tables; the query projection is a few KB that is
+//! touched on every step, so a plain dense Adam with one shared step
+//! count is the right tool.  Same contract as the sparse optimizer:
+//! state (moments + step count) round-trips through checkpoints so a
+//! resumed run is bit-identical to an uninterrupted one.
+
+use anyhow::{ensure, Result};
+
+pub struct DenseAdam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl DenseAdam {
+    pub fn new(n: usize, lr: f32) -> Self {
+        DenseAdam {
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+
+    /// One update over the full tensor.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), self.m.len());
+        debug_assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let t = self.t as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    /// Rebuild from checkpointed state (moments + shared step count).
+    pub fn from_state(m: Vec<f32>, v: Vec<f32>, t: u64, lr: f32) -> Result<Self> {
+        ensure!(
+            m.len() == v.len(),
+            "moment vectors disagree: {} vs {}",
+            m.len(),
+            v.len()
+        );
+        Ok(DenseAdam { m, v, t, lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 })
+    }
+
+    /// Checkpoint accessors: moments and the shared step count.
+    pub fn first_moment(&self) -> &[f32] {
+        &self.m
+    }
+
+    pub fn second_moment(&self) -> &[f32] {
+        &self.v
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    pub fn len(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descends_a_quadratic() {
+        // minimise 0.5 * ||x - target||^2 via its gradient
+        let target = [1.0f32, -2.0, 0.5, 3.0];
+        let mut x = [0.0f32; 4];
+        let mut opt = DenseAdam::new(4, 1e-2);
+        for _ in 0..2000 {
+            let grad: Vec<f32> = x.iter().zip(&target).map(|(a, t)| a - t).collect();
+            opt.step(&mut x, &grad);
+        }
+        for (a, b) in x.iter().zip(&target) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+        assert_eq!(opt.step_count(), 2000);
+    }
+
+    #[test]
+    fn first_step_magnitude_is_lr() {
+        // Adam's first update has magnitude ~lr regardless of grad scale
+        let mut x = [0.0f32; 2];
+        let mut opt = DenseAdam::new(2, 1e-3);
+        opt.step(&mut x, &[100.0, -0.001]);
+        assert!((x[0] + 1e-3).abs() < 1e-5, "{}", x[0]);
+        assert!((x[1] - 1e-3).abs() < 1e-5, "{}", x[1]);
+    }
+
+    #[test]
+    fn from_state_resumes_bias_correction_bit_identically() {
+        let mut xa = [0.5f32; 3];
+        let mut xb = [0.5f32; 3];
+        let mut opt = DenseAdam::new(3, 1e-2);
+        for _ in 0..5 {
+            opt.step(&mut xa, &[1.0, -1.0, 0.25]);
+        }
+        xb.copy_from_slice(&xa);
+        let mut resumed = DenseAdam::from_state(
+            opt.first_moment().to_vec(),
+            opt.second_moment().to_vec(),
+            opt.step_count(),
+            1e-2,
+        )
+        .unwrap();
+        opt.step(&mut xa, &[0.5, 0.5, 0.5]);
+        resumed.step(&mut xb, &[0.5, 0.5, 0.5]);
+        for (a, b) in xa.iter().zip(&xb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn from_state_rejects_mismatched_shapes() {
+        assert!(DenseAdam::from_state(vec![0.0; 4], vec![0.0; 3], 1, 1e-3).is_err());
+    }
+}

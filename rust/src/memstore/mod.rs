@@ -8,10 +8,12 @@
 //! (lr 1e-3 on memory values) to touched rows only.  Access statistics
 //! feed the Table-5 utilisation / KL-divergence experiment.
 
+mod dense_adam;
 mod sparse_adam;
 mod stats;
 mod table;
 
+pub use dense_adam::DenseAdam;
 pub use sparse_adam::SparseAdam;
 pub use stats::AccessStats;
 pub use table::ValueTable;

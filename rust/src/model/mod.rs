@@ -23,7 +23,7 @@ use anyhow::{ensure, Context, Result};
 use crate::checkpoint::{Checkpoint, CheckpointWriter, Manifest, ModelDesc};
 use crate::lattice::e8::Vec8;
 use crate::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
-use crate::memstore::{AccessStats, SparseAdam, ValueTable};
+use crate::memstore::{AccessStats, DenseAdam, SparseAdam, ValueTable};
 use crate::util::rng::Rng;
 
 /// Configuration of the pure-rust LRAM MLM.
@@ -121,6 +121,11 @@ pub mod tensor_names {
     pub const ADAM_M: &str = "adam_m";
     pub const ADAM_V: &str = "adam_v";
     pub const ADAM_T: &str = "adam_t";
+    /// Routing (dense-Adam over `wq`) optimizer state; present since
+    /// checkpoint format version 2 when the routing was trained.
+    pub const WQ_ADAM_M: &str = "wq_adam_m";
+    pub const WQ_ADAM_V: &str = "wq_adam_v";
+    pub const WQ_ADAM_T: &str = "wq_adam_t";
 }
 
 /// The LRAM MLM: dense prefix → fused lattice lookup+gather → dense
@@ -276,18 +281,23 @@ impl LramMlm {
         )
     }
 
-    /// Save the model (and optionally the sparse-Adam state over the
-    /// value table) as a checkpoint directory.  Blobs first, manifest
-    /// last, so a crashed save can never be opened.
+    /// Save the model (and optionally the optimizer state: sparse-Adam
+    /// over the value table, dense-Adam over the routing projection) as
+    /// a checkpoint directory.  Blobs first, manifest last, so a crashed
+    /// save can never be opened.  `fsync` additionally syncs every blob
+    /// and the directories on commit, so the checkpoint survives power
+    /// loss, not just process crashes (`lram train --fsync`).
     pub fn save_checkpoint(
         &self,
         dir: &Path,
         step: u64,
         tokenizer_hash: &str,
         opt: Option<&SparseAdam>,
+        routing_opt: Option<&DenseAdam>,
+        fsync: bool,
     ) -> Result<Manifest> {
         use tensor_names::*;
-        let mut w = CheckpointWriter::new(dir)?;
+        let mut w = CheckpointWriter::new(dir)?.with_fsync(fsync);
         let (wd, hd, m) = (self.cfg.width as u64, self.cfg.heads as u64, self.cfg.m as u64);
         w.write_f32(EMBED, &[self.vocab as u64, wd], &self.embed)?;
         w.write_f32(POS, &[self.cfg.seq_len as u64, wd], &self.pos)?;
@@ -304,6 +314,22 @@ impl LramMlm {
             w.write_f32(ADAM_M, &[rows, m], opt.first_moment().data())?;
             w.write_f32(ADAM_V, &[rows, m], opt.second_moment().data())?;
             w.write_u32(ADAM_T, &[rows], opt.step_counts())?;
+        }
+        if let Some(r) = routing_opt {
+            ensure!(
+                r.len() == self.wq.len(),
+                "routing optimizer state has {} entries, wq has {}",
+                r.len(),
+                self.wq.len()
+            );
+            ensure!(
+                r.step_count() <= u32::MAX as u64,
+                "routing step count {} overflows the checkpoint field",
+                r.step_count()
+            );
+            w.write_f32(WQ_ADAM_M, &[hd * 8, wd], r.first_moment())?;
+            w.write_f32(WQ_ADAM_V, &[hd * 8, wd], r.second_moment())?;
+            w.write_u32(WQ_ADAM_T, &[1], &[r.step_count() as u32])?;
         }
         w.finish(step, tokenizer_hash, self.cfg.to_desc(self.vocab))
     }
@@ -474,6 +500,26 @@ impl LramMlm {
         Ok(out)
     }
 
+    /// Routing backward for the *last* forward pass: d(loss)/d(query)
+    /// for the first `n_queries` queries, from the upstream gradient
+    /// w.r.t. the gathered value rows (`d_gathered`, `n_queries x m`).
+    /// Allocation-free and sharded exactly like the forward lookup —
+    /// this is how the trainer flows the loss through the lattice kernel
+    /// into `wq`.
+    pub(crate) fn backward_queries(
+        &self,
+        n_queries: usize,
+        d_gathered: &[f32],
+        d_queries: &mut [f64],
+    ) {
+        self.engine.backward_gather_ragged_into(
+            &self.queries[..n_queries * 8],
+            &self.table,
+            d_gathered,
+            d_queries,
+        );
+    }
+
     /// Recompute `y = h + wo·v` for position `p` of the *last* forward
     /// pass (the trainer's backward pass needs it; recomputing one
     /// width-vector is cheaper than storing `positions x width`).
@@ -522,7 +568,7 @@ mod tests {
     fn checkpoint_roundtrip_is_bit_identical() {
         let dir = tmp_dir("rt");
         let mut a = LramMlm::seeded(tiny_cfg(), 64).unwrap();
-        a.save_checkpoint(&dir, 7, "feedbeef00000000", None).unwrap();
+        a.save_checkpoint(&dir, 7, "feedbeef00000000", None, None, false).unwrap();
         let ck = Checkpoint::open(&dir).unwrap();
         assert_eq!(ck.manifest.step, 7);
         let mut b = LramMlm::from_checkpoint(&ck, 1).unwrap();
@@ -540,7 +586,7 @@ mod tests {
     fn geometry_mismatch_is_rejected() {
         let dir = tmp_dir("geom");
         let a = LramMlm::seeded(tiny_cfg(), 64).unwrap();
-        a.save_checkpoint(&dir, 0, "feedbeef00000000", None).unwrap();
+        a.save_checkpoint(&dir, 0, "feedbeef00000000", None, None, false).unwrap();
         // tamper: claim a different width in the manifest
         let path = dir.join(crate::checkpoint::MANIFEST_FILE);
         let text = std::fs::read_to_string(&path).unwrap();
@@ -559,7 +605,7 @@ mod tests {
         let mut opt = SparseAdam::new(rows, 8, 1e-3).unwrap();
         let grad = [0.5f32; 8];
         opt.update_row(&mut a.table, 5, &grad);
-        a.save_checkpoint(&dir, 1, "feedbeef00000000", Some(&opt)).unwrap();
+        a.save_checkpoint(&dir, 1, "feedbeef00000000", Some(&opt), None, false).unwrap();
         let ck = Checkpoint::open(&dir).unwrap();
         assert!(ck.manifest.has_tensor(tensor_names::ADAM_M));
         let t = ck.map_u32(tensor_names::ADAM_T).unwrap();

@@ -85,6 +85,9 @@ pub struct Batcher {
     /// incremented at admission, decremented by the executor at reply
     pending: Arc<AtomicUsize>,
     max_pending: usize,
+    /// the backend's max batch rows (set once the executor builds it);
+    /// sizes the adaptive `Retry-After` estimate
+    batch_capacity: Arc<AtomicUsize>,
     /// rolling access statistics (Table-5 style observability in serving)
     pub stats: Arc<Mutex<BatchStats>>,
 }
@@ -124,10 +127,12 @@ impl Batcher {
         let (tx, rx): (Sender<Pending>, Receiver<Pending>) = channel();
         let stats = Arc::new(Mutex::new(BatchStats::default()));
         let pending = Arc::new(AtomicUsize::new(0));
+        let batch_capacity = Arc::new(AtomicUsize::new(1));
         let batcher = Arc::new(Batcher {
             tx,
             pending: pending.clone(),
             max_pending: cfg.max_pending,
+            batch_capacity: batch_capacity.clone(),
             stats: stats.clone(),
         });
         let (ready_tx, ready_rx) = channel::<Result<()>>();
@@ -147,6 +152,7 @@ impl Batcher {
                 }
             };
             let b_max = backend.max_batch();
+            batch_capacity.store(b_max.max(1), Ordering::Relaxed);
             let seq_len = backend.seq_len();
             let vocab = backend.vocab();
             loop {
@@ -317,6 +323,24 @@ impl Batcher {
         self.max_pending
     }
 
+    /// Suggested client back-off for shed responses, estimated from the
+    /// live queue depth and the measured mean batch execution latency
+    /// (ROADMAP PR-4 "Adaptive Retry-After": a well-behaved client
+    /// should back off proportionally to actual overload, not a
+    /// constant).  Clients see this as the `Retry-After` header on
+    /// every 429.
+    pub fn retry_after_secs(&self) -> u64 {
+        let mean_batch_ms = {
+            let s = self.stats.lock().unwrap();
+            if s.batches > 0 { s.total_exec_latency_ms / s.batches as f64 } else { 0.0 }
+        };
+        estimate_retry_after(
+            self.queue_depth(),
+            self.batch_capacity.load(Ordering::Relaxed),
+            mean_batch_ms,
+        )
+    }
+
     /// Tokenize + enqueue a request; blocks until the response is ready.
     /// Convenience wrapper over [`Self::submit_bounded`] that flattens
     /// the typed error (tests and non-HTTP callers).
@@ -385,6 +409,24 @@ impl Batcher {
     }
 }
 
+/// `Retry-After` never suggests waiting longer than this, however deep
+/// the queue — past a minute the client should be re-resolving, not
+/// sleeping on one overloaded replica.
+const MAX_RETRY_AFTER_SECS: u64 = 60;
+
+/// The adaptive `Retry-After` estimate: the shed request would sit
+/// behind `ceil(queue_depth / batch_capacity)` batches of roughly
+/// `mean_batch_ms` each, so that is how long the client should wait
+/// before trying again — floored at 1s (the HTTP-date-free minimum that
+/// still means "back off") and capped at [`MAX_RETRY_AFTER_SECS`].
+/// With no execution history yet the estimate degrades to the old
+/// constant 1.
+fn estimate_retry_after(queue_depth: usize, batch_capacity: usize, mean_batch_ms: f64) -> u64 {
+    let batches_ahead = queue_depth.div_ceil(batch_capacity.max(1));
+    let wait_secs = batches_ahead as f64 * mean_batch_ms.max(0.0) / 1e3;
+    (wait_secs.ceil() as u64).clamp(1, MAX_RETRY_AFTER_SECS)
+}
+
 /// Tokenize text, mapping literal `[MASK]` spans to the mask id.
 pub fn encode_with_masks(bpe: &Bpe, text: &str) -> (Vec<i32>, Vec<usize>) {
     let mut ids = vec![CLS_ID];
@@ -447,6 +489,26 @@ mod tests {
         let mut t = BpeTrainer::new();
         t.add_text("the cat sat on the mat the cat sat");
         t.train(100)
+    }
+
+    #[test]
+    fn retry_after_grows_with_queue_depth_and_stays_bounded() {
+        // the adaptive estimate behind the Retry-After header: deeper
+        // queues must tell clients to back off longer
+        let mean_ms = 80.0;
+        let shallow = estimate_retry_after(8, 4, mean_ms);
+        let mid = estimate_retry_after(128, 4, mean_ms);
+        let deep = estimate_retry_after(2048, 4, mean_ms);
+        assert!(shallow < mid && mid < deep, "{shallow} < {mid} < {deep} expected");
+        // exact shape: ceil(depth/capacity) batches x mean seconds
+        assert_eq!(mid, (128u64.div_ceil(4) as f64 * 0.08).ceil() as u64);
+        // floors and caps: never 0 (it must still mean "back off"),
+        // never past a minute, sane before any execution history exists
+        assert_eq!(estimate_retry_after(0, 4, mean_ms), 1);
+        assert_eq!(estimate_retry_after(100, 4, 0.0), 1);
+        assert_eq!(estimate_retry_after(10_000_000, 4, mean_ms), MAX_RETRY_AFTER_SECS);
+        // a zero capacity (backend not built yet) must not divide by zero
+        assert_eq!(estimate_retry_after(16, 0, mean_ms), 2);
     }
 
     #[test]

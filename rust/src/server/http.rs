@@ -23,7 +23,13 @@
 //! * **graceful drain** — [`Server::shutdown`] stops the acceptor,
 //!   lets every in-flight request complete (workers finish the current
 //!   response, the batcher finishes the current batch), then joins all
-//!   threads.
+//!   threads.  [`Server::drain_on_termination`] wires SIGTERM/SIGINT
+//!   (vendored-libc `sigaction`) to the same drain, which is how
+//!   [`serve_until_signaled`] — the `lram serve` daemon loop — exits,
+//! * **adaptive `Retry-After`** — every 429 carries a back-off estimate
+//!   from live queue depth × measured mean batch latency
+//!   ([`Batcher::retry_after_secs`]), so well-behaved clients back off
+//!   proportionally to actual overload.
 //!
 //! Endpoints:
 //!   POST /predict  {"text": "... [MASK] ...", "top_k": 5}
@@ -58,8 +64,6 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 const MAX_LINE_BYTES: usize = 8 << 10;
 /// Header count cap per request.
 const MAX_HEADERS: usize = 100;
-/// `Retry-After` seconds suggested on shed responses.
-const RETRY_AFTER_SECS: u64 = 1;
 
 /// Front-door tunables (`--http-workers`, `--keep-alive-timeout`; the
 /// admission cap lives in [`super::BatcherConfig::max_pending`]).
@@ -161,11 +165,11 @@ impl Server {
         }
         {
             let shutdown = shutdown.clone();
-            let http = http.clone();
+            let router = router.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name("http-acceptor".into())
-                    .spawn(move || acceptor_loop(&listener, &conn_tx, &http, &shutdown))?,
+                    .spawn(move || acceptor_loop(&listener, &conn_tx, &router, &shutdown))?,
             );
         }
         log::info!(
@@ -192,6 +196,37 @@ impl Server {
     /// other thread blocks in [`Server::join`].
     pub fn shutdown_handle(&self) -> ShutdownHandle {
         ShutdownHandle { flag: self.shutdown.clone() }
+    }
+
+    /// Wire SIGTERM/SIGINT to a graceful drain (ROADMAP PR-4 "SIGTERM →
+    /// graceful drain"): when either signal arrives, the acceptor stops,
+    /// in-flight requests complete, and [`Server::join`] returns.  The
+    /// vendored-libc `sigaction` handler only sets an atomic flag; the
+    /// watcher thread spawned here turns the flag into the drain.  The
+    /// flag is process-global and one-shot — exactly the semantics of
+    /// termination.
+    pub fn drain_on_termination(&self) -> Result<()> {
+        let flag = crate::util::signal::termination_flag();
+        let server_down = self.shutdown.clone();
+        let handle = self.shutdown_handle();
+        // detached by design, but not leaked: the watcher also exits
+        // when the server is shut down programmatically, so embedders
+        // that never receive a signal don't keep a polling thread (and
+        // a ShutdownHandle) alive per server
+        let _watcher = std::thread::Builder::new()
+            .name("signal-watcher".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    if server_down.load(Ordering::Relaxed) {
+                        return; // server stopped without a signal
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                log::info!("termination signal received: draining in-flight requests");
+                handle.shutdown();
+            })
+            .context("spawning the signal watcher")?;
+        Ok(())
     }
 
     /// Graceful drain: stop accepting, let in-flight requests (and the
@@ -230,12 +265,29 @@ pub fn serve_with(
     Ok(())
 }
 
+/// Daemon entry point for `lram serve`: serve until SIGTERM or SIGINT
+/// arrives, then drain gracefully (in-flight requests complete) and
+/// return — so `kill <pid>` and an init system's stop both end the
+/// process cleanly instead of dropping mid-flight work.
+pub fn serve_until_signaled(
+    addr: &str,
+    batcher: Arc<Batcher>,
+    bpe: Arc<Bpe>,
+    cfg: HttpConfig,
+) -> Result<()> {
+    let server = Server::bind(addr, batcher, bpe, cfg)?;
+    server.drain_on_termination()?;
+    server.join();
+    log::info!("drained cleanly; exiting");
+    Ok(())
+}
+
 // -- acceptor --------------------------------------------------------------
 
 fn acceptor_loop(
     listener: &TcpListener,
     conn_tx: &SyncSender<TcpStream>,
-    http: &HttpStats,
+    router: &Router,
     shutdown: &AtomicBool,
 ) {
     // conn_tx is dropped when this loop exits, which is what lets idle
@@ -246,15 +298,15 @@ fn acceptor_loop(
         }
         match listener.accept() {
             Ok((stream, _)) => {
-                http.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                router.http.connections_accepted.fetch_add(1, Ordering::Relaxed);
                 match conn_tx.try_send(stream) {
                     Ok(()) => {}
                     Err(TrySendError::Full(stream)) => {
                         // every worker busy and the backlog full: shed at
                         // the door with a well-formed 429 instead of
                         // queueing unboundedly
-                        http.connections_shed.fetch_add(1, Ordering::Relaxed);
-                        shed_connection(stream);
+                        router.http.connections_shed.fetch_add(1, Ordering::Relaxed);
+                        shed_connection(stream, router.batcher.retry_after_secs());
                     }
                     Err(TrySendError::Disconnected(_)) => return,
                 }
@@ -277,12 +329,12 @@ fn acceptor_loop(
 /// its tight read timeout bounds how long a shed can stall the
 /// acceptor — under sustained overload that stall is itself
 /// backpressure on the accept rate.
-fn shed_connection(mut stream: TcpStream) {
+fn shed_connection(mut stream: TcpStream, retry_after_secs: u64) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
     let body = error_body("server overloaded: connection backlog full");
-    let _ = respond(&mut stream, 429, &body, true, 0);
+    let _ = respond(&mut stream, 429, &body, true, 0, retry_after_secs);
     drain_briefly(&mut stream);
 }
 
@@ -339,7 +391,7 @@ fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) 
             // requests, idle past the deadline, or server draining
             Err(ReadError::Idle) => return Ok(()),
             Err(ReadError::Bad { status, message }) => {
-                let _ = respond(&mut stream, status, &error_body(&message), true, 0);
+                let _ = respond(&mut stream, status, &error_body(&message), true, 0, 0);
                 // drain what the client is still sending (e.g. the body
                 // of an oversized POST) before closing, so the error
                 // response isn't wiped out by a TCP reset on unread data
@@ -352,9 +404,12 @@ fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) 
         };
         router.http.requests.fetch_add(1, Ordering::Relaxed);
         let (status, body) = router.route(&req);
+        // shed responses tell the client when to come back, from live
+        // queue depth x measured batch latency
+        let retry = if status == 429 { router.batcher.retry_after_secs() } else { 0 };
         // a draining server finishes this response, then closes
         let close = !req.keep_alive || shutdown.load(Ordering::Relaxed);
-        respond(&mut stream, status, &body, close, keep_alive_secs)
+        respond(&mut stream, status, &body, close, keep_alive_secs, retry)
             .map_err(|e| anyhow!(e).context("writing response"))?;
         if close {
             return Ok(());
@@ -710,6 +765,7 @@ fn respond(
     body: &str,
     close: bool,
     keep_alive_secs: u64,
+    retry_after_secs: u64,
 ) -> std::io::Result<()> {
     let mut head = format!(
         "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
@@ -717,7 +773,9 @@ fn respond(
         body.len()
     );
     if status == 429 {
-        head.push_str(&format!("Retry-After: {RETRY_AFTER_SECS}\r\n"));
+        // adaptive back-off (queue depth x mean batch latency); the
+        // floor of 1 keeps the header meaningful even with no history
+        head.push_str(&format!("Retry-After: {}\r\n", retry_after_secs.max(1)));
     }
     if close {
         head.push_str("Connection: close\r\n\r\n");

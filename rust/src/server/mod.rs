@@ -22,4 +22,6 @@ pub use backend::{
     EngineBackend, EngineConfig, InferenceBackend,
 };
 pub use batcher::{Batcher, BatcherConfig, SubmitError};
-pub use http::{serve, serve_with, HttpConfig, HttpStats, Server, ShutdownHandle};
+pub use http::{
+    serve, serve_until_signaled, serve_with, HttpConfig, HttpStats, Server, ShutdownHandle,
+};

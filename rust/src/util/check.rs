@@ -51,6 +51,44 @@ pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
     }
 }
 
+/// Compare an analytic gradient against a (central-finite-difference)
+/// numeric one, coordinate by coordinate: each must satisfy
+/// `|a - n| <= atol + rtol * max(|a|, |n|)`.  Reports the worst
+/// offending coordinate with both values, so a failed check names the
+/// exact derivative that is wrong.  `rtol = 1e-3` is the repo contract
+/// for f32-computed analytic gradients checked against an f64 forward
+/// (`rust/tests/grad_check.rs`).
+#[track_caller]
+pub fn assert_grad_close(name: &str, analytic: &[f64], numeric: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(
+        analytic.len(),
+        numeric.len(),
+        "{name}: {} analytic vs {} numeric coordinates",
+        analytic.len(),
+        numeric.len()
+    );
+    assert!(!analytic.is_empty(), "{name}: nothing to check");
+    let mut worst = 0usize;
+    let mut worst_ratio = 0.0f64;
+    for (i, (&a, &n)) in analytic.iter().zip(numeric).enumerate() {
+        assert!(a.is_finite() && n.is_finite(), "{name}[{i}]: {a} vs {n}");
+        let tol = atol + rtol * a.abs().max(n.abs());
+        let ratio = (a - n).abs() / tol;
+        if ratio > worst_ratio {
+            worst_ratio = ratio;
+            worst = i;
+        }
+    }
+    assert!(
+        worst_ratio <= 1.0,
+        "{name}: gradient mismatch at [{worst}]: analytic {} vs numeric {} \
+         (|diff| {} exceeds atol {atol} + rtol {rtol})",
+        analytic[worst],
+        numeric[worst],
+        (analytic[worst] - numeric[worst]).abs()
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +118,16 @@ mod tests {
     #[should_panic]
     fn allclose_rejects_far() {
         assert_allclose(&[1.0], &[1.1], 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn grad_close_accepts_within_tolerance() {
+        assert_grad_close("ok", &[1.0, -2.0, 0.0], &[1.0005, -2.001, 1e-6], 1e-3, 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient mismatch at [1]")]
+    fn grad_close_names_the_worst_coordinate() {
+        assert_grad_close("bad", &[1.0, 1.0], &[1.0, 1.5], 1e-3, 1e-5);
     }
 }

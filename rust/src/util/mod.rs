@@ -10,6 +10,7 @@ pub mod json;
 pub mod logger;
 pub mod mmap;
 pub mod rng;
+pub mod signal;
 pub mod timing;
 pub mod topk;
 

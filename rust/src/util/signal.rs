@@ -1,0 +1,97 @@
+//! Process-termination signals as a pollable flag.
+//!
+//! `lram serve` must drain gracefully when the operator (or an init
+//! system / k8s) sends SIGTERM: stop accepting, let in-flight requests
+//! complete, then exit.  The handler installed here — via the vendored
+//! libc's `sigaction` — does the only async-signal-safe thing possible:
+//! it sets a static atomic.  A watcher thread (see
+//! [`crate::server::Server::drain_on_termination`]) turns the flag into
+//! the actual drain.
+//!
+//! The flag is process-global and one-shot by design: termination is
+//! not an event a process recovers from, so nothing ever clears it.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+
+static TERMINATION: AtomicBool = AtomicBool::new(false);
+static INSTALL: Once = Once::new();
+
+/// The signal handler: a relaxed-atomic store, then restore the
+/// default (fatal) disposition for *both* termination signals — both
+/// operations are async-signal-safe (`sigaction` is on the POSIX
+/// async-signal-safe list).  Restoring both, not just the delivered
+/// one, keeps the escalation path honest across signal kinds: Ctrl-C
+/// (SIGINT) to drain, then `kill` (SIGTERM) on a wedged drain, must
+/// kill — not be absorbed by the still-installed sibling handler.
+extern "C" fn mark_termination(_sig: libc::c_int) {
+    TERMINATION.store(true, Ordering::Relaxed);
+    let dfl = libc::sigaction {
+        sa_handler: 0, // SIG_DFL
+        sa_mask: [0; 16],
+        sa_flags: 0,
+        sa_restorer: 0,
+    };
+    // SAFETY: valid sigaction structs; called from a signal handler,
+    // where sigaction() is explicitly async-signal-safe.
+    unsafe {
+        libc::sigaction(libc::SIGTERM, &dfl, std::ptr::null_mut());
+        libc::sigaction(libc::SIGINT, &dfl, std::ptr::null_mut());
+    }
+}
+
+/// Install handlers for SIGTERM and SIGINT (idempotent) and return the
+/// flag they set.  `SA_RESTART` keeps blocking syscalls from surfacing
+/// spurious EINTRs to code that never expected them.  The handlers are
+/// one-shot across *both* signals (see [`mark_termination`]): the
+/// first signal of either kind starts the drain, the second — of
+/// either kind — kills outright, so a wedged drain never needs
+/// SIGKILL.
+pub fn termination_flag() -> &'static AtomicBool {
+    INSTALL.call_once(|| {
+        let handler: extern "C" fn(libc::c_int) = mark_termination;
+        let act = libc::sigaction {
+            sa_handler: handler as usize,
+            sa_mask: [0; 16],
+            sa_flags: libc::SA_RESTART,
+            sa_restorer: 0,
+        };
+        for sig in [libc::SIGTERM, libc::SIGINT] {
+            // SAFETY: `act` is a valid sigaction whose handler performs
+            // only an atomic store; a failed install degrades to the
+            // default signal disposition (kill), never to UB.
+            let rc = unsafe { libc::sigaction(sig, &act, std::ptr::null_mut()) };
+            if rc != 0 {
+                log::warn!("could not install the handler for signal {sig}");
+            }
+        }
+    });
+    &TERMINATION
+}
+
+/// Send SIGTERM to the current process — the integration tests' stand-in
+/// for `kill <pid>`, exercising the real handler path in-process.
+pub fn raise_sigterm() {
+    // SAFETY: raise() is async-signal-safe and has no memory contract.
+    unsafe {
+        libc::raise(libc::SIGTERM);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handler_sets_the_flag_on_raise() {
+        let flag = termination_flag();
+        // the flag may already be set if another test raised first —
+        // one-shot global state is the documented contract
+        raise_sigterm();
+        assert!(flag.load(Ordering::Relaxed), "SIGTERM must set the termination flag");
+        assert!(
+            std::ptr::eq(flag, termination_flag()),
+            "repeat installs hand back the same flag"
+        );
+    }
+}

@@ -80,6 +80,17 @@ fn assert_bits_equal(a: &[f32], b: &[f32]) {
     }
 }
 
+/// Rewrite the manifest's `version` field in place (skew simulations;
+/// the blob layout of versions 1 and 2 is identical, so a version-1
+/// fixture is exactly a version-2 checkpoint minus the routing tensors).
+fn patch_manifest_version(dir: &Path, to: i64) {
+    let path = dir.join(MANIFEST_FILE);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let from = format!("\"version\":{}", lram::checkpoint::FORMAT_VERSION);
+    assert!(text.contains(&from), "manifest must carry the current format version");
+    std::fs::write(&path, text.replace(&from, &format!("\"version\":{to}"))).unwrap();
+}
+
 /// Train a tiny model for a few steps and save it; returns the trainer
 /// (for reference forward passes) and the checkpoint directory.
 fn train_and_save(tag: &str, steps: u64) -> (EngineTrainer, PathBuf) {
@@ -286,11 +297,10 @@ fn corrupt_truncated_and_skewed_checkpoints_fail_loudly() {
     // version skew: a future format version must refuse, not guess
     let skew = tmp("negative_skew");
     copy_dir(&dir, &skew);
-    let path = skew.join(MANIFEST_FILE);
-    let text = std::fs::read_to_string(&path).unwrap();
-    std::fs::write(&path, text.replace("\"version\":1", "\"version\":2")).unwrap();
+    patch_manifest_version(&skew, lram::checkpoint::FORMAT_VERSION + 1);
     let err = format!("{:#}", open(&skew).unwrap_err());
-    assert!(err.contains("version 2") && err.contains("not supported"), "{err}");
+    let vtag = format!("version {}", lram::checkpoint::FORMAT_VERSION + 1);
+    assert!(err.contains(&vtag) && err.contains("not supported"), "{err}");
 
     for d in [&dir, &good, &corrupt, &trunc, &skew] {
         std::fs::remove_dir_all(d).ok();
@@ -308,9 +318,132 @@ fn inspect_surface_reads_what_was_saved() {
     assert_eq!(m.model.width, 16);
     assert_eq!(m.model.torus_k, [4; 8]);
     assert_eq!(m.tokenizer_hash, trainer.pipeline().bpe.fingerprint());
-    // model weights + 3 optimizer tensors
-    for name in ["embed", "pos", "wq", "wo", "w_out", "values", "adam_m", "adam_v", "adam_t"] {
+    // model weights + value-table optimizer + routing optimizer tensors
+    // (routing is trained by default, so its dense-Adam slot rides along)
+    for name in [
+        "embed", "pos", "wq", "wo", "w_out", "values", "adam_m", "adam_v", "adam_t",
+        "wq_adam_m", "wq_adam_v", "wq_adam_t",
+    ] {
         assert!(m.has_tensor(name), "missing tensor {name}");
     }
+    assert_eq!(m.version, lram::checkpoint::FORMAT_VERSION);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// version skew, both directions (the routing bump is format 1 → 2)
+// ---------------------------------------------------------------------
+
+#[test]
+fn version1_checkpoint_loads_with_a_fresh_routing_slot() {
+    // a PR-3-era checkpoint: same blob layout, version 1, no routing
+    // tensors.  Manufacture one by training with --freeze-routing (no
+    // wq_adam_* saved) and rewriting the version field.
+    let cfg = EngineTrainConfig { train_routing: false, ..tiny_train_cfg() };
+    let mut frozen = EngineTrainer::new(cfg.clone()).unwrap();
+    for _ in 0..4 {
+        frozen.train_step().unwrap();
+    }
+    let dir = tmp("v1_fixture");
+    let manifest = frozen.save_checkpoint(&dir).unwrap();
+    assert!(
+        !manifest.has_tensor("wq_adam_m"),
+        "frozen-routing checkpoints must not carry routing state"
+    );
+    patch_manifest_version(&dir, 1);
+
+    // the new reader loads it for *serving*...
+    let bpe = frozen.pipeline().bpe.clone();
+    let mut backend =
+        EngineBackend::from_checkpoint(&CheckpointInit::new(dir.to_str().unwrap()), &bpe)
+            .expect("version-1 checkpoints must keep serving");
+    let tokens = frozen.pipeline().val_batch(0).tokens;
+    assert_bits_equal(
+        &frozen.forward(&tokens).unwrap(),
+        &backend.infer(&tokens).unwrap(),
+    );
+
+    // ...and for *resuming with routing on*: absent state → fresh slot,
+    // training proceeds and the next save carries the routing tensors
+    let mut resumed = EngineTrainer::from_checkpoint(tiny_train_cfg(), &dir).unwrap();
+    assert_eq!(resumed.step_count(), 4);
+    let loss = resumed.train_step().unwrap();
+    assert!(loss.is_finite(), "resumed step diverged: {loss}");
+    let dir2 = tmp("v1_upgraded");
+    let upgraded = resumed.save_checkpoint(&dir2).unwrap();
+    assert_eq!(upgraded.version, lram::checkpoint::FORMAT_VERSION);
+    assert!(upgraded.has_tensor("wq_adam_m"), "routing slot must be saved once live");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn future_version_checkpoint_is_refused_with_upgrade_guidance() {
+    // the other direction: this reader meeting a version written by a
+    // newer lram must refuse with a message that names the versions it
+    // *can* read and points at the fix — from both entry points
+    let (trainer, dir) = train_and_save("future_skew", 4);
+    patch_manifest_version(&dir, lram::checkpoint::FORMAT_VERSION + 1);
+    let bpe = trainer.pipeline().bpe.clone();
+    let serve_err = format!(
+        "{:#}",
+        EngineBackend::from_checkpoint(&CheckpointInit::new(dir.to_str().unwrap()), &bpe)
+            .unwrap_err()
+    );
+    let resume_err = format!(
+        "{:#}",
+        EngineTrainer::from_checkpoint(tiny_train_cfg(), &dir).unwrap_err()
+    );
+    for err in [&serve_err, &resume_err] {
+        assert!(
+            err.contains(&format!("version {}", lram::checkpoint::FORMAT_VERSION + 1)),
+            "{err}"
+        );
+        assert!(err.contains("not supported"), "{err}");
+        assert!(
+            err.contains(&format!("through {}", lram::checkpoint::FORMAT_VERSION)),
+            "the refusal must name the supported range: {err}"
+        );
+        assert!(err.contains("upgrade"), "the refusal must point at the fix: {err}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// routing-trained checkpoints: save → resume → serve
+// ---------------------------------------------------------------------
+
+#[test]
+fn routing_trained_checkpoint_roundtrips_save_resume_serve() {
+    // train_and_save trains with routing on (the default); the resumed
+    // trainer must restore the dense-Adam routing slot bit-identically
+    // (divergence would show up as differing losses), and the serving
+    // backend must reproduce the trained-wq logits exactly
+    let (mut a, dir) = train_and_save("routing_rt", 8);
+    let mut b = EngineTrainer::from_checkpoint(tiny_train_cfg(), &dir).unwrap();
+    for step in 0..4 {
+        let la = a.train_step().unwrap();
+        let lb = b.train_step().unwrap();
+        assert_eq!(
+            la.to_bits(),
+            lb.to_bits(),
+            "step {step}: routing state did not round-trip ({la} vs {lb})"
+        );
+    }
+    // the trained wq really moved off its seed (routing learned), and
+    // serving reproduces it bit-for-bit
+    let seeded = lram::model::LramMlm::seeded(tiny_model(), a.model.vocab).unwrap();
+    assert_ne!(seeded.wq, a.model.wq, "routing training must move wq");
+    let bpe = a.pipeline().bpe.clone();
+    let mut backend =
+        EngineBackend::from_checkpoint(&CheckpointInit::new(dir.to_str().unwrap()), &bpe)
+            .unwrap();
+    let tokens = a.pipeline().val_batch(2).tokens;
+    // `a` has trained past the checkpoint; serve against a fresh restore
+    let mut at_save = EngineTrainer::from_checkpoint(tiny_train_cfg(), &dir).unwrap();
+    assert_bits_equal(
+        &at_save.forward(&tokens).unwrap(),
+        &backend.infer(&tokens).unwrap(),
+    );
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,420 @@
+//! The differentiable-routing contract, locked in by finite differences.
+//!
+//! The paper's premise is a *differentiable* random access memory: the
+//! kernel weights `w_j = f(d2_j)` are a smooth function of the query,
+//! so the loss can flow through the lattice lookup into the query
+//! projection `wq`.  This harness verifies every gradient the pure-rust
+//! [`EngineTrainer`] computes — `wq` (the new routing path), the
+//! embeddings (which see *both* the residual and the routing path),
+//! `wo`, `w_out`, and the touched value-table rows — against central
+//! finite differences of an **f64 reference forward** implemented here
+//! from the same weights (scalar [`LatticeLookup`] oracle driving the
+//! memory stage, everything else upcast to f64).
+//!
+//! Checking an f32-computed analytic gradient against an f64 numeric
+//! one is the point: the f64 forward has a ~1e-11 finite-difference
+//! noise floor, so the comparison isolates the *derivation* (is the
+//! math right?) from f32 rounding, and the contract `rtol = 1e-3`
+//! (`util::check::assert_grad_close`) has real teeth.
+//!
+//! The gradient-check model selects **all 232 candidates**
+//! (`k_top = 232`), so no top-k truncation happens and the loss is a
+//! smooth function of every parameter — the regime where central
+//! differences converge.  Training-shaped configs (k_top = 32) drop
+//! only near-zero-weight hits, whose derivative contribution vanishes
+//! at the support boundary (see `lattice::kernel` boundary tests).
+//!
+//! Also here: the convergence gate — trained routing must reach
+//! strictly lower eval loss than frozen routing on the synthetic MLM
+//! task — because a gradient can be correct and still useless.
+
+use lram::coordinator::{EngineTrainConfig, EngineTrainer};
+use lram::data::Batch;
+use lram::lattice::{LatticeLookup, TorusK};
+use lram::model::EngineConfig;
+use lram::util::check::assert_grad_close;
+
+/// Every in-support candidate selected: the loss is smooth in the
+/// queries, so finite differences see exactly what the backward computes.
+const K_ALL: usize = 232;
+
+const RTOL: f64 = 1e-3;
+const ATOL: f64 = 1e-6;
+/// Central-difference step: weights are O(1) and the reference forward
+/// is f64, so truncation (~h^2) and cancellation (~1e-16/h) both stay
+/// far below the f32-analytic tolerance.
+const FD_H: f64 = 1e-4;
+
+fn grad_cfg() -> EngineTrainConfig {
+    EngineTrainConfig {
+        model: EngineConfig {
+            max_batch: 2,
+            seq_len: 8,
+            width: 8,
+            heads: 2,
+            m: 4,
+            k_top: K_ALL,
+            torus_k: [4; 8], // 256 slots: tiny, same structure
+            threads: 1,
+            ..EngineConfig::default()
+        },
+        steps: 4,
+        batch: 2,
+        vocab_size: 128,
+        mask_prob: 0.3,
+        ..EngineTrainConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// the f64 reference forward
+// ---------------------------------------------------------------------
+
+/// All trainable tensors of the engine model, upcast to f64, plus the
+/// geometry needed to rerun the forward pass: the numeric-gradient
+/// oracle.  Same function as `LramMlm::forward` + the trainer's masked
+/// cross-entropy, different precision.
+struct RefModel {
+    vocab: usize,
+    width: usize,
+    heads: usize,
+    m: usize,
+    k_top: usize,
+    query_scale: f64,
+    torus: TorusK,
+    embed: Vec<f64>,
+    pos: Vec<f64>,
+    wq: Vec<f64>,
+    wo: Vec<f64>,
+    w_out: Vec<f64>,
+    values: Vec<f64>,
+}
+
+impl RefModel {
+    fn from_trainer(t: &EngineTrainer) -> RefModel {
+        let m = &t.model;
+        let cfg = &m.cfg;
+        let up = |v: &[f32]| -> Vec<f64> { v.iter().map(|&x| x as f64).collect() };
+        RefModel {
+            vocab: m.vocab,
+            width: cfg.width,
+            heads: cfg.heads,
+            m: cfg.m,
+            k_top: cfg.k_top,
+            query_scale: cfg.query_scale,
+            torus: TorusK::new(cfg.torus_k).unwrap(),
+            embed: up(&m.embed),
+            pos: up(&m.pos),
+            wq: up(&m.wq),
+            wo: up(&m.wo),
+            w_out: up(&m.w_out),
+            values: up(m.table.data()),
+        }
+    }
+
+    fn clamp(&self, t: i32) -> usize {
+        if t < 0 || t as usize >= self.vocab {
+            (lram::tokenizer::UNK_ID as usize).min(self.vocab - 1)
+        } else {
+            t as usize
+        }
+    }
+
+    /// Masked cross-entropy of `batch`, entirely in f64 (scalar lattice
+    /// oracle for the memory stage — `LatticeLookup` is f64 end to end).
+    fn loss(&self, batch: &Batch) -> f64 {
+        let (s, wd, heads, m) = (batch.s, self.width, self.heads, self.m);
+        let mut lk = LatticeLookup::new(self.torus, self.k_top);
+        let total_w: f64 = batch.weights.iter().map(|&w| w as f64).sum();
+        assert!(total_w > 0.0, "gradcheck batch must contain masked positions");
+        let mut loss = 0.0f64;
+        let mut h = vec![0.0f64; wd];
+        let mut v = vec![0.0f64; heads * m];
+        let mut logits = vec![0.0f64; self.vocab];
+        for p in 0..batch.b * batch.s {
+            let w_p = batch.weights[p] as f64;
+            if w_p == 0.0 {
+                continue; // unmasked positions carry no loss
+            }
+            let c = p % s;
+            // h = embed[t] + pos[c] + 0.5 embed[left] + 0.5 embed[right]
+            let t = self.clamp(batch.tokens[p]);
+            for w in 0..wd {
+                h[w] = self.embed[t * wd + w] + self.pos[c * wd + w];
+            }
+            if c > 0 {
+                let lt = self.clamp(batch.tokens[p - 1]);
+                for w in 0..wd {
+                    h[w] += 0.5 * self.embed[lt * wd + w];
+                }
+            }
+            if c + 1 < s {
+                let rt = self.clamp(batch.tokens[p + 1]);
+                for w in 0..wd {
+                    h[w] += 0.5 * self.embed[rt * wd + w];
+                }
+            }
+            // memory stage: q = scale * wq h → lattice → v = Σ w_j T[idx_j]
+            for head in 0..heads {
+                let vh = &mut v[head * m..(head + 1) * m];
+                vh.fill(0.0);
+                let mut q = [0.0f64; 8];
+                for (d, qd) in q.iter_mut().enumerate() {
+                    let row = &self.wq[(head * 8 + d) * wd..(head * 8 + d + 1) * wd];
+                    *qd = row.iter().zip(&h).map(|(a, b)| a * b).sum::<f64>()
+                        * self.query_scale;
+                }
+                let r = lk.lookup(&q);
+                for hit in &r.hits {
+                    let row =
+                        &self.values[hit.index as usize * m..(hit.index as usize + 1) * m];
+                    for (o, val) in vh.iter_mut().zip(row) {
+                        *o += hit.weight * val;
+                    }
+                }
+            }
+            // y = h + wo v; logits = w_out y; masked CE via log-softmax
+            for (ti, logit) in logits.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for w in 0..wd {
+                    let mut y = h[w];
+                    let wo_row = &self.wo[w * (heads * m)..(w + 1) * (heads * m)];
+                    for (j, &vj) in v.iter().enumerate() {
+                        y += wo_row[j] * vj;
+                    }
+                    acc += self.w_out[ti * wd + w] * y;
+                }
+                *logit = acc;
+            }
+            let maxv = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lse = maxv + logits.iter().map(|l| (l - maxv).exp()).sum::<f64>().ln();
+            let target = batch.targets[p] as usize;
+            loss -= (logits[target] - lse) * w_p / total_w;
+        }
+        loss
+    }
+}
+
+/// Which f64 tensor a parameter coordinate lives in.
+#[derive(Clone, Copy)]
+enum Tensor {
+    Embed,
+    Pos,
+    Wq,
+    Wo,
+    WOut,
+    Values,
+}
+
+fn tensor_mut<'a>(model: &'a mut RefModel, t: Tensor) -> &'a mut Vec<f64> {
+    match t {
+        Tensor::Embed => &mut model.embed,
+        Tensor::Pos => &mut model.pos,
+        Tensor::Wq => &mut model.wq,
+        Tensor::Wo => &mut model.wo,
+        Tensor::WOut => &mut model.w_out,
+        Tensor::Values => &mut model.values,
+    }
+}
+
+/// Central finite difference of the reference loss w.r.t. one coordinate.
+fn numeric_grad(model: &mut RefModel, batch: &Batch, t: Tensor, idx: usize) -> f64 {
+    let original = tensor_mut(model, t)[idx];
+    tensor_mut(model, t)[idx] = original + FD_H;
+    let up = model.loss(batch);
+    tensor_mut(model, t)[idx] = original - FD_H;
+    let down = model.loss(batch);
+    tensor_mut(model, t)[idx] = original;
+    (up - down) / (2.0 * FD_H)
+}
+
+/// Check `analytic` against numeric gradients on a subset of
+/// coordinates: every nonzero-gradient coordinate (thinned to `cap`)
+/// plus the first few zero-gradient ones (which must check out as ~0
+/// numerically too — a zero that should not be zero is the classic
+/// missing-term bug).
+fn check_tensor(
+    name: &str,
+    model: &mut RefModel,
+    batch: &Batch,
+    t: Tensor,
+    analytic: &[f32],
+    cap: usize,
+) {
+    assert_eq!(analytic.len(), tensor_mut(model, t).len(), "{name}: shape mismatch");
+    let nonzero: Vec<usize> =
+        (0..analytic.len()).filter(|&i| analytic[i] != 0.0).collect();
+    assert!(!nonzero.is_empty(), "{name}: no gradient flowed at all");
+    let stride = (nonzero.len() / cap).max(1);
+    let mut indices: Vec<usize> = nonzero.iter().step_by(stride).cloned().collect();
+    indices.extend((0..analytic.len()).filter(|&i| analytic[i] == 0.0).take(3));
+    let mut a = Vec::with_capacity(indices.len());
+    let mut n = Vec::with_capacity(indices.len());
+    for &i in &indices {
+        a.push(analytic[i] as f64);
+        n.push(numeric_grad(model, batch, t, i));
+    }
+    assert_grad_close(name, &a, &n, RTOL, ATOL);
+}
+
+// ---------------------------------------------------------------------
+// the gradient checks
+// ---------------------------------------------------------------------
+
+/// A trainer a few steps in (so weights are off their symmetric init),
+/// the batch it will see next, and its filled gradient buffers.
+fn trained_trainer_with_grads() -> (EngineTrainer, Batch) {
+    let mut t = EngineTrainer::new(grad_cfg()).unwrap();
+    for _ in 0..2 {
+        t.train_step().unwrap();
+    }
+    let batch = t.pipeline().train_batch(t.step_count());
+    let total: f32 = batch.weights.iter().sum();
+    assert!(total > 0.0, "gradcheck batch has no masked positions");
+    t.forward_backward(&batch).unwrap();
+    (t, batch)
+}
+
+#[test]
+fn f64_reference_forward_matches_the_f32_training_loss() {
+    // anchor: before trusting the reference as a numeric-gradient
+    // oracle, it must agree with the f32 forward on the loss itself
+    let (mut t, batch) = trained_trainer_with_grads();
+    let loss32 = t.forward_backward(&batch).unwrap();
+    let reference = RefModel::from_trainer(&t);
+    let loss64 = reference.loss(&batch);
+    assert!(
+        (loss64 - loss32).abs() <= 1e-4 * (1.0 + loss32.abs()),
+        "f64 reference {loss64} diverges from f32 forward {loss32}"
+    );
+}
+
+#[test]
+fn wq_gradient_matches_finite_differences() {
+    // the tentpole: d(loss)/d(wq) through the lattice kernel — every
+    // coordinate of the routing projection, not a sample
+    let (t, batch) = trained_trainer_with_grads();
+    let mut reference = RefModel::from_trainer(&t);
+    let wq = t.grads().wq.to_vec();
+    check_tensor("wq", &mut reference, &batch, Tensor::Wq, &wq, usize::MAX);
+}
+
+#[test]
+fn embedding_gradients_match_finite_differences() {
+    // embeddings see the residual path AND the routing path (via h →
+    // q); a missing routing term fails here, not just on wq
+    let (t, batch) = trained_trainer_with_grads();
+    let mut reference = RefModel::from_trainer(&t);
+    let embed = t.grads().embed.to_vec();
+    check_tensor("embed", &mut reference, &batch, Tensor::Embed, &embed, 48);
+    let pos = t.grads().pos.to_vec();
+    check_tensor("pos", &mut reference, &batch, Tensor::Pos, &pos, 48);
+}
+
+#[test]
+fn dense_suffix_gradients_match_finite_differences() {
+    let (t, batch) = trained_trainer_with_grads();
+    let mut reference = RefModel::from_trainer(&t);
+    let wo = t.grads().wo.to_vec();
+    check_tensor("wo", &mut reference, &batch, Tensor::Wo, &wo, usize::MAX);
+    let w_out = t.grads().w_out.to_vec();
+    check_tensor("w_out", &mut reference, &batch, Tensor::WOut, &w_out, 48);
+}
+
+#[test]
+fn value_table_row_gradients_match_finite_differences() {
+    let (t, batch) = trained_trainer_with_grads();
+    let mut reference = RefModel::from_trainer(&t);
+    let m = t.model.cfg.m;
+    let rows: Vec<(u64, Vec<f32>)> = t
+        .grads()
+        .rows
+        .iter()
+        .map(|(&row, g)| (row, g.clone()))
+        .collect();
+    assert!(!rows.is_empty(), "no value rows were touched");
+    let mut a = Vec::new();
+    let mut n = Vec::new();
+    for (row, grad) in rows.iter().take(24) {
+        for i in 0..m {
+            a.push(grad[i] as f64);
+            n.push(numeric_grad(
+                &mut reference,
+                &batch,
+                Tensor::Values,
+                *row as usize * m + i,
+            ));
+        }
+    }
+    assert_grad_close("values", &a, &n, RTOL, ATOL);
+    // an untouched row must have an exactly-zero numeric gradient (a
+    // tiny torus under k_top = 232 *can* be fully covered; skip then)
+    if let Some(untouched) =
+        (0..t.model.table.rows()).find(|r| !t.grads().rows.contains_key(r))
+    {
+        let g =
+            numeric_grad(&mut reference, &batch, Tensor::Values, untouched as usize * m);
+        assert!(g.abs() <= ATOL, "untouched row {untouched} has gradient {g}");
+    }
+}
+
+#[test]
+fn frozen_routing_zeroes_exactly_the_routing_gradient() {
+    // --freeze-routing must not silently change any *other* gradient
+    let mut frozen =
+        EngineTrainer::new(EngineTrainConfig { train_routing: false, ..grad_cfg() }).unwrap();
+    let mut trained = EngineTrainer::new(grad_cfg()).unwrap();
+    let batch = frozen.pipeline().train_batch(0);
+    frozen.forward_backward(&batch).unwrap();
+    trained.forward_backward(&batch).unwrap();
+    assert!(frozen.grads().wq.iter().all(|&g| g == 0.0), "frozen wq grad must be zero");
+    assert!(trained.grads().wq.iter().any(|&g| g != 0.0), "routing grad must flow");
+    // value-table and suffix gradients are identical either way (the
+    // routing path forks off upstream of them)
+    assert_eq!(frozen.grads().wo, trained.grads().wo);
+    assert_eq!(frozen.grads().w_out, trained.grads().w_out);
+    assert_eq!(frozen.grads().rows, trained.grads().rows);
+    // embeddings differ: routing adds its own dh term
+    assert_ne!(frozen.grads().embed, trained.grads().embed);
+}
+
+// ---------------------------------------------------------------------
+// convergence: the gradient is not just correct, it helps
+// ---------------------------------------------------------------------
+
+#[test]
+fn trained_routing_reaches_lower_eval_loss_than_frozen() {
+    let base = EngineTrainConfig {
+        model: EngineConfig {
+            max_batch: 4,
+            seq_len: 12,
+            width: 16,
+            heads: 2,
+            m: 8,
+            k_top: 32,
+            torus_k: [4; 8],
+            threads: 1,
+            ..EngineConfig::default()
+        },
+        steps: 100,
+        batch: 4,
+        vocab_size: 256,
+        eval_batches: 8,
+        ..EngineTrainConfig::default()
+    };
+    let mut frozen =
+        EngineTrainer::new(EngineTrainConfig { train_routing: false, ..base.clone() })
+            .unwrap();
+    let mut trained = EngineTrainer::new(base).unwrap();
+    for i in 0..100 {
+        let lf = frozen.train_step().unwrap();
+        let lt = trained.train_step().unwrap();
+        assert!(lf.is_finite() && lt.is_finite(), "step {i}: {lf} / {lt}");
+    }
+    let ppl_frozen = frozen.evaluate(8).unwrap();
+    let ppl_trained = trained.evaluate(8).unwrap();
+    assert!(
+        ppl_trained < ppl_frozen,
+        "trained routing must beat frozen routing: {ppl_trained:.4} vs {ppl_frozen:.4}"
+    );
+}

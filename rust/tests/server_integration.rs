@@ -390,9 +390,15 @@ fn overload_sheds_429_with_retry_after_and_never_reaches_backend() {
     for i in 0..2 {
         let resp = c.predict("the [MASK] sat", 2);
         assert_eq!(resp.status, 429, "request {i} must shed: {}", resp.body);
-        // a well-formed shed: Retry-After header + JSON error body
+        // a well-formed shed: Retry-After header + JSON error body.  The
+        // value is adaptive (queue depth x mean batch latency, floored
+        // at 1 — see Batcher::retry_after_secs; growth under deeper
+        // queues is pinned down by the estimator's unit tests)
         let retry = resp.header("retry-after").expect("429 carries Retry-After");
-        assert!(retry.parse::<u64>().is_ok(), "Retry-After '{retry}' must be seconds");
+        let secs: u64 = retry.parse().unwrap_or_else(|_| {
+            panic!("Retry-After '{retry}' must be whole seconds")
+        });
+        assert!((1..=60).contains(&secs), "Retry-After {secs} outside [1, 60]");
         let v = lram::util::json::parse(&resp.body).expect("429 body is JSON");
         assert!(
             v.get("error").unwrap().as_str().unwrap().contains("overloaded"),
@@ -497,6 +503,78 @@ fn graceful_shutdown_drains_in_flight_requests() {
 }
 
 #[test]
+fn sigterm_drains_in_flight_requests_then_stops_the_server() {
+    // the `lram serve` kill path: SIGTERM → sigaction handler → flag →
+    // watcher → graceful drain.  An in-flight request must complete
+    // with a full 200 and the server must actually stop afterwards.
+    let bpe = build_small_bpe();
+    // a wide batch window keeps the request in flight while the signal
+    // lands (same trick as the graceful-shutdown test)
+    let batcher = Batcher::spawn(
+        BackendInit::Engine(engine_cfg()),
+        bpe.clone(),
+        BatcherConfig { max_wait: Duration::from_millis(400), ..BatcherConfig::default() },
+    )
+    .unwrap();
+    let server = start_server(batcher, bpe);
+    let addr = server.local_addr().to_string();
+    // install the handler BEFORE raising, or the default disposition
+    // (terminate the whole test process) applies
+    server.drain_on_termination().expect("installing the SIGTERM handler");
+
+    let inflight = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr);
+            let resp = c.predict("the [MASK] sat", 2);
+            (resp.status, resp.body)
+        })
+    };
+    // let the request reach the batcher, then deliver the real signal
+    std::thread::sleep(Duration::from_millis(100));
+    lram::util::signal::raise_sigterm();
+
+    let (status, body) = inflight.join().expect("in-flight client must not be dropped");
+    assert_eq!(status, 200, "in-flight request completes during the drain: {body}");
+    assert!(body.contains("\"masks\""), "{body}");
+
+    // the signal must stop the server: join() returns instead of
+    // blocking forever (bounded here so a regression fails, not hangs)
+    let joined = std::thread::spawn(move || server.join());
+    let t0 = std::time::Instant::now();
+    while !joined.is_finished() && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(joined.is_finished(), "server did not stop after SIGTERM");
+    joined.join().unwrap();
+
+    // and the listener is gone.  If connect() still succeeds (backlog
+    // remnants), the strong check is that no actual HTTP response comes
+    // back — a timeout or reset masks nothing here, because a live
+    // server would have answered /healthz within the 2s window
+    match TcpStream::connect(&addr) {
+        Err(_) => {}
+        Ok(mut s) => {
+            let _ = write!(s, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+            s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            let mut got = Vec::new();
+            let mut chunk = [0u8; 1024];
+            loop {
+                match s.read(&mut chunk) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => got.extend_from_slice(&chunk[..n]),
+                }
+            }
+            let text = String::from_utf8_lossy(&got);
+            assert!(
+                !text.starts_with("HTTP/1.1 200"),
+                "a SIGTERM-drained server must not serve: {text}"
+            );
+        }
+    }
+}
+
+#[test]
 fn engine_backend_matches_scalar_oracle_end_to_end() {
     // the serving-path differential test: the full forward pass with the
     // fused batched engine must be bit-identical to the same pass with
@@ -530,7 +608,7 @@ fn save_tiny_checkpoint(tag: &str, bpe: &lram::tokenizer::Bpe) -> std::path::Pat
     let _ = std::fs::remove_dir_all(&dir);
     let cfg = EngineConfig { torus_k: [4; 8], k_top: 8, ..engine_cfg() };
     let model = LramMlm::seeded(cfg, bpe.vocab_size()).unwrap();
-    model.save_checkpoint(&dir, 3, &bpe.fingerprint(), None).unwrap();
+    model.save_checkpoint(&dir, 3, &bpe.fingerprint(), None, None, false).unwrap();
     dir
 }
 

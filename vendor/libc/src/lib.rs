@@ -1,6 +1,7 @@
 //! Offline drop-in subset of the `libc` crate: exactly the FFI surface
-//! `util::mmap` needs (anonymous/file mappings plus `mincore` residency
-//! queries) on 64-bit Linux.  Declaring the prototypes locally links
+//! `util::mmap` (anonymous/file mappings plus `mincore` residency
+//! queries) and `util::signal` (`sigaction` for SIGTERM-driven graceful
+//! drain) need on 64-bit Linux.  Declaring the prototypes locally links
 //! against the system libc that std already pulls in; no crates.io
 //! access is required.
 
@@ -24,6 +25,26 @@ pub const MAP_NORESERVE: c_int = 0x4000;
 
 pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
 
+pub const SIGINT: c_int = 2;
+pub const SIGTERM: c_int = 15;
+/// Restart interruptible syscalls instead of surfacing EINTR.
+pub const SA_RESTART: c_int = 0x10000000;
+
+/// `struct sigaction` as glibc and musl lay it out on 64-bit Linux
+/// (x86_64 and aarch64): handler pointer, a 1024-bit signal mask, the
+/// flags (padded to 8), and the restorer slot — 152 bytes total.  The
+/// libc wrapper manages the actual `SA_RESTORER` trampoline itself, so
+/// `sa_restorer` stays zero here.  Handlers are stored as `usize` so
+/// `SIG_DFL`/`SIG_IGN` (0/1) and real `extern "C" fn(c_int)` pointers
+/// share the field.
+#[repr(C)]
+pub struct sigaction {
+    pub sa_handler: usize,
+    pub sa_mask: [u64; 16],
+    pub sa_flags: c_int,
+    pub sa_restorer: usize,
+}
+
 extern "C" {
     pub fn mmap(
         addr: *mut c_void,
@@ -37,6 +58,12 @@ extern "C" {
     pub fn munmap(addr: *mut c_void, length: size_t) -> c_int;
 
     pub fn mincore(addr: *mut c_void, length: size_t, vec: *mut c_uchar) -> c_int;
+
+    pub fn sigaction(signum: c_int, act: *const sigaction, oldact: *mut sigaction) -> c_int;
+
+    /// Deliver `sig` to the calling thread (tests exercise the handler
+    /// path without a second process).
+    pub fn raise(sig: c_int) -> c_int;
 }
 
 #[cfg(test)]
