@@ -21,12 +21,16 @@
 //! polls `GET /healthz` before starting so a just-booted server isn't
 //! counted as failure), `--out FILE` (machine-readable JSON report),
 //! `--fail-on-5xx` (exit 1 on any 5xx or malformed 429),
-//! `--connection-close` (send `Connection: close` and reconnect per
-//! request — the seed server's behavior, kept as a measurable baseline
-//! for what keep-alive buys).
+//! `--expect-some-5xx` (chaos mode: 503/504 are tolerated outcomes of
+//! injected faults, but every error must still be *well-formed* —
+//! parseable framing, JSON error body, `Retry-After` on 429 and 503;
+//! exit 1 on any malformed response), `--connection-close` (send
+//! `Connection: close` and reconnect per request — the seed server's
+//! behavior, kept as a measurable baseline for what keep-alive buys).
 //!
-//! Exit codes: 0 ok; 1 gate failure (`--fail-on-5xx`); 2 the run
-//! produced no successful request at all (nothing to measure).
+//! Exit codes: 0 ok; 1 gate failure (`--fail-on-5xx` /
+//! `--expect-some-5xx`); 2 the run produced no successful request at
+//! all (nothing to measure).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -109,6 +113,9 @@ struct ClientReport {
     server_5xx: u64,
     /// 429s missing Retry-After or a parseable JSON error body
     malformed_shed: u64,
+    /// 5xx responses that are not well-formed: missing JSON error
+    /// body, or a 503 without a numeric `Retry-After` header
+    malformed_5xx: u64,
     reconnects: u64,
     io_errors: u64,
 }
@@ -121,6 +128,7 @@ impl ClientReport {
         self.other_4xx += other.other_4xx;
         self.server_5xx += other.server_5xx;
         self.malformed_shed += other.malformed_shed;
+        self.malformed_5xx += other.malformed_5xx;
         self.reconnects += other.reconnects;
         self.io_errors += other.io_errors;
     }
@@ -142,16 +150,33 @@ fn connect(addr: &str) -> Result<(TcpStream, BufReader<TcpStream>)> {
 /// A 429 is only a *well-formed* shed if it carries `Retry-After` and a
 /// JSON body with an `error` field — clients must be able to act on it.
 fn shed_is_well_formed(resp: &HttpResponse) -> bool {
-    let retry_after_ok = resp
-        .header("retry-after")
+    has_retry_after(resp) && has_json_error_body(resp)
+}
+
+fn has_retry_after(resp: &HttpResponse) -> bool {
+    resp.header("retry-after")
         .map(|v| v.parse::<u64>().is_ok())
-        .unwrap_or(false);
-    let body_ok = std::str::from_utf8(&resp.body)
+        .unwrap_or(false)
+}
+
+fn has_json_error_body(resp: &HttpResponse) -> bool {
+    std::str::from_utf8(&resp.body)
         .ok()
         .and_then(|t| lram::util::json::parse(t).ok())
         .map(|v| v.get("error").and_then(|e| e.as_str()).is_some())
-        .unwrap_or(false);
-    retry_after_ok && body_ok
+        .unwrap_or(false)
+}
+
+/// Under fault injection 5xx responses are *expected* — but they must
+/// still be something a client can act on: a JSON error body, and for
+/// 503 (retryable by contract) a numeric `Retry-After` header.
+fn server_error_is_well_formed(resp: &HttpResponse) -> bool {
+    let body_ok = has_json_error_body(resp);
+    if resp.status == 503 {
+        body_ok && has_retry_after(resp)
+    } else {
+        body_ok
+    }
 }
 
 fn client_loop(addr: &str, request: &str, deadline: Instant) -> ClientReport {
@@ -204,7 +229,12 @@ fn client_loop(addr: &str, request: &str, deadline: Instant) -> ClientReport {
                 }
             }
             s if (400..500).contains(&s) => rep.other_4xx += 1,
-            _ => rep.server_5xx += 1,
+            _ => {
+                rep.server_5xx += 1;
+                if !server_error_is_well_formed(&resp) {
+                    rep.malformed_5xx += 1;
+                }
+            }
         }
         if resp.close {
             conn = None;
@@ -253,7 +283,11 @@ fn main() -> Result<()> {
     let top_k = args.usize("top-k", 3)?;
     let text = args.str("text", "the [MASK] sat on the mat");
     let fail_on_5xx = args.bool("fail-on-5xx", false)?;
+    let expect_some_5xx = args.bool("expect-some-5xx", false)?;
     let connection_close = args.bool("connection-close", false)?;
+    if fail_on_5xx && expect_some_5xx {
+        bail!("--fail-on-5xx and --expect-some-5xx are mutually exclusive");
+    }
     if !text.contains("[MASK]") {
         bail!("--text must contain a [MASK] token");
     }
@@ -315,6 +349,7 @@ fn main() -> Result<()> {
     t.row(&["malformed 429".into(), total.malformed_shed.to_string()]);
     t.row(&["other 4xx".into(), total.other_4xx.to_string()]);
     t.row(&["5xx".into(), total.server_5xx.to_string()]);
+    t.row(&["malformed 5xx".into(), total.malformed_5xx.to_string()]);
     t.row(&["p50 latency (ms)".into(), format!("{p50:.2}")]);
     t.row(&["p95 latency (ms)".into(), format!("{p95:.2}")]);
     t.row(&["p99 latency (ms)".into(), format!("{p99:.2}")]);
@@ -336,6 +371,7 @@ fn main() -> Result<()> {
                 ("shed", total.shed as f64),
                 ("shed_rate", shed_rate),
                 ("malformed_shed", total.malformed_shed as f64),
+                ("malformed_5xx", total.malformed_5xx as f64),
                 ("other_4xx", total.other_4xx as f64),
                 ("server_5xx", total.server_5xx as f64),
                 ("reconnects", total.reconnects as f64),
@@ -362,6 +398,20 @@ fn main() -> Result<()> {
             total.server_5xx, total.malformed_shed
         );
         std::process::exit(1);
+    }
+    if expect_some_5xx {
+        if total.malformed_shed > 0 || total.malformed_5xx > 0 {
+            eprintln!(
+                "LOADGEN CHAOS GATE FAILURE: {} malformed 429s, {} malformed 5xx \
+                 (error responses must carry a JSON error body; 429/503 must carry Retry-After)",
+                total.malformed_shed, total.malformed_5xx
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "chaos gate: {} 5xx observed, all well-formed ({} 429s, all well-formed)",
+            total.server_5xx, total.shed
+        );
     }
     Ok(())
 }

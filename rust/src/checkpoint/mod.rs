@@ -46,6 +46,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::memstore::ValueTable;
+use crate::util::failpoint;
 use crate::util::fnv1a64;
 use crate::util::json::{self, Json};
 use crate::util::mmap::MmapU32;
@@ -364,6 +365,9 @@ pub struct CheckpointWriter {
     /// fsync blobs, the manifest, and the directories on commit (see
     /// [`Self::with_fsync`]).
     fsync: bool,
+    /// total checkpoints retained: the live one plus up to `keep - 1`
+    /// `<dir>.prev-<step>` predecessors (see [`Self::with_keep`]).
+    keep: usize,
 }
 
 /// Monotonic suffix so sequential (or accidentally overlapping) writers
@@ -456,6 +460,78 @@ fn recover_interrupted_commit(dir: &Path) {
     }
 }
 
+/// Retained predecessors of a checkpoint path — every complete
+/// `<dir>.prev-<step>` sibling, sorted newest-first by step.  These are
+/// written by [`CheckpointWriter::with_keep`] and consumed by
+/// [`Checkpoint::open_with_fallback`].
+pub fn prev_siblings(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let parent = match dir.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    let name = match dir.file_name().and_then(|n| n.to_str()) {
+        Some(n) => n,
+        None => return Vec::new(),
+    };
+    let prefix = format!("{name}.prev-");
+    let entries = match std::fs::read_dir(parent) {
+        Ok(e) => e,
+        Err(_) => return Vec::new(),
+    };
+    let mut prevs: Vec<(u64, PathBuf)> = entries
+        .flatten()
+        .filter_map(|e| {
+            let fname = e.file_name();
+            let step = fname.to_str()?.strip_prefix(&prefix)?.parse::<u64>().ok()?;
+            Some((step, e.path()))
+        })
+        .collect();
+    prevs.sort_by(|a, b| b.0.cmp(&a.0));
+    prevs
+}
+
+/// `<dir>.prev-<step>` for a displaced checkpoint at `step`.
+fn prev_path(dir: &Path, step: u64) -> PathBuf {
+    let mut name = dir.as_os_str().to_os_string();
+    name.push(format!(".prev-{step}"));
+    PathBuf::from(name)
+}
+
+/// Retire the just-displaced old checkpoint (currently at `old`, a
+/// `<dir>.old-*` sibling) into the `<dir>.prev-<step>` retention slot
+/// instead of deleting it.  Best-effort: retention failures are logged,
+/// never allowed to fail the save that already committed.
+fn retire_previous(dir: &Path, old: &Path) {
+    let step = std::fs::read_to_string(old.join(MANIFEST_FILE))
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+        .and_then(|v| v.req("step").ok().and_then(|s| s.as_usize()))
+        .map(|s| s as u64);
+    let Some(step) = step else {
+        // a committed checkpoint without a readable step should not
+        // exist; do not let an unreadable one poison the retention set
+        log::warn!("retiring {}: unreadable manifest step, deleting instead", old.display());
+        let _ = std::fs::remove_dir_all(old);
+        return;
+    };
+    let target = prev_path(dir, step);
+    if target.exists() {
+        // same step saved twice: the newer bytes win the slot
+        let _ = std::fs::remove_dir_all(&target);
+    }
+    if let Err(e) = std::fs::rename(old, &target) {
+        log::warn!("retiring {} to {}: {e}", old.display(), target.display());
+        let _ = std::fs::remove_dir_all(old);
+    }
+}
+
+/// Delete retained predecessors beyond the newest `keep_prev`.
+fn prune_previous(dir: &Path, keep_prev: usize) {
+    for (_, p) in prev_siblings(dir).into_iter().skip(keep_prev) {
+        let _ = std::fs::remove_dir_all(&p);
+    }
+}
+
 impl CheckpointWriter {
     pub fn new(dir: &Path) -> Result<Self> {
         if let Some(parent) = dir.parent() {
@@ -478,7 +554,20 @@ impl CheckpointWriter {
             tensors: Vec::new(),
             committed: false,
             fsync: false,
+            keep: 1,
         })
+    }
+
+    /// Retain up to `keep` checkpoints total: the live one at `dir`,
+    /// plus the `keep - 1` most recent predecessors at
+    /// `<dir>.prev-<step>` siblings.  Predecessors are what
+    /// [`Checkpoint::open_with_fallback`] falls back to when the live
+    /// checkpoint is corrupt — with the default `keep = 1` there is
+    /// nothing to fall back to and overwriting deletes the old copy,
+    /// exactly the pre-retention behavior.  `keep = 0` is treated as 1.
+    pub fn with_keep(mut self, keep: usize) -> Self {
+        self.keep = keep.max(1);
+        self
     }
 
     /// Opt into fsyncing every blob, the manifest, and the enclosing
@@ -584,7 +673,12 @@ impl CheckpointWriter {
                     format!("committing checkpoint into {}", self.final_dir.display())
                 });
             }
-            let _ = std::fs::remove_dir_all(&old);
+            if self.keep > 1 {
+                retire_previous(&self.final_dir, &old);
+                prune_previous(&self.final_dir, self.keep - 1);
+            } else {
+                let _ = std::fs::remove_dir_all(&old);
+            }
         } else {
             std::fs::rename(&self.stage, &self.final_dir).with_context(|| {
                 format!("committing checkpoint into {}", self.final_dir.display())
@@ -653,6 +747,9 @@ impl Checkpoint {
     /// file present with the exact byte length, checksums verified for
     /// tensors up to [`EAGER_VERIFY_BYTES`].
     pub fn open(dir: &Path) -> Result<Self> {
+        if let Some(e) = failpoint::inject("checkpoint.open") {
+            return Err(e.context(format!("opening checkpoint {}", dir.display())));
+        }
         let manifest_path = dir.join(MANIFEST_FILE);
         let text = std::fs::read_to_string(&manifest_path).with_context(|| {
             format!("reading {} (not a checkpoint directory?)", manifest_path.display())
@@ -681,6 +778,79 @@ impl Checkpoint {
             }
         }
         Ok(ckpt)
+    }
+
+    /// [`Self::open`] with a crash-recovery fallback chain for serving:
+    /// when the live checkpoint is corrupt/truncated/unreadable, move it
+    /// aside to a `<dir>.quarantine-*` sibling (preserved for forensics,
+    /// never silently deleted) and promote the newest *verifying*
+    /// `<dir>.prev-<step>` predecessor (see
+    /// [`CheckpointWriter::with_keep`]) to the live name — loudly.
+    /// Predecessors that fail verification are skipped, not destroyed.
+    /// With no verifying predecessor the original open error propagates.
+    ///
+    /// Training resume intentionally stays on strict [`Self::open`]: a
+    /// trainer silently resuming from older weights would burn compute
+    /// on a lie, while a server restoring last-good availability is the
+    /// whole point.
+    pub fn open_with_fallback(dir: &Path) -> Result<Self> {
+        let primary_err = match Self::open(dir) {
+            Ok(ck) => return Ok(ck),
+            Err(e) => e,
+        };
+        let prevs = prev_siblings(dir);
+        if prevs.is_empty() {
+            return Err(primary_err);
+        }
+        if dir.exists() {
+            let quarantine = sibling_dir(dir, "quarantine");
+            match std::fs::rename(dir, &quarantine) {
+                Ok(()) => log::error!(
+                    "checkpoint {} failed to open ({primary_err:#}); quarantined it to {}",
+                    dir.display(),
+                    quarantine.display()
+                ),
+                Err(e) => {
+                    // cannot move the bad copy aside: promoting a
+                    // predecessor over it is impossible, fail loudly
+                    return Err(primary_err.context(format!(
+                        "quarantining the corrupt checkpoint to {} also failed: {e}",
+                        quarantine.display()
+                    )));
+                }
+            }
+        } else {
+            log::error!(
+                "checkpoint {} failed to open ({primary_err:#}); trying retained predecessors",
+                dir.display()
+            );
+        }
+        for (step, prev) in prevs {
+            match Self::open(&prev) {
+                Ok(_) => {
+                    std::fs::rename(&prev, dir).with_context(|| {
+                        format!("promoting predecessor {} to {}", prev.display(), dir.display())
+                    })?;
+                    // re-open at the live name so self.dir (and every
+                    // blob path derived from it) points at reality
+                    let ck = Self::open(dir).with_context(|| {
+                        format!("re-opening promoted predecessor at {}", dir.display())
+                    })?;
+                    log::error!(
+                        "RECOVERED: serving predecessor checkpoint {} (step {step}) promoted \
+                         from {}; the corrupt latest is quarantined next to it",
+                        ck.manifest.checkpoint_id,
+                        prev.display()
+                    );
+                    return Ok(ck);
+                }
+                Err(e) => log::error!(
+                    "predecessor {} (step {step}) also failed to open: {e:#}; skipping",
+                    prev.display()
+                ),
+            }
+        }
+        Err(primary_err.context("no retained predecessor checkpoint verified either"))
     }
 
     fn blob_path(&self, spec: &TensorSpec) -> PathBuf {
@@ -714,6 +884,9 @@ impl Checkpoint {
     /// Read a tensor's bytes once, checksum the in-memory buffer (one
     /// read, one hash — no second pass over the file).
     fn read_verified(&self, spec: &TensorSpec) -> Result<Vec<u8>> {
+        if let Some(e) = failpoint::inject("checkpoint.read_blob") {
+            return Err(e.context(format!("reading tensor '{}'", spec.name)));
+        }
         let path = self.blob_path(spec);
         let bytes =
             std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
@@ -1172,6 +1345,104 @@ mod tests {
         assert_eq!(Checkpoint::open(&dir).unwrap().manifest, saved);
         std::fs::remove_dir_all(dir.parent().unwrap().parent().unwrap()).ok();
     }
+
+    /// Save a one-tensor checkpoint at `step` with distinctive content,
+    /// retaining `keep` copies.
+    fn write_step(dir: &Path, step: u64, keep: usize) -> Manifest {
+        let mut w = CheckpointWriter::new(dir).unwrap().with_keep(keep);
+        w.write_f32("embed", &[8, 8], &[step as f32; 64]).unwrap();
+        w.finish(step, "0123456789abcdef", demo_model()).unwrap()
+    }
+
+    #[test]
+    fn with_keep_retains_and_prunes_predecessors() {
+        let dir = tmp_dir("keep");
+        for step in 1..=4 {
+            write_step(&dir, step, 3);
+        }
+        // live = step 4; retained predecessors = steps 3 and 2 (keep-1),
+        // step 1 pruned
+        assert_eq!(Checkpoint::open(&dir).unwrap().manifest.step, 4);
+        let prevs = prev_siblings(&dir);
+        assert_eq!(prevs.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![3, 2], "{prevs:?}");
+        for (step, p) in &prevs {
+            let ck = Checkpoint::open(p).expect("retained predecessors stay openable");
+            assert_eq!(ck.manifest.step, *step);
+            assert_eq!(ck.read_f32("embed").unwrap()[0], *step as f32);
+        }
+        // default keep=1 still deletes on overwrite: no *new* prevs
+        write_step(&dir, 5, 1);
+        assert_eq!(prev_siblings(&dir).len(), 2, "keep=1 must not retire more");
+        std::fs::remove_dir_all(&dir).ok();
+        for (_, p) in prev_siblings(&dir) {
+            std::fs::remove_dir_all(&p).ok();
+        }
+    }
+
+    /// `<dir>.quarantine-*` siblings.
+    fn quarantine_siblings(dir: &Path) -> Vec<PathBuf> {
+        let parent = dir.parent().unwrap();
+        let name = dir.file_name().unwrap().to_str().unwrap();
+        std::fs::read_dir(parent)
+            .unwrap()
+            .flatten()
+            .filter(|e| {
+                e.file_name()
+                    .to_str()
+                    .is_some_and(|n| n.starts_with(&format!("{name}.quarantine-")))
+            })
+            .map(|e| e.path())
+            .collect()
+    }
+
+    #[test]
+    fn open_with_fallback_quarantines_corrupt_latest_and_promotes_predecessor() {
+        let dir = tmp_dir("fallback");
+        write_step(&dir, 1, 3);
+        write_step(&dir, 2, 3);
+        // corrupt the live checkpoint's blob
+        let path = dir.join("embed.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::open(&dir).is_err(), "corruption must fail the strict open");
+        let ck = Checkpoint::open_with_fallback(&dir).expect("predecessor must be promoted");
+        assert_eq!(ck.manifest.step, 1, "newest verifying predecessor wins");
+        assert_eq!(ck.read_f32("embed").unwrap()[0], 1.0);
+        assert_eq!(ck.dir, dir, "promotion must land at the live name");
+        // the bad copy is preserved for forensics, not deleted
+        let q = quarantine_siblings(&dir);
+        assert_eq!(q.len(), 1, "{q:?}");
+        assert!(q[0].join(MANIFEST_FILE).is_file());
+        // the live name now opens strictly again
+        assert_eq!(Checkpoint::open(&dir).unwrap().manifest.step, 1);
+        std::fs::remove_dir_all(&dir).ok();
+        for p in quarantine_siblings(&dir) {
+            std::fs::remove_dir_all(&p).ok();
+        }
+    }
+
+    #[test]
+    fn open_with_fallback_without_predecessors_propagates_and_preserves_dir() {
+        let dir = tmp_dir("no_fallback");
+        write_step(&dir, 7, 1);
+        let path = dir.join("embed.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", Checkpoint::open_with_fallback(&dir).unwrap_err());
+        assert!(err.contains("checksum"), "{err}");
+        // nothing to fall back to → the (only) copy must stay in place
+        // for the operator, not get quarantined into a dead end
+        assert!(dir.join(MANIFEST_FILE).is_file(), "live dir must not be moved");
+        assert!(quarantine_siblings(&dir).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // NOTE: the `checkpoint.open` / `checkpoint.read_blob` failpoint
+    // wiring is exercised by `rust/tests/chaos.rs`, which owns its whole
+    // process — arming those sites here would race the other #[test]
+    // threads of this crate through the same global registry.
 
     #[test]
     fn checkpoint_id_tracks_content() {

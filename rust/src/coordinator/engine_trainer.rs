@@ -78,6 +78,11 @@ pub struct EngineTrainConfig {
     /// fsync checkpoint blobs + directories on commit, so saves survive
     /// power loss and not just process crashes (`lram train --fsync`).
     pub fsync: bool,
+    /// Checkpoints retained per save dir: the live one plus
+    /// `keep_checkpoints - 1` `.prev-<step>` siblings that serving can
+    /// fall back to when the newest is corrupt (`--keep-checkpoints N`;
+    /// 1 = replace in place, the historical behaviour).
+    pub keep_checkpoints: usize,
 }
 
 impl Default for EngineTrainConfig {
@@ -97,6 +102,7 @@ impl Default for EngineTrainConfig {
             save_every: 0,
             save_dir: None,
             fsync: false,
+            keep_checkpoints: 1,
         }
     }
 }
@@ -547,6 +553,7 @@ impl EngineTrainer {
             Some(&self.opt),
             self.cfg.train_routing.then_some(&self.opt_wq),
             self.cfg.fsync,
+            self.cfg.keep_checkpoints,
         )
     }
 

@@ -63,7 +63,9 @@ COMMANDS:
              routing is trained through the lattice kernel by default —
              --freeze-routing keeps wq fixed, --routing-lr X tunes its
              dense-Adam rate (default 1e-3); --fsync makes checkpoint
-             commits power-loss durable)
+             commits power-loss durable; --keep-checkpoints N retains
+             N-1 predecessor checkpoints next to the live one so serving
+             can fall back when the newest is corrupt)
   table1     lattice comparison: packing/covering radii + kernel support
   table2     train all five variants and print the perplexity table
   table3     asymptotic parameter/op counts for dense / PKM / LRAM
@@ -73,8 +75,11 @@ COMMANDS:
               trained engine weights; --random-init opts into untrained
               seed weights; --http-workers N, --max-pending N and
               --keep-alive-timeout SECS tune the keep-alive worker-pool
-              front door; SIGTERM/SIGINT drain gracefully — see
-              docs/serving.md)
+              front door; --request-timeout-ms N expires queued requests
+              with 504 before they reach the backend; SIGTERM/SIGINT
+              drain gracefully; a corrupt checkpoint falls back to its
+              newest verifying .prev-<step> sibling — see
+              docs/serving.md and docs/robustness.md)
   checkpoint inspect a checkpoint directory:
              lram checkpoint inspect DIR [--verify]
   artifacts  list compiled AOT artifacts
@@ -195,6 +200,7 @@ fn cmd_train_engine(args: &Args) -> Result<()> {
         save_every: args.u64("save-every", 0)?,
         save_dir: args.flags.get("save").map(std::path::PathBuf::from),
         fsync: args.bool("fsync", false)?,
+        keep_checkpoints: args.usize("keep-checkpoints", 1)?.max(1),
     };
     let mut trainer = match args.flags.get("resume") {
         Some(dir) => EngineTrainer::from_checkpoint(cfg, std::path::Path::new(dir))?,
@@ -372,8 +378,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         ..http
     };
+    // per-request deadline: expired requests get 504 without ever
+    // touching the backend (0 = no deadline)
+    let timeout_ms = args.u64("request-timeout-ms", 0)?;
     let batcher_cfg = BatcherConfig {
         max_pending: args.usize("max-pending", BatcherConfig::default().max_pending)?,
+        request_timeout: (timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(timeout_ms)),
         ..BatcherConfig::default()
     };
     let batcher = Batcher::spawn_for_flag(

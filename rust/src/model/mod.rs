@@ -286,7 +286,11 @@ impl LramMlm {
     /// a checkpoint directory.  Blobs first, manifest last, so a crashed
     /// save can never be opened.  `fsync` additionally syncs every blob
     /// and the directories on commit, so the checkpoint survives power
-    /// loss, not just process crashes (`lram train --fsync`).
+    /// loss, not just process crashes (`lram train --fsync`).  `keep`
+    /// retains that many checkpoints in total (the live one plus
+    /// `keep - 1` `.prev-<step>` predecessors next to it) so serving can
+    /// fall back when the newest one is corrupt; `keep <= 1` preserves
+    /// the historical replace-in-place behaviour.
     pub fn save_checkpoint(
         &self,
         dir: &Path,
@@ -295,9 +299,10 @@ impl LramMlm {
         opt: Option<&SparseAdam>,
         routing_opt: Option<&DenseAdam>,
         fsync: bool,
+        keep: usize,
     ) -> Result<Manifest> {
         use tensor_names::*;
-        let mut w = CheckpointWriter::new(dir)?.with_fsync(fsync);
+        let mut w = CheckpointWriter::new(dir)?.with_fsync(fsync).with_keep(keep);
         let (wd, hd, m) = (self.cfg.width as u64, self.cfg.heads as u64, self.cfg.m as u64);
         w.write_f32(EMBED, &[self.vocab as u64, wd], &self.embed)?;
         w.write_f32(POS, &[self.cfg.seq_len as u64, wd], &self.pos)?;
@@ -568,7 +573,7 @@ mod tests {
     fn checkpoint_roundtrip_is_bit_identical() {
         let dir = tmp_dir("rt");
         let mut a = LramMlm::seeded(tiny_cfg(), 64).unwrap();
-        a.save_checkpoint(&dir, 7, "feedbeef00000000", None, None, false).unwrap();
+        a.save_checkpoint(&dir, 7, "feedbeef00000000", None, None, false, 1).unwrap();
         let ck = Checkpoint::open(&dir).unwrap();
         assert_eq!(ck.manifest.step, 7);
         let mut b = LramMlm::from_checkpoint(&ck, 1).unwrap();
@@ -586,7 +591,7 @@ mod tests {
     fn geometry_mismatch_is_rejected() {
         let dir = tmp_dir("geom");
         let a = LramMlm::seeded(tiny_cfg(), 64).unwrap();
-        a.save_checkpoint(&dir, 0, "feedbeef00000000", None, None, false).unwrap();
+        a.save_checkpoint(&dir, 0, "feedbeef00000000", None, None, false, 1).unwrap();
         // tamper: claim a different width in the manifest
         let path = dir.join(crate::checkpoint::MANIFEST_FILE);
         let text = std::fs::read_to_string(&path).unwrap();
@@ -605,7 +610,7 @@ mod tests {
         let mut opt = SparseAdam::new(rows, 8, 1e-3).unwrap();
         let grad = [0.5f32; 8];
         opt.update_row(&mut a.table, 5, &grad);
-        a.save_checkpoint(&dir, 1, "feedbeef00000000", Some(&opt), None, false).unwrap();
+        a.save_checkpoint(&dir, 1, "feedbeef00000000", Some(&opt), None, false, 1).unwrap();
         let ck = Checkpoint::open(&dir).unwrap();
         assert!(ck.manifest.has_tensor(tensor_names::ADAM_M));
         let t = ck.map_u32(tensor_names::ADAM_T).unwrap();

@@ -228,7 +228,11 @@ impl EngineBackend {
     /// geometry — is a loud construction error: serving silently
     /// mispaired weights would be worse than not serving at all.
     pub fn from_checkpoint(init: &CheckpointInit, bpe: &Bpe) -> Result<Self> {
-        let ck = Checkpoint::open(std::path::Path::new(&init.dir))?;
+        // serving opens with the crash-recovery fallback chain: a corrupt
+        // latest is quarantined and the newest verifying retained
+        // predecessor is promoted (loudly) — last-good availability
+        // beats refusing to boot.  Trainer resume stays on strict open.
+        let ck = Checkpoint::open_with_fallback(std::path::Path::new(&init.dir))?;
         let manifest = &ck.manifest;
         let served = bpe.fingerprint();
         if manifest.tokenizer_hash != served {
@@ -299,6 +303,11 @@ impl InferenceBackend for EngineBackend {
     }
 
     fn infer(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        // stands in for an mmap IO fault on the value table (SIGBUS-class
+        // failures surface here once the table outgrows resident memory)
+        if let Some(e) = crate::util::failpoint::inject("table.gather") {
+            return Err(e.context("value-table gather failed"));
+        }
         self.model.forward(tokens, false, self.stats.as_mut())
     }
 

@@ -3,20 +3,32 @@
 //! as vLLM's router loop).  The backend behind the batch is pluggable
 //! ([`super::backend::InferenceBackend`]): the AOT PJRT artifact or the
 //! pure-rust lattice engine.
+//!
+//! The executor is *supervised*: it runs under `catch_unwind` on a
+//! supervisor thread that rebuilds the backend from its init (for a
+//! checkpoint-backed backend, from the last good checkpoint on disk)
+//! with capped exponential backoff after a panic.  In-flight requests
+//! whose reply channels die in the unwind surface as
+//! [`SubmitError::Unavailable`] (503 at the front door) — never a hung
+//! client — and requests still queued in the channel survive into the
+//! restarted executor.  The supervisor exports the
+//! `starting → ready → degraded → draining` [`Health`] state machine
+//! that `/healthz`, `/readyz` and `/stats` report.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::data::mlm::fit_length;
 use crate::tokenizer::{Bpe, CLS_ID, MASK_ID, SEP_ID};
+use crate::util::failpoint;
 use crate::util::hist::Histogram;
 
 use super::api::{MaskPrediction, PredictRequest, PredictResponse, TokenScore};
-use super::backend::BackendInit;
+use super::backend::{BackendInit, InferenceBackend};
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -29,17 +41,30 @@ pub struct BatcherConfig {
     /// `429 Too Many Requests` with `Retry-After` — instead of growing
     /// an unbounded queue whose tail latency nobody survives.
     pub max_pending: usize,
+    /// Per-request deadline (`--request-timeout-ms`): a request that has
+    /// already waited this long when the executor dequeues it is expired
+    /// with [`SubmitError::Timeout`] (504) *without touching the
+    /// backend* — burning a batch slot on a reply nobody is waiting for
+    /// just deepens the overload that made it late.  `None` = no
+    /// deadline.
+    pub request_timeout: Option<Duration>,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_wait: Duration::from_millis(20), top_k_cap: 20, max_pending: 1024 }
+        BatcherConfig {
+            max_wait: Duration::from_millis(20),
+            top_k_cap: 20,
+            max_pending: 1024,
+            request_timeout: None,
+        }
     }
 }
 
 /// Why a submission did not produce predictions.  The split is the HTTP
 /// status boundary: the front door maps `BadRequest` to 400,
-/// `Overloaded` to 429 + `Retry-After`, and `Internal` to 500.
+/// `Overloaded` to 429 + `Retry-After`, `Unavailable` to 503 +
+/// `Retry-After`, `Timeout` to 504, and `Internal` to 500.
 #[derive(Debug)]
 pub enum SubmitError {
     /// The request itself is invalid (e.g. no `[MASK]` token).
@@ -47,6 +72,12 @@ pub enum SubmitError {
     /// The bounded admission queue is full; the request was shed
     /// *before* tokenization and never reached the backend.
     Overloaded { queue_depth: usize, max_pending: usize },
+    /// The executor died (panic / restart in progress) while this
+    /// request was in flight; the supervisor is restarting it from the
+    /// last good state.  Transient — clients should retry.
+    Unavailable(String),
+    /// The request's deadline expired before the backend saw it.
+    Timeout { waited_ms: u64 },
     /// The batcher or backend failed; the request was admitted but
     /// could not be answered.
     Internal(String),
@@ -60,6 +91,12 @@ impl std::fmt::Display for SubmitError {
                 f,
                 "server overloaded: {queue_depth} requests pending (admission cap {max_pending})"
             ),
+            SubmitError::Unavailable(m) => write!(f, "{m}"),
+            SubmitError::Timeout { waited_ms } => write!(
+                f,
+                "request deadline exceeded after {waited_ms}ms in queue; \
+                 the backend never saw it"
+            ),
             SubmitError::Internal(m) => write!(f, "{m}"),
         }
     }
@@ -67,27 +104,148 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// The serving health state machine, exported by the batcher supervisor
+/// and reported by `/healthz` (liveness: any state is alive), `/readyz`
+/// (readiness: 200 only on `Ready`) and `/stats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum HealthState {
+    /// Backend still constructing (first boot).
+    Starting = 0,
+    /// Executor live, requests flowing.
+    Ready = 1,
+    /// Executor died; the supervisor is rebuilding it with backoff.
+    Degraded = 2,
+    /// Graceful shutdown: in-flight work completing, no new admissions.
+    Draining = 3,
+}
+
+impl HealthState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealthState::Starting => "starting",
+            HealthState::Ready => "ready",
+            HealthState::Degraded => "degraded",
+            HealthState::Draining => "draining",
+        }
+    }
+
+    fn from_u8(v: u8) -> HealthState {
+        match v {
+            0 => HealthState::Starting,
+            1 => HealthState::Ready,
+            2 => HealthState::Degraded,
+            _ => HealthState::Draining,
+        }
+    }
+}
+
+/// Shared liveness/readiness record: the supervisor writes it, the HTTP
+/// layer reads it lock-free on every `/healthz`/`/readyz`/`/stats`.
+#[derive(Debug)]
+pub struct Health {
+    state: AtomicU8,
+    restarts: AtomicU64,
+}
+
+impl Default for Health {
+    fn default() -> Self {
+        Health {
+            state: AtomicU8::new(HealthState::Starting as u8),
+            restarts: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Health {
+    pub fn state(&self) -> HealthState {
+        HealthState::from_u8(self.state.load(Ordering::Relaxed))
+    }
+
+    /// Executor restarts since boot (0 = the executor never died).
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Enter graceful shutdown.  Draining is terminal: supervisor
+    /// transitions (ready/degraded) no longer apply past this point.
+    pub fn set_draining(&self) {
+        self.state.store(HealthState::Draining as u8, Ordering::Relaxed);
+    }
+
+    fn note_restart(&self) -> u64 {
+        self.restarts.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Supervisor-side transition; a concurrent drain always wins.
+    fn transition(&self, to: HealthState) {
+        let mut cur = self.state.load(Ordering::Relaxed);
+        loop {
+            if cur == HealthState::Draining as u8 {
+                return;
+            }
+            match self.state.compare_exchange_weak(
+                cur,
+                to as u8,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+/// Exactly-once release of one bounded-admission slot.  After an
+/// executor panic *both* sides may try to release the same slot — the
+/// executor on its normal reply path, and the submitting client when its
+/// reply channel dies in the unwind — so release is guarded by a swap:
+/// double-releasing would leak admission capacity permanently.
+struct SlotGuard {
+    pending: Arc<AtomicUsize>,
+    released: AtomicBool,
+}
+
+impl SlotGuard {
+    fn release(&self) {
+        if !self.released.swap(true, Ordering::AcqRel) {
+            self.pending.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
 struct Pending {
     tokens: Vec<i32>,
     mask_positions: Vec<usize>,
     top_k: usize,
-    reply: Sender<Result<PredictResponse>>,
+    reply: Sender<Result<PredictResponse, SubmitError>>,
     enqueued: Instant,
+    /// Hard deadline derived from [`BatcherConfig::request_timeout`].
+    deadline: Option<Instant>,
+    /// Shared with the submitting client (see [`SlotGuard`]).
+    slot: Arc<SlotGuard>,
 }
 
-/// The batcher: submit() from any thread; a scheduler thread drains the
-/// queue into backend-sized batches.  Admission is bounded: at most
-/// `max_pending` requests may be queued or in flight at once, the rest
-/// are shed at the door.
+/// The batcher: submit() from any thread; a supervised executor thread
+/// drains the queue into backend-sized batches.  Admission is bounded:
+/// at most `max_pending` requests may be queued or in flight at once,
+/// the rest are shed at the door.
 pub struct Batcher {
     tx: Sender<Pending>,
     /// requests admitted but not yet replied to (queued + in-flight);
-    /// incremented at admission, decremented by the executor at reply
+    /// incremented at admission, decremented exactly once per request
+    /// via its [`SlotGuard`]
     pending: Arc<AtomicUsize>,
     max_pending: usize,
+    /// per-request deadline handed to every submission (see
+    /// [`BatcherConfig::request_timeout`])
+    request_timeout: Option<Duration>,
     /// the backend's max batch rows (set once the executor builds it);
     /// sizes the adaptive `Retry-After` estimate
     batch_capacity: Arc<AtomicUsize>,
+    /// liveness/readiness exported by the supervisor
+    health: Arc<Health>,
     /// rolling access statistics (Table-5 style observability in serving)
     pub stats: Arc<Mutex<BatchStats>>,
 }
@@ -106,6 +264,9 @@ pub struct BatchStats {
     /// requests shed at admission (bounded queue full, 429 to clients);
     /// shed requests never reach the backend and are not in `requests`
     pub shed: u64,
+    /// requests whose deadline expired in the queue (504 to clients);
+    /// like sheds they never reach the backend and are not in `requests`
+    pub timeouts: u64,
     /// request latency distribution (enqueue → reply), for p50/p95/p99
     /// in `/stats`
     pub latency: Histogram,
@@ -118,135 +279,67 @@ pub struct BatchStats {
     pub memory_kl: Option<f64>,
 }
 
+/// Lock the batch stats, recovering from poisoning.  The executor is
+/// supervised — a `panic`-action failpoint (or a real bug) can unwind
+/// while this lock is held; the fields are plain counters, so the worst
+/// a poisoned guard hides is one torn increment, which is strictly
+/// better than every future `/stats` reader and reply path panicking.
+fn lock_stats(stats: &Mutex<BatchStats>) -> MutexGuard<'_, BatchStats> {
+    stats.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// First restart delay after an executor panic.
+const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(100);
+/// Backoff ceiling for a persistently-crashing backend.
+const RESTART_BACKOFF_CAP: Duration = Duration::from_secs(5);
+
 impl Batcher {
-    /// Spawn the scheduler/executor thread.  Blocks until the backend is
-    /// constructed (or construction fails).  The backend is built *on*
-    /// the executor thread — PJRT handles are not `Send`, and the engine
-    /// backend's scratch has no reason to cross threads either.
+    /// Spawn the supervisor + executor thread.  Blocks until the backend
+    /// is constructed (or first-boot construction fails).  The backend
+    /// is built *on* the executor thread — PJRT handles are not `Send`,
+    /// and the engine backend's scratch has no reason to cross threads
+    /// either — and is *re*built there from the same init after a panic,
+    /// so a checkpoint-backed backend restarts from the last good
+    /// checkpoint on disk.
     pub fn spawn(init: BackendInit, bpe: Arc<Bpe>, cfg: BatcherConfig) -> Result<Arc<Batcher>> {
         let (tx, rx): (Sender<Pending>, Receiver<Pending>) = channel();
         let stats = Arc::new(Mutex::new(BatchStats::default()));
         let pending = Arc::new(AtomicUsize::new(0));
         let batch_capacity = Arc::new(AtomicUsize::new(1));
+        let health = Arc::new(Health::default());
         let batcher = Arc::new(Batcher {
             tx,
             pending: pending.clone(),
             max_pending: cfg.max_pending,
+            request_timeout: cfg.request_timeout,
             batch_capacity: batch_capacity.clone(),
+            health: health.clone(),
             stats: stats.clone(),
         });
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         std::thread::spawn(move || {
-            let mut backend = match init.build(&bpe) {
-                Ok(b) => {
-                    let mut s = stats.lock().unwrap();
-                    s.backend = b.name();
-                    s.checkpoint = b.checkpoint_id().map(str::to_string);
-                    drop(s);
-                    let _ = ready_tx.send(Ok(()));
-                    b
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let b_max = backend.max_batch();
-            batch_capacity.store(b_max.max(1), Ordering::Relaxed);
-            let seq_len = backend.seq_len();
-            let vocab = backend.vocab();
-            loop {
-                // block for the first request, then collect until full or
-                // the oldest request exceeds max_wait
-                let first = match rx.recv() {
-                    Ok(p) => p,
-                    Err(_) => return, // all senders dropped: shut down
-                };
-                let mut group = vec![first];
-                let deadline = group[0].enqueued + cfg.max_wait;
-                while group.len() < b_max {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(p) => group.push(p),
-                        Err(_) => break,
-                    }
-                }
-                let t0 = Instant::now();
-                let fill = group.len();
-                // ragged batch: exactly the filled rows, no padding —
-                // backends own their shape requirements
-                let mut tokens = Vec::with_capacity(fill * seq_len);
-                for p in &group {
-                    tokens.extend(fit_length(p.tokens.clone(), seq_len));
-                }
-                let result = backend.infer(&tokens);
-                let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-                {
-                    let mut s = stats.lock().unwrap();
-                    s.requests += fill as u64;
-                    s.batches += 1;
-                    s.total_exec_latency_ms += exec_ms;
-                    s.max_batch_fill = s.max_batch_fill.max(fill);
-                    if let Some((util, kl)) = backend.memory_stats() {
-                        s.memory_utilization = Some(util);
-                        s.memory_kl = Some(kl);
-                    }
-                }
-                match result {
-                    Ok(logp) => {
-                        let mut latencies = Vec::with_capacity(fill);
-                        let mut truncated = 0u64;
-                        for (row, p) in group.into_iter().enumerate() {
-                            let mut resp = extract_predictions(
-                                &logp, row, seq_len, vocab, &p, &bpe, cfg.top_k_cap, fill,
-                            );
-                            truncated +=
-                                resp.masks.iter().filter(|m| m.is_truncated()).count() as u64;
-                            // true request latency: enqueue → reply, so
-                            // queueing and batch collection are included
-                            let latency = p.enqueued.elapsed().as_secs_f64() * 1e3;
-                            resp.latency_ms = latency;
-                            latencies.push(latency);
-                            // release the admission slot *before* the
-                            // reply wakes the client: a client that
-                            // pipelines its next request immediately
-                            // must never be shed against its own slot
-                            pending.fetch_sub(1, Ordering::AcqRel);
-                            let _ = p.reply.send(Ok(resp));
-                        }
-                        let mut s = stats.lock().unwrap();
-                        for &l in &latencies {
-                            s.total_request_latency_ms += l;
-                            s.latency.record(l);
-                        }
-                        s.truncated_masks += truncated;
-                    }
-                    Err(e) => {
-                        let msg = format!("inference failed: {e:#}");
-                        // failed requests still count toward the latency
-                        // mean (`requests` was already incremented above)
-                        let mut latencies = Vec::with_capacity(fill);
-                        for p in group {
-                            latencies.push(p.enqueued.elapsed().as_secs_f64() * 1e3);
-                            pending.fetch_sub(1, Ordering::AcqRel);
-                            let _ = p.reply.send(Err(anyhow!(msg.clone())));
-                        }
-                        let mut s = stats.lock().unwrap();
-                        for &l in &latencies {
-                            s.total_request_latency_ms += l;
-                            s.latency.record(l);
-                        }
-                    }
-                }
-            }
+            supervise(init, bpe, cfg, rx, stats, batch_capacity, health, ready_tx)
         });
         ready_rx
             .recv()
             .map_err(|_| anyhow!("executor thread died during setup"))??;
         Ok(batcher)
+    }
+
+    /// The liveness/readiness record the supervisor maintains.
+    pub fn health(&self) -> &Health {
+        &self.health
+    }
+
+    /// Owned handle to the same record, for threads (signal watcher,
+    /// shutdown path) that outlive a borrow of the batcher.
+    pub fn health_handle(&self) -> Arc<Health> {
+        self.health.clone()
+    }
+
+    /// Clone the rolling stats under the poison-recovering lock.
+    pub fn stats_snapshot(&self) -> BatchStats {
+        lock_stats(&self.stats).clone()
     }
 
     /// Resolve a `--backend artifact | engine | auto` flag into a
@@ -331,7 +424,7 @@ impl Batcher {
     /// every 429.
     pub fn retry_after_secs(&self) -> u64 {
         let mean_batch_ms = {
-            let s = self.stats.lock().unwrap();
+            let s = lock_stats(&self.stats);
             if s.batches > 0 { s.total_exec_latency_ms / s.batches as f64 } else { 0.0 }
         };
         estimate_retry_after(
@@ -359,11 +452,15 @@ impl Batcher {
         bpe: &Bpe,
         req: &PredictRequest,
     ) -> Result<PredictResponse, SubmitError> {
+        // fault site for the admission path itself (chaos harness)
+        if let Some(e) = failpoint::inject("batcher.submit") {
+            return Err(SubmitError::Internal(format!("{e:#}")));
+        }
         // claim an admission slot (lock-free; contended only at the cap)
         let mut cur = self.pending.load(Ordering::Relaxed);
         loop {
             if cur >= self.max_pending {
-                self.stats.lock().unwrap().shed += 1;
+                lock_stats(&self.stats).shed += 1;
                 return Err(SubmitError::Overloaded {
                     queue_depth: cur,
                     max_pending: self.max_pending,
@@ -379,33 +476,266 @@ impl Batcher {
                 Err(now) => cur = now,
             }
         }
-        let release = |this: &Self| {
-            this.pending.fetch_sub(1, Ordering::AcqRel);
-        };
+        // the guard is shared with the executor: whoever reaches a
+        // terminal outcome for this request first releases the slot,
+        // exactly once (see SlotGuard)
+        let slot = Arc::new(SlotGuard {
+            pending: self.pending.clone(),
+            released: AtomicBool::new(false),
+        });
         let (tokens, mask_positions) = encode_with_masks(bpe, &req.text);
         if mask_positions.is_empty() {
-            release(self);
+            slot.release();
             return Err(SubmitError::BadRequest("request contains no [MASK] token".into()));
         }
         let (reply_tx, reply_rx) = channel();
+        let enqueued = Instant::now();
         let sent = self.tx.send(Pending {
             tokens,
             mask_positions,
             top_k: req.top_k,
             reply: reply_tx,
-            enqueued: Instant::now(),
+            enqueued,
+            deadline: self.request_timeout.map(|t| enqueued + t),
+            slot: slot.clone(),
         });
         if sent.is_err() {
-            release(self);
+            slot.release();
             return Err(SubmitError::Internal("batcher is shut down".into()));
         }
-        // the executor owns the slot now: it decrements after replying,
-        // so queue depth counts in-flight work, not just the channel
+        // the executor owns the slot now: it releases after replying, so
+        // queue depth counts in-flight work, not just the channel
         match reply_rx.recv() {
-            Ok(Ok(resp)) => Ok(resp),
-            Ok(Err(e)) => Err(SubmitError::Internal(format!("{e:#}"))),
-            Err(_) => Err(SubmitError::Internal("batcher dropped the request".into())),
+            Ok(outcome) => outcome,
+            Err(_) => {
+                // the executor unwound with this request in flight and
+                // never replied; reclaim the slot ourselves (idempotent
+                // if the executor got to it first) and tell the client
+                // the truth: transient, retry
+                slot.release();
+                Err(SubmitError::Unavailable(
+                    "the inference executor failed mid-request and is being restarted \
+                     from its last good state; retry shortly"
+                        .into(),
+                ))
+            }
         }
+    }
+}
+
+/// Supervisor body: build (or re-build) the backend, run the executor
+/// under `catch_unwind`, and on a panic restart it with capped
+/// exponential backoff.  Runs on its own thread for the life of the
+/// [`Batcher`]; exits when every submit handle is gone (channel
+/// disconnect) or first-boot construction fails.
+#[allow(clippy::too_many_arguments)]
+fn supervise(
+    init: BackendInit,
+    bpe: Arc<Bpe>,
+    cfg: BatcherConfig,
+    rx: Receiver<Pending>,
+    stats: Arc<Mutex<BatchStats>>,
+    batch_capacity: Arc<AtomicUsize>,
+    health: Arc<Health>,
+    ready_tx: Sender<Result<()>>,
+) {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    // Some(_) until the first boot resolves: the spawn() caller is
+    // blocked on this handshake and deserves a hard error, not a silent
+    // retry loop, if the backend cannot be built at all
+    let mut ready_tx = Some(ready_tx);
+    let mut backoff = RESTART_BACKOFF_BASE;
+    loop {
+        let built = catch_unwind(AssertUnwindSafe(|| init.build(&bpe)))
+            .unwrap_or_else(|_| Err(anyhow!("backend construction panicked")));
+        let backend = match built {
+            Ok(b) => b,
+            Err(e) => match ready_tx.take() {
+                Some(t) => {
+                    let _ = t.send(Err(e));
+                    return;
+                }
+                None => {
+                    log::error!(
+                        "backend rebuild failed ({e:#}); next attempt in {backoff:?} \
+                         (serving stays degraded)"
+                    );
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(RESTART_BACKOFF_CAP);
+                    continue;
+                }
+            },
+        };
+        {
+            let mut s = lock_stats(&stats);
+            s.backend = backend.name();
+            s.checkpoint = backend.checkpoint_id().map(str::to_string);
+        }
+        batch_capacity.store(backend.max_batch().max(1), Ordering::Relaxed);
+        if let Some(t) = ready_tx.take() {
+            let _ = t.send(Ok(()));
+        }
+        health.transition(HealthState::Ready);
+        let batches_before = lock_stats(&stats).batches;
+        let run =
+            catch_unwind(AssertUnwindSafe(|| executor_loop(&rx, backend, &bpe, &cfg, &stats)));
+        match run {
+            // channel disconnected: every submit handle dropped, clean
+            // shutdown of the whole supervisor
+            Ok(()) => return,
+            Err(_) => {
+                // the panic unwound the executor: its in-flight group's
+                // reply senders are gone (clients see Unavailable → 503
+                // and release their own slots); requests still queued in
+                // the channel survive into the restarted executor
+                health.transition(HealthState::Degraded);
+                let restarts = health.note_restart();
+                // a backend that served real batches since the last
+                // restart has proven itself; only back off harder when
+                // it crash-loops without making progress
+                if lock_stats(&stats).batches > batches_before {
+                    backoff = RESTART_BACKOFF_BASE;
+                }
+                log::error!(
+                    "batcher executor panicked (restart #{restarts}); in-flight requests \
+                     answered 503, rebuilding the backend in {backoff:?}"
+                );
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(RESTART_BACKOFF_CAP);
+            }
+        }
+    }
+}
+
+/// Expire a dequeued request whose deadline already passed: release its
+/// slot, answer 504, and keep it away from the backend.  Returns the
+/// request back when it is still live.
+fn expire_if_late(p: Pending, stats: &Mutex<BatchStats>) -> Option<Pending> {
+    let Some(deadline) = p.deadline else {
+        return Some(p); // no deadline configured: always live
+    };
+    let now = Instant::now();
+    if now < deadline {
+        return Some(p);
+    }
+    let waited_ms = now.duration_since(p.enqueued).as_millis() as u64;
+    lock_stats(stats).timeouts += 1;
+    p.slot.release();
+    let _ = p.reply.send(Err(SubmitError::Timeout { waited_ms }));
+    None
+}
+
+/// The executor proper: collect a batch (max-batch-or-timeout), run the
+/// backend, reply.  Panics unwind into [`supervise`]'s `catch_unwind`.
+/// Returns when the submit channel disconnects.
+fn executor_loop(
+    rx: &Receiver<Pending>,
+    mut backend: Box<dyn InferenceBackend>,
+    bpe: &Bpe,
+    cfg: &BatcherConfig,
+    stats: &Mutex<BatchStats>,
+) {
+    let b_max = backend.max_batch();
+    let seq_len = backend.seq_len();
+    let vocab = backend.vocab();
+    loop {
+        // block for the first live request, then collect until full or
+        // the oldest request exceeds max_wait
+        let first = match rx.recv() {
+            Ok(p) => p,
+            Err(_) => return, // all senders dropped: shut down
+        };
+        let Some(first) = expire_if_late(first, stats) else { continue };
+        let mut group = vec![first];
+        let deadline = group[0].enqueued + cfg.max_wait;
+        while group.len() < b_max {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(p) => {
+                    if let Some(p) = expire_if_late(p, stats) {
+                        group.push(p);
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        // chaos seam with requests in flight: `panic` exercises the
+        // supervision boundary, `error` the failed-batch reply path
+        if let Some(e) = failpoint::inject("batcher.exec") {
+            fail_group(group, format!("{e:#}"), stats);
+            continue;
+        }
+        let t0 = Instant::now();
+        let fill = group.len();
+        // ragged batch: exactly the filled rows, no padding — backends
+        // own their shape requirements
+        let mut tokens = Vec::with_capacity(fill * seq_len);
+        for p in &group {
+            tokens.extend(fit_length(p.tokens.clone(), seq_len));
+        }
+        let result = backend.infer(&tokens);
+        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+        {
+            let mut s = lock_stats(stats);
+            s.requests += fill as u64;
+            s.batches += 1;
+            s.total_exec_latency_ms += exec_ms;
+            s.max_batch_fill = s.max_batch_fill.max(fill);
+            if let Some((util, kl)) = backend.memory_stats() {
+                s.memory_utilization = Some(util);
+                s.memory_kl = Some(kl);
+            }
+        }
+        match result {
+            Ok(logp) => {
+                let mut latencies = Vec::with_capacity(fill);
+                let mut truncated = 0u64;
+                for (row, p) in group.into_iter().enumerate() {
+                    let mut resp = extract_predictions(
+                        &logp, row, seq_len, vocab, &p, bpe, cfg.top_k_cap, fill,
+                    );
+                    truncated += resp.masks.iter().filter(|m| m.is_truncated()).count() as u64;
+                    // true request latency: enqueue → reply, so queueing
+                    // and batch collection are included
+                    let latency = p.enqueued.elapsed().as_secs_f64() * 1e3;
+                    resp.latency_ms = latency;
+                    latencies.push(latency);
+                    // release the admission slot *before* the reply
+                    // wakes the client: a client that pipelines its next
+                    // request immediately must never be shed against its
+                    // own slot
+                    p.slot.release();
+                    let _ = p.reply.send(Ok(resp));
+                }
+                let mut s = lock_stats(stats);
+                for &l in &latencies {
+                    s.total_request_latency_ms += l;
+                    s.latency.record(l);
+                }
+                s.truncated_masks += truncated;
+            }
+            Err(e) => fail_group(group, format!("inference failed: {e:#}"), stats),
+        }
+    }
+}
+
+/// Answer every request of a failed batch with a 500-class error,
+/// releasing slots and recording latencies (the failed requests still
+/// count toward the latency mean).
+fn fail_group(group: Vec<Pending>, msg: String, stats: &Mutex<BatchStats>) {
+    let mut latencies = Vec::with_capacity(group.len());
+    for p in group {
+        latencies.push(p.enqueued.elapsed().as_secs_f64() * 1e3);
+        p.slot.release();
+        let _ = p.reply.send(Err(SubmitError::Internal(msg.clone())));
+    }
+    let mut s = lock_stats(stats);
+    for &l in &latencies {
+        s.total_request_latency_ms += l;
+        s.latency.record(l);
     }
 }
 
@@ -531,6 +861,107 @@ mod tests {
     }
 
     #[test]
+    fn slot_guard_releases_exactly_once_from_both_sides() {
+        // the double-release hazard: after an executor panic, both the
+        // executor's reply path and the client's error path reach for
+        // the same admission slot
+        let pending = Arc::new(AtomicUsize::new(3));
+        let slot = Arc::new(SlotGuard { pending: pending.clone(), released: AtomicBool::new(false) });
+        let other = slot.clone();
+        slot.release();
+        other.release();
+        slot.release();
+        assert_eq!(pending.load(Ordering::Relaxed), 2, "exactly one decrement");
+    }
+
+    #[test]
+    fn health_state_machine_and_draining_is_terminal() {
+        let h = Health::default();
+        assert_eq!(h.state(), HealthState::Starting);
+        assert_eq!(h.restarts(), 0);
+        h.transition(HealthState::Ready);
+        assert_eq!(h.state(), HealthState::Ready);
+        h.transition(HealthState::Degraded);
+        assert_eq!(h.note_restart(), 1);
+        assert_eq!(h.restarts(), 1);
+        h.set_draining();
+        // supervisor transitions must not resurrect a draining server
+        h.transition(HealthState::Ready);
+        assert_eq!(h.state(), HealthState::Draining);
+        assert_eq!(HealthState::from_u8(HealthState::Degraded as u8), HealthState::Degraded);
+        for s in
+            [HealthState::Starting, HealthState::Ready, HealthState::Degraded, HealthState::Draining]
+        {
+            assert!(!s.as_str().is_empty());
+        }
+    }
+
+    #[test]
+    fn expired_request_gets_504_and_frees_its_slot_without_backend_contact() {
+        let stats = Mutex::new(BatchStats::default());
+        let pending = Arc::new(AtomicUsize::new(1));
+        let (reply, rx) = channel();
+        let now = Instant::now();
+        let enqueued = now.checked_sub(Duration::from_millis(50)).unwrap_or(now);
+        let p = Pending {
+            tokens: vec![CLS_ID, MASK_ID, SEP_ID],
+            mask_positions: vec![1],
+            top_k: 1,
+            reply,
+            enqueued,
+            deadline: Some(now), // already in the past once checked
+            slot: Arc::new(SlotGuard { pending: pending.clone(), released: AtomicBool::new(false) }),
+        };
+        assert!(expire_if_late(p, &stats).is_none(), "expired request must not survive");
+        assert_eq!(pending.load(Ordering::Relaxed), 0, "slot must be freed");
+        assert_eq!(lock_stats(&stats).timeouts, 1);
+        match rx.recv().unwrap() {
+            Err(SubmitError::Timeout { .. }) => {}
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn live_request_passes_deadline_check_untouched() {
+        let stats = Mutex::new(BatchStats::default());
+        let (reply, _rx) = channel();
+        let now = Instant::now();
+        let p = Pending {
+            tokens: vec![CLS_ID, MASK_ID, SEP_ID],
+            mask_positions: vec![1],
+            top_k: 1,
+            reply,
+            enqueued: now,
+            deadline: Some(now + Duration::from_secs(3600)),
+            slot: test_slot(),
+        };
+        let back = expire_if_late(p, &stats).expect("live request must pass through");
+        assert_eq!(back.mask_positions, vec![1]);
+        assert_eq!(lock_stats(&stats).timeouts, 0);
+        // and a deadline-less request is always live
+        let (reply, _rx2) = channel();
+        let p = Pending {
+            tokens: vec![CLS_ID, MASK_ID, SEP_ID],
+            mask_positions: vec![1],
+            top_k: 1,
+            reply,
+            // checked_sub: a fresh VM's Instant epoch may be younger
+            // than the offset, and bare subtraction would panic
+            enqueued: now.checked_sub(Duration::from_secs(9999)).unwrap_or(now),
+            deadline: None,
+            slot: test_slot(),
+        };
+        assert!(expire_if_late(p, &stats).is_some());
+    }
+
+    fn test_slot() -> Arc<SlotGuard> {
+        Arc::new(SlotGuard {
+            pending: Arc::new(AtomicUsize::new(1)),
+            released: AtomicBool::new(false),
+        })
+    }
+
+    #[test]
     fn truncated_mask_position_becomes_explicit_error() {
         let b = bpe();
         let (reply, _rx) = channel();
@@ -540,6 +971,8 @@ mod tests {
             top_k: 2,
             reply,
             enqueued: Instant::now(),
+            deadline: None,
+            slot: test_slot(),
         };
         let vocab = b.vocab_size();
         let logp = vec![-1.0f32; 4 * vocab];

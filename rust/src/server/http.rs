@@ -31,14 +31,23 @@
 //!   ([`Batcher::retry_after_secs`]), so well-behaved clients back off
 //!   proportionally to actual overload.
 //!
+//! Workers are *supervised*: a panic anywhere in the parse/serve path is
+//! caught at the connection boundary (`catch_unwind`), counted in
+//! `/stats.worker_panics`, and kills only that connection — the pool
+//! never silently shrinks.  A panic inside request routing still writes
+//! a well-formed 503 before the connection closes; a hung socket is
+//! never the failure mode.
+//!
 //! Endpoints:
 //!   POST /predict  {"text": "... [MASK] ...", "top_k": 5}
-//!   GET  /healthz
+//!   GET  /healthz  liveness: 200 while the process serves at all
+//!   GET  /readyz   readiness: 200 only in the `ready` health state
 //!   GET  /stats    batching, latency percentiles, queue/shed/connection
-//!                  counters, memory observability
+//!                  counters, health state, restarts, memory observability
 
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -48,16 +57,15 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context as _, Result};
 
 use crate::tokenizer::Bpe;
+use crate::util::failpoint;
 use crate::util::json::{self, Json};
 
 use super::api::PredictRequest;
-use super::batcher::{Batcher, SubmitError};
+use super::batcher::{Batcher, Health, HealthState, SubmitError};
 
 /// Socket-level read poll interval: short enough that idle workers
 /// notice shutdown and keep-alive deadlines promptly.
 const READ_POLL: Duration = Duration::from_millis(250);
-/// Once a request line has arrived, the rest of the request must too.
-const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
 /// A stuck or dead client must not pin a worker on write.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 /// Request-line / header-line length cap.
@@ -79,6 +87,11 @@ pub struct HttpConfig {
     pub conn_backlog: usize,
     /// Request bodies larger than this are rejected with 413.
     pub max_body_bytes: usize,
+    /// Once a request line has arrived, the rest of the request (headers
+    /// + body) must arrive within this window or the client gets 408 and
+    /// the worker slot is freed — a half-sent request must not wedge a
+    /// worker.
+    pub request_deadline: Duration,
 }
 
 impl Default for HttpConfig {
@@ -88,6 +101,7 @@ impl Default for HttpConfig {
             keep_alive_timeout: Duration::from_secs(5),
             conn_backlog: 256,
             max_body_bytes: 1 << 20,
+            request_deadline: Duration::from_secs(10),
         }
     }
 }
@@ -102,6 +116,9 @@ pub struct HttpStats {
     /// requests served over all connections (keep-alive reuse shows up
     /// as `http_requests` ≫ `connections_accepted`)
     pub requests: AtomicU64,
+    /// panics caught at the connection boundary; a nonzero value means a
+    /// worker hit a bug but the pool survived it
+    pub worker_panics: AtomicU64,
 }
 
 /// A running front door.  Dropping the handle does *not* stop the
@@ -112,16 +129,21 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
     http: Arc<HttpStats>,
+    health: Arc<Health>,
 }
 
 /// Clonable trigger for a graceful drain from another thread.
 #[derive(Clone)]
 pub struct ShutdownHandle {
     flag: Arc<AtomicBool>,
+    health: Arc<Health>,
 }
 
 impl ShutdownHandle {
     pub fn shutdown(&self) {
+        // flip readiness first so load balancers stop routing here while
+        // in-flight requests finish draining
+        self.health.set_draining();
         self.flag.store(true, Ordering::SeqCst);
     }
 }
@@ -142,6 +164,7 @@ impl Server {
         let workers = cfg.workers.max(1);
         let shutdown = Arc::new(AtomicBool::new(false));
         let http = Arc::new(HttpStats::default());
+        let health = batcher.health_handle();
         let router = Arc::new(Router {
             batcher,
             bpe,
@@ -149,6 +172,7 @@ impl Server {
             workers,
             keep_alive_timeout: cfg.keep_alive_timeout,
             max_body_bytes: cfg.max_body_bytes,
+            request_deadline: cfg.request_deadline,
         });
         let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.conn_backlog.max(1));
         let conn_rx = Arc::new(Mutex::new(conn_rx));
@@ -179,7 +203,7 @@ impl Server {
             cfg.conn_backlog.max(1),
             router.batcher.max_pending()
         );
-        Ok(Server { addr: local, shutdown, threads, http })
+        Ok(Server { addr: local, shutdown, threads, http, health })
     }
 
     /// The bound address (resolves port 0).
@@ -195,7 +219,7 @@ impl Server {
     /// A clonable handle that can trigger a graceful drain while some
     /// other thread blocks in [`Server::join`].
     pub fn shutdown_handle(&self) -> ShutdownHandle {
-        ShutdownHandle { flag: self.shutdown.clone() }
+        ShutdownHandle { flag: self.shutdown.clone(), health: self.health.clone() }
     }
 
     /// Wire SIGTERM/SIGINT to a graceful drain (ROADMAP PR-4 "SIGTERM →
@@ -233,6 +257,7 @@ impl Server {
     /// batches carrying them) complete, close connections, join all
     /// threads.
     pub fn shutdown(mut self) {
+        self.health.set_draining();
         self.shutdown.store(true, Ordering::SeqCst);
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -351,8 +376,21 @@ fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, router: &Router, shutdown: &Atom
         match next {
             Ok(stream) => {
                 router.http.active_connections.fetch_add(1, Ordering::AcqRel);
-                if let Err(e) = handle_connection(stream, router, shutdown) {
-                    log::debug!("connection error: {e:#}");
+                // supervise the connection: a panic anywhere in the
+                // parse/serve path kills this connection, not this
+                // worker thread — otherwise each panic would silently
+                // shrink the pool until nothing serves
+                match catch_unwind(AssertUnwindSafe(|| handle_connection(stream, router, shutdown)))
+                {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => log::debug!("connection error: {e:#}"),
+                    Err(_) => {
+                        router.http.worker_panics.fetch_add(1, Ordering::Relaxed);
+                        log::error!(
+                            "http worker caught a panic serving a connection; \
+                             connection dropped, worker continues"
+                        );
+                    }
                 }
                 router.http.active_connections.fetch_sub(1, Ordering::AcqRel);
             }
@@ -383,6 +421,7 @@ fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) 
         let req = match read_request(
             &mut reader,
             router.keep_alive_timeout,
+            router.request_deadline,
             shutdown,
             router.max_body_bytes,
         ) {
@@ -403,12 +442,30 @@ fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) 
             }
         };
         router.http.requests.fetch_add(1, Ordering::Relaxed);
-        let (status, body) = router.route(&req);
-        // shed responses tell the client when to come back, from live
-        // queue depth x measured batch latency
-        let retry = if status == 429 { router.batcher.retry_after_secs() } else { 0 };
-        // a draining server finishes this response, then closes
-        let close = !req.keep_alive || shutdown.load(Ordering::Relaxed);
+        // supervise routing separately from the connection loop: a panic
+        // while handling a parsed request still owes the client a
+        // well-formed response — 503 + close, never a silently dropped
+        // socket with a request outstanding
+        let routed = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(e) = failpoint::inject("http.worker") {
+                return (503, error_body(&format!("{e:#}")));
+            }
+            router.route(&req)
+        }));
+        let panicked = routed.is_err();
+        let (status, body) = routed.unwrap_or_else(|_| {
+            router.http.worker_panics.fetch_add(1, Ordering::Relaxed);
+            log::error!("request handler panicked; answering 503 and closing the connection");
+            (503, error_body("request handler panicked; retry on a fresh connection"))
+        });
+        // shed and not-ready responses tell the client when to come
+        // back, from live queue depth x measured batch latency
+        let retry =
+            if status == 429 || status == 503 { router.batcher.retry_after_secs() } else { 0 };
+        // a draining server finishes this response, then closes; so does
+        // a worker that just caught a panic (its connection state is
+        // suspect)
+        let close = !req.keep_alive || panicked || shutdown.load(Ordering::Relaxed);
         respond(&mut stream, status, &body, close, keep_alive_secs, retry)
             .map_err(|e| anyhow!(e).context("writing response"))?;
         if close {
@@ -586,13 +643,14 @@ fn read_exact_bounded<R: BufRead>(
 fn read_request<R: BufRead>(
     r: &mut R,
     idle_timeout: Duration,
+    request_deadline: Duration,
     shutdown: &AtomicBool,
     max_body: usize,
 ) -> Result<HttpRequest, ReadError> {
     let idle_deadline = Instant::now() + idle_timeout;
     let line = read_line_bounded(r, idle_deadline, shutdown, true)?;
     // the request line is in: the rest must arrive promptly
-    let deadline = Instant::now() + REQUEST_DEADLINE;
+    let deadline = Instant::now() + request_deadline;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
@@ -657,12 +715,30 @@ struct Router {
     workers: usize,
     keep_alive_timeout: Duration,
     max_body_bytes: usize,
+    request_deadline: Duration,
 }
 
 impl Router {
     fn route(&self, req: &HttpRequest) -> (u16, String) {
         match (req.method.as_str(), req.path.as_str()) {
-            ("GET", "/healthz") => (200, r#"{"ok": true}"#.to_string()),
+            // liveness: 200 whenever the process can answer at all —
+            // restarting into degraded still means "don't kill me"
+            ("GET", "/healthz") => {
+                let state = self.batcher.health().state();
+                (200, format!(r#"{{"ok": true, "state": "{}"}}"#, state.as_str()))
+            }
+            // readiness: 200 only when the executor is up and serving;
+            // a degraded/draining instance tells the balancer to route
+            // elsewhere without being restarted
+            ("GET", "/readyz") => {
+                let state = self.batcher.health().state();
+                let body = format!(r#"{{"state": "{}"}}"#, state.as_str());
+                if state == HealthState::Ready {
+                    (200, body)
+                } else {
+                    (503, body)
+                }
+            }
             ("GET", "/stats") => (200, self.stats_json()),
             ("POST", "/predict") => self.predict(&req.body),
             _ => (404, r#"{"error": "not found"}"#.to_string()),
@@ -685,12 +761,18 @@ impl Router {
             Ok(resp) => (200, resp.to_json().to_string()),
             Err(SubmitError::BadRequest(m)) => (400, error_body(&m)),
             Err(e @ SubmitError::Overloaded { .. }) => (429, error_body(&e.to_string())),
+            // executor died mid-request and the supervisor is restarting
+            // it: retryable, so 503 (+ Retry-After), not 500
+            Err(e @ SubmitError::Unavailable(_)) => (503, error_body(&e.to_string())),
+            // the request expired in queue before the backend saw it
+            Err(e @ SubmitError::Timeout { .. }) => (504, error_body(&e.to_string())),
             Err(SubmitError::Internal(m)) => (500, error_body(&m)),
         }
     }
 
     fn stats_json(&self) -> String {
-        let s = self.batcher.stats.lock().unwrap().clone();
+        let s = self.batcher.stats_snapshot();
+        let health = self.batcher.health();
         let mean_req = if s.requests > 0 {
             s.total_request_latency_ms / s.requests as f64
         } else {
@@ -714,8 +796,10 @@ impl Router {
             None => String::new(),
         };
         format!(
-            r#"{{"backend": "{}", "requests": {}, "batches": {}, "mean_request_latency_ms": {:.3}, "mean_exec_latency_ms": {:.3}, "latency_p50_ms": {:.3}, "latency_p95_ms": {:.3}, "latency_p99_ms": {:.3}, "max_batch_fill": {}, "truncated_masks": {}, "shed": {}, "queue_depth": {}, "max_pending": {}, "http_workers": {}, "active_connections": {}, "connections_accepted": {}, "connections_shed": {}, "http_requests": {}{}{}}}"#,
+            r#"{{"backend": "{}", "state": "{}", "restarts": {}, "requests": {}, "batches": {}, "mean_request_latency_ms": {:.3}, "mean_exec_latency_ms": {:.3}, "latency_p50_ms": {:.3}, "latency_p95_ms": {:.3}, "latency_p99_ms": {:.3}, "max_batch_fill": {}, "truncated_masks": {}, "timeouts": {}, "shed": {}, "queue_depth": {}, "max_pending": {}, "http_workers": {}, "active_connections": {}, "connections_accepted": {}, "connections_shed": {}, "http_requests": {}, "worker_panics": {}{}{}}}"#,
             s.backend,
+            health.state().as_str(),
+            health.restarts(),
             s.requests,
             s.batches,
             mean_req,
@@ -725,6 +809,7 @@ impl Router {
             s.latency.percentile_ms(0.99),
             s.max_batch_fill,
             s.truncated_masks,
+            s.timeouts,
             s.shed,
             self.batcher.queue_depth(),
             self.batcher.max_pending(),
@@ -733,6 +818,7 @@ impl Router {
             self.http.connections_accepted.load(Ordering::Relaxed),
             self.http.connections_shed.load(Ordering::Relaxed),
             self.http.requests.load(Ordering::Relaxed),
+            self.http.worker_panics.load(Ordering::Relaxed),
             memory,
             checkpoint
         )
@@ -754,7 +840,9 @@ fn reason(status: u16) -> &'static str {
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Internal Server Error",
     }
 }
@@ -772,9 +860,11 @@ fn respond(
         reason(status),
         body.len()
     );
-    if status == 429 {
+    if status == 429 || status == 503 {
         // adaptive back-off (queue depth x mean batch latency); the
-        // floor of 1 keeps the header meaningful even with no history
+        // floor of 1 keeps the header meaningful even with no history.
+        // 503s carry it too: "executor restarting" and "not ready" are
+        // both retryable conditions with a meaningful come-back time
         head.push_str(&format!("Retry-After: {}\r\n", retry_after_secs.max(1)));
     }
     if close {
@@ -800,7 +890,7 @@ mod tests {
 
     fn parse(raw: &str) -> Result<HttpRequest, ReadError> {
         let mut c = Cursor::new(raw.as_bytes().to_vec());
-        read_request(&mut c, Duration::from_secs(1), &no_shutdown(), 1 << 20)
+        read_request(&mut c, Duration::from_secs(1), Duration::from_secs(1), &no_shutdown(), 1 << 20)
     }
 
     #[test]
@@ -835,9 +925,10 @@ mod tests {
         let raw = "GET /healthz HTTP/1.1\r\n\r\nPOST /predict HTTP/1.1\r\nContent-Length: 2\r\n\r\nok";
         let mut c = Cursor::new(raw.as_bytes().to_vec());
         let s = no_shutdown();
-        let a = read_request(&mut c, Duration::from_secs(1), &s, 1 << 20).unwrap();
+        let t = Duration::from_secs(1);
+        let a = read_request(&mut c, t, t, &s, 1 << 20).unwrap();
         assert_eq!(a.path, "/healthz");
-        let b = read_request(&mut c, Duration::from_secs(1), &s, 1 << 20).unwrap();
+        let b = read_request(&mut c, t, t, &s, 1 << 20).unwrap();
         assert_eq!(b.path, "/predict");
         assert_eq!(b.body, b"ok");
     }
@@ -863,7 +954,7 @@ mod tests {
         let mut c = Cursor::new(
             b"POST /predict HTTP/1.1\r\nContent-Length: 99\r\n\r\n".to_vec(),
         );
-        match read_request(&mut c, Duration::from_secs(1), &no_shutdown(), 10) {
+        match read_request(&mut c, Duration::from_secs(1), Duration::from_secs(1), &no_shutdown(), 10) {
             Err(ReadError::Bad { status: 413, .. }) => {}
             other => panic!("expected 413, got {other:?}"),
         }

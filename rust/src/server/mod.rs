@@ -21,7 +21,7 @@ pub use backend::{
     resolve_checkpoint_flag, ArtifactBackend, ArtifactInit, BackendInit, CheckpointInit,
     EngineBackend, EngineConfig, InferenceBackend,
 };
-pub use batcher::{Batcher, BatcherConfig, SubmitError};
+pub use batcher::{Batcher, BatcherConfig, Health, HealthState, SubmitError};
 pub use http::{
     serve, serve_until_signaled, serve_with, HttpConfig, HttpStats, Server, ShutdownHandle,
 };

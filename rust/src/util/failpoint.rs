@@ -1,0 +1,352 @@
+//! Named fault-injection sites (`failpoint::inject("checkpoint.read_blob")`)
+//! — the test- and chaos-harness seam that makes failure a first-class
+//! code path.  A site does nothing until a policy is armed for it, either
+//! programmatically ([`set`]) or via the `LRAM_FAILPOINTS` environment
+//! variable; the inactive path is a single relaxed atomic load, cheap
+//! enough to leave in release builds on the request hot path.
+//!
+//! Spec grammar (env var and [`set`] share it):
+//!
+//! ```text
+//! LRAM_FAILPOINTS="site=action[:prob[:times]][,site=...]"
+//!   action  error | panic | delay-MS
+//!   prob    0.0..=1.0 firing probability       (default 1.0)
+//!   times   max number of firings, then disarm (default unlimited)
+//! ```
+//!
+//! e.g. `LRAM_FAILPOINTS="batcher.exec=panic:0.02,checkpoint.read_blob=error:0.05:3"`.
+//!
+//! Actions:
+//! * `error`    — [`inject`] returns `Some(anyhow::Error)`; the call site
+//!   propagates it like any real IO/backend failure.
+//! * `panic`    — [`inject`] panics; exercises `catch_unwind` supervision.
+//! * `delay-MS` — [`inject`] sleeps `MS` milliseconds then returns `None`;
+//!   exercises timeout and slow-peer paths.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Duration;
+
+use anyhow::{anyhow, Error, Result};
+
+use super::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Action {
+    Error,
+    Panic,
+    Delay(u64),
+}
+
+#[derive(Debug, Clone)]
+struct Policy {
+    action: Action,
+    prob: f64,
+    /// remaining firings before the site disarms itself; `None` = unlimited
+    remaining: Option<u64>,
+}
+
+struct Registry {
+    sites: HashMap<String, Policy>,
+    /// total fires per site, kept after disarm (test/diagnostic visibility)
+    fired: HashMap<String, u64>,
+    rng: Rng,
+}
+
+/// Fast-path gate: `false` means no site is armed and [`inject`] is a
+/// single relaxed load + branch.  Starts `true` so the very first call
+/// pays for the one-time env parse, which then settles the flag.
+static ACTIVE: AtomicBool = AtomicBool::new(true);
+static ENV_PARSE: Once = Once::new();
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| {
+        // non-cryptographic seed: fault *timing* may be arbitrary, only
+        // the armed sites and probabilities are the contract under test
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5eed)
+            ^ (std::process::id() as u64).rotate_left(32);
+        Mutex::new(Registry {
+            sites: HashMap::new(),
+            fired: HashMap::new(),
+            rng: Rng::new(seed),
+        })
+    })
+}
+
+fn parse_env_once() {
+    ENV_PARSE.call_once(|| {
+        let armed = match std::env::var("LRAM_FAILPOINTS") {
+            Ok(spec) if !spec.trim().is_empty() => match arm_from_spec(&spec) {
+                Ok(n) => {
+                    log::warn!("failpoints ARMED from LRAM_FAILPOINTS ({n} site(s)): {spec}");
+                    n > 0
+                }
+                Err(e) => {
+                    log::error!("ignoring malformed LRAM_FAILPOINTS ({e:#}): {spec}");
+                    false
+                }
+            },
+            _ => false,
+        };
+        if !armed {
+            settle_active();
+        }
+    });
+}
+
+/// Recompute the fast-path gate from the registry contents.
+fn settle_active() {
+    let empty = lock().sites.is_empty();
+    ACTIVE.store(!empty, Ordering::Relaxed);
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Registry> {
+    // a panic while holding this lock can only come from a `panic`-action
+    // site firing, which is exactly the state the next caller wants to see
+    registry().lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Arm every `site=policy` entry in a comma-separated spec; returns how
+/// many sites were armed.
+pub fn arm_from_spec(spec: &str) -> Result<usize> {
+    let mut n = 0;
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (site, policy) = entry
+            .split_once('=')
+            .ok_or_else(|| anyhow!("'{entry}': expected site=action[:prob[:times]]"))?;
+        set(site.trim(), policy.trim())?;
+        n += 1;
+    }
+    Ok(n)
+}
+
+/// Arm one site with an `action[:prob[:times]]` policy (see module docs).
+pub fn set(site: &str, policy: &str) -> Result<()> {
+    if site.is_empty() {
+        return Err(anyhow!("empty failpoint site name"));
+    }
+    let mut parts = policy.split(':');
+    let action_s = parts.next().unwrap_or("");
+    let action = if action_s == "error" {
+        Action::Error
+    } else if action_s == "panic" {
+        Action::Panic
+    } else if let Some(ms) = action_s.strip_prefix("delay-") {
+        Action::Delay(ms.parse::<u64>().map_err(|_| {
+            anyhow!("'{action_s}': delay wants integer milliseconds (delay-MS)")
+        })?)
+    } else {
+        return Err(anyhow!("'{action_s}': unknown action (error | panic | delay-MS)"));
+    };
+    let prob = match parts.next() {
+        None => 1.0,
+        Some(p) => {
+            let v: f64 =
+                p.parse().map_err(|_| anyhow!("'{p}': probability must be a float"))?;
+            if !(0.0..=1.0).contains(&v) {
+                return Err(anyhow!("'{p}': probability must be in 0.0..=1.0"));
+            }
+            v
+        }
+    };
+    let remaining = match parts.next() {
+        None => None,
+        Some(t) => Some(
+            t.parse::<u64>().map_err(|_| anyhow!("'{t}': times must be a non-negative integer"))?,
+        ),
+    };
+    if let Some(extra) = parts.next() {
+        return Err(anyhow!("'{extra}': trailing garbage after action:prob:times"));
+    }
+    lock().sites.insert(site.to_string(), Policy { action, prob, remaining });
+    ACTIVE.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm one site (its fired-count survives for inspection).
+pub fn clear(site: &str) {
+    lock().sites.remove(site);
+    settle_active();
+}
+
+/// Disarm every site and forget fired-counts — test teardown.
+pub fn clear_all() {
+    {
+        let mut r = lock();
+        r.sites.clear();
+        r.fired.clear();
+    }
+    settle_active();
+}
+
+/// How many times `site` has fired since the last [`clear_all`].
+pub fn fired(site: &str) -> u64 {
+    lock().fired.get(site).copied().unwrap_or(0)
+}
+
+/// The fault site.  Returns `Some(error)` when an `error` policy fires
+/// (propagate it as the operation's failure), panics when a `panic`
+/// policy fires, sleeps inline for `delay`.  `None` means proceed
+/// normally — which is the only outcome when nothing is armed, via a
+/// branch cheap enough for per-request hot paths.
+#[inline]
+pub fn inject(site: &str) -> Option<Error> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    inject_slow(site)
+}
+
+#[cold]
+fn inject_slow(site: &str) -> Option<Error> {
+    parse_env_once();
+    let action = {
+        let mut r = lock();
+        let prob = match r.sites.get(site) {
+            Some(p) => p.prob,
+            None => return None,
+        };
+        if prob < 1.0 && r.rng.f64() >= prob {
+            return None;
+        }
+        let policy = r.sites.get_mut(site).expect("site vanished under lock");
+        let action = policy.action.clone();
+        let disarm = match policy.remaining.as_mut() {
+            Some(left) => {
+                if *left == 0 {
+                    // exhausted budget left behind: treat as disarmed
+                    r.sites.remove(site);
+                    settle_active_locked(&r);
+                    return None;
+                }
+                *left -= 1;
+                *left == 0
+            }
+            None => false,
+        };
+        *r.fired.entry(site.to_string()).or_insert(0) += 1;
+        if disarm {
+            r.sites.remove(site);
+            settle_active_locked(&r);
+        }
+        action
+    };
+    match action {
+        Action::Error => {
+            log::warn!("failpoint '{site}' fired: injecting error");
+            Some(anyhow!("failpoint '{site}' injected error"))
+        }
+        Action::Panic => {
+            log::warn!("failpoint '{site}' fired: injecting panic");
+            panic!("failpoint '{site}' injected panic");
+        }
+        Action::Delay(ms) => {
+            log::warn!("failpoint '{site}' fired: injecting {ms}ms delay");
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+    }
+}
+
+/// [`settle_active`] while the registry lock is already held.
+fn settle_active_locked(r: &Registry) {
+    ACTIVE.store(!r.sites.is_empty(), Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // every test serialises on this: the registry is process-global and
+    // cargo runs #[test]s concurrently
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        let g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+        clear_all();
+        g
+    }
+
+    #[test]
+    fn inactive_site_is_a_no_op() {
+        let _g = guard();
+        assert!(inject("nothing.armed").is_none());
+        assert_eq!(fired("nothing.armed"), 0);
+    }
+
+    #[test]
+    fn error_policy_fires_and_counts() {
+        let _g = guard();
+        set("t.err", "error").unwrap();
+        let e = inject("t.err").expect("armed error site must fire at prob 1");
+        assert!(e.to_string().contains("t.err"), "{e}");
+        assert_eq!(fired("t.err"), 1);
+        clear("t.err");
+        assert!(inject("t.err").is_none());
+    }
+
+    #[test]
+    fn times_budget_disarms_the_site() {
+        let _g = guard();
+        set("t.budget", "error:1.0:2").unwrap();
+        assert!(inject("t.budget").is_some());
+        assert!(inject("t.budget").is_some());
+        assert!(inject("t.budget").is_none(), "budget of 2 must disarm after 2 fires");
+        assert_eq!(fired("t.budget"), 2);
+    }
+
+    #[test]
+    fn panic_policy_panics() {
+        let _g = guard();
+        set("t.panic", "panic:1.0:1").unwrap();
+        let r = std::panic::catch_unwind(|| inject("t.panic"));
+        assert!(r.is_err(), "panic policy must unwind");
+        assert!(inject("t.panic").is_none(), "times=1 must disarm after the panic");
+    }
+
+    #[test]
+    fn delay_policy_sleeps_then_proceeds() {
+        let _g = guard();
+        set("t.delay", "delay-30").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(inject("t.delay").is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25), "{:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn probability_zero_never_fires() {
+        let _g = guard();
+        set("t.never", "error:0.0").unwrap();
+        for _ in 0..200 {
+            assert!(inject("t.never").is_none());
+        }
+        assert_eq!(fired("t.never"), 0);
+    }
+
+    #[test]
+    fn spec_parser_rejects_garbage() {
+        let _g = guard();
+        assert!(set("t.bad", "explode").is_err());
+        assert!(set("t.bad", "error:1.5").is_err());
+        assert!(set("t.bad", "error:0.5:many").is_err());
+        assert!(set("t.bad", "delay-").is_err());
+        assert!(set("", "error").is_err());
+        assert!(arm_from_spec("a=error,b").is_err());
+    }
+
+    #[test]
+    fn arm_from_spec_arms_multiple_sites() {
+        let _g = guard();
+        let n = arm_from_spec(" a.x = error:0.5 , b.y = delay-1:1.0:3 ").unwrap();
+        assert_eq!(n, 2);
+        set("a.x", "error").unwrap(); // overwrite to deterministic
+        assert!(inject("a.x").is_some());
+        clear_all();
+        assert!(inject("a.x").is_none());
+    }
+}

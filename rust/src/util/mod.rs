@@ -5,6 +5,7 @@
 
 pub mod check;
 pub mod cli;
+pub mod failpoint;
 pub mod hist;
 pub mod json;
 pub mod logger;

@@ -1,0 +1,311 @@
+//! Chaos acceptance: the serving stack survives its own failures.
+//!
+//! Drives the failpoint seams end-to-end over a loopback socket: an
+//! executor panic with a request in flight must produce a *well-formed*
+//! 503 (never a hang, never a torn response), a visible restart in
+//! `/stats`, recovery to ready on `/readyz`, and — because the
+//! supervisor rebuilds the backend from the last good checkpoint —
+//! bit-identical predictions after the fault.  A checkpoint-open error
+//! injected into the first rebuild attempt additionally exercises the
+//! capped-backoff retry loop.
+//!
+//! This lives in its own test binary (not `server_integration.rs`) on
+//! purpose: the failpoint registry is process-global, and arming
+//! `batcher.exec=panic` must never race another test's executor.  Tests
+//! here serialise on a static mutex and clear every site on entry.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use lram::data::synth::CorpusSpec;
+use lram::data::DataPipeline;
+use lram::model::LramMlm;
+use lram::server::{
+    BackendInit, Batcher, BatcherConfig, CheckpointInit, EngineConfig, HttpConfig, Server,
+};
+use lram::util::failpoint;
+use lram::util::json;
+
+// the failpoint registry is process-global: serialise every test and
+// start each one from a clean (disarmed) slate
+static GATE: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear_all();
+    g
+}
+
+fn build_small_bpe() -> Arc<lram::tokenizer::Bpe> {
+    let p = DataPipeline::new(CorpusSpec::default(), 512, 8, 1, 0.15).unwrap();
+    Arc::new(p.bpe)
+}
+
+/// Small engine config so tests spend milliseconds, not seconds; the
+/// [4;8] torus keeps `values.bin` tiny enough for eager verification.
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        seq_len: 24,
+        width: 32,
+        m: 32,
+        torus_k: [4; 8],
+        k_top: 8,
+        ..EngineConfig::default()
+    }
+}
+
+fn save_tiny_checkpoint(tag: &str, bpe: &lram::tokenizer::Bpe) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lram_chaos_ckpt_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let model = LramMlm::seeded(engine_cfg(), bpe.vocab_size()).unwrap();
+    model.save_checkpoint(&dir, 3, &bpe.fingerprint(), None, None, false, 1).unwrap();
+    dir
+}
+
+fn start_server(batcher: Arc<Batcher>, bpe: Arc<lram::tokenizer::Bpe>) -> Server {
+    Server::bind("127.0.0.1:0", batcher, bpe, HttpConfig::default())
+        .expect("binding an ephemeral port")
+}
+
+/// A persistent keep-alive client (write half + buffered read half).
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+struct Resp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Resp {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Every error answer must be machine-actionable: parseable JSON
+    /// carrying an `error` string.
+    fn assert_well_formed_error(&self) {
+        let v = json::parse(&self.body)
+            .unwrap_or_else(|e| panic!("unparseable error body {:?}: {e:#}", self.body));
+        assert!(
+            v.get("error").and_then(|e| e.as_str()).is_some(),
+            "error body missing 'error' field: {}",
+            self.body
+        );
+    }
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to test server");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn roundtrip(&mut self, raw: &str) -> Resp {
+        self.stream.write_all(raw.as_bytes()).expect("writing request");
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("reading status line");
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .unwrap_or_else(|| panic!("bad status line {line:?}"))
+            .parse()
+            .expect("numeric status");
+        let mut headers = Vec::new();
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).expect("reading header");
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+            }
+        }
+        let len: usize = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .map(|(_, v)| v.parse().expect("numeric content-length"))
+            .expect("response carries Content-Length");
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body).expect("reading body");
+        Resp { status, headers, body: String::from_utf8(body).expect("utf-8 body") }
+    }
+
+    fn predict(&mut self, text: &str, top_k: usize) -> Resp {
+        let body = format!(r#"{{"text": "{text}", "top_k": {top_k}}}"#);
+        self.roundtrip(&format!(
+            "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ))
+    }
+
+    fn get(&mut self, path: &str) -> Resp {
+        self.roundtrip(&format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+    }
+}
+
+/// The model's answer, stripped of per-request noise (`latency_ms`,
+/// `batch_size` vary run to run; the masks array is the prediction).
+fn masks_of(resp: &Resp) -> String {
+    json::parse(&resp.body)
+        .unwrap_or_else(|e| panic!("unparseable predict body {:?}: {e:#}", resp.body))
+        .get("masks")
+        .unwrap_or_else(|| panic!("predict body missing 'masks': {}", resp.body))
+        .to_string()
+}
+
+/// Poll `f` until it returns true or `budget` elapses.
+fn eventually(budget: Duration, what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = Instant::now() + budget;
+    loop {
+        if f() {
+            return;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The acceptance chaos test: executor panic with a request in flight,
+/// plus a checkpoint read error injected into the first rebuild attempt.
+/// Only well-formed responses, restart visible in `/stats`, recovery to
+/// ready on `/readyz`, and bit-identical predictions afterwards.
+#[test]
+fn executor_panic_recovers_from_checkpoint_with_identical_predictions() {
+    let _g = guard();
+    let bpe = build_small_bpe();
+    let dir = save_tiny_checkpoint("panic", &bpe);
+    let batcher = Batcher::spawn(
+        BackendInit::EngineCheckpoint(CheckpointInit::new(dir.to_str().unwrap())),
+        bpe.clone(),
+        BatcherConfig::default(),
+    )
+    .expect("checkpoint-backed batcher boots");
+    let server = start_server(batcher, bpe);
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr);
+
+    // pre-fault probe: the prediction we must reproduce after recovery
+    let before = c.predict("the [MASK] of the", 3);
+    assert_eq!(before.status, 200, "{}", before.body);
+    let masks_before = masks_of(&before);
+    assert_eq!(c.get("/readyz").status, 200);
+
+    // arm: the next batch panics the executor, and the supervisor's
+    // first rebuild attempt fails its checkpoint open (backoff retry)
+    failpoint::set("batcher.exec", "panic:1.0:1").unwrap();
+    failpoint::set("checkpoint.open", "error:1.0:1").unwrap();
+
+    // the in-flight request must get a well-formed 503, not a hang or
+    // a torn response
+    let during = c.predict("the [MASK] of the", 3);
+    assert_eq!(during.status, 503, "{}", during.body);
+    during.assert_well_formed_error();
+    assert!(
+        during.header("retry-after").map(|v| v.parse::<u64>().is_ok()).unwrap_or(false),
+        "503 must carry a numeric Retry-After"
+    );
+    assert_eq!(failpoint::fired("batcher.exec"), 1);
+
+    // the restart becomes visible in /stats, then the backoff retry
+    // succeeds and the health machine returns to ready
+    eventually(Duration::from_secs(30), "restart counted in /stats", || {
+        let stats = c.get("/stats");
+        assert_eq!(stats.status, 200);
+        let v = json::parse(&stats.body).expect("stats is JSON");
+        v.get("restarts").and_then(|r| r.as_i64()).unwrap_or(0) >= 1
+    });
+    eventually(Duration::from_secs(30), "/readyz back to 200", || {
+        c.get("/readyz").status == 200
+    });
+    assert_eq!(failpoint::fired("checkpoint.open"), 1, "rebuild must retry past the open error");
+
+    // recovered backend came from the same checkpoint: bit-identical
+    let after = c.predict("the [MASK] of the", 3);
+    assert_eq!(after.status, 200, "{}", after.body);
+    assert_eq!(masks_of(&after), masks_before, "post-recovery predictions must be bit-identical");
+
+    let stats = c.get("/stats");
+    let v = json::parse(&stats.body).expect("stats is JSON");
+    assert_eq!(v.get("state").and_then(|s| s.as_str()), Some("ready"));
+    assert_eq!(v.get("restarts").and_then(|r| r.as_i64()), Some(1));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+    failpoint::clear_all();
+}
+
+/// An injected backend *error* (no panic) fails only that batch: the
+/// requests in it get a well-formed 500, the executor keeps running,
+/// and no restart is counted.
+#[test]
+fn injected_exec_error_fails_the_batch_without_a_restart() {
+    let _g = guard();
+    let bpe = build_small_bpe();
+    let batcher =
+        Batcher::spawn(BackendInit::Engine(engine_cfg()), bpe.clone(), BatcherConfig::default())
+            .expect("engine backend needs no artifacts");
+    let server = start_server(batcher, bpe);
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr);
+
+    failpoint::set("batcher.exec", "error:1.0:1").unwrap();
+    let failed = c.predict("the [MASK] of the", 3);
+    assert_eq!(failed.status, 500, "{}", failed.body);
+    failed.assert_well_formed_error();
+
+    // same executor, no supervision event: the very next request works
+    let ok = c.predict("the [MASK] of the", 3);
+    assert_eq!(ok.status, 200, "{}", ok.body);
+    let v = json::parse(&c.get("/stats").body).expect("stats is JSON");
+    assert_eq!(v.get("restarts").and_then(|r| r.as_i64()), Some(0));
+    assert_eq!(v.get("state").and_then(|s| s.as_str()), Some("ready"));
+
+    server.shutdown();
+    failpoint::clear_all();
+}
+
+/// A fault injected inside the HTTP worker's routing path answers 503
+/// with Retry-After and a JSON body; the worker (and its connection
+/// slot) survives to serve the next request.
+#[test]
+fn http_worker_failpoint_answers_well_formed_503_and_worker_survives() {
+    let _g = guard();
+    let bpe = build_small_bpe();
+    let batcher =
+        Batcher::spawn(BackendInit::Engine(engine_cfg()), bpe.clone(), BatcherConfig::default())
+            .expect("engine backend needs no artifacts");
+    let server = start_server(batcher, bpe);
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr);
+
+    failpoint::set("http.worker", "error:1.0:1").unwrap();
+    let faulted = c.get("/healthz");
+    assert_eq!(faulted.status, 503, "{}", faulted.body);
+    faulted.assert_well_formed_error();
+    assert!(
+        faulted.header("retry-after").map(|v| v.parse::<u64>().is_ok()).unwrap_or(false),
+        "503 must carry a numeric Retry-After"
+    );
+
+    // times=1 disarmed the site; the same keep-alive connection recovers
+    let ok = c.get("/healthz");
+    assert_eq!(ok.status, 200, "{}", ok.body);
+    assert!(ok.body.contains(r#""ok": true"#), "{}", ok.body);
+
+    server.shutdown();
+    failpoint::clear_all();
+}

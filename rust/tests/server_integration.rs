@@ -608,7 +608,7 @@ fn save_tiny_checkpoint(tag: &str, bpe: &lram::tokenizer::Bpe) -> std::path::Pat
     let _ = std::fs::remove_dir_all(&dir);
     let cfg = EngineConfig { torus_k: [4; 8], k_top: 8, ..engine_cfg() };
     let model = LramMlm::seeded(cfg, bpe.vocab_size()).unwrap();
-    model.save_checkpoint(&dir, 3, &bpe.fingerprint(), None, None, false).unwrap();
+    model.save_checkpoint(&dir, 3, &bpe.fingerprint(), None, None, false, 1).unwrap();
     dir
 }
 
@@ -668,6 +668,159 @@ fn stats_report_the_loaded_checkpoint_id() {
     );
     server.shutdown();
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_latest_checkpoint_falls_back_to_predecessor_when_serving() {
+    // the crash-recovery chain end to end: two checkpoint generations
+    // with retention, the newest one corrupted on disk — serve must boot
+    // the predecessor, quarantine the bad copy, and tell the operator
+    // which weights are actually live via /stats
+    let bpe = build_small_bpe();
+    let dir = std::env::temp_dir().join(format!(
+        "lram_srv_fallback_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = EngineConfig { torus_k: [4; 8], k_top: 8, ..engine_cfg() };
+    let model = LramMlm::seeded(cfg, bpe.vocab_size()).unwrap();
+    model.save_checkpoint(&dir, 1, &bpe.fingerprint(), None, None, false, 2).unwrap();
+    model.save_checkpoint(&dir, 2, &bpe.fingerprint(), None, None, false, 2).unwrap();
+    let prev = dir.with_file_name(format!(
+        "{}.prev-1",
+        dir.file_name().unwrap().to_str().unwrap()
+    ));
+    let prev_id = lram::checkpoint::Checkpoint::open(&prev)
+        .expect("retention left a verifying predecessor")
+        .manifest
+        .checkpoint_id;
+
+    // corrupt the live generation's value table (length-preserving byte
+    // flip, so it fails the checksum, not the size check)
+    let values = dir.join("values.bin");
+    let mut bytes = std::fs::read(&values).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&values, &bytes).unwrap();
+
+    let batcher = Batcher::spawn(
+        BackendInit::EngineCheckpoint(CheckpointInit::new(dir.to_str().unwrap())),
+        bpe.clone(),
+        BatcherConfig::default(),
+    )
+    .expect("serve must recover from a corrupt latest checkpoint");
+    assert_eq!(
+        batcher.stats.lock().unwrap().checkpoint.as_deref(),
+        Some(prev_id.as_str()),
+        "the recovered (predecessor) id must be the one reported"
+    );
+    // the bad copy was preserved for forensics, not deleted
+    let name = dir.file_name().unwrap().to_str().unwrap().to_string();
+    let quarantined = std::fs::read_dir(dir.parent().unwrap())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            e.file_name()
+                .to_str()
+                .is_some_and(|n| n.starts_with(&format!("{name}.quarantine-")))
+        })
+        .count();
+    assert_eq!(quarantined, 1, "exactly one quarantined sibling");
+
+    // requests flow from the recovered weights, and /stats names them
+    let server = start_server(batcher, bpe);
+    let mut c = Client::connect(&server.local_addr().to_string());
+    let resp = c.predict("the [MASK] sat", 2);
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let stats = c.get("/stats");
+    assert!(
+        stats.body.contains(&format!(r#""checkpoint": "{prev_id}""#)),
+        "/stats must report the recovered checkpoint: {}",
+        stats.body
+    );
+    server.shutdown();
+    // clean up the dir and every sibling this test created
+    for e in std::fs::read_dir(dir.parent().unwrap()).unwrap().filter_map(|e| e.ok()) {
+        if e.file_name().to_str().is_some_and(|n| n.starts_with(&name)) {
+            let _ = std::fs::remove_dir_all(e.path());
+        }
+    }
+}
+
+#[test]
+fn slow_client_gets_408_and_does_not_wedge_the_worker_pool() {
+    // a client that sends half its body and stalls must be expired with
+    // a well-formed 408 within the request deadline — not pin its worker
+    // forever — and other clients must be served meanwhile
+    let bpe = build_small_bpe();
+    let batcher = spawn_engine_batcher(bpe.clone());
+    let server = start_server_with(
+        batcher,
+        bpe,
+        HttpConfig {
+            workers: 2,
+            request_deadline: Duration::from_millis(400),
+            ..HttpConfig::default()
+        },
+    );
+    let addr = server.local_addr().to_string();
+
+    // wedge attempt: full headers, half the promised body, then silence
+    let mut slow = TcpStream::connect(&addr).unwrap();
+    slow.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let body = r#"{"text": "the [MASK] sat", "top_k": 2}"#;
+    write!(
+        slow,
+        "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        &body[..body.len() / 2]
+    )
+    .unwrap();
+    slow.flush().unwrap();
+
+    // while the slow client stalls, the other worker serves normally
+    let mut ok = Client::connect(&addr);
+    let resp = ok.predict("the [MASK] sat", 2);
+    assert_eq!(resp.status, 200, "healthy client starved by a stalled one: {}", resp.body);
+    // free the healthy client's keep-alive worker before counting slots
+    drop(ok);
+
+    // the stalled request ends in a well-formed 408 + close, not a hang
+    let mut raw = String::new();
+    slow.read_to_string(&mut raw).expect("server must answer, then close");
+    assert!(raw.starts_with("HTTP/1.1 408"), "expected 408, got: {raw}");
+    assert!(raw.contains("Connection: close"), "{raw}");
+    assert!(raw.contains("timed out"), "{raw}");
+
+    // the wedged slot is free again: two fresh connections are both
+    // served concurrently, so the pool is back to full strength
+    let mut c1 = Client::connect(&addr);
+    let mut c2 = Client::connect(&addr);
+    assert_eq!(c1.get("/healthz").status, 200);
+    assert_eq!(c2.get("/healthz").status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn readyz_reports_ready_and_stats_carry_health_fields() {
+    let bpe = build_small_bpe();
+    let batcher = spawn_engine_batcher(bpe.clone());
+    let server = start_server(batcher, bpe);
+    let mut c = Client::connect(&server.local_addr().to_string());
+    let ready = c.get("/readyz");
+    assert_eq!(ready.status, 200, "{}", ready.body);
+    assert!(ready.body.contains(r#""state": "ready""#), "{}", ready.body);
+    let health = c.get("/healthz");
+    assert_eq!(health.status, 200);
+    assert!(health.body.contains(r#""ok": true"#), "{}", health.body);
+    let stats = c.get("/stats");
+    let v = lram::util::json::parse(&stats.body).unwrap();
+    assert_eq!(v.get("state").unwrap().as_str().unwrap(), "ready");
+    assert_eq!(v.get("restarts").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(v.get("timeouts").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(v.get("worker_panics").unwrap().as_usize().unwrap(), 0);
+    server.shutdown();
 }
 
 #[test]
@@ -748,6 +901,6 @@ fn http_end_to_end() {
     // health endpoint, same keep-alive socket
     let health = c.get("/healthz");
     assert_eq!(health.status, 200);
-    assert!(health.body.contains(r#"{"ok": true}"#), "{}", health.body);
+    assert!(health.body.contains(r#""ok": true"#), "{}", health.body);
     server.shutdown();
 }
