@@ -1,0 +1,865 @@
+//! `tidy` — the repo-native lexical static-analysis pass.
+//!
+//! Run as `cargo run --release --bin tidy`; CI runs it as a required
+//! gate next to fmt/clippy (see `.github/workflows/ci.yml` and
+//! `docs/static-analysis.md`).  The tool walks `rust/src`, strips
+//! string literals and comments with a small Rust lexer, tracks
+//! `#[cfg(test)]` / `mod tests` regions by brace depth, and enforces
+//! five repo conventions that rustc and clippy cannot express:
+//!
+//! 1. **SAFETY** — every `unsafe` block/impl/fn carries a `// SAFETY:`
+//!    (or `/// # Safety`) comment on or immediately above it.
+//! 2. **no prod panics** — no `.unwrap()` / `.expect(` / `panic!` /
+//!    `todo!` / `unimplemented!` in production code under
+//!    `rust/src/{server,checkpoint,lattice,model}` outside test regions.
+//! 3. **ORDERING** — every `Ordering::Relaxed` / `Ordering::SeqCst` use
+//!    carries a nearby `// ORDERING:` justification (the fence-free
+//!    orderings are exactly the ones whose correctness is non-local).
+//! 4. **failpoint registry** — every `failpoint::inject("site")` call
+//!    site is registered in `failpoint::SITES`, and every registered
+//!    site has a production call site, appears in `docs/robustness.md`,
+//!    and is exercised by `rust/tests/chaos.rs`.
+//! 5. **tracked locks** — production modules use
+//!    `util::lockcheck::{Mutex, RwLock}` (the lock-order race detector)
+//!    instead of raw `std::sync` locks.
+//!
+//! Exceptions go through [`ALLOWLIST`] — one entry per blessed line,
+//! keyed by path suffix + a needle that must appear on the raw line,
+//! with a written reason.  Unused allowlist entries are themselves
+//! errors, so the list can only shrink or stay honest.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use lram::util::failpoint::SITES;
+
+/// Production directories for checks 2 and 5 (repo-relative prefixes).
+const PROD_DIRS: &[&str] = &[
+    "rust/src/server/",
+    "rust/src/checkpoint/",
+    "rust/src/lattice/",
+    "rust/src/model/",
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Check {
+    Safety,
+    ProdPanic,
+    OrderingDoc,
+    Failpoints,
+    RawLocks,
+}
+
+impl Check {
+    fn name(self) -> &'static str {
+        match self {
+            Check::Safety => "safety-comments",
+            Check::ProdPanic => "no-prod-panics",
+            Check::OrderingDoc => "ordering-justified",
+            Check::Failpoints => "failpoint-registry",
+            Check::RawLocks => "tracked-locks",
+        }
+    }
+}
+
+/// One blessed exception: suppresses a violation of `check` on any line
+/// of a file whose repo-relative path ends with `path_suffix`, provided
+/// the raw line contains `needle`.  `reason` documents why the
+/// exception is sound; an entry that suppresses nothing is an error.
+struct Allow {
+    check: Check,
+    path_suffix: &'static str,
+    needle: &'static str,
+    reason: &'static str,
+}
+
+const ALLOWLIST: &[Allow] = &[Allow {
+    check: Check::ProdPanic,
+    path_suffix: "lattice/e8.rs",
+    needle: "vec8 callers hand in exactly-8-lane slices",
+    reason: "vec8() centralises the structurally-infallible 8-lane slice \
+             conversion; every former per-call-site unwrap routes through \
+             this single blessed expect",
+}];
+
+#[derive(Debug)]
+struct Violation {
+    check: Check,
+    rel: String,
+    line: usize, // 1-based; 0 for whole-file findings
+    msg: String,
+}
+
+// -- lexical scanner -------------------------------------------------------
+
+/// A scanned source file: per line, the raw text, the *code* view (string
+/// literal contents and comments blanked to spaces), the *comment* text
+/// (line + block + doc comments), and whether the line sits inside a
+/// `#[cfg(test)]` / `mod tests` region.
+struct Scanned {
+    rel: String,
+    raw: Vec<String>,
+    code: Vec<String>,
+    comment: Vec<String>,
+    test: Vec<bool>,
+}
+
+/// Cross-line lexer state (strings and block comments span lines).
+#[derive(Clone, Copy)]
+enum LexState {
+    Code,
+    Block(u32),    // nested block-comment depth
+    Str,           // inside "..." (or b"...")
+    RawStr(usize), // inside r"…" / r#"…"# … with this many hashes
+}
+
+/// Lex `text`, producing the code/comment views.  The lexer understands
+/// line and nested block comments, plain/byte/raw string literals, and
+/// disambiguates char literals from lifetimes with one-char lookahead.
+fn scan(rel: &str, text: &str) -> Scanned {
+    let mut raw = Vec::new();
+    let mut code_lines = Vec::new();
+    let mut comment_lines = Vec::new();
+    let mut state = LexState::Code;
+    for line in text.lines() {
+        raw.push(line.to_string());
+        let chars: Vec<char> = line.chars().collect();
+        let n = chars.len();
+        let mut code = String::with_capacity(n);
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < n {
+            match state {
+                LexState::Block(depth) => {
+                    if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        state = LexState::Block(depth + 1);
+                        code.push_str("  ");
+                        i += 2;
+                    } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                        state =
+                            if depth <= 1 { LexState::Code } else { LexState::Block(depth - 1) };
+                        code.push_str("  ");
+                        i += 2;
+                    } else {
+                        comment.push(chars[i]);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::Str => {
+                    if chars[i] == '\\' {
+                        code.push_str("  ");
+                        i += 2; // escaped char (incl. \" and \\)
+                    } else {
+                        if chars[i] == '"' {
+                            state = LexState::Code;
+                        }
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::RawStr(hashes) => {
+                    let mut closes = false;
+                    if chars[i] == '"' {
+                        let mut k = 0;
+                        while k < hashes && i + 1 + k < n && chars[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        closes = k == hashes;
+                    }
+                    if closes {
+                        state = LexState::Code;
+                        for _ in 0..=hashes {
+                            code.push(' ');
+                        }
+                        i += 1 + hashes;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::Code => {
+                    let c = chars[i];
+                    if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                        // line comment (incl. /// and //!): rest of line
+                        comment.push_str(&chars[i + 2..].iter().collect::<String>());
+                        break;
+                    }
+                    if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        state = LexState::Block(1);
+                        code.push_str("  ");
+                        i += 2;
+                        continue;
+                    }
+                    // raw (byte) string start: r"…", r#"…, br"…, br#"… —
+                    // only when the prefix begins a token
+                    if (c == 'r' || (c == 'b' && i + 1 < n && chars[i + 1] == 'r'))
+                        && !prev_is_ident(&chars, i)
+                    {
+                        let after_r = if c == 'b' { i + 2 } else { i + 1 };
+                        let mut j = after_r;
+                        while j < n && chars[j] == '#' {
+                            j += 1;
+                        }
+                        if j < n && chars[j] == '"' {
+                            state = LexState::RawStr(j - after_r);
+                            for _ in i..=j {
+                                code.push(' ');
+                            }
+                            i = j + 1;
+                            continue;
+                        }
+                        // not a raw string (e.g. plain ident): keep as code
+                        code.push(c);
+                        i += 1;
+                        continue;
+                    }
+                    if c == '"' {
+                        state = LexState::Str;
+                        code.push(' ');
+                        i += 1;
+                        continue;
+                    }
+                    if c == '\'' {
+                        // char literal vs lifetime/label
+                        if i + 1 < n && chars[i + 1] == '\\' {
+                            // escaped char literal: skip to the closing quote
+                            let mut j = i + 2;
+                            while j < n && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            let end = j.min(n.saturating_sub(1));
+                            for _ in i..=end {
+                                code.push(' ');
+                            }
+                            i = j + 1;
+                            continue;
+                        }
+                        if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                            // plain char literal 'x' (incl. '"')
+                            code.push_str("   ");
+                            i += 3;
+                            continue;
+                        }
+                        // lifetime or loop label: plain code
+                        code.push(c);
+                        i += 1;
+                        continue;
+                    }
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        code_lines.push(code);
+        comment_lines.push(comment);
+    }
+    let test = mark_test_regions(&code_lines);
+    Scanned { rel: rel.to_string(), raw, code: code_lines, comment: comment_lines, test }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Mark lines inside `#[cfg(test)]` / `mod tests` regions: the marker
+/// line arms the tracker, the next `{` opens a region closed at its
+/// matching brace; a `;` before any `{` disarms (e.g. `mod tests;`).
+fn mark_test_regions(code: &[String]) -> Vec<bool> {
+    let mut test = vec![false; code.len()];
+    let mut depth: i64 = 0;
+    let mut open_at: Vec<i64> = Vec::new();
+    let mut armed = false;
+    for (li, line) in code.iter().enumerate() {
+        if line.contains("#[cfg(test)]")
+            || (contains_word(line, "mod") && contains_word(line, "tests"))
+        {
+            armed = true;
+        }
+        if armed || !open_at.is_empty() {
+            test[li] = true;
+        }
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    if armed {
+                        open_at.push(depth);
+                        armed = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if open_at.last() == Some(&depth) {
+                        open_at.pop();
+                    }
+                }
+                ';' => {
+                    if armed && open_at.is_empty() {
+                        armed = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    test
+}
+
+/// Word-boundary containment: `word` not embedded in a larger identifier.
+fn contains_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Does the comment on `li`, or on the comment/attribute block directly
+/// above it, contain one of `needles`?  The walk stops at the first real
+/// code line (attributes and blank lines are transparent).
+fn comment_on_or_above(s: &Scanned, li: usize, needles: &[&str], max_walk: usize) -> bool {
+    let hit = |i: usize| needles.iter().any(|n| s.comment[i].contains(n));
+    if hit(li) {
+        return true;
+    }
+    let mut i = li;
+    let mut walked = 0;
+    while i > 0 && walked < max_walk {
+        i -= 1;
+        walked += 1;
+        if hit(i) {
+            return true;
+        }
+        let code = s.code[i].trim();
+        if !code.is_empty() && !code.starts_with("#[") && !code.starts_with("#!") {
+            return false;
+        }
+    }
+    false
+}
+
+/// Like [`comment_on_or_above`] but window-based: any comment within the
+/// `window` preceding lines counts, code or not.  Used for check 3,
+/// where the justified token may sit mid-call (e.g. the failure ordering
+/// of a multi-line `compare_exchange_weak`).
+fn comment_within(s: &Scanned, li: usize, needles: &[&str], window: usize) -> bool {
+    let lo = li.saturating_sub(window);
+    (lo..=li).any(|i| needles.iter().any(|n| s.comment[i].contains(n)))
+}
+
+fn in_prod_dir(rel: &str) -> bool {
+    PROD_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+// -- checks ----------------------------------------------------------------
+
+fn allowed(check: Check, rel: &str, raw_line: &str, used: &mut [bool]) -> bool {
+    for (i, a) in ALLOWLIST.iter().enumerate() {
+        if a.check == check && rel.ends_with(a.path_suffix) && raw_line.contains(a.needle) {
+            used[i] = true;
+            return true;
+        }
+    }
+    false
+}
+
+/// Check 1: every `unsafe` carries a SAFETY comment on or above it.
+fn check_safety(files: &[Scanned], used: &mut [bool], out: &mut Vec<Violation>) {
+    const NEEDLES: &[&str] = &["SAFETY:", "# Safety"];
+    for s in files {
+        for (li, code) in s.code.iter().enumerate() {
+            if !contains_word(code, "unsafe") {
+                continue;
+            }
+            if comment_on_or_above(s, li, NEEDLES, 15) {
+                continue;
+            }
+            if allowed(Check::Safety, &s.rel, &s.raw[li], used) {
+                continue;
+            }
+            out.push(Violation {
+                check: Check::Safety,
+                rel: s.rel.clone(),
+                line: li + 1,
+                msg: "`unsafe` without a `// SAFETY:` (or `/// # Safety`) comment \
+                      on or immediately above it"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Check 2: no panicking constructs in production code.
+fn check_prod_panics(files: &[Scanned], used: &mut [bool], out: &mut Vec<Violation>) {
+    const PATTERNS: &[&str] = &[".unwrap()", ".expect(", "panic!(", "todo!(", "unimplemented!("];
+    for s in files.iter().filter(|s| in_prod_dir(&s.rel)) {
+        for (li, code) in s.code.iter().enumerate() {
+            if s.test[li] {
+                continue;
+            }
+            for p in PATTERNS {
+                if !code.contains(p) {
+                    continue;
+                }
+                if allowed(Check::ProdPanic, &s.rel, &s.raw[li], used) {
+                    continue;
+                }
+                out.push(Violation {
+                    check: Check::ProdPanic,
+                    rel: s.rel.clone(),
+                    line: li + 1,
+                    msg: format!(
+                        "`{p}` in production code; return a typed error (or add an \
+                         ALLOWLIST entry with a written reason)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Check 3: fence-free atomic orderings carry a written justification.
+fn check_ordering(files: &[Scanned], used: &mut [bool], out: &mut Vec<Violation>) {
+    const TOKENS: &[&str] = &["Ordering::Relaxed", "Ordering::SeqCst"];
+    for s in files {
+        for (li, code) in s.code.iter().enumerate() {
+            if s.test[li] {
+                continue;
+            }
+            for t in TOKENS {
+                if !code.contains(t) {
+                    continue;
+                }
+                if comment_within(s, li, &["ORDERING:"], 18) {
+                    continue;
+                }
+                if allowed(Check::OrderingDoc, &s.rel, &s.raw[li], used) {
+                    continue;
+                }
+                out.push(Violation {
+                    check: Check::OrderingDoc,
+                    rel: s.rel.clone(),
+                    line: li + 1,
+                    msg: format!(
+                        "`{t}` without a nearby `// ORDERING:` justification — say why \
+                         this ordering is sufficient (or deliberately strong)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Check 4: the failpoint registry is the single source of truth.
+fn check_failpoints(
+    files: &[Scanned],
+    sites: &[(&str, &str)],
+    docs_text: &str,
+    chaos_text: &str,
+    out: &mut Vec<Violation>,
+) {
+    let mut called: Vec<&str> = Vec::new();
+    for s in files {
+        for (li, code) in s.code.iter().enumerate() {
+            if s.test[li] || !code.contains("failpoint::inject(") {
+                continue;
+            }
+            // site names live in string literals, blanked in the code
+            // view: pull the literal off the raw line
+            let raw = &s.raw[li];
+            let lit = raw.find("inject(").map(|p| &raw[p..]).and_then(|r| r.split('"').nth(1));
+            match lit {
+                Some(site) => {
+                    called.push(site);
+                    if !sites.iter().any(|&(name, _)| name == site) {
+                        out.push(Violation {
+                            check: Check::Failpoints,
+                            rel: s.rel.clone(),
+                            line: li + 1,
+                            msg: format!(
+                                "failpoint site \"{site}\" is not registered in \
+                                 `failpoint::SITES` — add it there (and to \
+                                 docs/robustness.md and rust/tests/chaos.rs)"
+                            ),
+                        });
+                    }
+                }
+                None => out.push(Violation {
+                    check: Check::Failpoints,
+                    rel: s.rel.clone(),
+                    line: li + 1,
+                    msg: "failpoint::inject with a non-literal site name; sites must \
+                          be string literals so the registry stays checkable"
+                        .into(),
+                }),
+            }
+        }
+    }
+    for &(site, _) in sites {
+        if !called.contains(&site) {
+            out.push(Violation {
+                check: Check::Failpoints,
+                rel: "rust/src/util/failpoint.rs".into(),
+                line: 0,
+                msg: format!(
+                    "registered failpoint site \"{site}\" has no production \
+                     `failpoint::inject` call site — dead registry entry"
+                ),
+            });
+        }
+        if !docs_text.contains(site) {
+            out.push(Violation {
+                check: Check::Failpoints,
+                rel: "docs/robustness.md".into(),
+                line: 0,
+                msg: format!("failpoint site \"{site}\" is missing from the docs site table"),
+            });
+        }
+        if !chaos_text.contains(site) {
+            out.push(Violation {
+                check: Check::Failpoints,
+                rel: "rust/tests/chaos.rs".into(),
+                line: 0,
+                msg: format!("failpoint site \"{site}\" is not exercised by the chaos tests"),
+            });
+        }
+    }
+}
+
+/// Check 5: production modules use the tracked lockcheck wrappers.
+fn check_raw_locks(files: &[Scanned], used: &mut [bool], out: &mut Vec<Violation>) {
+    for s in files.iter().filter(|s| in_prod_dir(&s.rel)) {
+        for (li, code) in s.code.iter().enumerate() {
+            if s.test[li] {
+                continue;
+            }
+            let qualified =
+                code.contains("std::sync::Mutex") || code.contains("std::sync::RwLock");
+            let imported = code.trim_start().starts_with("use std::sync")
+                && (contains_word(code, "Mutex") || contains_word(code, "RwLock"));
+            if !(qualified || imported) {
+                continue;
+            }
+            if allowed(Check::RawLocks, &s.rel, &s.raw[li], used) {
+                continue;
+            }
+            out.push(Violation {
+                check: Check::RawLocks,
+                rel: s.rel.clone(),
+                line: li + 1,
+                msg: "raw std::sync lock in a production module; use \
+                      `util::lockcheck::{Mutex, RwLock}` with a declared rank so \
+                      lock-order inversions fail fast in debug builds"
+                    .into(),
+            });
+        }
+    }
+}
+
+// -- driver ----------------------------------------------------------------
+
+fn repo_root() -> PathBuf {
+    std::env::var("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")))
+}
+
+/// All `.rs` files under `dir`, recursively, sorted for stable reports.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            rust_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// The whole pass over a checkout: scan `rust/src`, run all five checks,
+/// and report unused allowlist entries.
+fn run(root: &Path) -> Result<Vec<Violation>, String> {
+    let src = root.join("rust/src");
+    let mut paths = Vec::new();
+    rust_files(&src, &mut paths).map_err(|e| format!("walking {}: {e}", src.display()))?;
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text =
+            std::fs::read_to_string(p).map_err(|e| format!("reading {}: {e}", p.display()))?;
+        let rel = p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/");
+        files.push(scan(&rel, &text));
+    }
+    let read = |rel: &str| {
+        std::fs::read_to_string(root.join(rel)).map_err(|e| format!("reading {rel}: {e}"))
+    };
+    let docs_text = read("docs/robustness.md")?;
+    let chaos_text = read("rust/tests/chaos.rs")?;
+
+    let mut v = Vec::new();
+    let mut used = vec![false; ALLOWLIST.len()];
+    check_safety(&files, &mut used, &mut v);
+    check_prod_panics(&files, &mut used, &mut v);
+    check_ordering(&files, &mut used, &mut v);
+    check_failpoints(&files, SITES, &docs_text, &chaos_text, &mut v);
+    check_raw_locks(&files, &mut used, &mut v);
+    for (i, a) in ALLOWLIST.iter().enumerate() {
+        if !used[i] {
+            v.push(Violation {
+                check: a.check,
+                rel: a.path_suffix.into(),
+                line: 0,
+                msg: format!(
+                    "unused ALLOWLIST entry (needle {:?}): the exception it blessed is \
+                     gone — delete the entry (reason was: {})",
+                    a.needle, a.reason
+                ),
+            });
+        }
+    }
+    Ok(v)
+}
+
+fn main() -> ExitCode {
+    let root = repo_root();
+    match run(&root) {
+        Ok(v) if v.is_empty() => {
+            println!("tidy: clean (5 checks over rust/src)");
+            ExitCode::SUCCESS
+        }
+        Ok(v) => {
+            let mut report = String::new();
+            for x in &v {
+                let _ = writeln!(report, "{}:{}: [{}] {}", x.rel, x.line, x.check.name(), x.msg);
+            }
+            eprint!("{report}");
+            eprintln!("tidy: {} violation(s)", v.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("tidy: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+// -- self-tests ------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan_one(rel: &str, text: &str) -> Vec<Scanned> {
+        vec![scan(rel, text)]
+    }
+
+    fn fresh_used() -> Vec<bool> {
+        vec![false; ALLOWLIST.len()]
+    }
+
+    fn violations_of(check: Check, v: &[Violation]) -> usize {
+        v.iter().filter(|x| x.check == check).count()
+    }
+
+    #[test]
+    fn scanner_blanks_strings_comments_and_char_literals() {
+        let s = scan(
+            "x.rs",
+            r##"let a = "unsafe in a string"; // unsafe in a comment
+let b = r#"raw "quoted" unsafe"#;
+let c = '"'; let lt: &'static str = "x";
+/* block unsafe
+   still comment */ let after = 1;"##,
+        );
+        for line in &s.code {
+            assert!(!line.contains("unsafe"), "leaked into code view: {line:?}");
+        }
+        assert!(s.comment[0].contains("unsafe in a comment"));
+        assert!(s.comment[3].contains("block unsafe"));
+        // code after a block comment closes is visible again
+        assert!(s.code[4].contains("let after"));
+        // the '"' char literal must not open a string, and the lifetime's
+        // quote must not open a char literal that swallows the line
+        assert!(s.code[2].contains("static"));
+    }
+
+    #[test]
+    fn test_region_tracking_follows_braces() {
+        let text = "fn prod() { x.unwrap(); }\n\
+                    #[cfg(test)]\n\
+                    mod tests {\n\
+                    fn t() { y.unwrap(); }\n\
+                    }\n\
+                    fn prod2() { z.unwrap(); }\n";
+        let s = scan("rust/src/server/x.rs", text);
+        assert!(!s.test[0]);
+        assert!(s.test[1] && s.test[2] && s.test[3] && s.test[4]);
+        assert!(!s.test[5], "code after the test module is production again");
+    }
+
+    #[test]
+    fn safety_check_flags_bare_unsafe_and_accepts_commented() {
+        let bad = scan_one("rust/src/util/x.rs", "let p = unsafe { deref(q) };\n");
+        let mut used = fresh_used();
+        let mut v = Vec::new();
+        check_safety(&bad, &mut used, &mut v);
+        assert_eq!(violations_of(Check::Safety, &v), 1);
+
+        let good = scan_one(
+            "rust/src/util/x.rs",
+            "// SAFETY: q is valid for reads, checked above.\n\
+             let p = unsafe { deref(q) };\n\
+             /// # Safety\n\
+             /// Caller guarantees exclusivity.\n\
+             #[inline]\n\
+             pub unsafe fn f() {}\n",
+        );
+        let mut v = Vec::new();
+        check_safety(&good, &mut used, &mut v);
+        assert_eq!(violations_of(Check::Safety, &v), 0, "{v:?}");
+    }
+
+    #[test]
+    fn prod_panic_check_scopes_to_prod_dirs_and_skips_tests() {
+        let text = "fn f() { a.unwrap(); b.expect(\"x\"); panic!(\"y\"); }\n\
+                    fn g() { c.unwrap_or_else(|p| p.into_inner()); }\n\
+                    #[cfg(test)]\n\
+                    mod tests { fn t() { d.unwrap(); } }\n";
+        let mut used = fresh_used();
+        let mut v = Vec::new();
+        check_prod_panics(&scan_one("rust/src/server/x.rs", text), &mut used, &mut v);
+        assert_eq!(violations_of(Check::ProdPanic, &v), 3, "{v:?}");
+
+        // same text outside the production dirs: out of scope
+        let mut v = Vec::new();
+        check_prod_panics(&scan_one("rust/src/util/x.rs", text), &mut used, &mut v);
+        assert_eq!(violations_of(Check::ProdPanic, &v), 0);
+    }
+
+    #[test]
+    fn ordering_check_wants_a_written_justification() {
+        let bad = scan_one("rust/src/util/x.rs", "flag.store(true, Ordering::Relaxed);\n");
+        let mut used = fresh_used();
+        let mut v = Vec::new();
+        check_ordering(&bad, &mut used, &mut v);
+        assert_eq!(violations_of(Check::OrderingDoc, &v), 1);
+
+        let good = scan_one(
+            "rust/src/util/x.rs",
+            "// ORDERING: polled flag; staleness costs one extra poll.\n\
+             flag.store(true, Ordering::Relaxed);\n",
+        );
+        let mut v = Vec::new();
+        check_ordering(&good, &mut used, &mut v);
+        assert_eq!(violations_of(Check::OrderingDoc, &v), 0, "{v:?}");
+    }
+
+    #[test]
+    fn ordering_window_covers_midcall_tokens() {
+        // the justified token may be an argument of a multi-line CAS,
+        // lines below the comment — the window must reach it
+        let mut text = String::from("// ORDERING: CAS failure reload may be relaxed.\n");
+        for _ in 0..12 {
+            text.push_str("let filler = 0;\n");
+        }
+        text.push_str("x.compare_exchange_weak(a, b,\n");
+        text.push_str("    Ordering::SeqCst,\n    Ordering::Relaxed);\n");
+        let mut used = fresh_used();
+        let mut v = Vec::new();
+        check_ordering(&scan_one("rust/src/util/x.rs", &text), &mut used, &mut v);
+        assert_eq!(violations_of(Check::OrderingDoc, &v), 0, "{v:?}");
+    }
+
+    #[test]
+    fn failpoint_check_cross_checks_registry_docs_and_chaos() {
+        let sites: &[(&str, &str)] = &[("a.b", "site one"), ("c.d", "site two")];
+        let files = scan_one(
+            "rust/src/server/x.rs",
+            "fn f() { failpoint::inject(\"a.b\"); }\n\
+             fn g() { failpoint::inject(\"not.registered\"); }\n",
+        );
+        let mut v = Vec::new();
+        check_failpoints(&files, sites, "docs mention a.b only", "chaos arms a.b", &mut v);
+        let msgs: Vec<&str> = v.iter().map(|x| x.msg.as_str()).collect();
+        // unregistered call site
+        assert!(msgs.iter().any(|m| m.contains("not.registered")), "{msgs:?}");
+        // c.d: no call site, missing from docs, missing from chaos
+        assert_eq!(msgs.iter().filter(|m| m.contains("\"c.d\"")).count(), 3, "{msgs:?}");
+        // a.b is fully wired: no violations about it
+        assert!(!msgs.iter().any(|m| m.contains("\"a.b\"")), "{msgs:?}");
+    }
+
+    #[test]
+    fn failpoint_sites_in_comments_or_tests_are_ignored() {
+        let files = scan_one(
+            "rust/src/server/x.rs",
+            "// failpoint::inject(\"doc.example\") is how you arm one\n\
+             #[cfg(test)]\n\
+             mod tests { fn t() { failpoint::inject(\"t.adhoc\"); } }\n",
+        );
+        let mut v = Vec::new();
+        check_failpoints(&files, &[], "", "", &mut v);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn raw_lock_check_flags_std_locks_in_prod_dirs_only() {
+        let text = "use std::sync::{Arc, Mutex};\n\
+                    static S: std::sync::RwLock<u32> = std::sync::RwLock::new(0);\n\
+                    use std::sync::Arc;\n";
+        let mut used = fresh_used();
+        let mut v = Vec::new();
+        check_raw_locks(&scan_one("rust/src/server/x.rs", text), &mut used, &mut v);
+        assert_eq!(violations_of(Check::RawLocks, &v), 2, "{v:?}");
+
+        // util (lockcheck itself, failpoint) may hold raw locks
+        let mut v = Vec::new();
+        check_raw_locks(&scan_one("rust/src/util/x.rs", text), &mut used, &mut v);
+        assert_eq!(violations_of(Check::RawLocks, &v), 0);
+    }
+
+    #[test]
+    fn allowlist_suppresses_and_tracks_usage() {
+        // the real allowlist's vec8 entry, against a matching fixture
+        let text = "fn f(chunk: &[f64]) -> &Vec8 {\n\
+            chunk.try_into().expect(\"vec8 callers hand in exactly-8-lane slices\")\n\
+            }\n";
+        let mut used = fresh_used();
+        let mut v = Vec::new();
+        check_prod_panics(&scan_one("rust/src/lattice/e8.rs", text), &mut used, &mut v);
+        assert_eq!(violations_of(Check::ProdPanic, &v), 0, "{v:?}");
+        assert!(used[0], "the vec8 entry must be marked used");
+    }
+
+    #[test]
+    fn the_real_tree_is_clean() {
+        // the binary's contract: `cargo run --bin tidy` exits 0 on HEAD.
+        // Running the full pass here keeps `cargo test` and the CI gate
+        // in lockstep — a violation fails both, with the same message.
+        let v = run(&repo_root()).expect("tidy walk must succeed");
+        assert!(
+            v.is_empty(),
+            "tidy violations on the checked-in tree:\n{}",
+            v.iter()
+                .map(|x| format!("{}:{}: [{}] {}", x.rel, x.line, x.check.name(), x.msg))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

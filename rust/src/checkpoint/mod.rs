@@ -379,6 +379,8 @@ static STAGE_COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU6
 
 /// `<dir>.{tag}-<pid>-<n>`, as a sibling of `dir`.
 fn sibling_dir(dir: &Path, tag: &str) -> PathBuf {
+    // ORDERING: uniqueness only — fetch_add's atomicity guarantees
+    // distinct suffixes; no other memory is published through the counter
     let n = STAGE_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let mut name = dir.as_os_str().to_os_string();
     name.push(format!(".{tag}-{}-{n}", std::process::id()));

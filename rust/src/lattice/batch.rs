@@ -44,7 +44,7 @@
 //!   workers with per-worker scratch; output shards are disjoint, so
 //!   results are bit-identical for every thread count.
 
-use super::e8::{reduce, Reduction, Vec8};
+use super::e8::{reduce, vec8, Reduction, Vec8};
 use super::kernel::kernel_df_dd2;
 use super::neighbors::{neighbor_table, neighbor_table_soa, N_NEIGHBORS};
 use super::torus::TorusK;
@@ -353,7 +353,7 @@ fn run_range(
     let nbr = neighbor_table();
     let m = table.map(ValueTable::dim).unwrap_or(0);
     for (qi, chunk) in queries.chunks_exact(8).enumerate() {
-        let q: &Vec8 = chunk.try_into().expect("8-lane query row");
+        let q = vec8(chunk);
         let idx_row = &mut indices[qi * k_top..(qi + 1) * k_top];
         let w_row = &mut weights[qi * k_top..(qi + 1) * k_top];
         totals[qi] = lookup_one(torus, k_top, soa, nbr, q, scratch, idx_row, w_row);
@@ -377,13 +377,15 @@ fn score_candidates(
     // 232-candidate row.  Accumulation order per candidate (lane 0..7)
     // matches the scalar path's unrolled sum, keeping d2 bit-identical.
     let d2 = &mut scratch.d2;
-    let mut lanes = red.z.iter().zip(soa.iter());
-    let (&z0, lane0) = lanes.next().expect("8 lanes");
+    // lane 0 initialises the accumulators, lanes 1..8 add — both arrays
+    // are fixed [_; 8]s, so the split is bounds-check- and panic-free
+    let (z0, z_rest) = (red.z[0], &red.z[1..]);
+    let (lane0, lanes_rest) = (&soa[0], &soa[1..]);
     for (acc, &c) in d2.iter_mut().zip(lane0.iter()) {
         let d = z0 - c;
         *acc = d * d;
     }
-    for (&zj, lane) in lanes {
+    for (&zj, lane) in z_rest.iter().zip(lanes_rest.iter()) {
         for (acc, &c) in d2.iter_mut().zip(lane.iter()) {
             let d = zj - c;
             *acc += d * d;
@@ -456,7 +458,7 @@ fn backward_range(
     let nbr = neighbor_table();
     let m = table.dim();
     for (qi, chunk) in queries.chunks_exact(8).enumerate() {
-        let q: &Vec8 = chunk.try_into().expect("8-lane query row");
+        let q = vec8(chunk);
         let dq = &mut d_queries[qi * 8..(qi + 1) * 8];
         dq.fill(0.0);
         let dg = &d_gathered[qi * m..(qi + 1) * m];

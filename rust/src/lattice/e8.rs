@@ -9,6 +9,18 @@ pub type Vec8 = [f64; 8];
 /// Integer lattice point.
 pub type IVec8 = [i64; 8];
 
+/// Borrow an 8-lane slice (a `chunks_exact(8)` row) as a [`Vec8`].
+///
+/// The conversion is structurally infallible — every caller hands in a
+/// row produced by `chunks_exact(8)` or an exact `[qi*8..(qi+1)*8]`
+/// slice — so the length contract lives in exactly one place instead of
+/// an `expect` at every hot-path call site.  This is the lattice
+/// production path's single allowlisted panic site (`tidy` check 2).
+#[inline]
+pub fn vec8(chunk: &[f64]) -> &Vec8 {
+    chunk.try_into().expect("vec8 callers hand in exactly-8-lane slices")
+}
+
 /// Nearest point of `D8 = { y in Z^8 : sum(y) even }` to `y`.
 #[inline]
 fn decode_d8(y: &Vec8) -> IVec8 {

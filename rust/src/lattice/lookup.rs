@@ -7,7 +7,7 @@
 //! bit-for-bit (`rust/tests/batch_differential.rs`).  Single queries are
 //! allocation-free through [`LatticeLookup::lookup_into`].
 
-use super::e8::{reduce, Vec8};
+use super::e8::{reduce, vec8, Vec8};
 use super::kernel::{kernel_f, top_k_desc};
 use super::neighbors::{neighbor_table, N_NEIGHBORS};
 use super::torus::TorusK;
@@ -94,8 +94,7 @@ impl LatticeLookup {
         let mut results = Vec::with_capacity(queries.len() / 8);
         let mut scratch = LookupResult::default();
         for chunk in queries.chunks_exact(8) {
-            let q: Vec8 = chunk.try_into().unwrap();
-            self.lookup_into(&q, &mut scratch);
+            self.lookup_into(vec8(chunk), &mut scratch);
             results.push(scratch.clone());
         }
         results

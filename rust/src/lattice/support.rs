@@ -95,7 +95,9 @@ pub fn topk_weight_fraction(samples: u64, k: usize, seed: u64) -> (f64, f64) {
                 weights.push(w);
             }
         }
-        weights.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // descending; total_cmp because kernel weights are finite and a
+        // typed total order beats an unwrap on partial_cmp regardless
+        weights.sort_by(|a, b| b.total_cmp(a));
         let kept: f64 = weights.iter().take(k).sum();
         let frac = kept / total;
         min_frac = min_frac.min(frac);

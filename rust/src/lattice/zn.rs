@@ -30,7 +30,9 @@ pub fn count_in_ball(q: &[f64], r2: f64) -> usize {
         let lo = (qi - r).ceil() as i64;
         let hi = (qi + r).floor() as i64;
         let mut v: Vec<(f64, i64)> = (lo..=hi).map(|x| ((x as f64 - qi).powi(2), x)).collect();
-        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp: the keys are squared offsets (never NaN), and a
+        // typed total order beats an unwrap on partial_cmp regardless
+        v.sort_by(|a, b| a.0.total_cmp(&b.0));
         cands.push(v);
     }
     fn dfs(cands: &[Vec<(f64, i64)>], depth: usize, d2: f64, r2: f64) -> usize {

@@ -2,7 +2,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 
 use crate::util::mmap::MmapF32;
 use crate::util::rng::Rng;
@@ -37,12 +37,23 @@ impl ValueTable {
     /// zero-copy from the page cache (a multi-GB table costs physical
     /// memory only for rows actually served); training writes would land
     /// in private pages and never reach the checkpoint.  Rejects
-    /// `rows * dim` overflow exactly like [`ValueTable::open`].
+    /// `rows * dim` overflow exactly like [`ValueTable::open`], and the
+    /// map layer re-validates the file length against the expected table
+    /// size both before and after mapping — a `values.bin` that shrank
+    /// (torn checkpoint, concurrent prune) is refused loudly here, at
+    /// map time, instead of faulting with SIGBUS on first row access.
     pub fn open_cow(path: &Path, rows: u64, dim: usize) -> Result<Self> {
         let len = (rows as usize).checked_mul(dim).ok_or_else(|| {
             anyhow::anyhow!("table size overflow: {rows} x {dim}")
         })?;
-        Ok(ValueTable { map: MmapF32::open_cow(path, len)?, rows, dim })
+        let map = MmapF32::open_cow(path, len).with_context(|| {
+            format!(
+                "mapping value table {} ({rows} rows x {dim} dims = {} bytes)",
+                path.display(),
+                len * 4
+            )
+        })?;
+        Ok(ValueTable { map, rows, dim })
     }
 
     /// The full `rows * dim` flat storage (checkpoint serialisation).
@@ -270,6 +281,22 @@ mod tests {
         assert!(ValueTable::open(&path, u64::MAX, 16).is_err());
         assert!(!path.exists(), "overflowing open must not create the file");
         assert!(ValueTable::zeros(u64::MAX, 16).is_err());
+    }
+
+    #[test]
+    fn open_cow_refuses_truncated_table_loudly() {
+        // a values.bin shorter than rows x dim must refuse at map time
+        // (SIGBUS hardening) and the error must name the expected shape
+        let dir = std::env::temp_dir()
+            .join(format!("lram_cow_table_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("values.bin");
+        std::fs::write(&path, [0u8; 64]).unwrap(); // 16 f32s, not 16x4
+        let err = format!("{:#}", ValueTable::open_cow(&path, 16, 4).unwrap_err());
+        assert!(err.contains("16 rows x 4 dims"), "{err}");
+        assert!(err.contains("256 bytes"), "{err}");
+        assert!(err.contains("truncated"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::path::Path;
 use anyhow::{ensure, Context, Result};
 
 use crate::checkpoint::{Checkpoint, CheckpointWriter, Manifest, ModelDesc};
-use crate::lattice::e8::Vec8;
+use crate::lattice::e8::vec8;
 use crate::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
 use crate::memstore::{AccessStats, DenseAdam, SparseAdam, ValueTable};
 use crate::util::rng::Rng;
@@ -429,8 +429,8 @@ impl LramMlm {
             let mut idx_row = vec![0u64; k_top];
             let mut w_row = vec![0.0f32; k_top];
             for qi in 0..n_queries {
-                let q: Vec8 = self.queries[qi * 8..(qi + 1) * 8].try_into().unwrap();
-                let r = oracle.lookup(&q);
+                let q = vec8(&self.queries[qi * 8..(qi + 1) * 8]);
+                let r = oracle.lookup(q);
                 for j in 0..k_top {
                     match r.hits.get(j) {
                         Some(hit) => {

@@ -17,7 +17,7 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -26,6 +26,7 @@ use crate::data::mlm::fit_length;
 use crate::tokenizer::{Bpe, CLS_ID, MASK_ID, SEP_ID};
 use crate::util::failpoint;
 use crate::util::hist::Histogram;
+use crate::util::lockcheck::{rank, Mutex, MutexGuard};
 
 use super::api::{MaskPrediction, PredictRequest, PredictResponse, TokenScore};
 use super::backend::{BackendInit, InferenceBackend};
@@ -159,26 +160,37 @@ impl Default for Health {
 
 impl Health {
     pub fn state(&self) -> HealthState {
+        // ORDERING: health is a monitoring snapshot — /healthz reading a
+        // one-transition-stale state is indistinguishable from having
+        // polled a moment earlier; no data is published through it
         HealthState::from_u8(self.state.load(Ordering::Relaxed))
     }
 
     /// Executor restarts since boot (0 = the executor never died).
     pub fn restarts(&self) -> u64 {
+        // ORDERING: monotonic counter read for display only
         self.restarts.load(Ordering::Relaxed)
     }
 
     /// Enter graceful shutdown.  Draining is terminal: supervisor
     /// transitions (ready/degraded) no longer apply past this point.
     pub fn set_draining(&self) {
+        // ORDERING: monitoring snapshot (see state()); the drain itself
+        // is driven by channel teardown, not by this flag
         self.state.store(HealthState::Draining as u8, Ordering::Relaxed);
     }
 
     fn note_restart(&self) -> u64 {
+        // ORDERING: monotonic counter; fetch_add's atomicity is all the
+        // restart count needs
         self.restarts.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Supervisor-side transition; a concurrent drain always wins.
     fn transition(&self, to: HealthState) {
+        // ORDERING: the CAS loop only needs atomicity on the one state
+        // byte — "draining wins" is decided by the compare, not by any
+        // cross-variable visibility
         let mut cur = self.state.load(Ordering::Relaxed);
         loop {
             if cur == HealthState::Draining as u8 {
@@ -303,7 +315,7 @@ impl Batcher {
     /// checkpoint on disk.
     pub fn spawn(init: BackendInit, bpe: Arc<Bpe>, cfg: BatcherConfig) -> Result<Arc<Batcher>> {
         let (tx, rx): (Sender<Pending>, Receiver<Pending>) = channel();
-        let stats = Arc::new(Mutex::new(BatchStats::default()));
+        let stats = Arc::new(Mutex::new(rank::BATCH_STATS, BatchStats::default()));
         let pending = Arc::new(AtomicUsize::new(0));
         let batch_capacity = Arc::new(AtomicUsize::new(1));
         let health = Arc::new(Health::default());
@@ -408,6 +420,8 @@ impl Batcher {
 
     /// Requests admitted but not yet replied to (queued + in-flight).
     pub fn queue_depth(&self) -> usize {
+        // ORDERING: observability read; the admission path re-reads the
+        // counter under its own CAS, so staleness here cannot oversubscribe
         self.pending.load(Ordering::Relaxed)
     }
 
@@ -429,6 +443,8 @@ impl Batcher {
         };
         estimate_retry_after(
             self.queue_depth(),
+            // ORDERING: capacity is written once at backend build; a
+            // stale read only skews the Retry-After estimate by a batch
             self.batch_capacity.load(Ordering::Relaxed),
             mean_batch_ms,
         )
@@ -457,6 +473,9 @@ impl Batcher {
             return Err(SubmitError::Internal(format!("{e:#}")));
         }
         // claim an admission slot (lock-free; contended only at the cap)
+        // ORDERING: relaxed initial read + relaxed CAS-failure reload are
+        // fine — the AcqRel success is what claims the slot, and a stale
+        // first read just costs one extra CAS iteration
         let mut cur = self.pending.load(Ordering::Relaxed);
         loop {
             if cur >= self.max_pending {
@@ -571,6 +590,8 @@ fn supervise(
             s.backend = backend.name();
             s.checkpoint = backend.checkpoint_id().map(str::to_string);
         }
+        // ORDERING: single-writer capacity hint consumed by the
+        // Retry-After estimate; no other state rides on its visibility
         batch_capacity.store(backend.max_batch().max(1), Ordering::Relaxed);
         if let Some(t) = ready_tx.take() {
             let _ = t.send(Ok(()));
@@ -821,6 +842,10 @@ mod tests {
         t.train(100)
     }
 
+    fn test_stats() -> Mutex<BatchStats> {
+        Mutex::new(rank::BATCH_STATS, BatchStats::default())
+    }
+
     #[test]
     fn retry_after_grows_with_queue_depth_and_stays_bounded() {
         // the adaptive estimate behind the Retry-After header: deeper
@@ -898,7 +923,7 @@ mod tests {
 
     #[test]
     fn expired_request_gets_504_and_frees_its_slot_without_backend_contact() {
-        let stats = Mutex::new(BatchStats::default());
+        let stats = test_stats();
         let pending = Arc::new(AtomicUsize::new(1));
         let (reply, rx) = channel();
         let now = Instant::now();
@@ -923,7 +948,7 @@ mod tests {
 
     #[test]
     fn live_request_passes_deadline_check_untouched() {
-        let stats = Mutex::new(BatchStats::default());
+        let stats = test_stats();
         let (reply, _rx) = channel();
         let now = Instant::now();
         let p = Pending {

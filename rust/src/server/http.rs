@@ -50,7 +50,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -59,6 +59,7 @@ use anyhow::{anyhow, Context as _, Result};
 use crate::tokenizer::Bpe;
 use crate::util::failpoint;
 use crate::util::json::{self, Json};
+use crate::util::lockcheck::{rank, Mutex};
 
 use super::api::PredictRequest;
 use super::batcher::{Batcher, Health, HealthState, SubmitError};
@@ -144,6 +145,9 @@ impl ShutdownHandle {
         // flip readiness first so load balancers stop routing here while
         // in-flight requests finish draining
         self.health.set_draining();
+        // ORDERING: SeqCst so the drain flag is globally ordered after
+        // set_draining above — every thread that sees the flag also sees
+        // the draining health state; shutdown is cold, so the fence is free
         self.flag.store(true, Ordering::SeqCst);
     }
 }
@@ -175,7 +179,7 @@ impl Server {
             request_deadline: cfg.request_deadline,
         });
         let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.conn_backlog.max(1));
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let conn_rx = Arc::new(Mutex::new(rank::HTTP_CONN_QUEUE, conn_rx));
         let mut threads = Vec::with_capacity(workers + 1);
         for i in 0..workers {
             let rx = conn_rx.clone();
@@ -240,6 +244,8 @@ impl Server {
         let _watcher = std::thread::Builder::new()
             .name("signal-watcher".into())
             .spawn(move || {
+                // ORDERING: both flags are polled booleans on a 50ms
+                // loop; relaxed staleness costs at most one extra poll
                 while !flag.load(Ordering::Relaxed) {
                     if server_down.load(Ordering::Relaxed) {
                         return; // server stopped without a signal
@@ -258,6 +264,8 @@ impl Server {
     /// threads.
     pub fn shutdown(mut self) {
         self.health.set_draining();
+        // ORDERING: SeqCst pairs with ShutdownHandle::shutdown — the
+        // drain flag must be ordered after the draining health state
         self.shutdown.store(true, Ordering::SeqCst);
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -318,11 +326,14 @@ fn acceptor_loop(
     // conn_tx is dropped when this loop exits, which is what lets idle
     // workers drain the queue and stop
     loop {
+        // ORDERING: polled drain flag; a stale read delays the acceptor
+        // exit by one accept-loop iteration at most
         if shutdown.load(Ordering::Relaxed) {
             return;
         }
         match listener.accept() {
             Ok((stream, _)) => {
+                // ORDERING: /stats counters — atomicity without fences
                 router.http.connections_accepted.fetch_add(1, Ordering::Relaxed);
                 match conn_tx.try_send(stream) {
                     Ok(()) => {}
@@ -330,6 +341,7 @@ fn acceptor_loop(
                         // every worker busy and the backlog full: shed at
                         // the door with a well-formed 429 instead of
                         // queueing unboundedly
+                        // ORDERING: /stats counter
                         router.http.connections_shed.fetch_add(1, Ordering::Relaxed);
                         shed_connection(stream, router.batcher.retry_after_secs());
                     }
@@ -385,6 +397,7 @@ fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, router: &Router, shutdown: &Atom
                     Ok(Ok(())) => {}
                     Ok(Err(e)) => log::debug!("connection error: {e:#}"),
                     Err(_) => {
+                        // ORDERING: /stats counter
                         router.http.worker_panics.fetch_add(1, Ordering::Relaxed);
                         log::error!(
                             "http worker caught a panic serving a connection; \
@@ -395,6 +408,7 @@ fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, router: &Router, shutdown: &Atom
                 router.http.active_connections.fetch_sub(1, Ordering::AcqRel);
             }
             Err(RecvTimeoutError::Timeout) => {
+                // ORDERING: polled drain flag, re-checked every 100ms
                 if shutdown.load(Ordering::Relaxed) {
                     return;
                 }
@@ -441,6 +455,7 @@ fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) 
                 return Err(anyhow!(e).context("reading request"));
             }
         };
+        // ORDERING: /stats counter
         router.http.requests.fetch_add(1, Ordering::Relaxed);
         // supervise routing separately from the connection loop: a panic
         // while handling a parsed request still owes the client a
@@ -454,6 +469,7 @@ fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) 
         }));
         let panicked = routed.is_err();
         let (status, body) = routed.unwrap_or_else(|_| {
+            // ORDERING: /stats counter
             router.http.worker_panics.fetch_add(1, Ordering::Relaxed);
             log::error!("request handler panicked; answering 503 and closing the connection");
             (503, error_body("request handler panicked; retry on a fresh connection"))
@@ -465,6 +481,8 @@ fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) 
         // a draining server finishes this response, then closes; so does
         // a worker that just caught a panic (its connection state is
         // suspect)
+        // ORDERING: polled drain flag; one stale keep-alive round-trip
+        // during a drain is harmless (the next request re-checks)
         let close = !req.keep_alive || panicked || shutdown.load(Ordering::Relaxed);
         respond(&mut stream, status, &body, close, keep_alive_secs, retry)
             .map_err(|e| anyhow!(e).context("writing response"))?;
@@ -534,6 +552,8 @@ fn read_line_bounded<R: BufRead>(
             let buf = match r.fill_buf() {
                 Ok(b) => b,
                 Err(e) if transient(e.kind()) => {
+                    // ORDERING: polled drain flag, re-read every
+                    // READ_POLL tick while the connection idles
                     if line.is_empty() && idle_ok && shutdown.load(Ordering::Relaxed) {
                         return Err(ReadError::Idle);
                     }
@@ -814,6 +834,8 @@ impl Router {
             self.batcher.queue_depth(),
             self.batcher.max_pending(),
             self.workers,
+            // ORDERING: /stats snapshot reads of monotonic counters; the
+            // report is advisory and needs no cross-counter consistency
             self.http.active_connections.load(Ordering::Relaxed),
             self.http.connections_accepted.load(Ordering::Relaxed),
             self.http.connections_shed.load(Ordering::Relaxed),

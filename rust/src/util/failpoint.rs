@@ -32,6 +32,30 @@ use anyhow::{anyhow, Error, Result};
 
 use super::rng::Rng;
 
+/// Single source of truth for every failpoint site compiled into the
+/// binary: `(site name, where it fires)`.
+///
+/// `tidy` (check 4) cross-checks this table three ways — every
+/// `failpoint::inject("…")` call site in production code must be
+/// registered here, every entry must appear in `docs/robustness.md`'s
+/// site table, and every entry must be exercised by
+/// `rust/tests/chaos.rs` — so a site can be neither undocumented nor
+/// dead.  Arming a site that is not registered logs a warning (tests
+/// arm ad-hoc sites on purpose; production specs should not).
+pub const SITES: &[(&str, &str)] = &[
+    ("checkpoint.open", "Checkpoint::open — manifest load + eager verify"),
+    ("checkpoint.read_blob", "per-tensor blob read/checksum"),
+    ("table.gather", "value-table access inside EngineBackend::infer"),
+    ("batcher.submit", "admission path, before a request is queued"),
+    ("batcher.exec", "executor, with a collected batch in flight"),
+    ("http.worker", "request routing inside an HTTP worker"),
+];
+
+/// Whether `site` is in the compiled-in [`SITES`] registry.
+pub fn is_registered(site: &str) -> bool {
+    SITES.iter().any(|&(s, _)| s == site)
+}
+
 #[derive(Debug, Clone, PartialEq)]
 enum Action {
     Error,
@@ -102,6 +126,8 @@ fn parse_env_once() {
 /// Recompute the fast-path gate from the registry contents.
 fn settle_active() {
     let empty = lock().sites.is_empty();
+    // ORDERING: advisory gate (see inject); the registry lock is the
+    // real synchronisation for site state
     ACTIVE.store(!empty, Ordering::Relaxed);
 }
 
@@ -163,7 +189,16 @@ pub fn set(site: &str, policy: &str) -> Result<()> {
     if let Some(extra) = parts.next() {
         return Err(anyhow!("'{extra}': trailing garbage after action:prob:times"));
     }
+    if !is_registered(site) {
+        log::warn!(
+            "arming unregistered failpoint site '{site}' (not in failpoint::SITES); \
+             nothing in production code will ever reach it"
+        );
+    }
     lock().sites.insert(site.to_string(), Policy { action, prob, remaining });
+    // ORDERING: the gate is advisory — a stale `false` only delays the
+    // first fire until the next inject() re-reads it; the registry lock
+    // above already ordered the site insert
     ACTIVE.store(true, Ordering::Relaxed);
     Ok(())
 }
@@ -196,6 +231,9 @@ pub fn fired(site: &str) -> u64 {
 /// branch cheap enough for per-request hot paths.
 #[inline]
 pub fn inject(site: &str) -> Option<Error> {
+    // ORDERING: the whole point of the gate is to be one relaxed load on
+    // the hot path; a stale value only means one extra/missed slow-path
+    // trip, and the registry lock decides the truth in inject_slow
     if !ACTIVE.load(Ordering::Relaxed) {
         return None;
     }
@@ -255,6 +293,8 @@ fn inject_slow(site: &str) -> Option<Error> {
 
 /// [`settle_active`] while the registry lock is already held.
 fn settle_active_locked(r: &Registry) {
+    // ORDERING: advisory gate (see inject); the caller holds the
+    // registry lock that orders the site mutation itself
     ACTIVE.store(!r.sites.is_empty(), Ordering::Relaxed);
 }
 

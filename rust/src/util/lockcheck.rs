@@ -1,0 +1,425 @@
+//! Lock-order race detector: drop-in [`Mutex`]/[`RwLock`] wrappers that
+//! enforce a *declared lock hierarchy* in debug builds and compile to
+//! zero-cost passthrough in release.
+//!
+//! Deadlocks are order bugs: thread A takes `L1` then `L2`, thread B
+//! takes `L2` then `L1`, and the process wedges only under the exact
+//! interleaving nobody reproduces.  The cure is a total order — every
+//! lock carries a [`LockRank`] from the hierarchy declared in [`rank`],
+//! and a thread may only acquire locks of *strictly increasing* order.
+//! Under `debug_assertions` each thread records its acquisition stack;
+//! an out-of-order acquisition panics immediately with both ranks and
+//! the full held stack, turning a once-a-month production hang into a
+//! deterministic test failure on the *first* run that exercises the
+//! inverted order (whichever thread interleaving it gets).
+//!
+//! In release builds the tracking is compiled out entirely: the wrapper
+//! structs hold exactly a `std::sync` lock, the guards hold exactly a
+//! `std::sync` guard, and `lock()` is an `#[inline]` forward — the
+//! serving hot path pays nothing (`tests::release_mutex_is_zero_cost`
+//! pins the layout claim).
+//!
+//! The API mirrors `std::sync` (`lock()`/`read()`/`write()` return
+//! `LockResult`), so the repo's poison-recovery idiom
+//! (`.lock().unwrap_or_else(|p| p.into_inner())`) ports unchanged.
+//! `tidy` check 5 keeps production modules on these wrappers instead of
+//! raw `std::sync` locks.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{self, LockResult, PoisonError};
+
+/// A position in the declared lock hierarchy.  Lower `order` = acquired
+/// earlier (outermost); a thread holding order `N` may only acquire
+/// locks with order `> N`.  Equal orders are also refused — two locks
+/// at the same rank could otherwise AB/BA-deadlock each other, and
+/// re-acquiring the *same* lock is a self-deadlock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LockRank {
+    pub name: &'static str,
+    pub order: u16,
+}
+
+impl LockRank {
+    pub const fn new(name: &'static str, order: u16) -> Self {
+        LockRank { name, order }
+    }
+}
+
+/// The declared lock hierarchy — the single place lock order lives.
+///
+/// Orders are spaced out so new locks slot between existing ones
+/// without renumbering.  Outermost (acquired first, other locks may be
+/// taken while held) get low orders; leaf locks (nothing else is ever
+/// acquired while they are held) get high orders.  Document *why* a
+/// lock sits where it does when adding one; `docs/static-analysis.md`
+/// carries the operator-facing copy of this table.
+pub mod rank {
+    use super::LockRank;
+
+    /// HTTP worker connection queue (`server::http`): held only while a
+    /// worker blocks on `recv_timeout` for the next connection, before
+    /// any request work starts — outermost of the serving locks.
+    pub const HTTP_CONN_QUEUE: LockRank = LockRank::new("http.conn_queue", 100);
+
+    /// Batcher rolling statistics (`server::batcher`): a leaf — plain
+    /// counters updated under short critical sections on the admission,
+    /// executor and `/stats` paths; no other lock is ever taken while
+    /// this one is held.
+    pub const BATCH_STATS: LockRank = LockRank::new("batcher.stats", 900);
+}
+
+#[cfg(debug_assertions)]
+mod tracking {
+    use super::LockRank;
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// Ranks currently held by this thread, in acquisition order.
+        static HELD: RefCell<Vec<LockRank>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Proof of a recorded acquisition; popping happens on drop, so a
+    /// guard that outlives its scope keeps its rank on the stack.
+    pub(super) struct Held(LockRank);
+
+    pub(super) fn acquire(rank: LockRank) -> Held {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(worst) = held.iter().find(|r| r.order >= rank.order) {
+                let stack = held
+                    .iter()
+                    .map(|r| format!("'{}' ({})", r.name, r.order))
+                    .collect::<Vec<_>>()
+                    .join(" -> ");
+                panic!(
+                    "lock order inversion: acquiring '{}' (order {}) while holding \
+                     '{}' (order {}); this thread's acquisition stack: [{stack}] — \
+                     locks must be taken in strictly increasing order, see the \
+                     declared hierarchy in util::lockcheck::rank",
+                    rank.name, rank.order, worst.name, worst.order
+                );
+            }
+            held.push(rank);
+        });
+        Held(rank)
+    }
+
+    impl Drop for Held {
+        fn drop(&mut self) {
+            // try_with: a guard dropped during thread teardown (after the
+            // TLS slot is gone) must not turn an orderly exit into an abort
+            let _ = HELD.try_with(|h| {
+                let mut held = h.borrow_mut();
+                // guards may drop out of acquisition order; release the
+                // most recent matching entry
+                if let Some(i) = held.iter().rposition(|r| *r == self.0) {
+                    held.remove(i);
+                }
+            });
+        }
+    }
+}
+
+// -- Mutex -----------------------------------------------------------------
+
+/// Hierarchy-checked `std::sync::Mutex` (see module docs).
+pub struct Mutex<T> {
+    #[cfg(debug_assertions)]
+    rank: LockRank,
+    inner: sync::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    #[cfg_attr(not(debug_assertions), allow(unused_variables))]
+    pub const fn new(rank: LockRank, value: T) -> Self {
+        Mutex {
+            #[cfg(debug_assertions)]
+            rank,
+            inner: sync::Mutex::new(value),
+        }
+    }
+
+    /// Acquire, panicking (debug builds only) on a hierarchy violation.
+    /// Poison semantics are `std::sync`'s: recover with the usual
+    /// `.unwrap_or_else(|p| p.into_inner())`.
+    #[inline]
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        #[cfg(debug_assertions)]
+        let held = tracking::acquire(self.rank);
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard {
+                inner: g,
+                #[cfg(debug_assertions)]
+                _held: held,
+            }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                inner: p.into_inner(),
+                #[cfg(debug_assertions)]
+                _held: held,
+            })),
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+/// Guard for [`Mutex`]; releases the lock *and* pops the rank from the
+/// thread's acquisition stack on drop.
+pub struct MutexGuard<'a, T> {
+    inner: sync::MutexGuard<'a, T>,
+    #[cfg(debug_assertions)]
+    _held: tracking::Held,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+// -- RwLock ----------------------------------------------------------------
+
+/// Hierarchy-checked `std::sync::RwLock`.  Readers and writers share
+/// one rank: a same-thread `read()` while already holding this lock is
+/// refused too, because a queued writer between two reader acquisitions
+/// deadlocks exactly like an order inversion.
+pub struct RwLock<T> {
+    #[cfg(debug_assertions)]
+    rank: LockRank,
+    inner: sync::RwLock<T>,
+}
+
+impl<T> RwLock<T> {
+    #[cfg_attr(not(debug_assertions), allow(unused_variables))]
+    pub const fn new(rank: LockRank, value: T) -> Self {
+        RwLock {
+            #[cfg(debug_assertions)]
+            rank,
+            inner: sync::RwLock::new(value),
+        }
+    }
+
+    #[inline]
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        #[cfg(debug_assertions)]
+        let held = tracking::acquire(self.rank);
+        match self.inner.read() {
+            Ok(g) => Ok(RwLockReadGuard {
+                inner: g,
+                #[cfg(debug_assertions)]
+                _held: held,
+            }),
+            Err(p) => Err(PoisonError::new(RwLockReadGuard {
+                inner: p.into_inner(),
+                #[cfg(debug_assertions)]
+                _held: held,
+            })),
+        }
+    }
+
+    #[inline]
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        #[cfg(debug_assertions)]
+        let held = tracking::acquire(self.rank);
+        match self.inner.write() {
+            Ok(g) => Ok(RwLockWriteGuard {
+                inner: g,
+                #[cfg(debug_assertions)]
+                _held: held,
+            }),
+            Err(p) => Err(PoisonError::new(RwLockWriteGuard {
+                inner: p.into_inner(),
+                #[cfg(debug_assertions)]
+                _held: held,
+            })),
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for RwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    inner: sync::RwLockReadGuard<'a, T>,
+    #[cfg(debug_assertions)]
+    _held: tracking::Held,
+}
+
+impl<T> Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    inner: sync::RwLockWriteGuard<'a, T>,
+    #[cfg(debug_assertions)]
+    _held: tracking::Held,
+}
+
+impl<T> Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for RwLockWriteGuard<'_, T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // a private test hierarchy, far from the production ranks
+    const OUTER: LockRank = LockRank::new("test.outer", 10_000);
+    const INNER: LockRank = LockRank::new("test.inner", 10_001);
+
+    #[test]
+    fn ordered_acquisition_and_reacquisition_after_drop() {
+        let a = Mutex::new(OUTER, 1u32);
+        let b = Mutex::new(INNER, 2u32);
+        {
+            let ga = a.lock().unwrap();
+            let gb = b.lock().unwrap();
+            assert_eq!(*ga + *gb, 3);
+        }
+        // both released: the stack must be clean enough to start over
+        let gb = b.lock().unwrap();
+        drop(gb);
+        let ga = a.lock().unwrap();
+        let gb = b.lock().unwrap();
+        assert_eq!(*ga + *gb, 3);
+    }
+
+    #[test]
+    fn out_of_order_drop_keeps_the_stack_consistent() {
+        let a = Mutex::new(OUTER, ());
+        let b = Mutex::new(INNER, ());
+        let ga = a.lock().unwrap();
+        let gb = b.lock().unwrap();
+        drop(ga); // outer released first: inner stays tracked
+        drop(gb);
+        let _ga = a.lock().unwrap();
+        let _gb = b.lock().unwrap();
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "tracking is compiled out in release")]
+    #[should_panic(expected = "lock order inversion")]
+    fn inverted_acquisition_panics_in_debug() {
+        let a = Mutex::new(OUTER, ());
+        let b = Mutex::new(INNER, ());
+        let _gb = b.lock().unwrap();
+        let _ga = a.lock().unwrap(); // order 10_000 while holding 10_001
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "tracking is compiled out in release")]
+    #[should_panic(expected = "lock order inversion")]
+    fn same_rank_reacquisition_panics_in_debug() {
+        // self-deadlock: re-locking the same mutex on one thread
+        let a = Mutex::new(OUTER, ());
+        let _g1 = a.lock().unwrap();
+        let _g2 = a.lock().unwrap();
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "tracking is compiled out in release")]
+    #[should_panic(expected = "lock order inversion")]
+    fn rwlock_inversion_panics_in_debug() {
+        let a = RwLock::new(OUTER, ());
+        let b = Mutex::new(INNER, ());
+        let _gb = b.lock().unwrap();
+        let _ga = a.read().unwrap();
+    }
+
+    #[test]
+    fn rwlock_ordered_read_then_inner_write() {
+        let a = RwLock::new(OUTER, 5u32);
+        let b = RwLock::new(INNER, 0u32);
+        let ga = a.read().unwrap();
+        {
+            let mut gb = b.write().unwrap();
+            *gb = *ga;
+        }
+        drop(ga);
+        assert_eq!(*b.read().unwrap(), 5);
+    }
+
+    #[test]
+    fn hierarchy_is_per_thread() {
+        // thread A holds INNER while thread B takes OUTER: no inversion —
+        // the order constraint is within one thread's acquisition stack
+        let a = std::sync::Arc::new(Mutex::new(OUTER, ()));
+        let b = std::sync::Arc::new(Mutex::new(INNER, ()));
+        let _gb = b.lock().unwrap();
+        let a2 = a.clone();
+        std::thread::spawn(move || {
+            let _ga = a2.lock().unwrap();
+        })
+        .join()
+        .expect("cross-thread acquisition must not panic");
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_with_the_std_idiom() {
+        let a = std::sync::Arc::new(Mutex::new(OUTER, 7u32));
+        let a2 = a.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = a2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let g = a.lock().unwrap_or_else(|p| p.into_inner());
+        assert_eq!(*g, 7);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "passthrough is the release-build contract")]
+    fn release_inversion_is_passthrough() {
+        // in release the inverted order must NOT panic: tracking is
+        // compiled out and the wrapper is a plain std lock
+        let a = Mutex::new(OUTER, 1u32);
+        let b = Mutex::new(INNER, 2u32);
+        let gb = b.lock().unwrap();
+        let ga = a.lock().unwrap();
+        assert_eq!(*ga + *gb, 3);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "layout claim only holds in release")]
+    fn release_mutex_is_zero_cost() {
+        use std::mem::size_of;
+        assert_eq!(size_of::<Mutex<u64>>(), size_of::<sync::Mutex<u64>>());
+        assert_eq!(size_of::<RwLock<u64>>(), size_of::<sync::RwLock<u64>>());
+        assert_eq!(
+            size_of::<MutexGuard<'static, u64>>(),
+            size_of::<sync::MutexGuard<'static, u64>>()
+        );
+    }
+}

@@ -20,10 +20,11 @@ struct RawMap {
     bytes: usize,
 }
 
-// SAFETY: the region is owned and pages are plain memory; concurrent
-// readers are fine, writers must hold external synchronisation (the
-// memstore shards guarantee this).
+// SAFETY: the region is owned and pages are plain memory; moving the
+// owning struct across threads moves only the pointer, never the pages.
 unsafe impl Send for RawMap {}
+// SAFETY: concurrent readers of the mapping are fine; writers must hold
+// external synchronisation (the memstore shards guarantee this).
 unsafe impl Sync for RawMap {}
 
 impl RawMap {
@@ -89,7 +90,24 @@ impl RawMap {
         if ptr == libc::MAP_FAILED {
             bail!("mmap cow failed: {}", std::io::Error::last_os_error());
         }
-        Ok(RawMap { ptr, bytes })
+        let map = RawMap { ptr, bytes };
+        // Re-validate the length against the *mapped* fd (fstat): a file
+        // that shrank between the metadata check above and the mmap —
+        // concurrent truncation, a checkpoint pruned mid-open — would
+        // otherwise SIGBUS on the first page access past EOF, which
+        // `catch_unwind` cannot contain.  Refuse loudly at map time
+        // instead; the bailed map unmaps itself on drop.
+        let now = f.metadata()?.len();
+        if now != bytes as u64 {
+            bail!(
+                "{}: file shrank to {} bytes while mapping {} (concurrent \
+                 truncation?); refusing a mapping that would SIGBUS on access",
+                path.display(),
+                now,
+                bytes
+            );
+        }
+        Ok(map)
     }
 
     /// File-backed map (created/truncated to size) for persistence.
@@ -189,10 +207,20 @@ impl MmapF32 {
         unsafe { std::slice::from_raw_parts(self.raw.ptr as *const f32, self.len) }
     }
 
+    /// Mutable view without an exclusive borrow.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee no other reference (shared or mutable)
+    /// to any element of the mapping is live or created for the
+    /// lifetime of the returned slice — the usual `&mut` aliasing rules,
+    /// enforced by the caller instead of the borrow checker.
     #[inline]
     #[allow(clippy::mut_from_ref)]
     #[allow(dead_code)]
     pub(crate) unsafe fn as_mut_slice_unchecked(&self) -> &mut [f32] {
+        // SAFETY: region is valid for len elements for the lifetime of
+        // self; exclusivity is the caller's contract (see above).
         std::slice::from_raw_parts_mut(self.raw.ptr as *mut f32, self.len)
     }
 

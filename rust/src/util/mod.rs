@@ -8,6 +8,7 @@ pub mod cli;
 pub mod failpoint;
 pub mod hist;
 pub mod json;
+pub mod lockcheck;
 pub mod logger;
 pub mod mmap;
 pub mod rng;

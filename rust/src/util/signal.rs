@@ -25,6 +25,9 @@ static INSTALL: Once = Once::new();
 /// (SIGINT) to drain, then `kill` (SIGTERM) on a wedged drain, must
 /// kill — not be absorbed by the still-installed sibling handler.
 extern "C" fn mark_termination(_sig: libc::c_int) {
+    // ORDERING: the flag is a one-shot boolean polled by a watcher
+    // thread; no other memory is published alongside it, so relaxed is
+    // enough (and the handler must stay minimal/async-signal-safe)
     TERMINATION.store(true, Ordering::Relaxed);
     let dfl = libc::sigaction {
         sa_handler: 0, // SIG_DFL

@@ -278,6 +278,45 @@ fn injected_exec_error_fails_the_batch_without_a_restart() {
     failpoint::clear_all();
 }
 
+/// Registry acceptance: the literal list below is this test's own copy
+/// of the contract — it must stay in lockstep with the compiled-in
+/// `failpoint::SITES` table (tidy check 4 additionally cross-checks the
+/// table against production call sites and `docs/robustness.md`).  Every
+/// registered site must be armable and must actually fire: arm each with
+/// `error:1.0:1`, observe the injected error naming the site, and
+/// observe the `times=1` budget disarming it.
+#[test]
+fn every_registered_failpoint_site_arms_fires_and_disarms() {
+    let _g = guard();
+    const EXPECTED: &[&str] = &[
+        "checkpoint.open",
+        "checkpoint.read_blob",
+        "table.gather",
+        "batcher.submit",
+        "batcher.exec",
+        "http.worker",
+    ];
+    let registered: Vec<&str> = failpoint::SITES.iter().map(|&(name, _)| name).collect();
+    assert_eq!(
+        registered, EXPECTED,
+        "failpoint::SITES changed — update this test, docs/robustness.md, and \
+         (for a new site) add a chaos scenario driving it end-to-end"
+    );
+    for &(site, purpose) in failpoint::SITES {
+        assert!(!purpose.is_empty(), "site {site:?} needs a registered purpose");
+        failpoint::set(site, "error:1.0:1").unwrap_or_else(|e| panic!("arming {site:?}: {e:#}"));
+        let err = failpoint::inject(site)
+            .unwrap_or_else(|| panic!("armed site {site:?} must fire at prob 1.0"));
+        assert!(err.to_string().contains(site), "injected error must name its site: {err}");
+        assert_eq!(failpoint::fired(site), 1, "{site:?} fired-count");
+        assert!(
+            failpoint::inject(site).is_none(),
+            "times=1 must disarm {site:?} after its single firing"
+        );
+    }
+    failpoint::clear_all();
+}
+
 /// A fault injected inside the HTTP worker's routing path answers 503
 /// with Retry-After and a JSON body; the worker (and its connection
 /// slot) survives to serve the next request.
