@@ -10,10 +10,10 @@
 //!
 //! Run: `cargo bench --bench lattice_hot_path`
 
-use lram::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
-use lram::memstore::ValueTable;
+use lram::lattice::{simd, BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
+use lram::memstore::{QuantizedValueTable, ValueTable};
 use lram::util::rng::Rng;
-use lram::util::timing::{bench, BenchReport, Table};
+use lram::util::timing::{bench, host_fingerprint, BenchReport, Table};
 
 fn torus() -> TorusK {
     TorusK::new([16, 16, 8, 8, 8, 8, 8, 8]).unwrap()
@@ -168,6 +168,7 @@ fn main() {
 
     let mut fused = vec![0.0f32; batch * 64];
     let mut speedup_t1 = 0.0;
+    let mut f64_t1_median_ns = 0.0;
     for &threads in &thread_opts {
         let engine = BatchLookupEngine::with_threads(torus(), 32, threads);
         let s_fused = bench(16, 256, || {
@@ -178,6 +179,7 @@ fn main() {
         let speedup = s_scalar.median_ns / s_fused.median_ns;
         if threads == 1 {
             speedup_t1 = speedup;
+            f64_t1_median_ns = s_fused.median_ns;
         }
         table.row(&[
             format!("engine lookup+gather b={batch} t={threads}"),
@@ -193,6 +195,69 @@ fn main() {
                 ("median_us", s_fused.median_us()),
                 ("qps", batch as f64 / (s_fused.median_ns / 1e9)),
                 ("speedup_vs_scalar", speedup),
+            ],
+        );
+    }
+
+    // ---- f32 SIMD serving path vs the f64 engine (same run, same iron) --
+    // the gate field is the same-run ratio f32_speedup_vs_f64, which is
+    // machine-independent (unlike raw qps); see docs/performance.md
+    {
+        let engine = BatchLookupEngine::with_threads(torus(), 32, 1);
+        let s_f32 = bench(16, 256, || {
+            let start = (bi & 3) * batch * 8;
+            engine.lookup_gather_ragged_f32_into(
+                &pool[start..start + batch * 8],
+                &gtab,
+                &mut soa,
+                &mut fused,
+            );
+            bi += 1;
+        });
+        let f32_speedup = f64_t1_median_ns / s_f32.median_ns;
+        table.row(&[
+            format!("f32 [{}] lookup+gather b={batch} t=1", simd::active_kernel_name()),
+            format!("{:.2} us", s_f32.median_us()),
+            format!("{:.2} us", s_f32.p90_ns / 1e3),
+            format!("{f32_speedup:.2}x vs f64"),
+        ]);
+        report.entry(
+            "engine_lookup_gather_f32_b256_t1",
+            &[
+                ("batch", batch as f64),
+                ("threads", 1.0),
+                ("median_us", s_f32.median_us()),
+                ("qps", batch as f64 / (s_f32.median_ns / 1e9)),
+                ("f32_speedup_vs_f64", f32_speedup),
+            ],
+        );
+
+        let qtab = QuantizedValueTable::from_table(&gtab).unwrap();
+        let s_q8 = bench(16, 256, || {
+            let start = (bi & 3) * batch * 8;
+            engine.lookup_gather_ragged_q8_into(
+                &pool[start..start + batch * 8],
+                &qtab,
+                &mut soa,
+                &mut fused,
+            );
+            bi += 1;
+        });
+        let q8_speedup = f64_t1_median_ns / s_q8.median_ns;
+        table.row(&[
+            format!("f32-q8 [{}] lookup+gather b={batch} t=1", simd::active_kernel_name()),
+            format!("{:.2} us", s_q8.median_us()),
+            format!("{:.2} us", s_q8.p90_ns / 1e3),
+            format!("{q8_speedup:.2}x vs f64"),
+        ]);
+        report.entry(
+            "engine_lookup_gather_q8_b256_t1",
+            &[
+                ("batch", batch as f64),
+                ("threads", 1.0),
+                ("median_us", s_q8.median_us()),
+                ("qps", batch as f64 / (s_q8.median_ns / 1e9)),
+                ("q8_speedup_vs_f64", q8_speedup),
             ],
         );
     }
@@ -231,11 +296,13 @@ fn main() {
     }
 
     println!("\n== L3 hot-path microbench ==\n");
+    println!("simd dispatch: {} (LRAM_SIMD=off forces scalar)\n", simd::active_kernel_name());
     table.print();
     println!(
         "\nheadline: fused engine b256 t1 is {speedup_t1:.2}x the seed scalar path \
          (acceptance floor: 3x)"
     );
+    report.set_host(&host_fingerprint());
     match report.write("BENCH_lattice.json") {
         Ok(()) => println!("machine-readable results -> BENCH_lattice.json"),
         Err(e) => eprintln!("could not write BENCH_lattice.json: {e}"),

@@ -24,6 +24,11 @@
 //! it prints *every* baseline-vs-current field of *every* entry in one
 //! table (ratio included) and always exits 0 — CI runs it once per
 //! workflow so regressions in non-gated fields at least show in logs.
+//! It also compares the reports' `host` fingerprints and warns loudly
+//! when they differ: absolute fields from different iron are not
+//! comparable, only same-run ratio fields are — which is why the f32
+//! serving gate uses `f32_speedup_vs_f64` (measured and compared within
+//! one bench run) instead of raw qps.
 
 use std::collections::BTreeMap;
 
@@ -50,6 +55,14 @@ fn read_field(path: &str, entry: &str, field: &str) -> Result<f64> {
         }
     }
     bail!("{path}: no entry named '{entry}'")
+}
+
+/// The optional top-level `host` fingerprint of a report (see
+/// `util::timing::host_fingerprint`); `None` for pre-fingerprint files.
+fn read_host(path: &str) -> Result<Option<String>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let v = json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    Ok(v.get("host").and_then(|h| h.as_str()).map(|s| s.to_string()))
 }
 
 /// `entry name → field → value` for every numeric field of a report.
@@ -108,6 +121,22 @@ fn print_report(current_path: &str, baseline_path: &str) -> Result<()> {
         }
     }
     println!("bench report: {current_path} vs baseline {baseline_path}");
+    match (read_host(current_path)?, read_host(baseline_path)?) {
+        (Some(c), Some(b)) if c == b => println!("host: {c} (matches baseline)"),
+        (c, b) => {
+            let c = c.unwrap_or_else(|| "<unrecorded>".into());
+            let b = b.unwrap_or_else(|| "<unrecorded>".into());
+            eprintln!(
+                "==========================================================================\n\
+                 WARNING: baseline host differs from the current host — absolute fields\n\
+                 (qps, median_us) below are NOT comparable; trust only same-run ratio\n\
+                 fields (speedup_vs_scalar, f32_speedup_vs_f64).\n\
+                 baseline host: {b}\n\
+                 current host:  {c}\n\
+                 =========================================================================="
+            );
+        }
+    }
     t.print();
     Ok(())
 }

@@ -49,21 +49,24 @@ use crate::memstore::ValueTable;
 use crate::util::failpoint;
 use crate::util::fnv1a64;
 use crate::util::json::{self, Json};
-use crate::util::mmap::MmapU32;
+use crate::util::mmap::{MmapI8, MmapU32};
 
 /// Format tag in every manifest; a different tag is not ours.
 pub const FORMAT_TAG: &str = "lram-checkpoint";
-/// Current format version, written into every manifest.  Version 2 is
-/// the routing-gradient minor bump: the blob layout is unchanged, the
-/// optional routing-optimizer tensors (`wq_adam_*`) may appear in the
-/// index.  Readers accept [`MIN_READ_VERSION`]`..=FORMAT_VERSION` —
-/// version-1 checkpoints load fine (the routing slot simply starts
-/// fresh) — and refuse anything newer loudly: version-1-era readers
-/// equality-check the field, so they refuse version-2 checkpoints
-/// rather than silently dropping state they do not understand, and this
-/// reader extends the same courtesy to whatever version 3 brings (a
-/// "best effort" load of a future layout would serve garbage weights).
-pub const FORMAT_VERSION: i64 = 2;
+/// Current format version, written into every manifest.  Version 2 was
+/// the routing-gradient minor bump (optional `wq_adam_*` tensors in the
+/// index).  Version 3 adds the `i8` tensor dtype and the quantized
+/// value-table companion blobs (`values_q8` as `i8 [rows, m]` plus
+/// `values_q8_scale` as `f32 [rows]`) that the f32-q8 serving path maps
+/// zero-copy; the f64/f32 blob layout is unchanged.  Readers accept
+/// [`MIN_READ_VERSION`]`..=FORMAT_VERSION` — version-1/2 checkpoints
+/// load fine (paths that want the q8 blobs re-quantize from `values`
+/// when they are absent) — and refuse anything newer loudly: older
+/// readers equality- or range-check the field, so they refuse
+/// checkpoints whose dtypes they cannot parse rather than silently
+/// dropping state (a "best effort" load of a future layout would serve
+/// garbage weights).
+pub const FORMAT_VERSION: i64 = 3;
 /// Oldest manifest version this reader still accepts.
 pub const MIN_READ_VERSION: i64 = 1;
 /// Manifest file name inside a checkpoint directory.
@@ -76,6 +79,9 @@ pub const EAGER_VERIFY_BYTES: u64 = 4 << 20;
 pub enum TensorDtype {
     F32,
     U32,
+    /// Signed 8-bit codes (format version 3+): the quantized value-table
+    /// blob.  Single-byte, so the on-disk layout is endian-free.
+    I8,
 }
 
 impl TensorDtype {
@@ -83,6 +89,7 @@ impl TensorDtype {
         match self {
             TensorDtype::F32 => "f32",
             TensorDtype::U32 => "u32",
+            TensorDtype::I8 => "i8",
         }
     }
 
@@ -90,7 +97,16 @@ impl TensorDtype {
         match s {
             "f32" => Ok(TensorDtype::F32),
             "u32" => Ok(TensorDtype::U32),
+            "i8" => Ok(TensorDtype::I8),
             other => bail!("unsupported tensor dtype '{other}'"),
+        }
+    }
+
+    /// Bytes per element on disk.
+    pub fn byte_width(self) -> u64 {
+        match self {
+            TensorDtype::F32 | TensorDtype::U32 => 4,
+            TensorDtype::I8 => 1,
         }
     }
 }
@@ -119,10 +135,10 @@ impl TensorSpec {
             .ok_or_else(|| anyhow!("tensor {}: shape {:?} overflows u64", self.name, self.shape))
     }
 
-    /// Blob size in bytes (all supported dtypes are 4 bytes wide).
+    /// Blob size in bytes (per-dtype element width).
     pub fn byte_len(&self) -> Result<u64> {
         self.element_count()?
-            .checked_mul(4)
+            .checked_mul(self.dtype.byte_width())
             .ok_or_else(|| anyhow!("tensor {}: byte size overflows u64", self.name))
     }
 
@@ -322,6 +338,14 @@ fn u32s_as_le_bytes(data: &[u32]) -> Cow<'_, [u8]> {
     } else {
         Cow::Owned(data.iter().flat_map(|v| v.to_le_bytes()).collect())
     }
+}
+
+/// View i8 codes as bytes (zero-copy on every host: single-byte
+/// elements have no endianness).
+fn i8s_as_bytes(data: &[i8]) -> &[u8] {
+    // SAFETY: i8 and u8 have identical size/alignment and every bit
+    // pattern is valid for both; the slice already exists in memory.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) }
 }
 
 fn checksum_hex(bytes: &[u8]) -> String {
@@ -628,6 +652,11 @@ impl CheckpointWriter {
 
     pub fn write_u32(&mut self, name: &str, shape: &[u64], data: &[u32]) -> Result<()> {
         self.write_blob(name, shape, TensorDtype::U32, &u32s_as_le_bytes(data))
+    }
+
+    /// Write an i8 tensor (format version 3+: quantized value codes).
+    pub fn write_i8(&mut self, name: &str, shape: &[u64], data: &[i8]) -> Result<()> {
+        self.write_blob(name, shape, TensorDtype::I8, i8s_as_bytes(data))
     }
 
     /// Seal the checkpoint: derive the content id, write the manifest
@@ -947,6 +976,27 @@ impl Checkpoint {
         }
     }
 
+    /// Read a (small) i8 tensor fully into memory, verifying its
+    /// checksum regardless of size.
+    pub fn read_i8(&self, name: &str) -> Result<Vec<i8>> {
+        let spec = self.typed_spec(name, TensorDtype::I8)?;
+        let bytes = self.read_verified(spec)?;
+        Ok(bytes.iter().map(|&b| b as i8).collect())
+    }
+
+    /// Map an i8 tensor copy-on-write (quantized value codes) — i8 is
+    /// single-byte, so unlike [`Self::map_table`] this is zero-copy on
+    /// every host, big-endian included.  Length-checked at open like all
+    /// blobs; checksum verification is deferred exactly as for the f32
+    /// value table ([`EAGER_VERIFY_BYTES`]).
+    pub fn map_i8(&self, name: &str) -> Result<MmapI8> {
+        let spec = self.typed_spec(name, TensorDtype::I8)?;
+        let len = spec.element_count()?;
+        ensure!(len <= usize::MAX as u64, "tensor '{name}' too large for this host");
+        MmapI8::open_cow(&self.blob_path(spec), len as usize)
+            .with_context(|| format!("mapping tensor '{name}'"))
+    }
+
     /// Map a 1-D u32 tensor copy-on-write (optimizer step counts).
     pub fn map_u32(&self, name: &str) -> Result<MmapU32> {
         let spec = self.typed_spec(name, TensorDtype::U32)?;
@@ -1123,7 +1173,7 @@ mod tests {
     #[test]
     fn previous_format_version_still_opens() {
         // PR-3-era checkpoints carry version 1 with the same blob
-        // layout; the version-2 (routing) reader must keep loading them
+        // layout; the version-3 (q8) reader must keep loading them
         let dir = tmp_dir("back_compat");
         write_demo(&dir);
         patch_version(&dir, MIN_READ_VERSION);
@@ -1135,8 +1185,8 @@ mod tests {
 
     #[test]
     fn next_format_version_is_refused_with_upgrade_guidance() {
-        // the other skew direction: this reader meeting a version-3
-        // manifest must refuse and tell the operator what to do
+        // the other skew direction: this reader meeting a manifest from
+        // the future must refuse and tell the operator what to do
         let dir = tmp_dir("fwd_skew");
         write_demo(&dir);
         patch_version(&dir, FORMAT_VERSION + 1);
@@ -1445,6 +1495,37 @@ mod tests {
     // wiring is exercised by `rust/tests/chaos.rs`, which owns its whole
     // process — arming those sites here would race the other #[test]
     // threads of this crate through the same global registry.
+
+    #[test]
+    fn i8_tensors_roundtrip_and_map_zero_copy() {
+        // version-3 addition: quantized codes save as i8 [rows, dim]
+        // next to their f32 per-row scales and come back bit-identical,
+        // both via the verified read and via the zero-copy map
+        let dir = tmp_dir("i8");
+        let codes: Vec<i8> = (0..96).map(|i| (i * 7 % 255 - 127) as i8).collect();
+        let scales: Vec<f32> = (0..12).map(|r| 0.25 + r as f32).collect();
+        let saved = {
+            let mut w = CheckpointWriter::new(&dir).unwrap();
+            w.write_f32("values", &[12, 8], &vec![0.5; 96]).unwrap();
+            w.write_i8("values_q8", &[12, 8], &codes).unwrap();
+            w.write_f32("values_q8_scale", &[12], &scales).unwrap();
+            w.finish(7, "0123456789abcdef", demo_model()).unwrap()
+        };
+        let ck = Checkpoint::open(&dir).unwrap();
+        assert_eq!(ck.manifest, saved);
+        let spec = ck.manifest.tensor("values_q8").unwrap();
+        assert_eq!(spec.dtype, TensorDtype::I8);
+        assert_eq!(spec.byte_len().unwrap(), 96, "i8 is one byte per element");
+        assert_eq!(ck.read_i8("values_q8").unwrap(), codes);
+        let map = ck.map_i8("values_q8").unwrap();
+        assert_eq!(map.as_slice(), &codes[..]);
+        assert_eq!(ck.read_f32("values_q8_scale").unwrap(), scales);
+        // dtype confusion is refused, not coerced
+        assert!(ck.read_f32("values_q8").is_err());
+        assert!(ck.read_i8("values").is_err());
+        ck.verify().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     #[test]
     fn checkpoint_id_tracks_content() {

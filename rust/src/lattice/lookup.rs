@@ -8,9 +8,10 @@
 //! allocation-free through [`LatticeLookup::lookup_into`].
 
 use super::e8::{reduce, vec8, Vec8};
-use super::kernel::{kernel_f, top_k_desc};
+use super::kernel::kernel_f;
 use super::neighbors::{neighbor_table, N_NEIGHBORS};
 use super::torus::TorusK;
+use crate::util::topk::desc_nan_last;
 
 /// One selected memory slot: index, kernel weight, squared distance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -32,13 +33,20 @@ pub struct LookupResult {
 pub struct LatticeLookup {
     pub torus: TorusK,
     pub k_top: usize,
-    // scratch: (weight, (d2, candidate index)) pairs
-    scratch: Vec<(f64, (f64, usize))>,
+    // scratch: (weight, torus row, candidate index) triples plus the
+    // per-candidate d2 row (kept for `Hit::d2`)
+    scratch: Vec<(f64, u64, usize)>,
+    d2s: [f64; N_NEIGHBORS],
 }
 
 impl LatticeLookup {
     pub fn new(torus: TorusK, k_top: usize) -> Self {
-        LatticeLookup { torus, k_top, scratch: Vec::with_capacity(N_NEIGHBORS) }
+        LatticeLookup {
+            torus,
+            k_top,
+            scratch: Vec::with_capacity(N_NEIGHBORS),
+            d2s: [0.0; N_NEIGHBORS],
+        }
     }
 
     /// Lookup a single query point (allocates the result).
@@ -71,13 +79,21 @@ impl LatticeLookup {
             if d2 < 8.0 {
                 let w = kernel_f(d2);
                 out.total_weight += w;
-                self.scratch.push((w, (d2, ci)));
+                self.d2s[ci] = d2;
+                let u = red.unmap(&nbr[ci]);
+                self.scratch.push((w, self.torus.index(&u), ci));
             }
         }
-        let top = top_k_desc(&mut self.scratch, self.k_top);
-        for &(w, (d2, ci)) in top {
-            let u = red.unmap(&nbr[ci]);
-            out.hits.push(Hit { index: self.torus.index(&u), weight: w, d2 });
+        // canonical selection — weight descending, torus row ascending,
+        // candidate ascending — the exact total order the batch engine's
+        // `select_canonical` applies, so engine and oracle stay
+        // bit-identical even on exact weight ties.  Sorting all (<= 121)
+        // in-support candidates is fine for a reference oracle.
+        self.scratch.sort_unstable_by(|a, b| {
+            desc_nan_last(a.0, b.0).then_with(|| a.1.cmp(&b.1)).then_with(|| a.2.cmp(&b.2))
+        });
+        for &(w, row, ci) in self.scratch.iter().take(self.k_top) {
+            out.hits.push(Hit { index: row, weight: w, d2: self.d2s[ci] });
         }
     }
 
@@ -185,6 +201,36 @@ mod tests {
         assert!(lo >= 45, "min support {lo} below paper's 45");
         assert!(hi <= 121, "max support {hi} above paper's 121");
         assert!(hi >= 90, "max support {hi} suspiciously small");
+    }
+
+    #[test]
+    fn equal_weight_ties_order_by_ascending_row() {
+        // (1,1,0,...,0) sits at d2 = 2 from both the origin and
+        // (2,2,0,...,0): the oracle must order such exact ties by
+        // ascending torus row, matching the batch engine's canonical rule
+        let mut lk = LatticeLookup::new(torus(), 32);
+        let probes: [Vec8; 3] = [
+            [1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            [1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0],
+            [0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5],
+        ];
+        let mut ties = 0usize;
+        for q in &probes {
+            let r = lk.lookup(q);
+            for w in r.hits.windows(2) {
+                assert!(w[0].weight >= w[1].weight);
+                if w[0].weight == w[1].weight {
+                    ties += 1;
+                    assert!(
+                        w[1].index >= w[0].index,
+                        "tied weights must order by ascending row ({} then {})",
+                        w[0].index,
+                        w[1].index
+                    );
+                }
+            }
+        }
+        assert!(ties > 0, "symmetric probes must produce exact ties");
     }
 
     #[test]

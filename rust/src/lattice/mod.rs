@@ -24,6 +24,7 @@ pub mod exotic;
 pub mod kernel;
 pub mod lookup;
 pub mod neighbors;
+pub mod simd;
 pub mod support;
 pub mod torus;
 pub mod zn;

@@ -1,0 +1,463 @@
+//! f32 SIMD scoring kernels for the serving fast path.
+//!
+//! The f64 engine in [`crate::lattice::batch`] is the training oracle;
+//! serving does not need f64: weights are published as f32 anyway, and
+//! the kernel `f(d2) = max(0, 1 - d2/8)^4` is smooth enough that f32
+//! scoring stays within ~1e-6 of the oracle (see
+//! `rust/tests/numeric_differential.rs` for the enforced bounds).
+//! Halving the element width doubles the useful SIMD lane count, and the
+//! hand-written kernels below score the full 232-candidate row in 29
+//! AVX2 blocks (or 58 NEON blocks) without the bounds checks and strided
+//! loads the autovectorizer trips over.
+//!
+//! Dispatch is resolved once per process at runtime:
+//!
+//! * x86_64 with AVX2+FMA → [`score_row_avx2`] (aligned 8-lane blocks),
+//! * aarch64 → NEON (baseline feature, always available),
+//! * anything else, or `LRAM_SIMD=off` in the environment → the scalar
+//!   f32 fallback, which computes the same quantities lane by lane.
+//!
+//! The 232-wide score row lives in [`AlignedScores`] (32-byte aligned;
+//! `232 * 4 = 928` bytes is a multiple of 32, so the per-lane rows of
+//! the SoA candidate table stay aligned too).  `axpy_f32` / `axpy_q8`
+//! are the matching gather primitives: fused weighted row accumulation
+//! for f32 and int8-quantized value tables.
+
+use std::sync::OnceLock;
+
+use super::neighbors::{neighbor_table, N_NEIGHBORS};
+
+/// The 232-wide kernel-weight row, 32-byte aligned so AVX2 can use
+/// aligned loads/stores on every 8-lane block.
+#[repr(C, align(32))]
+pub struct AlignedScores(pub [f32; N_NEIGHBORS]);
+
+impl AlignedScores {
+    pub fn new() -> Self {
+        AlignedScores([0.0; N_NEIGHBORS])
+    }
+}
+
+impl Default for AlignedScores {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// f32 structure-of-arrays candidate table: `soa[lane][candidate]`,
+/// mirroring [`crate::lattice::neighbors::neighbor_table_soa`] at half
+/// width.  Each lane row is 928 bytes (29 x 32), so with the struct
+/// 32-byte aligned every row starts on a 32-byte boundary.
+#[repr(C, align(32))]
+struct Soa32([[f32; N_NEIGHBORS]; 8]);
+
+fn soa_f32() -> &'static Soa32 {
+    static SOA: OnceLock<Box<Soa32>> = OnceLock::new();
+    SOA.get_or_init(|| {
+        let nbr = neighbor_table();
+        let mut soa = Box::new(Soa32([[0.0; N_NEIGHBORS]; 8]));
+        for (ci, c) in nbr.iter().enumerate() {
+            for (lane, &v) in c.iter().enumerate() {
+                soa.0[lane][ci] = v as f32;
+            }
+        }
+        soa
+    })
+}
+
+/// Which kernel implementation serving resolved to (one decision per
+/// process; `LRAM_SIMD=off` forces `Scalar` for differential testing).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Dispatch {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Dispatch {
+    /// Human-readable kernel name (bench reports and serve logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar-f32",
+            #[cfg(target_arch = "x86_64")]
+            Dispatch::Avx2 => "avx2+fma",
+            #[cfg(target_arch = "aarch64")]
+            Dispatch::Neon => "neon",
+        }
+    }
+}
+
+/// The process-wide dispatch decision (runtime feature detection, made
+/// once and cached; set `LRAM_SIMD=off` before first use to force the
+/// scalar fallback).
+pub fn dispatch() -> Dispatch {
+    static DISPATCH: OnceLock<Dispatch> = OnceLock::new();
+    *DISPATCH.get_or_init(|| {
+        if std::env::var("LRAM_SIMD").as_deref() == Ok("off") {
+            return Dispatch::Scalar;
+        }
+        detect_arch()
+    })
+}
+
+/// Name of the active kernel (convenience for logs and benches).
+pub fn active_kernel_name() -> &'static str {
+    dispatch().name()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Dispatch {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        Dispatch::Avx2
+    } else {
+        Dispatch::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Dispatch {
+    // NEON is a baseline feature of the aarch64 ABI.
+    Dispatch::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Dispatch {
+    Dispatch::Scalar
+}
+
+/// Score all 232 candidates against the reduced query `z` (f32 copy of
+/// `Reduction::z`): writes `f(d2_ci)` per candidate into `out` (zero
+/// outside the support) and returns the total weight as f64 (sum of the
+/// f32 per-candidate weights).
+pub fn score_row(z: &[f32; 8], out: &mut AlignedScores) -> f64 {
+    match dispatch() {
+        Dispatch::Scalar => score_row_scalar(z, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 variant is only constructed after runtime
+        // detection confirmed both avx2 and fma on this CPU.
+        Dispatch::Avx2 => unsafe { score_row_avx2(z, out) },
+        #[cfg(target_arch = "aarch64")]
+        Dispatch::Neon => score_row_neon(z, out),
+    }
+}
+
+/// Scalar f32 reference for [`score_row`]: same lane-major accumulation
+/// and branchless kernel, one candidate at a time.  Always available —
+/// this is both the non-SIMD fallback and the `LRAM_SIMD=off` kernel
+/// the differential suite pins against.
+fn score_row_scalar(z: &[f32; 8], out: &mut AlignedScores) -> f64 {
+    let soa = &soa_f32().0;
+    for (d, &c) in out.0.iter_mut().zip(&soa[0]) {
+        let t = z[0] - c;
+        *d = t * t;
+    }
+    for (&zl, row) in z.iter().zip(soa.iter()).skip(1) {
+        for (d, &c) in out.0.iter_mut().zip(row) {
+            let t = zl - c;
+            *d += t * t;
+        }
+    }
+    let mut total = 0.0f64;
+    for w in out.0.iter_mut() {
+        let t = (1.0f32 - *w * 0.125).max(0.0);
+        let t2 = t * t;
+        let w4 = t2 * t2;
+        *w = w4;
+        total += w4 as f64;
+    }
+    total
+}
+
+/// AVX2+FMA kernel: 29 blocks of 8 candidates, aligned loads from the
+/// f32 SoA table, fused multiply-adds for the distance accumulation and
+/// the branchless `max(0, 1 - d2/8)^4` evaluation.
+///
+/// # Safety
+///
+/// The caller must have verified at runtime that the CPU supports both
+/// `avx2` and `fma` (see [`dispatch`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn score_row_avx2(z: &[f32; 8], out: &mut AlignedScores) -> f64 {
+    use std::arch::x86_64::*;
+    let soa = &soa_f32().0;
+    let zs = [
+        _mm256_set1_ps(z[0]),
+        _mm256_set1_ps(z[1]),
+        _mm256_set1_ps(z[2]),
+        _mm256_set1_ps(z[3]),
+        _mm256_set1_ps(z[4]),
+        _mm256_set1_ps(z[5]),
+        _mm256_set1_ps(z[6]),
+        _mm256_set1_ps(z[7]),
+    ];
+    let one = _mm256_set1_ps(1.0);
+    let eighth = _mm256_set1_ps(0.125);
+    let zero = _mm256_setzero_ps();
+    let mut total = _mm256_setzero_ps();
+    for blk in 0..N_NEIGHBORS / 8 {
+        let off = blk * 8;
+        let c0 = _mm256_load_ps(soa[0].as_ptr().add(off));
+        let t0 = _mm256_sub_ps(zs[0], c0);
+        let mut d2 = _mm256_mul_ps(t0, t0);
+        for (zv, row) in zs.iter().zip(soa.iter()).skip(1) {
+            let c = _mm256_load_ps(row.as_ptr().add(off));
+            let t = _mm256_sub_ps(*zv, c);
+            d2 = _mm256_fmadd_ps(t, t, d2);
+        }
+        // t = max(0, 1 - d2/8); w = t^4 = (t^2)^2
+        let t = _mm256_max_ps(_mm256_fnmadd_ps(d2, eighth, one), zero);
+        let t2 = _mm256_mul_ps(t, t);
+        let w = _mm256_mul_ps(t2, t2);
+        _mm256_store_ps(out.0.as_mut_ptr().add(off), w);
+        total = _mm256_add_ps(total, w);
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), total);
+    lanes.iter().map(|&v| v as f64).sum()
+}
+
+/// NEON kernel: 58 blocks of 4 candidates.  NEON is baseline on
+/// aarch64, so this is a plain safe function with one unsafe region for
+/// the intrinsics.
+#[cfg(target_arch = "aarch64")]
+fn score_row_neon(z: &[f32; 8], out: &mut AlignedScores) -> f64 {
+    use std::arch::aarch64::*;
+    let soa = &soa_f32().0;
+    // SAFETY: NEON is a mandatory aarch64 target feature; all pointer
+    // arithmetic stays inside the fixed-size SoA rows and the 232-wide
+    // output row (58 * 4 == 232 exactly).
+    unsafe {
+        let one = vdupq_n_f32(1.0);
+        let eighth = vdupq_n_f32(0.125);
+        let zero = vdupq_n_f32(0.0);
+        let mut total = 0.0f64;
+        for blk in 0..N_NEIGHBORS / 4 {
+            let off = blk * 4;
+            let c0 = vld1q_f32(soa[0].as_ptr().add(off));
+            let t0 = vsubq_f32(vdupq_n_f32(z[0]), c0);
+            let mut d2 = vmulq_f32(t0, t0);
+            for (&zl, row) in z.iter().zip(soa.iter()).skip(1) {
+                let c = vld1q_f32(row.as_ptr().add(off));
+                let t = vsubq_f32(vdupq_n_f32(zl), c);
+                d2 = vfmaq_f32(d2, t, t);
+            }
+            let t = vmaxq_f32(vfmsq_f32(one, d2, eighth), zero);
+            let t2 = vmulq_f32(t, t);
+            // NEON vmaxq propagates NaN (unlike x86 maxps, whose NaN
+            // rule already yields 0 above): gate on d2 < 8 explicitly so
+            // NaN queries score 0, matching the f64 oracle
+            let support = vcltq_f32(d2, vdupq_n_f32(8.0));
+            let w = vbslq_f32(support, vmulq_f32(t2, t2), zero);
+            vst1q_f32(out.0.as_mut_ptr().add(off), w);
+            total += vaddvq_f32(w) as f64;
+        }
+        total
+    }
+}
+
+/// `acc += w * row`, element-wise over `min(row.len(), acc.len())`
+/// elements (callers pass equal lengths; the min is belt-and-braces
+/// against slicing bugs, not an API feature).
+pub fn axpy_f32(w: f32, row: &[f32], acc: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if dispatch() == Dispatch::Avx2 {
+        // SAFETY: Avx2 dispatch implies runtime-verified avx2+fma.
+        unsafe { axpy_f32_avx2(w, row, acc) };
+        return;
+    }
+    axpy_f32_scalar(w, row, acc);
+}
+
+fn axpy_f32_scalar(w: f32, row: &[f32], acc: &mut [f32]) {
+    for (a, &v) in acc.iter_mut().zip(row) {
+        *a += w * v;
+    }
+}
+
+/// # Safety
+///
+/// Requires runtime-verified `avx2` and `fma` support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_f32_avx2(w: f32, row: &[f32], acc: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = row.len().min(acc.len());
+    let wv = _mm256_set1_ps(w);
+    let mut i = 0;
+    while i + 8 <= n {
+        let r = _mm256_loadu_ps(row.as_ptr().add(i));
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_fmadd_ps(wv, r, a));
+        i += 8;
+    }
+    axpy_f32_scalar(w, &row[i..n], &mut acc[i..n]);
+}
+
+/// `acc += w_times_scale * dequant(qrow)`: the int8 gather primitive.
+/// The caller folds the per-row quantisation scale into the weight, so
+/// dequantisation is a single fused multiply-add per element.
+pub fn axpy_q8(w_times_scale: f32, qrow: &[i8], acc: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if dispatch() == Dispatch::Avx2 {
+        // SAFETY: Avx2 dispatch implies runtime-verified avx2+fma.
+        unsafe { axpy_q8_avx2(w_times_scale, qrow, acc) };
+        return;
+    }
+    axpy_q8_scalar(w_times_scale, qrow, acc);
+}
+
+fn axpy_q8_scalar(ws: f32, qrow: &[i8], acc: &mut [f32]) {
+    for (a, &q) in acc.iter_mut().zip(qrow) {
+        *a += ws * q as f32;
+    }
+}
+
+/// # Safety
+///
+/// Requires runtime-verified `avx2` and `fma` support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_q8_avx2(ws: f32, qrow: &[i8], acc: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = qrow.len().min(acc.len());
+    let wv = _mm256_set1_ps(ws);
+    let mut i = 0;
+    while i + 8 <= n {
+        // widen 8 x i8 -> 8 x i32 -> 8 x f32, then one fused axpy
+        let q = _mm_loadl_epi64(qrow.as_ptr().add(i) as *const __m128i);
+        let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q));
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_fmadd_ps(wv, qf, a));
+        i += 8;
+    }
+    axpy_q8_scalar(ws, &qrow[i..n], &mut acc[i..n]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::e8::reduce;
+    use crate::lattice::kernel::kernel_f;
+    use crate::lattice::neighbors::neighbor_table_f64;
+    use crate::util::check::forall;
+
+    fn f32_z(q: &[f64; 8]) -> ([f32; 8], [f64; 8]) {
+        let red = reduce(q);
+        let mut zf = [0.0f32; 8];
+        for (o, &v) in zf.iter_mut().zip(red.z.iter()) {
+            *o = v as f32;
+        }
+        (zf, red.z)
+    }
+
+    #[test]
+    fn active_dispatch_matches_f64_reference_within_tolerance() {
+        let nbrf = neighbor_table_f64();
+        forall(60, |rng| {
+            let mut q = [0.0f64; 8];
+            for v in q.iter_mut() {
+                *v = (rng.f64() - 0.5) * 20.0;
+            }
+            let (zf, z64) = f32_z(&q);
+            let mut out = AlignedScores::new();
+            let total = score_row(&zf, &mut out);
+            let mut want_total = 0.0f64;
+            for (ci, c) in nbrf.iter().enumerate() {
+                let mut d2 = 0.0f64;
+                for (zl, cl) in z64.iter().zip(c) {
+                    let t = zl - cl;
+                    d2 += t * t;
+                }
+                let want = kernel_f(d2);
+                want_total += want;
+                let got = out.0[ci] as f64;
+                assert!(
+                    (got - want).abs() < 2e-5,
+                    "candidate {ci}: got {got}, want {want}"
+                );
+            }
+            assert!(
+                (total - want_total).abs() < 1e-3,
+                "total: got {total}, want {want_total}"
+            );
+        });
+    }
+
+    #[test]
+    fn active_dispatch_stays_close_to_scalar_f32() {
+        forall(60, |rng| {
+            let mut q = [0.0f64; 8];
+            for v in q.iter_mut() {
+                *v = (rng.f64() - 0.5) * 12.0;
+            }
+            let (zf, _) = f32_z(&q);
+            let mut active = AlignedScores::new();
+            let mut scalar = AlignedScores::new();
+            let ta = score_row(&zf, &mut active);
+            let ts = score_row_scalar(&zf, &mut scalar);
+            for (ci, (&a, &s)) in active.0.iter().zip(scalar.0.iter()).enumerate() {
+                assert!((a - s).abs() < 1e-5, "candidate {ci}: {a} vs {s}");
+            }
+            assert!((ta - ts).abs() < 1e-4, "totals {ta} vs {ts}");
+        });
+    }
+
+    #[test]
+    fn lattice_point_scores_exactly_one_at_the_origin() {
+        // z = 0 (a lattice point): d2 = 0 at the origin candidate, so
+        // its weight is exactly 1.0 in every dispatch (fma of zeros is
+        // exact), and the total is at least 1.
+        let origin_ci = neighbor_table()
+            .iter()
+            .position(|c| c.iter().all(|&v| v == 0))
+            .unwrap();
+        let mut out = AlignedScores::new();
+        let total = score_row(&[0.0; 8], &mut out);
+        assert_eq!(out.0[origin_ci], 1.0);
+        assert!(total >= 1.0);
+        let mut scalar = AlignedScores::new();
+        score_row_scalar(&[0.0; 8], &mut scalar);
+        assert_eq!(scalar.0[origin_ci], 1.0);
+    }
+
+    #[test]
+    fn axpy_f32_matches_scalar_reference() {
+        forall(40, |rng| {
+            let n = 1 + rng.below(70) as usize;
+            let w = (rng.f64() - 0.5) as f32;
+            let row: Vec<f32> = (0..n).map(|_| (rng.f64() - 0.5) as f32 * 4.0).collect();
+            let mut acc: Vec<f32> = (0..n).map(|_| (rng.f64() - 0.5) as f32).collect();
+            let mut want = acc.clone();
+            axpy_f32_scalar(w, &row, &mut want);
+            axpy_f32(w, &row, &mut acc);
+            for (i, (&a, &b)) in acc.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-5, "elem {i}: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn axpy_q8_matches_scalar_reference() {
+        forall(40, |rng| {
+            let n = 1 + rng.below(70) as usize;
+            let ws = (rng.f64() - 0.5) as f32 * 0.1;
+            let qrow: Vec<i8> = (0..n).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            let mut acc: Vec<f32> = (0..n).map(|_| (rng.f64() - 0.5) as f32).collect();
+            let mut want = acc.clone();
+            axpy_q8_scalar(ws, &qrow, &mut want);
+            axpy_q8(ws, &qrow, &mut acc);
+            for (i, (&a, &b)) in acc.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-5, "elem {i}: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn dispatch_is_stable_and_named() {
+        assert_eq!(dispatch(), dispatch());
+        assert!(!active_kernel_name().is_empty());
+    }
+}

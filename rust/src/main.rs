@@ -26,6 +26,7 @@ use lram::pkm::cost;
 use lram::runtime::Runtime;
 use lram::server::{
     serve_until_signaled, ArtifactInit, Batcher, BatcherConfig, EngineConfig, HttpConfig,
+    NumericPath,
 };
 use lram::util::cli::Args;
 use lram::util::timing::Table;
@@ -73,7 +74,12 @@ COMMANDS:
   serve      MLM fill-mask server with dynamic batching
              (--backend artifact | engine | auto; --checkpoint DIR serves
               trained engine weights; --random-init opts into untrained
-              seed weights; --http-workers N, --max-pending N and
+              seed weights; --numeric-path f64|f32|f32-q8 picks the
+              memory-stage implementation — default f32, the SIMD fast
+              path; f64 is the bit-exact training-identical reference,
+              f32-q8 gathers from int8-quantized value rows (see
+              docs/performance.md; LRAM_SIMD=off forces scalar f32);
+              --http-workers N, --max-pending N and
               --keep-alive-timeout SECS tune the keep-alive worker-pool
               front door; --request-timeout-ms N expires queued requests
               with 504 before they reach the backend; SIGTERM/SIGINT
@@ -358,10 +364,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str("addr", "127.0.0.1:8077");
     let backend = args.str("backend", "auto");
     let random_init = args.bool("random-init", false)?;
-    let (engine_ckpt, artifact_ckpt) = match args.flags.get("checkpoint") {
+    // serving numeric path: f32 SIMD by default; f64 stays available as the
+    // bit-exact training-identical reference (see docs/performance.md)
+    let numeric_path = NumericPath::parse(&args.str("numeric-path", "f32"))?;
+    let (mut engine_ckpt, artifact_ckpt) = match args.flags.get("checkpoint") {
         Some(ckpt) => lram::server::resolve_checkpoint_flag(ckpt, args.usize("threads", 1)?)?,
         None => (None, None),
     };
+    if let Some(ck) = engine_ckpt.as_mut() {
+        ck.numeric_path = numeric_path;
+    }
     // the tokenizer must match the training pipeline: rebuild it from the
     // same corpus spec (a checkpoint's recorded fingerprint is validated
     // against this at backend construction)
@@ -394,7 +406,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             artifact_name: format!("infer_logits_{}", cfg.variant),
             checkpoint: artifact_ckpt,
         },
-        EngineConfig { threads: args.usize("threads", 1)?, ..EngineConfig::default() },
+        EngineConfig {
+            threads: args.usize("threads", 1)?,
+            numeric_path,
+            ..EngineConfig::default()
+        },
         engine_ckpt,
         random_init,
         bpe.clone(),

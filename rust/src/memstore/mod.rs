@@ -16,4 +16,4 @@ mod table;
 pub use dense_adam::DenseAdam;
 pub use sparse_adam::SparseAdam;
 pub use stats::AccessStats;
-pub use table::ValueTable;
+pub use table::{QuantizedValueTable, ValueTable};

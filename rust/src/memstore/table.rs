@@ -4,7 +4,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context as _, Result};
 
-use crate::util::mmap::MmapF32;
+use crate::util::mmap::{MmapF32, MmapI8};
 use crate::util::rng::Rng;
 
 /// A flat `M x m` table of value vectors backed by a lazily-populated
@@ -207,6 +207,132 @@ impl ValueTable {
     }
 }
 
+/// Quantize one f32 row to i8 codes; returns the per-row scale.
+///
+/// `scale = max_abs / 127`, `q = clamp(round(v / scale), -127, 127)`,
+/// so `v ≈ q * scale` with per-element error at most `scale / 2`.  An
+/// all-zero (or non-finite) row gets scale 0 and all-zero codes — the
+/// dequantized row is exactly zero, never NaN.
+fn quantize_row(row: &[f32], qrow: &mut [i8]) -> f32 {
+    let max_abs = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        qrow.fill(0);
+        return 0.0;
+    }
+    let scale = max_abs / 127.0;
+    for (q, &v) in qrow.iter_mut().zip(row) {
+        // NaN elements cast to 0 (saturating float->int casts)
+        *q = (v / scale).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// Int8-quantized view of a value table: each row stores `m` i8 codes
+/// plus one f32 scale, quartering the memory traffic of a gathered row.
+/// Rows dequantize *inside* the fused gather — the per-row scale folds
+/// into the kernel weight, so reconstruction is one fused multiply-add
+/// per element (`crate::lattice::simd::axpy_q8`).
+///
+/// Serving-only: training keeps the f32 [`ValueTable`] (quantized rows
+/// cannot absorb sparse-Adam updates).  Built either by quantizing a
+/// live table ([`QuantizedValueTable::from_table`]) or zero-copy from
+/// the `values_q8` / `values_q8_scale` checkpoint blobs
+/// ([`QuantizedValueTable::from_parts`], see `docs/checkpoint-format.md`).
+pub struct QuantizedValueTable {
+    map: MmapI8,
+    scales: Vec<f32>,
+    rows: u64,
+    dim: usize,
+}
+
+impl QuantizedValueTable {
+    /// Quantize every row of `table` (anonymous backing memory).
+    pub fn from_table(table: &ValueTable) -> Result<Self> {
+        let rows = table.rows();
+        let dim = table.dim();
+        let len = (rows as usize).checked_mul(dim).ok_or_else(|| {
+            anyhow::anyhow!("quantized table size overflow: {rows} x {dim}")
+        })?;
+        let mut map = MmapI8::anon(len)?;
+        let mut scales = vec![0.0f32; rows as usize];
+        let codes = map.as_mut_slice();
+        for (r, scale) in scales.iter_mut().enumerate() {
+            let row = table.row(r as u64);
+            *scale = quantize_row(row, &mut codes[r * dim..(r + 1) * dim]);
+        }
+        Ok(QuantizedValueTable { map, scales, rows, dim })
+    }
+
+    /// Assemble from pre-existing storage (the checkpoint restore path:
+    /// `map` is typically a copy-on-write view of the `values_q8` blob).
+    pub fn from_parts(map: MmapI8, scales: Vec<f32>, rows: u64, dim: usize) -> Result<Self> {
+        let len = (rows as usize).checked_mul(dim).ok_or_else(|| {
+            anyhow::anyhow!("quantized table size overflow: {rows} x {dim}")
+        })?;
+        if map.len() != len {
+            bail!("quantized table codes hold {} bytes, {rows} x {dim} needs {len}", map.len());
+        }
+        if scales.len() != rows as usize {
+            bail!("quantized table has {} scales for {rows} rows", scales.len());
+        }
+        Ok(QuantizedValueTable { map, scales, rows, dim })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The i8 codes of row `idx`.
+    #[inline]
+    pub fn row(&self, idx: u64) -> &[i8] {
+        debug_assert!(idx < self.rows, "row {idx} out of range ({})", self.rows);
+        let start = idx as usize * self.dim;
+        &self.map.as_slice()[start..start + self.dim]
+    }
+
+    /// The dequantisation scale of row `idx`.
+    #[inline]
+    pub fn scale(&self, idx: u64) -> f32 {
+        self.scales[idx as usize]
+    }
+
+    /// The flat `rows * dim` code storage (checkpoint serialisation).
+    pub fn data(&self) -> &[i8] {
+        self.map.as_slice()
+    }
+
+    /// The per-row scales (checkpoint serialisation).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Weighted dequantizing gather, same contract as
+    /// [`ValueTable::gather_weighted`]:
+    /// `out = sum_i weights[i] * scale[indices[i]] * codes[indices[i]]`.
+    pub fn gather_weighted(&self, indices: &[u64], weights: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(indices.len(), weights.len());
+        debug_assert_eq!(out.len(), self.dim);
+        out.fill(0.0);
+        for (&idx, &w) in indices.iter().zip(weights) {
+            if w == 0.0 {
+                continue; // padded top-k entries carry no weight
+            }
+            crate::lattice::simd::axpy_q8(w * self.scale(idx), self.row(idx), out);
+        }
+    }
+
+    /// Physically-resident bytes of the code storage.
+    pub fn resident_bytes(&self) -> Result<usize> {
+        self.map.resident_bytes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,5 +432,73 @@ mod tests {
         let mut out = [0.0f32; 4];
         t.gather_rows(&[1, 1], &mut out);
         assert_eq!(out, [5.0, 6.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn quantized_rows_reconstruct_within_half_a_step() {
+        let mut t = ValueTable::zeros(64, 16).unwrap();
+        t.randomize(5, 0.02);
+        let q = QuantizedValueTable::from_table(&t).unwrap();
+        assert_eq!(q.rows(), 64);
+        assert_eq!(q.dim(), 16);
+        for r in 0..64u64 {
+            let scale = q.scale(r);
+            assert!(scale > 0.0, "randomized rows must quantize with a positive scale");
+            for (&code, &v) in q.row(r).iter().zip(t.row(r)) {
+                let deq = code as f32 * scale;
+                assert!(
+                    (deq - v).abs() <= scale * 0.5 + 1e-9,
+                    "row {r}: {v} reconstructed as {deq} (scale {scale})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_gather_matches_dequantized_reference() {
+        let mut t = ValueTable::zeros(32, 8).unwrap();
+        t.randomize(11, 0.5);
+        let q = QuantizedValueTable::from_table(&t).unwrap();
+        let indices = [3u64, 7, 0, 12, 31];
+        let weights = [0.5f32, 0.25, 0.0, 1.0, 0.125];
+        let mut got = [9.0f32; 8];
+        q.gather_weighted(&indices, &weights, &mut got);
+        let mut want = [0.0f32; 8];
+        for (&idx, &w) in indices.iter().zip(&weights) {
+            if w == 0.0 {
+                continue;
+            }
+            for (o, &code) in want.iter_mut().zip(q.row(idx)) {
+                *o += w * q.scale(idx) * code as f32;
+            }
+        }
+        for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-5, "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn degenerate_rows_quantize_to_exact_zero() {
+        let mut t = ValueTable::zeros(4, 4).unwrap();
+        t.row_mut(1).copy_from_slice(&[f32::NAN, f32::INFINITY, 1.0, -1.0]);
+        let q = QuantizedValueTable::from_table(&t).unwrap();
+        // all-zero row and non-finite row both dequantize to exact zeros
+        assert_eq!(q.scale(0), 0.0);
+        assert!(q.row(0).iter().all(|&c| c == 0));
+        assert_eq!(q.scale(1), 0.0);
+        assert!(q.row(1).iter().all(|&c| c == 0));
+        let mut out = [5.0f32; 4];
+        q.gather_weighted(&[0, 1], &[1.0, 1.0], &mut out);
+        assert_eq!(out, [0.0; 4]);
+    }
+
+    #[test]
+    fn from_parts_validates_shapes() {
+        let map = MmapI8::anon(12).unwrap();
+        assert!(QuantizedValueTable::from_parts(map, vec![0.0; 3], 3, 4).is_ok());
+        let map = MmapI8::anon(12).unwrap();
+        assert!(QuantizedValueTable::from_parts(map, vec![0.0; 2], 3, 4).is_err());
+        let map = MmapI8::anon(11).unwrap();
+        assert!(QuantizedValueTable::from_parts(map, vec![0.0; 3], 3, 4).is_err());
     }
 }

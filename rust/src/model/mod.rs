@@ -18,13 +18,49 @@
 
 use std::path::Path;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::checkpoint::{Checkpoint, CheckpointWriter, Manifest, ModelDesc};
 use crate::lattice::e8::vec8;
 use crate::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
-use crate::memstore::{AccessStats, DenseAdam, SparseAdam, ValueTable};
+use crate::memstore::{AccessStats, DenseAdam, QuantizedValueTable, SparseAdam, ValueTable};
 use crate::util::rng::Rng;
+
+/// Numeric implementation of the serving memory stage.
+///
+/// `F64` is the bit-exact reference path shared with training; `F32`
+/// runs the fused lookup+gather through the SIMD f32 kernels
+/// ([`crate::lattice::simd`]); `F32Q8` additionally gathers from
+/// int8-quantized value rows (per-row scale, dequantized inside the
+/// fused gather).  The f32/q8 paths are *serving-only* accelerations:
+/// training always runs `F64`, and selection stays a deterministic
+/// function of the query on every path (same canonical tie rule).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NumericPath {
+    #[default]
+    F64,
+    F32,
+    F32Q8,
+}
+
+impl NumericPath {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f64" => Ok(NumericPath::F64),
+            "f32" => Ok(NumericPath::F32),
+            "f32-q8" => Ok(NumericPath::F32Q8),
+            other => bail!("unknown numeric path '{other}' (expected f64, f32 or f32-q8)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            NumericPath::F64 => "f64",
+            NumericPath::F32 => "f32",
+            NumericPath::F32Q8 => "f32-q8",
+        }
+    }
+}
 
 /// Configuration of the pure-rust LRAM MLM.
 ///
@@ -54,6 +90,9 @@ pub struct EngineConfig {
     pub query_scale: f64,
     /// track per-slot access statistics (Table-5 serving observability)
     pub track_stats: bool,
+    /// numeric implementation of the memory stage (serving knob, not
+    /// model geometry — defaults to the bit-exact f64 reference)
+    pub numeric_path: NumericPath,
 }
 
 impl Default for EngineConfig {
@@ -70,6 +109,7 @@ impl Default for EngineConfig {
             seed: 0xE85E44E,
             query_scale: 4.0,
             track_stats: true,
+            numeric_path: NumericPath::F64,
         }
     }
 }
@@ -106,6 +146,7 @@ impl EngineConfig {
             seed: 0, // unused: weights come from the checkpoint
             query_scale: desc.query_scale,
             track_stats,
+            numeric_path: NumericPath::F64,
         }
     }
 }
@@ -126,6 +167,11 @@ pub mod tensor_names {
     pub const WQ_ADAM_M: &str = "wq_adam_m";
     pub const WQ_ADAM_V: &str = "wq_adam_v";
     pub const WQ_ADAM_T: &str = "wq_adam_t";
+    /// Quantized value table: `i8 [rows, m]` codes plus `f32 [rows]`
+    /// per-row scales; written since checkpoint format version 3 so the
+    /// f32-q8 serving path can map its table zero-copy.
+    pub const VALUES_Q8: &str = "values_q8";
+    pub const VALUES_Q8_SCALE: &str = "values_q8_scale";
 }
 
 /// The LRAM MLM: dense prefix → fused lattice lookup+gather → dense
@@ -147,6 +193,13 @@ pub struct LramMlm {
     pub w_out: Vec<f32>,
     pub engine: BatchLookupEngine,
     pub table: ValueTable,
+    /// which numeric implementation the memory stage runs (see
+    /// [`NumericPath`]); switch with [`Self::set_numeric_path`]
+    path: NumericPath,
+    /// int8 companion of `table`, present iff the path is `F32Q8`
+    /// (quantized on switch, or injected zero-copy from a checkpoint via
+    /// [`Self::set_quantized_table`])
+    qtable: Option<QuantizedValueTable>,
     // reusable scratch, allocated once at max-batch size; pub(crate) so
     // the trainer's backward pass can read the forward intermediates
     pub(crate) h: Vec<f32>,
@@ -211,7 +264,8 @@ impl LramMlm {
         table: ValueTable,
     ) -> Result<Self> {
         let max_positions = cfg.max_batch * cfg.seq_len;
-        Ok(LramMlm {
+        let path = cfg.numeric_path;
+        let mut model = LramMlm {
             vocab,
             embed,
             pos,
@@ -220,12 +274,48 @@ impl LramMlm {
             w_out,
             engine,
             table,
+            path: NumericPath::F64,
+            qtable: None,
             h: vec![0.0; max_positions * cfg.width],
             queries: vec![0.0; max_positions * cfg.heads * 8],
             lk: BatchOutput::default(),
             gathered: vec![0.0; max_positions * cfg.heads * cfg.m],
             cfg,
-        })
+        };
+        model.set_numeric_path(path)?;
+        Ok(model)
+    }
+
+    /// The numeric path the memory stage currently runs.
+    pub fn numeric_path(&self) -> NumericPath {
+        self.path
+    }
+
+    /// Switch the serving memory stage between the f64 reference and the
+    /// f32 / f32-q8 fast paths.  Switching to `F32Q8` quantizes the
+    /// value table once (int8 codes + per-row scales) unless a quantized
+    /// table was already injected ([`Self::set_quantized_table`]).
+    pub fn set_numeric_path(&mut self, path: NumericPath) -> Result<()> {
+        if path == NumericPath::F32Q8 && self.qtable.is_none() {
+            self.qtable = Some(QuantizedValueTable::from_table(&self.table)?);
+        }
+        self.path = path;
+        Ok(())
+    }
+
+    /// Inject a pre-built quantized value table (e.g. mapped zero-copy
+    /// from a version-3 checkpoint) instead of re-quantizing at load.
+    pub fn set_quantized_table(&mut self, q: QuantizedValueTable) -> Result<()> {
+        ensure!(
+            q.rows() == self.table.rows() && q.dim() == self.cfg.m,
+            "quantized table is {} x {}, value table is {} x {}",
+            q.rows(),
+            q.dim(),
+            self.table.rows(),
+            self.cfg.m
+        );
+        self.qtable = Some(q);
+        Ok(())
     }
 
     /// Load trained weights from an opened checkpoint.  The dense
@@ -311,6 +401,13 @@ impl LramMlm {
         w.write_f32(W_OUT, &[self.vocab as u64, wd], &self.w_out)?;
         let rows = self.table.rows();
         w.write_f32(VALUES, &[rows, m], self.table.data())?;
+        // always write the quantized companion (format version 3): the
+        // f32-q8 serving path maps it zero-copy instead of re-quantizing
+        // a multi-GB table at every load.  Quantize fresh from the live
+        // table — a cached self.qtable could predate training updates.
+        let q = QuantizedValueTable::from_table(&self.table)?;
+        w.write_i8(VALUES_Q8, &[rows, m], q.data())?;
+        w.write_f32(VALUES_Q8_SCALE, &[rows], q.scales())?;
         if let Some(opt) = opt {
             ensure!(
                 opt.first_moment().rows() == rows && opt.first_moment().dim() == self.cfg.m,
@@ -453,12 +550,31 @@ impl LramMlm {
                 }
             }
         } else {
-            self.engine.lookup_gather_ragged_into(
-                &self.queries[..n_queries * 8],
-                &self.table,
-                &mut self.lk,
-                &mut self.gathered,
-            );
+            match (self.path, self.qtable.as_ref()) {
+                (NumericPath::F64, _) => self.engine.lookup_gather_ragged_into(
+                    &self.queries[..n_queries * 8],
+                    &self.table,
+                    &mut self.lk,
+                    &mut self.gathered,
+                ),
+                (NumericPath::F32Q8, Some(q)) => self.engine.lookup_gather_ragged_q8_into(
+                    &self.queries[..n_queries * 8],
+                    q,
+                    &mut self.lk,
+                    &mut self.gathered,
+                ),
+                // F32, or F32Q8 with no quantized table (unreachable:
+                // set_numeric_path quantizes on switch — degrade to the
+                // plain f32 gather rather than panic)
+                (NumericPath::F32, _) | (NumericPath::F32Q8, None) => {
+                    self.engine.lookup_gather_ragged_f32_into(
+                        &self.queries[..n_queries * 8],
+                        &self.table,
+                        &mut self.lk,
+                        &mut self.gathered,
+                    )
+                }
+            }
             if let Some(stats) = stats.as_deref_mut() {
                 stats.record_batch_f32(&self.lk.indices, &self.lk.weights);
             }
@@ -584,6 +700,57 @@ mod tests {
         for (x, y) in la.iter().zip(&lb) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn f32_and_q8_paths_track_the_f64_forward() {
+        // the serving fast paths are tolerance-equal to the f64
+        // reference on real logits (bit-equality is only promised within
+        // a path, not across numeric paths)
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 11) % 60 + 2).collect();
+        let mut f64m = LramMlm::seeded(tiny_cfg(), 64).unwrap();
+        let base = f64m.forward(&tokens, false, None).unwrap();
+        for path in [NumericPath::F32, NumericPath::F32Q8] {
+            let mut m = LramMlm::seeded(tiny_cfg(), 64).unwrap();
+            m.set_numeric_path(path).unwrap();
+            assert_eq!(m.numeric_path(), path);
+            let got = m.forward(&tokens, false, None).unwrap();
+            assert_eq!(base.len(), got.len());
+            let worst = base
+                .iter()
+                .zip(&got)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            // log-probs over a 64-token vocab: quantization and f32
+            // rounding shift logits by far less than this
+            assert!(worst < 2e-2, "{} diverges from f64 by {worst}", path.as_str());
+            // the same model answers bit-identically when asked twice
+            let again = m.forward(&tokens, false, None).unwrap();
+            for (x, y) in got.iter().zip(&again) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoints_always_carry_the_quantized_companion() {
+        let dir = tmp_dir("q8");
+        let a = LramMlm::seeded(tiny_cfg(), 64).unwrap();
+        a.save_checkpoint(&dir, 2, "feedbeef00000000", None, None, false, 1).unwrap();
+        let ck = Checkpoint::open(&dir).unwrap();
+        assert!(ck.manifest.has_tensor(tensor_names::VALUES_Q8));
+        assert!(ck.manifest.has_tensor(tensor_names::VALUES_Q8_SCALE));
+        let rows = a.table.rows();
+        let spec = ck.manifest.tensor(tensor_names::VALUES_Q8).unwrap();
+        assert_eq!(spec.shape, vec![rows, 8]);
+        let scales = ck.read_f32(tensor_names::VALUES_Q8_SCALE).unwrap();
+        assert_eq!(scales.len() as u64, rows);
+        // mapping codes + scales reconstructs a working quantized table
+        let map = ck.map_i8(tensor_names::VALUES_Q8).unwrap();
+        let q = QuantizedValueTable::from_parts(map, scales, rows, 8).unwrap();
+        let fresh = QuantizedValueTable::from_table(&a.table).unwrap();
+        assert_eq!(q.data(), fresh.data());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -26,9 +26,10 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::checkpoint::Checkpoint;
-use crate::memstore::AccessStats;
-use crate::model::LramMlm;
-pub use crate::model::EngineConfig;
+use crate::memstore::{AccessStats, QuantizedValueTable};
+use crate::model::{tensor_names, LramMlm};
+pub use crate::model::{EngineConfig, NumericPath};
+use crate::util::sigbus;
 use crate::runtime::{Artifact, ArtifactState, HostTensor, Runtime};
 use crate::tokenizer::Bpe;
 
@@ -59,6 +60,14 @@ pub trait InferenceBackend {
     fn checkpoint_id(&self) -> Option<&str> {
         None
     }
+    /// True once the backend's memory is known-corrupt and every further
+    /// answer would be a lie — e.g. a contained SIGBUS on a mapped value
+    /// table ([`crate::util::sigbus`]).  The executor checks this after
+    /// each failed batch and, when set, stops taking work so supervision
+    /// can rebuild the backend from the last good checkpoint.
+    fn poisoned(&self) -> bool {
+        false
+    }
 }
 
 /// Everything needed to construct an [`ArtifactBackend`] on the executor
@@ -80,11 +89,19 @@ pub struct CheckpointInit {
     pub threads: usize,
     /// Track per-slot access statistics (Table-5 serving observability).
     pub track_stats: bool,
+    /// Numeric path of the memory stage (defaults to the bit-exact f64
+    /// reference; `lram serve` defaults the CLI flag to `f32`).
+    pub numeric_path: NumericPath,
 }
 
 impl CheckpointInit {
     pub fn new(dir: impl Into<String>) -> Self {
-        CheckpointInit { dir: dir.into(), threads: 1, track_stats: true }
+        CheckpointInit {
+            dir: dir.into(),
+            threads: 1,
+            track_stats: true,
+            numeric_path: NumericPath::F64,
+        }
     }
 }
 
@@ -101,7 +118,7 @@ pub fn resolve_checkpoint_flag(
     let p = std::path::Path::new(path);
     if p.join(crate::checkpoint::MANIFEST_FILE).is_file() {
         log::info!("serving engine checkpoint {path}");
-        Ok((Some(CheckpointInit { dir: path.to_string(), threads, track_stats: true }), None))
+        Ok((Some(CheckpointInit { threads, ..CheckpointInit::new(path) }), None))
     } else {
         log::info!("restoring legacy artifact checkpoint {path}");
         let bytes = std::fs::read(p)
@@ -209,6 +226,9 @@ pub struct EngineBackend {
     model: LramMlm,
     stats: Option<AccessStats>,
     checkpoint_id: Option<String>,
+    /// [`sigbus::fault_epoch`] at construction: any later bump means a
+    /// mapped blob faulted under this backend and its memory is poisoned.
+    boot_epoch: u64,
 }
 
 impl EngineBackend {
@@ -219,7 +239,7 @@ impl EngineBackend {
         let track = cfg.track_stats;
         let model = LramMlm::seeded(cfg, vocab)?;
         let stats = track.then(|| AccessStats::new(model.table.rows()));
-        Ok(EngineBackend { model, stats, checkpoint_id: None })
+        Ok(EngineBackend { model, stats, checkpoint_id: None, boot_epoch: sigbus::fault_epoch() })
     }
 
     /// Restore trained weights from a checkpoint directory, validating
@@ -252,15 +272,37 @@ impl EngineBackend {
             manifest.model.vocab,
             bpe.vocab_size()
         );
-        let model = LramMlm::from_checkpoint(&ck, init.threads)?;
+        let mut model = LramMlm::from_checkpoint(&ck, init.threads)?;
+        if init.numeric_path == NumericPath::F32Q8
+            && manifest.has_tensor(tensor_names::VALUES_Q8)
+            && manifest.has_tensor(tensor_names::VALUES_Q8_SCALE)
+        {
+            // version-3 checkpoints ship the quantized companion: map the
+            // codes zero-copy instead of re-quantizing a multi-GB table
+            let map = ck.map_i8(tensor_names::VALUES_Q8)?;
+            let scales = ck.read_f32(tensor_names::VALUES_Q8_SCALE)?;
+            let rows = model.table.rows();
+            let q = QuantizedValueTable::from_parts(map, scales, rows, model.cfg.m)?;
+            model.set_quantized_table(q)?;
+            log::info!("mapped quantized value table zero-copy from the checkpoint");
+        }
+        model.set_numeric_path(init.numeric_path)?;
         let stats = init.track_stats.then(|| AccessStats::new(model.table.rows()));
         log::info!(
-            "engine backend restored checkpoint {} (step {}, {} params)",
+            "engine backend restored checkpoint {} (step {}, {} params, numeric path {}, \
+             kernel {})",
             manifest.checkpoint_id,
             manifest.step,
-            model.param_count()
+            model.param_count(),
+            model.numeric_path().as_str(),
+            crate::lattice::simd::active_kernel_name()
         );
-        Ok(EngineBackend { model, stats, checkpoint_id: Some(manifest.checkpoint_id.clone()) })
+        Ok(EngineBackend {
+            model,
+            stats,
+            checkpoint_id: Some(manifest.checkpoint_id.clone()),
+            boot_epoch: sigbus::fault_epoch(),
+        })
     }
 
     /// The lattice engine this backend drives (differential tests pit it
@@ -287,7 +329,12 @@ impl EngineBackend {
 
 impl InferenceBackend for EngineBackend {
     fn name(&self) -> &'static str {
-        "engine"
+        // surfaced in /stats: which numeric path answers requests
+        match self.model.numeric_path() {
+            NumericPath::F64 => "engine",
+            NumericPath::F32 => "engine+f32",
+            NumericPath::F32Q8 => "engine+f32q8",
+        }
     }
 
     fn max_batch(&self) -> usize {
@@ -308,7 +355,22 @@ impl InferenceBackend for EngineBackend {
         if let Some(e) = crate::util::failpoint::inject("table.gather") {
             return Err(e.context("value-table gather failed"));
         }
-        self.model.forward(tokens, false, self.stats.as_mut())
+        let out = self.model.forward(tokens, false, self.stats.as_mut());
+        if self.poisoned() {
+            // a real SIGBUS on a mapped blob was contained mid-batch: the
+            // faulted page now reads zero, so whatever `forward` produced
+            // is built on fabricated weights.  Refuse the answer; the
+            // executor sees `poisoned()` and hands the backend to
+            // supervision for a rebuild from the last good checkpoint.
+            bail!(
+                "value-table memory fault contained (SIGBUS epoch {} > boot epoch {}): a \
+                 mapped checkpoint blob changed under the server; refusing to serve \
+                 fabricated weights",
+                sigbus::fault_epoch(),
+                self.boot_epoch
+            );
+        }
+        out
     }
 
     fn memory_stats(&self) -> Option<(f64, f64)> {
@@ -317,6 +379,10 @@ impl InferenceBackend for EngineBackend {
 
     fn checkpoint_id(&self) -> Option<&str> {
         self.checkpoint_id.as_deref()
+    }
+
+    fn poisoned(&self) -> bool {
+        sigbus::fault_epoch() != self.boot_epoch
     }
 }
 
@@ -383,5 +449,30 @@ mod tests {
     fn seed_backend_reports_no_checkpoint() {
         let b = EngineBackend::new(tiny_cfg(), 64).unwrap();
         assert!(b.checkpoint_id().is_none());
+        assert!(!b.poisoned(), "fresh backend must not be poisoned");
+    }
+
+    #[test]
+    fn numeric_paths_serve_close_log_probs_and_report_their_name() {
+        let tokens: Vec<i32> = (0..16).map(|i| (i % 60) + 2).collect();
+        let mut f64b = EngineBackend::new(tiny_cfg(), 64).unwrap();
+        assert_eq!(f64b.name(), "engine");
+        let base = f64b.infer(&tokens).unwrap();
+        for (path, name) in
+            [(NumericPath::F32, "engine+f32"), (NumericPath::F32Q8, "engine+f32q8")]
+        {
+            let cfg = EngineConfig { numeric_path: path, ..tiny_cfg() };
+            let mut b = EngineBackend::new(cfg, 64).unwrap();
+            assert_eq!(b.name(), name);
+            let got = b.infer(&tokens).unwrap();
+            let worst =
+                base.iter().zip(&got).map(|(a, c)| (a - c).abs()).fold(0.0f32, f32::max);
+            assert!(worst < 2e-2, "{name} drifts {worst} from the f64 engine");
+            // normalisation survives the fast path
+            for row in got.chunks_exact(64) {
+                let sum: f64 = row.iter().map(|&l| (l as f64).exp()).sum();
+                assert!((sum - 1.0).abs() < 1e-3, "softmax sum {sum}");
+            }
+        }
     }
 }

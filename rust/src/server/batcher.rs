@@ -11,7 +11,11 @@
 //! whose reply channels die in the unwind surface as
 //! [`SubmitError::Unavailable`] (503 at the front door) — never a hung
 //! client — and requests still queued in the channel survive into the
-//! restarted executor.  The supervisor exports the
+//! restarted executor.  A backend that reports itself *poisoned*
+//! ([`InferenceBackend::poisoned`], e.g. a contained SIGBUS on a mapped
+//! value table) takes the same road without a panic: its batch is
+//! answered 503 and the executor returns to the supervisor for a
+//! rebuild.  The supervisor exports the
 //! `starting → ready → degraded → draining` [`Health`] state machine
 //! that `/healthz`, `/readyz` and `/stats` report.
 
@@ -600,31 +604,36 @@ fn supervise(
         let batches_before = lock_stats(&stats).batches;
         let run =
             catch_unwind(AssertUnwindSafe(|| executor_loop(&rx, backend, &bpe, &cfg, &stats)));
-        match run {
+        let why = match run {
             // channel disconnected: every submit handle dropped, clean
             // shutdown of the whole supervisor
-            Ok(()) => return,
-            Err(_) => {
-                // the panic unwound the executor: its in-flight group's
-                // reply senders are gone (clients see Unavailable → 503
-                // and release their own slots); requests still queued in
-                // the channel survive into the restarted executor
-                health.transition(HealthState::Degraded);
-                let restarts = health.note_restart();
-                // a backend that served real batches since the last
-                // restart has proven itself; only back off harder when
-                // it crash-loops without making progress
-                if lock_stats(&stats).batches > batches_before {
-                    backoff = RESTART_BACKOFF_BASE;
-                }
-                log::error!(
-                    "batcher executor panicked (restart #{restarts}); in-flight requests \
-                     answered 503, rebuilding the backend in {backoff:?}"
-                );
-                std::thread::sleep(backoff);
-                backoff = (backoff * 2).min(RESTART_BACKOFF_CAP);
+            Ok(ExecutorExit::Shutdown) => return,
+            // the executor returned the backend voluntarily: its memory
+            // is known-corrupt (contained SIGBUS on a mapped blob); its
+            // final batch was already answered 503
+            Ok(ExecutorExit::Poisoned) => {
+                "backend memory poisoned (SIGBUS on a mapped blob, contained)"
             }
+            // the panic unwound the executor: its in-flight group's
+            // reply senders are gone (clients see Unavailable → 503
+            // and release their own slots); requests still queued in
+            // the channel survive into the restarted executor
+            Err(_) => "batcher executor panicked",
+        };
+        health.transition(HealthState::Degraded);
+        let restarts = health.note_restart();
+        // a backend that served real batches since the last
+        // restart has proven itself; only back off harder when
+        // it crash-loops without making progress
+        if lock_stats(&stats).batches > batches_before {
+            backoff = RESTART_BACKOFF_BASE;
         }
+        log::error!(
+            "{why} (restart #{restarts}); in-flight requests answered 503, \
+             rebuilding the backend in {backoff:?}"
+        );
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(RESTART_BACKOFF_CAP);
     }
 }
 
@@ -646,16 +655,26 @@ fn expire_if_late(p: Pending, stats: &Mutex<BatchStats>) -> Option<Pending> {
     None
 }
 
+/// Why [`executor_loop`] returned control to [`supervise`].
+enum ExecutorExit {
+    /// Submit channel disconnected: every handle dropped, clean shutdown.
+    Shutdown,
+    /// The backend reported its memory poisoned
+    /// ([`InferenceBackend::poisoned`]); rebuild it from the last good
+    /// checkpoint.
+    Poisoned,
+}
+
 /// The executor proper: collect a batch (max-batch-or-timeout), run the
-/// backend, reply.  Panics unwind into [`supervise`]'s `catch_unwind`.
-/// Returns when the submit channel disconnects.
+/// backend, reply.  Panics unwind into [`supervise`]'s `catch_unwind`;
+/// clean returns say why ([`ExecutorExit`]).
 fn executor_loop(
     rx: &Receiver<Pending>,
     mut backend: Box<dyn InferenceBackend>,
     bpe: &Bpe,
     cfg: &BatcherConfig,
     stats: &Mutex<BatchStats>,
-) {
+) -> ExecutorExit {
     let b_max = backend.max_batch();
     let seq_len = backend.seq_len();
     let vocab = backend.vocab();
@@ -664,7 +683,7 @@ fn executor_loop(
         // the oldest request exceeds max_wait
         let first = match rx.recv() {
             Ok(p) => p,
-            Err(_) => return, // all senders dropped: shut down
+            Err(_) => return ExecutorExit::Shutdown, // all senders dropped
         };
         let Some(first) = expire_if_late(first, stats) else { continue };
         let mut group = vec![first];
@@ -738,7 +757,19 @@ fn executor_loop(
                 }
                 s.truncated_masks += truncated;
             }
-            Err(e) => fail_group(group, format!("inference failed: {e:#}"), stats),
+            Err(e) => {
+                let msg = format!("inference failed: {e:#}");
+                if backend.poisoned() {
+                    // the backend's mapped memory is known-corrupt (e.g.
+                    // a contained SIGBUS): this batch gets a truthful 503
+                    // (transient — the supervisor is about to rebuild
+                    // from the last good checkpoint), and the executor
+                    // hands the backend back instead of serving lies
+                    fail_group_with(group, msg, stats, SubmitError::Unavailable);
+                    return ExecutorExit::Poisoned;
+                }
+                fail_group(group, msg, stats)
+            }
         }
     }
 }
@@ -747,11 +778,23 @@ fn executor_loop(
 /// releasing slots and recording latencies (the failed requests still
 /// count toward the latency mean).
 fn fail_group(group: Vec<Pending>, msg: String, stats: &Mutex<BatchStats>) {
+    fail_group_with(group, msg, stats, SubmitError::Internal)
+}
+
+/// [`fail_group`] with a caller-chosen error class (`Internal` → 500 for
+/// batch failures, `Unavailable` → 503 when the backend is poisoned and
+/// a rebuild is in flight).
+fn fail_group_with(
+    group: Vec<Pending>,
+    msg: String,
+    stats: &Mutex<BatchStats>,
+    err: fn(String) -> SubmitError,
+) {
     let mut latencies = Vec::with_capacity(group.len());
     for p in group {
         latencies.push(p.enqueued.elapsed().as_secs_f64() * 1e3);
         p.slot.release();
-        let _ = p.reply.send(Err(SubmitError::Internal(msg.clone())));
+        let _ = p.reply.send(Err(err(msg.clone())));
     }
     let mut s = lock_stats(stats);
     for &l in &latencies {

@@ -19,7 +19,7 @@ mod http;
 pub use api::{MaskPrediction, PredictRequest, PredictResponse, TokenScore};
 pub use backend::{
     resolve_checkpoint_flag, ArtifactBackend, ArtifactInit, BackendInit, CheckpointInit,
-    EngineBackend, EngineConfig, InferenceBackend,
+    EngineBackend, EngineConfig, InferenceBackend, NumericPath,
 };
 pub use batcher::{Batcher, BatcherConfig, Health, HealthState, SubmitError};
 pub use http::{

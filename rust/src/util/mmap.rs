@@ -18,6 +18,10 @@ use anyhow::{bail, Context, Result};
 struct RawMap {
     ptr: *mut libc::c_void,
     bytes: usize,
+    /// Whether this (file-backed) range holds a `util::sigbus` registry
+    /// slot.  Anonymous maps never register — they cannot SIGBUS — so
+    /// lib tests that only touch anon maps never install a handler.
+    registered: bool,
 }
 
 // SAFETY: the region is owned and pages are plain memory; moving the
@@ -47,7 +51,7 @@ impl RawMap {
         if ptr == libc::MAP_FAILED {
             bail!("mmap({} bytes) failed: {}", bytes, std::io::Error::last_os_error());
         }
-        Ok(RawMap { ptr, bytes })
+        Ok(RawMap { ptr, bytes, registered: false })
     }
 
     /// Copy-on-write map of an *existing* file: reads come zero-copy from
@@ -90,7 +94,7 @@ impl RawMap {
         if ptr == libc::MAP_FAILED {
             bail!("mmap cow failed: {}", std::io::Error::last_os_error());
         }
-        let map = RawMap { ptr, bytes };
+        let mut map = RawMap { ptr, bytes, registered: false };
         // Re-validate the length against the *mapped* fd (fstat): a file
         // that shrank between the metadata check above and the mmap —
         // concurrent truncation, a checkpoint pruned mid-open — would
@@ -107,6 +111,12 @@ impl RawMap {
                 bytes
             );
         }
+        // The length checks above close the open→map window, but a file
+        // truncated *after* this point still SIGBUSes on access to a
+        // page past the new EOF — register the range so the handler can
+        // contain that fault (zeros + fault-epoch bump) instead of
+        // letting it kill the process.
+        map.registered = crate::util::sigbus::register(ptr as usize, bytes);
         Ok(map)
     }
 
@@ -136,7 +146,8 @@ impl RawMap {
         if ptr == libc::MAP_FAILED {
             bail!("mmap file failed: {}", std::io::Error::last_os_error());
         }
-        Ok(RawMap { ptr, bytes })
+        let registered = crate::util::sigbus::register(ptr as usize, bytes);
+        Ok(RawMap { ptr, bytes, registered })
     }
 
     /// Resident-set estimate: how many pages of the map are actually
@@ -156,6 +167,11 @@ impl RawMap {
 
 impl Drop for RawMap {
     fn drop(&mut self) {
+        // Unregister before unmapping so the SIGBUS handler never remaps
+        // a page of an address range that may be reused by a later map.
+        if self.registered {
+            crate::util::sigbus::unregister(self.ptr as usize);
+        }
         // SAFETY: unmapping the region we mapped.
         unsafe {
             libc::munmap(self.ptr, self.bytes);
@@ -284,9 +300,74 @@ impl MmapU32 {
     }
 }
 
+/// An owned mmap'd region of `i8`s — int8-quantized value rows
+/// (per-row-scaled, see `memstore::QuantizedValueTable`), mapped
+/// zero-copy from checkpoints exactly like the f32 tables.
+pub struct MmapI8 {
+    raw: RawMap,
+    len: usize, // in i8 elements
+}
+
+impl MmapI8 {
+    /// Anonymous zero-initialised map of `len` i8 elements.
+    pub fn anon(len: usize) -> Result<Self> {
+        Ok(MmapI8 { raw: RawMap::anon(len)?, len })
+    }
+
+    /// Copy-on-write map of an existing file of exactly `len` i8s —
+    /// zero-copy checkpoint reads; writes never touch the file.
+    pub fn open_cow(path: &Path, len: usize) -> Result<Self> {
+        Ok(MmapI8 { raw: RawMap::file_cow(path, len)?, len })
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[i8] {
+        // SAFETY: region is valid for len elements for the lifetime of self.
+        unsafe { std::slice::from_raw_parts(self.raw.ptr as *const i8, self.len) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [i8] {
+        // SAFETY: exclusive borrow of self.
+        unsafe { std::slice::from_raw_parts_mut(self.raw.ptr as *mut i8, self.len) }
+    }
+
+    /// Physically-resident bytes of the mapping.
+    pub fn resident_bytes(&self) -> Result<usize> {
+        self.raw.resident_bytes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn i8_map_roundtrips_and_cow_rejects_wrong_length() {
+        let mut m = MmapI8::anon(1024).unwrap();
+        assert_eq!(m.as_slice()[100], 0);
+        m.as_mut_slice()[100] = -117;
+        assert_eq!(m.as_slice()[100], -117);
+
+        let dir = std::env::temp_dir().join(format!("lram_i8_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("q8.bin");
+        std::fs::write(&path, [0x7fu8; 64]).unwrap();
+        let c = MmapI8::open_cow(&path, 64).unwrap();
+        assert_eq!(c.as_slice()[63], 127);
+        assert!(MmapI8::open_cow(&path, 65).is_err(), "short file must be refused");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     #[test]
     fn anon_map_reads_zero_writes_back() {

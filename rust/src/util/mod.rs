@@ -12,6 +12,7 @@ pub mod lockcheck;
 pub mod logger;
 pub mod mmap;
 pub mod rng;
+pub mod sigbus;
 pub mod signal;
 pub mod timing;
 pub mod topk;

@@ -1,0 +1,222 @@
+//! SIGBUS containment for file-backed mappings.
+//!
+//! PR 7 closed the open→map window (`RawMap` re-validates file length
+//! after `mmap`), but a file truncated *while mapped* still raises
+//! SIGBUS on the next access to a page past the new EOF — a fault
+//! `catch_unwind` cannot contain.  This module closes that remaining
+//! half:
+//!
+//! * every file-backed `RawMap` registers its address range here
+//!   (anonymous maps never do, so lib tests under Miri/sanitizers never
+//!   touch `sigaction`);
+//! * a process-wide `SA_SIGINFO` SIGBUS handler checks the faulting
+//!   address against the registry.  Inside a registered range it maps a
+//!   fresh anonymous zero page over the faulting page (`MAP_FIXED`),
+//!   bumps the global *fault epoch*, and returns — the interrupted load
+//!   re-executes against zeros and the thread survives;
+//! * `server::backend::EngineBackend` snapshots the epoch at build time
+//!   and declares itself poisoned once it moves, which the batcher
+//!   supervisor turns into well-formed 503s plus a rebuild from the
+//!   last good checkpoint (see `docs/robustness.md`).
+//!
+//! Faults outside any registered range (a genuine bug) re-install the
+//! default disposition and return; the access re-faults and the process
+//! dies exactly as it would have without this module.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Once;
+
+/// Fixed-capacity lock-free registry: a handler cannot take locks, so
+/// slots are claimed/released with atomics only.
+const MAX_REGIONS: usize = 64;
+
+/// The replacement-page size.  4 KiB is the page size on every 64-bit
+/// Linux target this repo runs on; on an exotic larger-page kernel the
+/// `MAP_FIXED` remap fails (unaligned addr) and the fault stays fatal —
+/// no worse than before this module existed.
+const REMAP_PAGE: usize = 4096;
+
+struct Region {
+    /// Base address of the mapping; 0 marks a free slot (mmap never
+    /// returns page 0 for a successful mapping).
+    start: AtomicUsize,
+    len: AtomicUsize,
+}
+
+impl Region {
+    const fn empty() -> Region {
+        Region { start: AtomicUsize::new(0), len: AtomicUsize::new(0) }
+    }
+}
+
+#[allow(clippy::declare_interior_mutable_const)] // array-init seed only
+const EMPTY_REGION: Region = Region::empty();
+
+static REGIONS: [Region; MAX_REGIONS] = [EMPTY_REGION; MAX_REGIONS];
+
+/// Bumped once per contained fault.  Monotonic across backend rebuilds.
+static FAULT_EPOCH: AtomicU64 = AtomicU64::new(0);
+
+static INSTALL: Once = Once::new();
+
+/// The number of SIGBUS faults contained so far.  A backend that
+/// snapshots this at build time is *poisoned* once it observes a newer
+/// value: some mapped page it may already have read was replaced by
+/// zeros.
+pub fn fault_epoch() -> u64 {
+    // ORDERING: Acquire pairs with the handler's AcqRel bump so a
+    // reader that sees the new epoch also sees the remapped page.
+    FAULT_EPOCH.load(Ordering::Acquire)
+}
+
+/// Register a file-backed mapping `[start, start+len)` for SIGBUS
+/// containment; installs the process-wide handler on first use.
+/// Returns whether a registry slot was claimed (callers must only
+/// `unregister` when it was).
+pub(crate) fn register(start: usize, len: usize) -> bool {
+    if start == 0 || len == 0 {
+        return false;
+    }
+    install_handler();
+    for r in &REGIONS {
+        // Claim on `start`; the handler ignores slots whose `len` is
+        // still 0, so the two-step publish is benign (no access can
+        // fault before `register` returns the mapping to its caller).
+        if r.start.compare_exchange(0, start, Ordering::AcqRel, Ordering::Acquire).is_ok() {
+            r.len.store(len, Ordering::Release);
+            return true;
+        }
+    }
+    log::warn!(
+        "sigbus: registry full ({MAX_REGIONS} mappings); faults in this mapping stay fatal"
+    );
+    false
+}
+
+/// Release the slot claimed by [`register`].  Called from `RawMap::drop`
+/// just before `munmap`, so the handler can no longer race a fault in
+/// this range with the unmap (a fault here would be a use-after-free
+/// bug, fatal either way).
+pub(crate) fn unregister(start: usize) {
+    for r in &REGIONS {
+        if r.start.load(Ordering::Acquire) == start {
+            r.len.store(0, Ordering::Release);
+            r.start.store(0, Ordering::Release);
+            return;
+        }
+    }
+}
+
+fn install_handler() {
+    INSTALL.call_once(|| {
+        let act = libc::sigaction {
+            sa_handler: on_sigbus as usize,
+            sa_mask: [0; 16],
+            sa_flags: libc::SA_RESTART | libc::SA_SIGINFO,
+            sa_restorer: 0,
+        };
+        // SAFETY: installs an async-signal-safe handler (atomics and
+        // raw syscalls only, see `on_sigbus`); the struct layout
+        // matches glibc/musl `struct sigaction` on 64-bit Linux, same
+        // as `util::signal` uses for SIGTERM/SIGINT.
+        let rc = unsafe { libc::sigaction(libc::SIGBUS, &act, std::ptr::null_mut()) };
+        if rc != 0 {
+            log::warn!("sigbus: installing the SIGBUS handler failed; truncated mappings are fatal");
+        }
+    });
+}
+
+/// The SIGBUS handler.  Async-signal-safe by construction: it touches
+/// lock-free atomics and issues `mmap`/`sigaction` syscalls — no
+/// allocation, no locks, no logging.
+extern "C" fn on_sigbus(
+    _sig: libc::c_int,
+    info: *mut libc::siginfo_t,
+    _ctx: *mut libc::c_void,
+) {
+    // SAFETY: for SA_SIGINFO handlers the kernel passes a valid
+    // `siginfo_t`; for SIGBUS its `si_addr` is the faulting address.
+    let addr = unsafe { (*info).si_addr };
+    if addr != 0 {
+        for r in &REGIONS {
+            let s = r.start.load(Ordering::Acquire);
+            if s == 0 {
+                continue;
+            }
+            let l = r.len.load(Ordering::Acquire);
+            if addr < s || addr >= s.saturating_add(l) {
+                continue;
+            }
+            let base = (addr & !(REMAP_PAGE - 1)) as *mut libc::c_void;
+            // SAFETY: maps a fresh private zero page exactly over the
+            // faulting page, which lies inside a still-registered (so
+            // still-mapped) file-backed region; MAP_FIXED replaces only
+            // that one page.  Writable so a faulting store also
+            // survives (the write lands in the discardable anon page).
+            let p = unsafe {
+                libc::mmap(
+                    base,
+                    REMAP_PAGE,
+                    libc::PROT_READ | libc::PROT_WRITE,
+                    libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_FIXED,
+                    -1,
+                    0,
+                )
+            };
+            if p != libc::MAP_FAILED {
+                // ORDERING: AcqRel publish — pairs with the Acquire in
+                // `fault_epoch` so an observer of the new epoch also
+                // observes the page replacement.
+                FAULT_EPOCH.fetch_add(1, Ordering::AcqRel);
+                return;
+            }
+            break;
+        }
+    }
+    // Not a registered mapping (or the remap failed): restore the
+    // default disposition and return.  The interrupted access re-faults
+    // and the process dies exactly as it would have without a handler.
+    let dfl = libc::sigaction { sa_handler: 0, sa_mask: [0; 16], sa_flags: 0, sa_restorer: 0 };
+    // SAFETY: resetting a signal disposition to SIG_DFL (0) is
+    // async-signal-safe; layout as above.
+    unsafe {
+        libc::sigaction(libc::SIGBUS, &dfl, std::ptr::null_mut());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_claims_and_unregister_frees_slots() {
+        // use addresses far outside anything mapped so a stray handler
+        // lookup can never match real memory; other tests in this
+        // binary may hold slots concurrently, so never assume the
+        // registry is empty — only that released slots become reusable
+        let a = usize::MAX - (1 << 20);
+        assert!(register(a, 4096));
+        assert!(register(a + 8192, 4096));
+        unregister(a);
+        unregister(a + 8192);
+        let mut claimed = Vec::new();
+        for i in 0..MAX_REGIONS {
+            let base = usize::MAX - (2 << 20) - i * 8192;
+            if register(base, 4096) {
+                claimed.push(base);
+            } else {
+                break;
+            }
+        }
+        assert!(claimed.len() >= 2, "released slots must be reusable");
+        for base in claimed {
+            unregister(base);
+        }
+    }
+
+    #[test]
+    fn degenerate_registrations_are_refused() {
+        assert!(!register(0, 4096));
+        assert!(!register(4096, 0));
+    }
+}

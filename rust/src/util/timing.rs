@@ -54,6 +54,24 @@ pub fn bench(warmup: usize, samples: usize, mut f: impl FnMut()) -> BenchStats {
     }
 }
 
+/// Coarse host fingerprint for bench reports: CPU model plus core count.
+/// Good enough to detect "this baseline was recorded on different iron",
+/// which is all `bench_gate --report` needs.
+pub fn host_fingerprint() -> String {
+    let cpu = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|text| {
+            text.lines()
+                .find(|l| l.starts_with("model name") || l.starts_with("Model"))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|s| s.trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown-cpu".to_string());
+    let cores =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    format!("{cpu} x{cores}")
+}
+
 /// Fixed-width table printer for the bench binaries.
 pub struct Table {
     headers: Vec<String>,
@@ -98,12 +116,21 @@ impl Table {
 /// format stays parseable by the same code that reads manifests.
 pub struct BenchReport {
     name: String,
+    host: Option<String>,
     entries: Vec<(String, Vec<(String, f64)>)>,
 }
 
 impl BenchReport {
     pub fn new(name: &str) -> Self {
-        BenchReport { name: name.to_string(), entries: Vec::new() }
+        BenchReport { name: name.to_string(), host: None, entries: Vec::new() }
+    }
+
+    /// Record the host fingerprint the numbers were measured on.
+    /// `bench_gate --report` compares it against the baseline's and warns
+    /// loudly on mismatch: absolute fields (qps, median_us) are not
+    /// comparable across hosts, only same-run ratios are.
+    pub fn set_host(&mut self, host: &str) {
+        self.host = Some(host.to_string());
     }
 
     /// Append one entry (e.g. one bench row) of numeric fields.
@@ -124,10 +151,12 @@ impl BenchReport {
                 Json::obj(pairs)
             })
             .collect();
-        Json::obj(vec![
-            ("bench", Json::Str(self.name.clone())),
-            ("entries", Json::Arr(entries)),
-        ])
+        let mut top = vec![("bench", Json::Str(self.name.clone()))];
+        if let Some(host) = &self.host {
+            top.push(("host", Json::Str(host.clone())));
+        }
+        top.push(("entries", Json::Arr(entries)));
+        Json::obj(top)
     }
 
     /// Write `<path>` as pretty-enough single-line JSON.
@@ -171,6 +200,20 @@ mod tests {
         );
         assert_eq!(entries[0].req("batch").unwrap().as_f64().unwrap(), 256.0);
         assert_eq!(entries[1].req("median_us").unwrap().as_f64().unwrap(), 140.0);
+    }
+
+    #[test]
+    fn host_fingerprint_lands_in_the_report() {
+        let fp = host_fingerprint();
+        assert!(fp.contains(" x"), "fingerprint has a core-count suffix: {fp}");
+        let mut r = BenchReport::new("x");
+        r.set_host(&fp);
+        let v = crate::util::json::parse(&r.to_json().to_string()).expect("parses");
+        assert_eq!(v.req("host").unwrap().as_str().unwrap(), fp);
+        // a report without a host stays host-free (old baselines parse as-is)
+        let bare = BenchReport::new("y").to_json().to_string();
+        let v = crate::util::json::parse(&bare).expect("parses");
+        assert!(v.get("host").is_none());
     }
 
     #[test]

@@ -18,8 +18,11 @@
 
 use std::cmp::Ordering;
 
-/// Float scores orderable with an explicit NaN rule.
-trait Score: PartialOrd + Copy {
+/// Float scores orderable with an explicit NaN rule.  Public so the
+/// selection helpers stay generic over the f64 oracle path and the f32
+/// SIMD serving path (`lattice::batch` canonical tie-breaking works on
+/// both).
+pub trait Score: PartialOrd + Copy {
     fn is_nan(self) -> bool;
 }
 
@@ -38,7 +41,7 @@ impl Score for f32 {
 /// Total order on scores: descending, NaN after every real value (NaNs
 /// mutually equal — callers break the tie on payload).
 #[inline]
-fn desc_nan_last<F: Score>(a: F, b: F) -> Ordering {
+pub fn desc_nan_last<F: Score>(a: F, b: F) -> Ordering {
     match (a.is_nan(), b.is_nan()) {
         (false, false) => b.partial_cmp(&a).unwrap_or(Ordering::Equal),
         (true, true) => Ordering::Equal,
@@ -49,7 +52,7 @@ fn desc_nan_last<F: Score>(a: F, b: F) -> Ordering {
 
 /// Total order: score descending (NaN last), payload ascending on ties.
 #[inline]
-fn cmp_desc<P: Copy + Ord>(a: &(f64, P), b: &(f64, P)) -> Ordering {
+fn cmp_desc<S: Score, P: Copy + Ord>(a: &(S, P), b: &(S, P)) -> Ordering {
     desc_nan_last(a.0, b.0).then_with(|| a.1.cmp(&b.1))
 }
 
@@ -63,7 +66,7 @@ fn cmp_desc<P: Copy + Ord>(a: &(f64, P), b: &(f64, P)) -> Ordering {
 /// O(n*k).  On exact score ties the reference's order depends on its
 /// swap history; this helper uses the canonical payload-ascending rule
 /// instead, so its output is a deterministic function of the input set.
-pub fn partial_top_k_desc<P: Copy + Ord>(items: &mut [(f64, P)], k: usize) -> &[(f64, P)] {
+pub fn partial_top_k_desc<S: Score, P: Copy + Ord>(items: &mut [(S, P)], k: usize) -> &[(S, P)] {
     let k = k.min(items.len());
     if k == 0 {
         return &[];

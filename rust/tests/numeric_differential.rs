@@ -1,0 +1,250 @@
+//! Tolerance-based differential contract for the f32 SIMD serving path
+//! and the int8-quantized gather: both must track the f64 engine (which
+//! `batch_differential.rs` pins bit-exactly to the scalar oracle) within
+//! analytically justified bounds — across random torus geometries, batch
+//! sizes, thread counts, NaN/denormal queries, empty-support inputs, and
+//! ragged final batches.
+//!
+//! CI runs this binary twice in release: once with the native SIMD
+//! dispatch (AVX2/NEON where available) and once with `LRAM_SIMD=off`
+//! forcing the scalar f32 kernel, so both sides of the runtime dispatch
+//! carry the same contract.
+
+use std::collections::BTreeMap;
+
+use lram::lattice::{simd, BatchLookupEngine, BatchOutput, TorusK};
+use lram::memstore::{QuantizedValueTable, ValueTable};
+use lram::util::check::forall;
+use lram::util::rng::Rng;
+
+fn random_torus(rng: &mut Rng) -> TorusK {
+    let choices = [
+        [16, 16, 8, 8, 8, 8, 8, 8],   // paper LRAM-small (2^18)
+        [8, 8, 8, 8, 8, 8, 8, 8],     // uniform 2^16
+        [4, 4, 8, 8, 8, 8, 4, 16],    // mixed small periods (with wrap)
+        [12, 8, 8, 8, 4, 4, 8, 8],    // non-power-of-two period
+    ];
+    TorusK::new(choices[rng.below(choices.len() as u64) as usize]).unwrap()
+}
+
+/// `torus row -> weight` for one query, dropping zero-weight padding.
+fn by_row(o: &BatchOutput, qi: usize) -> BTreeMap<u64, f32> {
+    let (idx, wts) = o.query(qi);
+    idx.iter().zip(wts).filter(|&(_, &w)| w > 0.0).map(|(&i, &w)| (i, w)).collect()
+}
+
+/// Weights from f32 scoring may differ from f64 by rounding of the
+/// quartic kernel, and a candidate sitting within f32 rounding of the
+/// d2 = 8 support boundary may appear on one side only — with a weight
+/// below this same tolerance.
+const W_TOL: f32 = 1e-4;
+
+#[test]
+fn f32_weights_track_the_f64_engine_across_configs() {
+    forall(30, |rng| {
+        let torus = random_torus(rng);
+        let batch = 1 + rng.below(48) as usize;
+        let threads = 1 + rng.below(6) as usize;
+        let span = 4.0 + rng.uniform(0.0, 20.0);
+        let queries: Vec<f64> = (0..batch * 8).map(|_| rng.uniform(-span, span)).collect();
+
+        // k_top = 232 keeps every in-support candidate on both paths, so
+        // the row sets can only differ at the support boundary
+        let engine = BatchLookupEngine::with_threads(torus, 232, threads);
+        let base = engine.lookup_batch(&queries);
+        let fast = engine.lookup_batch_f32(&queries);
+        for qi in 0..batch {
+            assert!(
+                (fast.total_weight[qi] - base.total_weight[qi]).abs() < W_TOL as f64,
+                "query {qi}: f32 total {} vs f64 total {}",
+                fast.total_weight[qi],
+                base.total_weight[qi]
+            );
+            let b = by_row(&base, qi);
+            let f = by_row(&fast, qi);
+            for (row, &w) in &b {
+                let fw = f.get(row).copied().unwrap_or(0.0);
+                assert!((w - fw).abs() < W_TOL, "query {qi} row {row}: f64 {w} vs f32 {fw}");
+            }
+            for (row, &w) in &f {
+                let bw = b.get(row).copied().unwrap_or(0.0);
+                assert!((w - bw).abs() < W_TOL, "query {qi} row {row}: f32 {w} vs f64 {bw}");
+            }
+        }
+    });
+}
+
+#[test]
+fn f32_truncated_top_k_agrees_where_untied() {
+    // with a small k_top the two paths must keep the same rows whenever
+    // the weight at the cut is not within f32 rounding of its neighbours
+    forall(20, |rng| {
+        let torus = random_torus(rng);
+        let k_top = [4usize, 8, 32][rng.below(3) as usize];
+        let batch = 1 + rng.below(32) as usize;
+        let queries: Vec<f64> =
+            (0..batch * 8).map(|_| rng.uniform(-10.0, 10.0)).collect();
+        let engine = BatchLookupEngine::new(torus, k_top);
+        let base = engine.lookup_batch(&queries);
+        let fast = engine.lookup_batch_f32(&queries);
+        for qi in 0..batch {
+            let b = by_row(&base, qi);
+            let f = by_row(&fast, qi);
+            // membership may differ only at the selection cut: a row one
+            // path kept and the other dropped must weigh within f32
+            // rounding of the lightest row the other path kept instead
+            let bmin = b.values().copied().fold(f32::INFINITY, f32::min);
+            let fmin = f.values().copied().fold(f32::INFINITY, f32::min);
+            for (row, &w) in &b {
+                match f.get(row) {
+                    Some(&fw) => assert!(
+                        (w - fw).abs() < W_TOL,
+                        "query {qi} row {row}: f64 {w} vs f32 {fw}"
+                    ),
+                    None => assert!(
+                        (w - fmin).abs() < W_TOL,
+                        "query {qi} row {row}: f64 kept weight {w} but the f32 \
+                         cut was at {fmin}"
+                    ),
+                }
+            }
+            for (row, &w) in &f {
+                if !b.contains_key(row) {
+                    assert!(
+                        (w - bmin).abs() < W_TOL,
+                        "query {qi} row {row}: f32 kept weight {w} but the f64 \
+                         cut was at {bmin}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn fused_f32_and_q8_gathers_track_the_f64_gather() {
+    forall(12, |rng| {
+        let torus = random_torus(rng);
+        let m = [8usize, 16, 64][rng.below(3) as usize];
+        let mut table = ValueTable::zeros(torus.num_locations(), m).unwrap();
+        table.randomize(rng.below(1 << 30), 0.02);
+        let qtab = QuantizedValueTable::from_table(&table).unwrap();
+        let batch = 1 + rng.below(24) as usize;
+        let threads = 1 + rng.below(4) as usize;
+        let queries: Vec<f64> = (0..batch * 8).map(|_| rng.uniform(-9.0, 9.0)).collect();
+        let engine = BatchLookupEngine::with_threads(torus, 232, threads);
+
+        let mut lk64 = BatchOutput::default();
+        let mut g64 = vec![0.0f32; batch * m];
+        engine.lookup_gather_ragged_into(&queries, &table, &mut lk64, &mut g64);
+        let mut lk32 = BatchOutput::default();
+        let mut g32 = vec![0.0f32; batch * m];
+        engine.lookup_gather_ragged_f32_into(&queries, &table, &mut lk32, &mut g32);
+        let mut lkq8 = BatchOutput::default();
+        let mut gq8 = vec![0.0f32; batch * m];
+        engine.lookup_gather_ragged_q8_into(&queries, &qtab, &mut lkq8, &mut gq8);
+
+        // values ~N(0, 0.02) and weights summing below 1: f32 scoring
+        // perturbs each element by < W_TOL * max|v|, and quantisation
+        // adds < sum_j w_j * scale_j / 2 — both comfortably inside 2e-3
+        for i in 0..batch * m {
+            assert!(
+                (g64[i] - g32[i]).abs() < 2e-3,
+                "elem {i}: f64 gather {} vs f32 gather {}",
+                g64[i],
+                g32[i]
+            );
+            assert!(
+                (g64[i] - gq8[i]).abs() < 2e-3,
+                "elem {i}: f64 gather {} vs q8 gather {}",
+                g64[i],
+                gq8[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn nan_denormal_and_infinite_queries_degrade_like_the_f64_engine() {
+    let torus = TorusK::new([16, 16, 8, 8, 8, 8, 8, 8]).unwrap();
+    let engine = BatchLookupEngine::new(torus, 32);
+    // query 0: NaN component; query 1: all denormals (narrow to 0.0f32);
+    // query 2: +inf component (empty-support cell); query 3: clean
+    let mut queries = vec![0.25f64; 4 * 8];
+    queries[3] = f64::NAN;
+    for v in queries.iter_mut().take(16).skip(8) {
+        *v = 4.9e-324; // smallest positive subnormal f64
+    }
+    queries[2 * 8 + 5] = f64::INFINITY;
+    let base = engine.lookup_batch(&queries);
+    let fast = engine.lookup_batch_f32(&queries);
+    for (qi, label) in [(0usize, "NaN"), (2, "+inf")] {
+        for out in [&base, &fast] {
+            let (idx, wts) = out.query(qi);
+            assert!(idx.iter().all(|&i| i == 0), "{label} query {qi} must have no hits");
+            assert!(wts.iter().all(|&w| w == 0.0), "{label} query {qi} must have no hits");
+            assert_eq!(out.total_weight[qi], 0.0, "{label} query {qi}");
+        }
+    }
+    // denormals behave exactly like the origin query on both paths
+    for (qi, label) in [(1usize, "denormal"), (3, "clean")] {
+        assert!(base.total_weight[qi] > 0.0, "{label} query lives");
+        assert!(
+            (base.total_weight[qi] - fast.total_weight[qi]).abs() < W_TOL as f64,
+            "{label} query {qi}: totals diverged"
+        );
+        let b = by_row(&base, qi);
+        let f = by_row(&fast, qi);
+        for (row, &w) in &b {
+            let fw = f.get(row).copied().unwrap_or(0.0);
+            assert!((w - fw).abs() < W_TOL, "{label} query {qi} row {row}");
+        }
+    }
+}
+
+#[test]
+fn ragged_final_batches_reuse_oversized_buffers_cleanly() {
+    // serving reuses one gather buffer sized for max_batch; a short final
+    // batch must only write its N * m prefix and match a tight-buffer run
+    let torus = TorusK::new([8; 8]).unwrap();
+    let m = 16usize;
+    let mut table = ValueTable::zeros(torus.num_locations(), m).unwrap();
+    table.randomize(77, 0.02);
+    let engine = BatchLookupEngine::new(torus, 32);
+    let mut rng = Rng::new(123);
+    let full: Vec<f64> = (0..32 * 8).map(|_| rng.uniform(-8.0, 8.0)).collect();
+    let mut lk = BatchOutput::default();
+    let mut big = vec![f32::NAN; 32 * m];
+    engine.lookup_gather_ragged_f32_into(&full, &table, &mut lk, &mut big);
+    assert!(big.iter().all(|v| v.is_finite()), "full batch fills the buffer");
+    for short in [1usize, 5, 31] {
+        let mut ragged = vec![f32::NAN; 32 * m];
+        let mut lk2 = BatchOutput::default();
+        engine.lookup_gather_ragged_f32_into(
+            &full[..short * 8],
+            &table,
+            &mut lk2,
+            &mut ragged,
+        );
+        assert_eq!(lk2.queries(), short);
+        assert_eq!(&ragged[..short * m], &big[..short * m], "prefix b={short}");
+        assert!(
+            ragged[short * m..].iter().all(|v| v.is_nan()),
+            "b={short}: bytes past N * m must stay untouched"
+        );
+    }
+}
+
+#[test]
+fn dispatch_honours_the_simd_kill_switch() {
+    let name = simd::active_kernel_name();
+    if std::env::var("LRAM_SIMD").as_deref() == Ok("off") {
+        assert_eq!(name, "scalar-f32", "LRAM_SIMD=off must force the scalar kernel");
+    } else {
+        // whatever was picked, it must be a known kernel
+        assert!(
+            ["scalar-f32", "avx2+fma", "neon"].contains(&name),
+            "unknown kernel {name}"
+        );
+    }
+}

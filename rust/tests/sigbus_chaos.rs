@@ -1,0 +1,270 @@
+//! SIGBUS chaos: truncating a live mmap'd blob must never kill the
+//! process.  The handler in `util::sigbus` remaps the faulting page with
+//! zeros and bumps the process-wide fault epoch; serving notices the
+//! epoch moved (the backend is *poisoned* — it may have computed on
+//! zeros), answers the in-flight batch with a well-formed 503, and the
+//! supervisor rebuilds from the newest verifying checkpoint — the
+//! truncated directory fails verification, so the `.prev-<step>`
+//! predecessor serves, with predictions bit-identical to pre-fault.
+//!
+//! Lives in its own test binary: the fault epoch is process-global, and
+//! bumping it while another test's backend is live would poison that
+//! backend.  Tests serialise on a static mutex.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use lram::data::synth::CorpusSpec;
+use lram::data::DataPipeline;
+use lram::memstore::ValueTable;
+use lram::model::LramMlm;
+use lram::server::{
+    BackendInit, Batcher, BatcherConfig, CheckpointInit, EngineConfig, HttpConfig, Server,
+};
+use lram::util::json;
+use lram::util::sigbus;
+
+// the SIGBUS fault epoch is process-global: a bump from one test would
+// poison another test's live backend, so serialise
+static GATE: Mutex<()> = Mutex::new(());
+
+fn build_small_bpe() -> Arc<lram::tokenizer::Bpe> {
+    let p = DataPipeline::new(CorpusSpec::default(), 512, 8, 1, 0.15).unwrap();
+    Arc::new(p.bpe)
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        seq_len: 24,
+        width: 32,
+        m: 32,
+        torus_k: [4; 8],
+        k_top: 8,
+        ..EngineConfig::default()
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lram_sigbus_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Shrink `path` to zero bytes in place — what a crashed writer, a full
+/// disk repair, or an operator `truncate -s0` does to a mapped blob.
+fn truncate_file(path: &Path) {
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .expect("opening blob for truncation")
+        .set_len(0)
+        .expect("truncating blob");
+}
+
+/// Contained fault, no serving stack: reads through a COW mapping whose
+/// backing file vanished must observe zeros (not kill the process) and
+/// must move the fault epoch.
+#[test]
+fn truncated_cow_mapping_reads_zeros_and_bumps_the_fault_epoch() {
+    let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    let dir = temp_dir("unit");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("table.bin");
+    let (rows, dim) = (1024u64, 8usize);
+    let payload: Vec<u8> =
+        (0..rows as usize * dim).flat_map(|i| (i as f32).to_le_bytes()).collect();
+    std::fs::write(&path, &payload).unwrap();
+
+    let table = ValueTable::open_cow(&path, rows, dim).unwrap();
+    assert_eq!(table.row(3)[0], 24.0, "pre-truncation reads see file contents");
+
+    let epoch_before = sigbus::fault_epoch();
+    truncate_file(&path);
+    // every page of the mapping is now past EOF: reads SIGBUS, the
+    // handler remaps each faulting page with zeros, and we keep running
+    let mut total = 0.0f32;
+    for r in 0..rows {
+        total += table.row(r).iter().sum::<f32>();
+    }
+    assert_eq!(total, 0.0, "post-truncation reads must observe zeros");
+    assert!(
+        sigbus::fault_epoch() > epoch_before,
+        "containing a SIGBUS must advance the fault epoch"
+    );
+
+    drop(table);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+struct Resp {
+    status: u16,
+    body: String,
+}
+
+impl Resp {
+    fn assert_well_formed_error(&self) {
+        let v = json::parse(&self.body)
+            .unwrap_or_else(|e| panic!("unparseable error body {:?}: {e:#}", self.body));
+        assert!(
+            v.get("error").and_then(|e| e.as_str()).is_some(),
+            "error body missing 'error' field: {}",
+            self.body
+        );
+    }
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to test server");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn roundtrip(&mut self, raw: &str) -> Resp {
+        self.stream.write_all(raw.as_bytes()).expect("writing request");
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("reading status line");
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .unwrap_or_else(|| panic!("bad status line {line:?}"))
+            .parse()
+            .expect("numeric status");
+        let mut len = 0usize;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).expect("reading header");
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    len = v.trim().parse().expect("numeric content-length");
+                }
+            }
+        }
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body).expect("reading body");
+        Resp { status, body: String::from_utf8(body).expect("utf-8 body") }
+    }
+
+    fn predict(&mut self, text: &str, top_k: usize) -> Resp {
+        let body = format!(r#"{{"text": "{text}", "top_k": {top_k}}}"#);
+        self.roundtrip(&format!(
+            "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ))
+    }
+
+    fn get(&mut self, path: &str) -> Resp {
+        self.roundtrip(&format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+    }
+}
+
+fn masks_of(resp: &Resp) -> String {
+    json::parse(&resp.body)
+        .unwrap_or_else(|e| panic!("unparseable predict body {:?}: {e:#}", resp.body))
+        .get("masks")
+        .unwrap_or_else(|| panic!("predict body missing 'masks': {}", resp.body))
+        .to_string()
+}
+
+fn eventually(budget: Duration, what: &str, mut f: impl FnMut() -> bool) {
+    let deadline = Instant::now() + budget;
+    loop {
+        if f() {
+            return;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The acceptance chaos scenario: truncate the live checkpoint's
+/// `values.bin` mid-serve.  The faulting batch gets a well-formed 503,
+/// the supervisor counts a restart, the truncated directory fails its
+/// rebuild verification so the `.prev-<step>` predecessor serves, and
+/// predictions come back bit-identical to pre-fault.
+#[test]
+fn truncating_the_mapped_value_table_mid_serve_recovers_via_prev_checkpoint() {
+    let _g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    let bpe = build_small_bpe();
+    let dir = temp_dir("serve");
+    // save the SAME weights at steps 3 and 4 with keep=2: step 4 lives
+    // in `dir`, its identical predecessor in `dir.prev-3` — the rebuild
+    // fallback target once `dir` is corrupted
+    let model = LramMlm::seeded(engine_cfg(), bpe.vocab_size()).unwrap();
+    model.save_checkpoint(&dir, 3, &bpe.fingerprint(), None, None, false, 2).unwrap();
+    model.save_checkpoint(&dir, 4, &bpe.fingerprint(), None, None, false, 2).unwrap();
+    let prev = dir.with_file_name(format!(
+        "{}.prev-3",
+        dir.file_name().unwrap().to_str().unwrap()
+    ));
+    assert!(prev.is_dir(), "retention must have produced {prev:?}");
+
+    let batcher = Batcher::spawn(
+        BackendInit::EngineCheckpoint(CheckpointInit::new(dir.to_str().unwrap())),
+        bpe.clone(),
+        BatcherConfig::default(),
+    )
+    .expect("checkpoint-backed batcher boots");
+    let server = Server::bind("127.0.0.1:0", batcher, bpe, HttpConfig::default())
+        .expect("binding an ephemeral port");
+    let addr = server.local_addr().to_string();
+    let mut c = Client::connect(&addr);
+
+    let before = c.predict("the [MASK] of the", 3);
+    assert_eq!(before.status, 200, "{}", before.body);
+    let masks_before = masks_of(&before);
+    assert_eq!(c.get("/readyz").status, 200);
+
+    // yank the mapped blob out from under the serving table
+    truncate_file(&dir.join("values.bin"));
+
+    // the faulting batch must 503 with a parseable error — never a hang,
+    // a torn response, or (the old behaviour) SIGBUS killing the process
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let r = c.predict("the [MASK] of the", 3);
+        if r.status == 503 {
+            r.assert_well_formed_error();
+            break;
+        }
+        assert_eq!(r.status, 200, "only 200 or a well-formed 503 allowed: {}", r.body);
+        assert!(Instant::now() < deadline, "timed out waiting for the poisoned 503");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // supervision: restart counted, health back to ready
+    eventually(Duration::from_secs(30), "restart counted in /stats", || {
+        let v = json::parse(&c.get("/stats").body).expect("stats is JSON");
+        v.get("restarts").and_then(|r| r.as_i64()).unwrap_or(0) >= 1
+    });
+    eventually(Duration::from_secs(30), "/readyz back to 200", || {
+        c.get("/readyz").status == 200
+    });
+
+    // rebuilt from the identical .prev-3 predecessor: bit-identical
+    let after = c.predict("the [MASK] of the", 3);
+    assert_eq!(after.status, 200, "{}", after.body);
+    assert_eq!(masks_of(&after), masks_before, "post-recovery predictions must be bit-identical");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&prev).ok();
+}

@@ -25,10 +25,32 @@ pub const MAP_NORESERVE: c_int = 0x4000;
 
 pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
 
+pub const MAP_FIXED: c_int = 0x10;
+
+pub const SIGBUS: c_int = 7;
 pub const SIGINT: c_int = 2;
 pub const SIGTERM: c_int = 15;
 /// Restart interruptible syscalls instead of surfacing EINTR.
 pub const SA_RESTART: c_int = 0x10000000;
+/// Deliver the three-argument `sa_sigaction` handler form (the second
+/// argument carries `siginfo_t`, including the faulting address).
+pub const SA_SIGINFO: c_int = 4;
+
+/// `siginfo_t` as the kernel lays it out on 64-bit Linux (x86_64 and
+/// aarch64): three ints, implicit padding to an 8-byte boundary, then a
+/// 112-byte union whose first field for the memory-fault signals
+/// (SIGBUS/SIGSEGV) is the faulting address.  128 bytes total.  Only
+/// ever read through a pointer handed to a signal handler — never
+/// constructed from Rust.
+#[repr(C)]
+pub struct siginfo_t {
+    pub si_signo: c_int,
+    pub si_errno: c_int,
+    pub si_code: c_int,
+    _pad0: c_int,
+    pub si_addr: usize,
+    _pad: [usize; 13],
+}
 
 /// `struct sigaction` as glibc and musl lay it out on 64-bit Linux
 /// (x86_64 and aarch64): handler pointer, a 1024-bit signal mask, the
