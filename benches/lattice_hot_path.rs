@@ -262,6 +262,72 @@ fn main() {
         );
     }
 
+    // ---- sharded staged path: 4 shard workers vs 1 (same run) -----------
+    // the gate field is the same-run ratio shard4_speedup_vs_shard1 —
+    // fanning the staged score/select/gather across 4 owners must not
+    // cost more than 10% vs one owner (floor 0.9x; on multi-core iron it
+    // should win outright)
+    {
+        use lram::lattice::ShardPlan;
+        use lram::model::{ShardedMemory, ValueShard};
+        let rows = gtab.rows();
+        let dim = 64usize;
+        let engine = BatchLookupEngine::with_threads(torus(), 32, 1);
+        let make = |n: usize| -> ShardedMemory {
+            let plan = ShardPlan::new(rows, n);
+            let mut shards = Vec::with_capacity(n);
+            for s in 0..n {
+                let r = plan.range(s);
+                let owned = (r.end - r.start).max(1);
+                let mut t = ValueTable::zeros(owned, dim).unwrap();
+                if r.end > r.start {
+                    t.load_from(&gtab.data()[r.start as usize * dim..r.end as usize * dim])
+                        .unwrap();
+                }
+                shards.push(ValueShard { base: r.start, table: t, q8: None });
+            }
+            ShardedMemory::new(&engine, plan, shards).unwrap()
+        };
+        let mut sh1 = make(1);
+        let mut sh4 = make(4);
+        let s_sh1 = bench(16, 128, || {
+            let start = (bi & 3) * batch * 8;
+            sh1.lookup_gather(&pool[start..start + batch * 8], false, false, &mut soa, &mut fused)
+                .unwrap();
+            bi += 1;
+        });
+        let s_sh4 = bench(16, 128, || {
+            let start = (bi & 3) * batch * 8;
+            sh4.lookup_gather(&pool[start..start + batch * 8], false, false, &mut soa, &mut fused)
+                .unwrap();
+            bi += 1;
+        });
+        let shard4_speedup = s_sh1.median_ns / s_sh4.median_ns;
+        table.row(&[
+            format!("sharded lookup+gather b={batch} shards=1"),
+            format!("{:.2} us", s_sh1.median_us()),
+            format!("{:.2} us", s_sh1.p90_ns / 1e3),
+            format!("{:.2} Mq/s", batch as f64 * 1e3 / s_sh1.median_ns),
+        ]);
+        table.row(&[
+            format!("sharded lookup+gather b={batch} shards=4"),
+            format!("{:.2} us", s_sh4.median_us()),
+            format!("{:.2} us", s_sh4.p90_ns / 1e3),
+            format!("{shard4_speedup:.2}x vs shards=1"),
+        ]);
+        report.entry(
+            "engine_sharded_gather_b256",
+            &[
+                ("batch", batch as f64),
+                ("shards", 4.0),
+                ("median_us", s_sh4.median_us()),
+                ("qps", batch as f64 / (s_sh4.median_ns / 1e9)),
+                ("shard1_qps", batch as f64 / (s_sh1.median_ns / 1e9)),
+                ("shard4_speedup_vs_shard1", shard4_speedup),
+            ],
+        );
+    }
+
     // ---- serving throughput: the pure-rust EngineBackend ----------------
     // full-stack fill-mask batch (embed -> query projection -> fused
     // lattice lookup+gather -> combine -> vocab log-softmax): what one

@@ -147,8 +147,8 @@ fn connect(addr: &str) -> Result<(TcpStream, BufReader<TcpStream>)> {
     Ok((stream, reader))
 }
 
-/// A 429 is only a *well-formed* shed if it carries `Retry-After` and a
-/// JSON body with an `error` field — clients must be able to act on it.
+/// A 429 is only a *well-formed* shed if it carries `Retry-After` and
+/// the structured error envelope — clients must be able to act on it.
 fn shed_is_well_formed(resp: &HttpResponse) -> bool {
     has_retry_after(resp) && has_json_error_body(resp)
 }
@@ -159,12 +159,25 @@ fn has_retry_after(resp: &HttpResponse) -> bool {
         .unwrap_or(false)
 }
 
+/// Validate the error contract from `docs/api.md`: every 4xx/5xx body is
+/// `{"error": {"code": STR, "message": STR, "retry_after_s"?: NUM}}`.
+/// A body with the old flat shape (`{"error": "..."}`), a missing code,
+/// or a non-numeric `retry_after_s` counts as malformed.
 fn has_json_error_body(resp: &HttpResponse) -> bool {
-    std::str::from_utf8(&resp.body)
+    let Some(v) = std::str::from_utf8(&resp.body)
         .ok()
         .and_then(|t| lram::util::json::parse(t).ok())
-        .map(|v| v.get("error").and_then(|e| e.as_str()).is_some())
-        .unwrap_or(false)
+    else {
+        return false;
+    };
+    let Some(err) = v.get("error") else { return false };
+    let code_ok = err.get("code").and_then(|c| c.as_str()).is_some_and(|c| !c.is_empty());
+    let message_ok = err.get("message").and_then(|m| m.as_str()).is_some();
+    let retry_ok = match err.get("retry_after_s") {
+        None => true, // optional: present only on retryable statuses
+        Some(r) => r.as_f64().is_some_and(|s| s >= 0.0),
+    };
+    code_ok && message_ok && retry_ok
 }
 
 /// Under fault injection 5xx responses are *expected* — but they must
@@ -300,8 +313,9 @@ fn main() -> Result<()> {
     ])
     .to_string();
     let conn_header = if connection_close { "Connection: close\r\n" } else { "" };
+    // the canonical versioned route; /predict stays as an alias
     let request = format!(
-        "POST /predict HTTP/1.1\r\nHost: loadgen\r\nContent-Type: application/json\r\n\
+        "POST /v1/predict HTTP/1.1\r\nHost: loadgen\r\nContent-Type: application/json\r\n\
          {conn_header}Content-Length: {}\r\n\r\n{}",
         body.len(),
         body

@@ -18,6 +18,14 @@
 //! map ([`crate::memstore::ValueTable::open_cow`]) — the O(1)-lookup
 //! serving claim survives persistence with no load-time copy.
 //!
+//! Format version 4 adds an optional *shard manifest*: when the value
+//! table was saved partitioned for sharded serving, the manifest's
+//! `shards.bounds` array records the row boundaries and the table blobs
+//! are written per shard (`values_shard_<k>` plus matching q8
+//! companions) instead of one monolithic `values`.  Unsharded v4
+//! checkpoints serialize exactly as v3 did — the `shards` key is simply
+//! absent — so their manifest bytes (and content ids) are unchanged.
+//!
 //! Failure discipline: every load-path mismatch — missing file, size
 //! mismatch (truncation), checksum mismatch (corruption), version skew,
 //! tokenizer drift — is a loud [`anyhow::Error`], never a silently
@@ -58,15 +66,19 @@ pub const FORMAT_TAG: &str = "lram-checkpoint";
 /// index).  Version 3 adds the `i8` tensor dtype and the quantized
 /// value-table companion blobs (`values_q8` as `i8 [rows, m]` plus
 /// `values_q8_scale` as `f32 [rows]`) that the f32-q8 serving path maps
-/// zero-copy; the f64/f32 blob layout is unchanged.  Readers accept
-/// [`MIN_READ_VERSION`]`..=FORMAT_VERSION` — version-1/2 checkpoints
-/// load fine (paths that want the q8 blobs re-quantize from `values`
-/// when they are absent) — and refuse anything newer loudly: older
-/// readers equality- or range-check the field, so they refuse
-/// checkpoints whose dtypes they cannot parse rather than silently
-/// dropping state (a "best effort" load of a future layout would serve
-/// garbage weights).
-pub const FORMAT_VERSION: i64 = 3;
+/// zero-copy; the f64/f32 blob layout is unchanged.  Version 4 adds
+/// the optional `shards` manifest section (row `bounds` of a
+/// partitioned value table saved as per-shard `values_shard_<k>`
+/// blobs); unsharded checkpoints omit it and keep the v3 byte layout.
+/// Readers accept [`MIN_READ_VERSION`]`..=FORMAT_VERSION` —
+/// version-1/2/3 checkpoints load fine (paths that want the q8 blobs
+/// re-quantize from `values` when they are absent, and a manifest
+/// without `shards` is one implicit shard) — and refuse anything newer
+/// loudly: older readers equality- or range-check the field, so they
+/// refuse checkpoints whose dtypes they cannot parse rather than
+/// silently dropping state (a "best effort" load of a future layout
+/// would serve garbage weights).
+pub const FORMAT_VERSION: i64 = 4;
 /// Oldest manifest version this reader still accepts.
 pub const MIN_READ_VERSION: i64 = 1;
 /// Manifest file name inside a checkpoint directory.
@@ -246,6 +258,12 @@ pub struct Manifest {
     pub tokenizer_hash: String,
     pub model: ModelDesc,
     pub tensors: Vec<TensorSpec>,
+    /// Row boundaries of a partitioned value table (format version 4+):
+    /// shard `k` owns rows `bounds[k]..bounds[k+1]` of the logical table
+    /// and its blob is `values_shard_<k>`.  `None` — the common case —
+    /// means one monolithic `values` blob, and is *omitted* from the
+    /// JSON entirely so unsharded manifests stay byte-identical to v3.
+    pub shards: Option<Vec<u64>>,
 }
 
 fn req_str(v: &Json, key: &str) -> Result<String> {
@@ -257,7 +275,7 @@ fn req_str(v: &Json, key: &str) -> Result<String> {
 
 impl Manifest {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("format", Json::Str(FORMAT_TAG.into())),
             ("version", Json::Num(self.version as f64)),
             ("checkpoint_id", Json::Str(self.checkpoint_id.clone())),
@@ -265,7 +283,19 @@ impl Manifest {
             ("tokenizer_hash", Json::Str(self.tokenizer_hash.clone())),
             ("model", self.model.to_json()),
             ("tensors", Json::Arr(self.tensors.iter().map(TensorSpec::to_json).collect())),
-        ])
+        ];
+        if let Some(bounds) = &self.shards {
+            // only sharded checkpoints carry the key: unsharded manifests
+            // must serialize byte-identically to format version 3
+            pairs.push((
+                "shards",
+                Json::obj(vec![(
+                    "bounds",
+                    Json::Arr(bounds.iter().map(|&b| Json::Num(b as f64)).collect()),
+                )]),
+            ));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
@@ -291,6 +321,21 @@ impl Manifest {
             .iter()
             .map(TensorSpec::from_json)
             .collect::<Result<Vec<_>>>()?;
+        let shards = match v.get("shards") {
+            None => None,
+            Some(s) => Some(
+                s.req("bounds")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("'shards.bounds' must be an array"))?
+                    .iter()
+                    .map(|d| {
+                        d.as_f64().filter(|f| *f >= 0.0).map(|f| f as u64).ok_or_else(|| {
+                            anyhow!("'shards.bounds' entries must be non-negative numbers")
+                        })
+                    })
+                    .collect::<Result<Vec<u64>>>()?,
+            ),
+        };
         Ok(Manifest {
             version,
             checkpoint_id: req_str(v, "checkpoint_id")?,
@@ -299,6 +344,7 @@ impl Manifest {
             tokenizer_hash: req_str(v, "tokenizer_hash")?,
             model: ModelDesc::from_json(v.req("model")?)?,
             tensors,
+            shards,
         })
     }
 
@@ -392,6 +438,9 @@ pub struct CheckpointWriter {
     /// total checkpoints retained: the live one plus up to `keep - 1`
     /// `<dir>.prev-<step>` predecessors (see [`Self::with_keep`]).
     keep: usize,
+    /// Row bounds of a partitioned value table (see
+    /// [`Self::with_shards`]); `None` for the common unsharded save.
+    shards: Option<Vec<u64>>,
 }
 
 /// Monotonic suffix so sequential (or accidentally overlapping) writers
@@ -581,7 +630,19 @@ impl CheckpointWriter {
             committed: false,
             fsync: false,
             keep: 1,
+            shards: None,
         })
+    }
+
+    /// Declare the row bounds of a partitioned value table (format
+    /// version 4): shard `k` of the logical table owns rows
+    /// `bounds[k]..bounds[k+1]` and its blob was written as
+    /// `values_shard_<k>`.  The bounds land in the manifest's `shards`
+    /// section; without this call the key is omitted entirely and the
+    /// manifest stays byte-identical to an unsharded v3 save.
+    pub fn with_shards(mut self, bounds: Vec<u64>) -> Self {
+        self.shards = Some(bounds);
+        self
     }
 
     /// Retain up to `keep` checkpoints total: the live one at `dir`,
@@ -671,6 +732,7 @@ impl CheckpointWriter {
             tokenizer_hash: tokenizer_hash.to_string(),
             model,
             tensors: std::mem::take(&mut self.tensors),
+            shards: self.shards.take(),
         };
         // content id over the manifest with the id field still empty:
         // any change to config, step, tokenizer or tensor bytes (via the
@@ -1099,6 +1161,17 @@ mod tests {
                     checksum: format!("{:016x}", rng.next_u64()),
                 })
                 .collect();
+            let shards = if rng.bool(0.5) {
+                None
+            } else {
+                // monotone bounds starting at 0, like a real shard plan
+                let n = 1 + rng.below(6) as usize;
+                let mut bounds = vec![0u64];
+                for _ in 0..n {
+                    bounds.push(bounds.last().copied().unwrap_or(0) + rng.below(1 << 20));
+                }
+                Some(bounds)
+            };
             let m = Manifest {
                 version: FORMAT_VERSION,
                 checkpoint_id: format!("ck-{:016x}", rng.next_u64()),
@@ -1106,6 +1179,7 @@ mod tests {
                 tokenizer_hash: format!("{:016x}", rng.next_u64()),
                 model,
                 tensors,
+                shards,
             };
             let text = m.to_json().to_string();
             let back = Manifest::from_json(&json::parse(&text).unwrap()).unwrap();
@@ -1524,6 +1598,33 @@ mod tests {
         assert!(ck.read_f32("values_q8").is_err());
         assert!(ck.read_i8("values").is_err());
         ck.verify().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_manifest_roundtrips_and_is_absent_when_unsharded() {
+        // format version 4: sharded saves carry `shards.bounds`;
+        // unsharded saves must omit the key entirely so their manifest
+        // bytes (and content ids) match a pre-shard-aware writer
+        let dir = tmp_dir("shards");
+        let plain = write_demo(&dir);
+        assert_eq!(plain.shards, None);
+        let text = std::fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+        assert!(!text.contains("shards"), "unsharded manifest must omit the key: {text}");
+
+        let sharded = {
+            let mut w = CheckpointWriter::new(&dir).unwrap().with_shards(vec![0, 10, 16]);
+            w.write_f32("values_shard_0", &[10, 4], &vec![0.25; 40]).unwrap();
+            w.write_f32("values_shard_1", &[6, 4], &vec![0.5; 24]).unwrap();
+            w.finish(43, "0123456789abcdef", demo_model()).unwrap()
+        };
+        assert_eq!(sharded.shards, Some(vec![0, 10, 16]));
+        let ck = Checkpoint::open(&dir).unwrap();
+        assert_eq!(ck.manifest, sharded);
+        assert_eq!(ck.manifest.shards, Some(vec![0, 10, 16]));
+        assert_eq!(ck.map_table("values_shard_1").unwrap().rows(), 6);
+        // the shard section is part of the content id
+        assert_ne!(plain.checkpoint_id, sharded.checkpoint_id);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -61,6 +61,35 @@
 //! recompute, f32 SIMD, and the scalar oracle in `lookup.rs`).  The
 //! selected hit set is therefore a deterministic function of the query
 //! alone, never of scan order or a selection algorithm's swap history.
+//!
+//! # The staged sharded pipeline
+//!
+//! Sharded serving partitions the value-table rows across owners (one
+//! [`ShardPlan`]) and needs scoring and gathering to run on *different*
+//! workers, so the fused lookup→gather is also exposed as four explicit
+//! stages:
+//!
+//! 1. **score** ([`BatchLookupEngine::score_into`] /
+//!    [`BatchLookupEngine::score_f32_into`]) — per query, every
+//!    in-support candidate resolved to `(weight, torus row, candidate)`
+//!    ([`ScoredBatch`]);
+//! 2. **select** ([`BatchLookupEngine::select_owned`]) — each shard's
+//!    canonical top-k over the rows it owns ([`ShardSelection`]);
+//! 3. **merge** ([`BatchLookupEngine::merge_into`]) — re-select over
+//!    the union of the shard lists into a [`BatchOutput`];
+//! 4. **gather** ([`BatchLookupEngine::stage_gather`] /
+//!    [`BatchLookupEngine::stage_gather_q8`] +
+//!    [`BatchLookupEngine::combine_gather`]) — shards stage the value
+//!    rows they own, the coordinator combines them in canonical slot
+//!    order.
+//!
+//! Because the canonical order is a *total* order and every row has
+//! exactly one owner, the union of per-shard top-k lists is a superset
+//! of the global top-k — the merged selection, weights, and (f64/f32)
+//! gathered outputs are **bit-identical** to the fused path for every
+//! shard count, which the tests below pin down.
+
+use anyhow::{bail, Result};
 
 use super::e8::{reduce, vec8, Reduction, Vec8};
 use super::kernel::kernel_df_dd2;
@@ -106,6 +135,189 @@ impl BatchOutput {
         self.indices.resize(n * k_top, 0);
         self.weights.resize(n * k_top, 0.0);
         self.total_weight.resize(n, 0.0);
+    }
+}
+
+/// Contiguous-range partition of the value-table rows across `N` shard
+/// owners — the candidate→owner routing contract of the staged
+/// pipeline (module docs, "The staged sharded pipeline").
+///
+/// `bounds` holds `N + 1` non-decreasing row offsets with
+/// `bounds[0] = 0` and `bounds[N] = rows`; shard `s` owns the half-open
+/// row range `bounds[s]..bounds[s+1]`.  Every torus row therefore has
+/// **exactly one** owner (the ownership-partition property the tests
+/// pin), which is what makes the per-shard top-k merge exact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    bounds: Vec<u64>,
+}
+
+impl ShardPlan {
+    /// Evenly partition `rows` across `n_shards` contiguous ranges:
+    /// `bounds[s] = floor(rows * s / n)`, so shard sizes differ by at
+    /// most one row.
+    pub fn new(rows: u64, n_shards: usize) -> Self {
+        assert!(n_shards >= 1, "a shard plan needs at least one shard");
+        let bounds =
+            (0..=n_shards).map(|s| (rows as u128 * s as u128 / n_shards as u128) as u64).collect();
+        ShardPlan { bounds }
+    }
+
+    /// Rebuild a plan from checkpoint-manifest bounds, refusing
+    /// malformed ones loudly (the manifest is external input).
+    pub fn from_bounds(bounds: Vec<u64>) -> Result<Self> {
+        if bounds.len() < 2 {
+            bail!("shard bounds need at least 2 offsets, got {}", bounds.len());
+        }
+        if bounds[0] != 0 {
+            bail!("shard bounds must start at row 0, got {}", bounds[0]);
+        }
+        if bounds.windows(2).any(|p| p[0] > p[1]) {
+            bail!("shard bounds must be non-decreasing: {bounds:?}");
+        }
+        Ok(ShardPlan { bounds })
+    }
+
+    /// Total rows covered by the plan.
+    pub fn rows(&self) -> u64 {
+        *self.bounds.last().unwrap_or(&0)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// The `N + 1` row offsets (checkpoint-manifest serialisation).
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// The row range shard `shard` owns.
+    pub fn range(&self, shard: usize) -> std::ops::Range<u64> {
+        self.bounds[shard]..self.bounds[shard + 1]
+    }
+
+    /// The unique shard owning `row` (`row` must be `< rows()`).
+    #[inline]
+    pub fn owner_of(&self, row: u64) -> usize {
+        debug_assert!(row < self.rows(), "row {row} out of range ({})", self.rows());
+        self.bounds.partition_point(|&b| b <= row) - 1
+    }
+}
+
+/// Per-query scored candidate lists — the `score` stage output.
+///
+/// Unlike the fused path, every in-support candidate is resolved to its
+/// torus row *at scoring time* (integer arithmetic, identical across
+/// paths), so the `select`/`merge` stages can route by row ownership
+/// without redoing the inverse isometry.
+#[derive(Debug, Clone, Default)]
+pub struct ScoredBatch<S> {
+    /// `(weight, torus row, candidate)` triples, grouped by query.
+    entries: Vec<(S, u64, u32)>,
+    /// `offsets[q]..offsets[q+1]` bounds query `q`'s triples (`N + 1`).
+    offsets: Vec<usize>,
+    /// `[N]` total kernel weight, as in [`BatchOutput::total_weight`].
+    total_weight: Vec<f64>,
+}
+
+impl<S: Copy> ScoredBatch<S> {
+    /// Number of queries scored.
+    pub fn queries(&self) -> usize {
+        self.total_weight.len()
+    }
+
+    /// Query `q`'s `(weight, torus row, candidate)` triples.
+    pub fn query(&self, q: usize) -> &[(S, u64, u32)] {
+        &self.entries[self.offsets[q]..self.offsets[q + 1]]
+    }
+
+    /// Query `q`'s total in-support kernel weight.
+    pub fn total_weight(&self, q: usize) -> f64 {
+        self.total_weight[q]
+    }
+
+    fn reset(&mut self) {
+        self.entries.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+        self.total_weight.clear();
+    }
+}
+
+/// One shard's per-query canonical top-k over the rows it owns — the
+/// `select` stage output, at most `k_top` triples per query.
+#[derive(Debug, Clone, Default)]
+pub struct ShardSelection<S> {
+    entries: Vec<(S, u64, u32)>,
+    offsets: Vec<usize>,
+}
+
+impl<S: Copy> ShardSelection<S> {
+    /// Number of queries covered.
+    pub fn queries(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Query `q`'s selected `(weight, torus row, candidate)` triples,
+    /// canonically ordered.
+    pub fn query(&self, q: usize) -> &[(S, u64, u32)] {
+        &self.entries[self.offsets[q]..self.offsets[q + 1]]
+    }
+
+    fn reset(&mut self) {
+        self.entries.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+    }
+}
+
+/// One shard's staged value rows for the `gather` stage: the surviving
+/// (positive-weight) merged slots it owns, in global slot order, held
+/// as either f32 rows or i8 codes plus per-row scales.  The
+/// coordinator's [`BatchLookupEngine::combine_gather`] replays the
+/// slots in canonical order with one cursor per shard, reproducing the
+/// fused gathers' exact operation sequence.
+#[derive(Debug, Clone, Default)]
+pub struct GatherStage {
+    rows: Vec<f32>,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+    dim: usize,
+    quantized: bool,
+}
+
+impl GatherStage {
+    /// How many value rows this shard staged (observability/tests).
+    pub fn staged_rows(&self) -> usize {
+        if self.quantized {
+            self.scales.len()
+        } else if self.dim == 0 {
+            0
+        } else {
+            self.rows.len() / self.dim
+        }
+    }
+}
+
+/// Weight narrowing for the staged merge: the fused f64 path stores
+/// `w as f32` into [`BatchOutput`] (see [`lookup_one`]), the f32 path
+/// stores the score unchanged — the staged merge must match both
+/// bit-for-bit.
+pub trait MergeWeight: Score {
+    /// Narrow to the `BatchOutput` weight exactly as the fused path does.
+    fn narrow(self) -> f32;
+}
+
+impl MergeWeight for f64 {
+    fn narrow(self) -> f32 {
+        self as f32
+    }
+}
+
+impl MergeWeight for f32 {
+    fn narrow(self) -> f32 {
+        self
     }
 }
 
@@ -167,7 +379,9 @@ impl GatherTable<'_> {
 /// Batched lattice lookup (+ optional fused gather) over a fixed torus.
 ///
 /// Construction is cheap; the engine holds no per-batch state, so one
-/// engine can be shared by reference across threads.
+/// engine can be shared by reference across threads (or cheaply cloned
+/// into per-shard workers).
+#[derive(Clone)]
 pub struct BatchLookupEngine {
     pub torus: TorusK,
     pub k_top: usize,
@@ -320,6 +534,255 @@ impl BatchLookupEngine {
         );
         lookup.reset(n, self.k_top);
         self.dispatch_f32(queries, lookup, GatherTable::Q8(table), &mut gathered[..need]);
+    }
+
+    // ------------------------------------------------------------------
+    // The staged score / select / merge / gather API (sharded serving)
+    // ------------------------------------------------------------------
+
+    /// Stage 1 of the staged pipeline: score every query against the
+    /// 232-candidate table and resolve each in-support candidate to its
+    /// torus row.  Scoring is numerically identical to
+    /// [`Self::lookup_batch_into`] (same reduce, same accumulation
+    /// order), so the staged pipeline's final selection and weights are
+    /// bit-identical to the fused path's.  Single-threaded by design:
+    /// sharded executors parallelise by slicing `queries` across
+    /// workers and passing the parts to [`Self::select_owned`] in query
+    /// order.
+    pub fn score_into(&self, queries: &[f64], out: &mut ScoredBatch<f64>) {
+        assert_eq!(queries.len() % 8, 0, "queries must be N x 8 row-major");
+        let soa = neighbor_table_soa();
+        let nbr = neighbor_table();
+        let mut scratch = Scratch::new();
+        out.reset();
+        for chunk in queries.chunks_exact(8) {
+            let q = vec8(chunk);
+            let red = reduce(q);
+            let total = score_candidates(&red, soa, &mut scratch);
+            for &(w, ci) in &scratch.cand {
+                out.entries.push((w, self.torus.index(&red.unmap(&nbr[ci as usize])), ci));
+            }
+            out.offsets.push(out.entries.len());
+            out.total_weight.push(total);
+        }
+    }
+
+    /// [`Self::score_into`] for the f32 SIMD serving path — same
+    /// scoring kernel as [`Self::lookup_batch_f32_into`].
+    pub fn score_f32_into(&self, queries: &[f64], out: &mut ScoredBatch<f32>) {
+        assert_eq!(queries.len() % 8, 0, "queries must be N x 8 row-major");
+        let nbr = neighbor_table();
+        let mut scratch = ScratchF32::new();
+        out.reset();
+        for chunk in queries.chunks_exact(8) {
+            let q = vec8(chunk);
+            let red = reduce(q);
+            let mut z32 = [0.0f32; 8];
+            for (o, &v) in z32.iter_mut().zip(red.z.iter()) {
+                *o = v as f32;
+            }
+            let total = simd::score_row(&z32, &mut scratch.scores);
+            for (ci, &w) in scratch.scores.0.iter().enumerate() {
+                if w > 0.0 {
+                    out.entries.push((w, self.torus.index(&red.unmap(&nbr[ci])), ci as u32));
+                }
+            }
+            out.offsets.push(out.entries.len());
+            out.total_weight.push(total);
+        }
+    }
+
+    /// Stage 2: shard `shard`'s canonical top-k over the rows it owns,
+    /// for every query.
+    ///
+    /// `scored` holds query-contiguous parts (the per-worker outputs of
+    /// stage 1, in query order).  Selection reuses
+    /// [`crate::util::topk::partial_top_k_desc`] with `(row, candidate)`
+    /// payloads, whose ascending payload tie-break *is* the canonical
+    /// `(weight desc, row asc, candidate asc)` order — each shard list
+    /// comes out canonically sorted, at most `k_top` long.
+    pub fn select_owned<S: Score>(
+        &self,
+        scored: &[ScoredBatch<S>],
+        plan: &ShardPlan,
+        shard: usize,
+        out: &mut ShardSelection<S>,
+    ) {
+        let range = plan.range(shard);
+        out.reset();
+        let mut cand: Vec<(S, (u64, u32))> = Vec::with_capacity(N_NEIGHBORS);
+        for part in scored {
+            for q in 0..part.queries() {
+                cand.clear();
+                for &(w, row, ci) in part.query(q) {
+                    if range.contains(&row) {
+                        cand.push((w, (row, ci)));
+                    }
+                }
+                for &(w, (row, ci)) in partial_top_k_desc(&mut cand, self.k_top) {
+                    out.entries.push((w, row, ci));
+                }
+                out.offsets.push(out.entries.len());
+            }
+        }
+    }
+
+    /// Stage 3: merge the per-shard selections back into one
+    /// [`BatchOutput`], query by query, under the same canonical total
+    /// order.  Every row has exactly one owner and each shard kept its
+    /// own canonical top-k, so the union of the shard lists is a
+    /// superset of the global top-k — re-selecting over it is
+    /// bit-identical to the fused [`select_canonical`] result for any
+    /// shard count.
+    pub fn merge_into<S: MergeWeight>(
+        &self,
+        scored: &[ScoredBatch<S>],
+        selections: &[ShardSelection<S>],
+        out: &mut BatchOutput,
+    ) {
+        let n: usize = scored.iter().map(ScoredBatch::queries).sum();
+        for sel in selections {
+            assert_eq!(sel.queries(), n, "every shard selection must cover every query");
+        }
+        out.reset(n, self.k_top);
+        let mut cand: Vec<(S, (u64, u32))> =
+            Vec::with_capacity(selections.len() * self.k_top);
+        let mut qg = 0usize;
+        for part in scored {
+            for q in 0..part.queries() {
+                cand.clear();
+                for sel in selections {
+                    cand.extend(sel.query(qg).iter().map(|&(w, row, ci)| (w, (row, ci))));
+                }
+                let top = partial_top_k_desc(&mut cand, self.k_top);
+                let idx_row = &mut out.indices[qg * self.k_top..(qg + 1) * self.k_top];
+                let w_row = &mut out.weights[qg * self.k_top..(qg + 1) * self.k_top];
+                for (j, &(w, (row, _ci))) in top.iter().enumerate() {
+                    idx_row[j] = row;
+                    w_row[j] = w.narrow();
+                }
+                for j in top.len()..self.k_top {
+                    idx_row[j] = 0;
+                    w_row[j] = 0.0;
+                }
+                out.total_weight[qg] = part.total_weight(q);
+                qg += 1;
+            }
+        }
+    }
+
+    /// Stage 4a (shard side): stage the f32 value rows this shard owns
+    /// among the merged surviving (positive-weight) slots, in global
+    /// slot order.  `base` is the global torus row of `table`'s row 0 —
+    /// `0` for a full-table view, `plan.range(shard).start` for a
+    /// compact per-shard table.
+    pub fn stage_gather(
+        &self,
+        merged: &BatchOutput,
+        plan: &ShardPlan,
+        shard: usize,
+        base: u64,
+        table: &ValueTable,
+        out: &mut GatherStage,
+    ) {
+        out.rows.clear();
+        out.codes.clear();
+        out.scales.clear();
+        out.dim = table.dim();
+        out.quantized = false;
+        let range = plan.range(shard);
+        for (&row, &w) in merged.indices.iter().zip(&merged.weights) {
+            if w == 0.0 || !range.contains(&row) {
+                continue;
+            }
+            out.rows.extend_from_slice(table.row(row - base));
+        }
+    }
+
+    /// [`Self::stage_gather`] over an int8-quantized shard table: stages
+    /// the raw codes plus per-row scales so the combine step replays the
+    /// exact fused `axpy_q8` kernel.
+    pub fn stage_gather_q8(
+        &self,
+        merged: &BatchOutput,
+        plan: &ShardPlan,
+        shard: usize,
+        base: u64,
+        table: &QuantizedValueTable,
+        out: &mut GatherStage,
+    ) {
+        out.rows.clear();
+        out.codes.clear();
+        out.scales.clear();
+        out.dim = table.dim();
+        out.quantized = true;
+        let range = plan.range(shard);
+        for (&row, &w) in merged.indices.iter().zip(&merged.weights) {
+            if w == 0.0 || !range.contains(&row) {
+                continue;
+            }
+            out.codes.extend_from_slice(table.row(row - base));
+            out.scales.push(table.scale(row - base));
+        }
+    }
+
+    /// Stage 4b (coordinator side): combine the per-shard stages into
+    /// the gathered output, walking each query's slots in canonical
+    /// order with one cursor per shard.  The per-slot operation
+    /// sequence (zero the row, skip zero weights, `out += w * value` /
+    /// `axpy_q8(w * scale, codes)`) is exactly the fused gathers', so
+    /// f64- and f32-path results are bit-identical to
+    /// [`Self::lookup_gather_ragged_into`] /
+    /// [`Self::lookup_gather_ragged_f32_into`], and q8 results to
+    /// [`Self::lookup_gather_ragged_q8_into`].  Ragged like those: only
+    /// the first `N * m` elements of `gathered` are written.
+    pub fn combine_gather(
+        &self,
+        merged: &BatchOutput,
+        plan: &ShardPlan,
+        stages: &[GatherStage],
+        gathered: &mut [f32],
+    ) {
+        assert_eq!(stages.len(), plan.n_shards(), "one gather stage per shard");
+        let m = stages.iter().map(|s| s.dim).max().unwrap_or(0);
+        for s in stages {
+            assert!(
+                s.dim == m || s.staged_rows() == 0,
+                "shard gather stages disagree on the row dim"
+            );
+        }
+        let n = merged.queries();
+        assert!(
+            gathered.len() >= n * m,
+            "gather output holds {} floats, batch needs {}",
+            gathered.len(),
+            n * m
+        );
+        let k = merged.k_top();
+        let mut cursors = vec![0usize; stages.len()];
+        for q in 0..n {
+            let out_row = &mut gathered[q * m..(q + 1) * m];
+            out_row.fill(0.0);
+            let lo = q * k;
+            let slots = merged.indices[lo..lo + k].iter().zip(&merged.weights[lo..lo + k]);
+            for (&row, &w) in slots {
+                if w == 0.0 {
+                    continue;
+                }
+                let s = plan.owner_of(row);
+                let stage = &stages[s];
+                let c = cursors[s];
+                cursors[s] += 1;
+                if stage.quantized {
+                    simd::axpy_q8(w * stage.scales[c], &stage.codes[c * m..(c + 1) * m], out_row);
+                } else {
+                    let staged = &stage.rows[c * m..(c + 1) * m];
+                    for (o, &v) in out_row.iter_mut().zip(staged) {
+                        *o += w * v;
+                    }
+                }
+            }
+        }
     }
 
     /// Backward of the fused lookup→gather with respect to the
@@ -1223,6 +1686,234 @@ mod tests {
         for (i, (&a, &b)) in f32g.iter().zip(&q8g).enumerate() {
             assert!((a - b).abs() < 1e-3, "elem {i}: f32 {a} vs q8 {b}");
         }
+    }
+
+    #[test]
+    fn shard_plan_partitions_rows_exactly_once() {
+        // the quickcheck-style ownership-partition property: for any
+        // (rows, n_shards), every row lies in exactly one shard's range
+        // and owner_of names that shard
+        let mut rng = Rng::new(9);
+        let mut cases: Vec<(u64, usize)> = vec![(1, 1), (1, 4), (7, 8), (233, 3), (1024, 7)];
+        for _ in 0..60 {
+            let rows = rng.uniform(1.0, 1024.0) as u64;
+            let shards = rng.uniform(1.0, 12.0) as usize;
+            cases.push((rows.max(1), shards.max(1)));
+        }
+        for (rows, n_shards) in cases {
+            let plan = ShardPlan::new(rows, n_shards);
+            assert_eq!(plan.rows(), rows);
+            assert_eq!(plan.n_shards(), n_shards);
+            assert_eq!(plan.bounds()[0], 0);
+            assert!(plan.bounds().windows(2).all(|p| p[0] <= p[1]));
+            for row in 0..rows {
+                let owners: Vec<usize> =
+                    (0..n_shards).filter(|&s| plan.range(s).contains(&row)).collect();
+                assert_eq!(owners.len(), 1, "row {row} of {rows} across {n_shards} shards");
+                assert_eq!(plan.owner_of(row), owners[0], "row {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_plan_round_trips_and_rejects_malformed_bounds() {
+        let plan = ShardPlan::new(1000, 3);
+        let again = ShardPlan::from_bounds(plan.bounds().to_vec()).unwrap();
+        assert_eq!(plan, again);
+        assert!(ShardPlan::from_bounds(vec![]).is_err());
+        assert!(ShardPlan::from_bounds(vec![0]).is_err());
+        assert!(ShardPlan::from_bounds(vec![5, 10]).is_err(), "must start at row 0");
+        assert!(ShardPlan::from_bounds(vec![0, 7, 3]).is_err(), "must be non-decreasing");
+    }
+
+    /// Compact per-shard copies of `table` (row `r` of shard `s` holds
+    /// global row `plan.range(s).start + r`).
+    fn shard_tables(table: &ValueTable, plan: &ShardPlan) -> Vec<ValueTable> {
+        (0..plan.n_shards())
+            .map(|s| {
+                let r = plan.range(s);
+                let rows = (r.end - r.start).max(1); // zeros() rejects 0
+                let mut t = ValueTable::zeros(rows, table.dim()).unwrap();
+                for (local, global) in r.enumerate() {
+                    t.row_mut(local as u64).copy_from_slice(table.row(global));
+                }
+                t
+            })
+            .collect()
+    }
+
+    /// Drive the full staged pipeline (score in two query-contiguous
+    /// parts → per-shard select → merge → per-shard stage → combine)
+    /// and return `(merged, gathered)`.
+    fn run_staged_f64(
+        engine: &BatchLookupEngine,
+        queries: &[f64],
+        plan: &ShardPlan,
+        tables: &[ValueTable],
+        m: usize,
+    ) -> (BatchOutput, Vec<f32>) {
+        let n = queries.len() / 8;
+        let split = (n / 2) * 8;
+        let mut parts = vec![ScoredBatch::default(), ScoredBatch::default()];
+        engine.score_into(&queries[..split], &mut parts[0]);
+        engine.score_into(&queries[split..], &mut parts[1]);
+        let mut sels = vec![ShardSelection::default(); plan.n_shards()];
+        for (s, sel) in sels.iter_mut().enumerate() {
+            engine.select_owned(&parts, plan, s, sel);
+        }
+        let mut merged = BatchOutput::default();
+        engine.merge_into(&parts, &sels, &mut merged);
+        let mut stages = vec![GatherStage::default(); plan.n_shards()];
+        for (s, st) in stages.iter_mut().enumerate() {
+            engine.stage_gather(&merged, plan, s, plan.range(s).start, &tables[s], st);
+        }
+        let mut gathered = vec![0.0f32; n * m];
+        engine.combine_gather(&merged, plan, &stages, &mut gathered);
+        (merged, gathered)
+    }
+
+    #[test]
+    fn staged_pipeline_is_bit_identical_to_fused_f64() {
+        // the tentpole contract: for every shard count, the staged
+        // score/select/merge/gather pipeline reproduces the fused
+        // lookup→gather bit-for-bit — including the symmetric tie
+        // probes, whose equal weights exercise the canonical order at
+        // the merge boundary
+        let mut table = ValueTable::zeros(1 << 18, 16).unwrap();
+        table.randomize(21, 0.02);
+        let engine = BatchLookupEngine::new(torus(), 32);
+        let mut rng = Rng::new(123);
+        let mut queries = random_queries(&mut rng, 37, 9.0);
+        queries.extend(symmetric_probes());
+        let n = queries.len() / 8;
+
+        let mut fused = BatchOutput::default();
+        let mut fused_g = vec![0.0f32; n * 16];
+        engine.lookup_gather_ragged_into(&queries, &table, &mut fused, &mut fused_g);
+
+        for shards in [1usize, 2, 3, 4, 7] {
+            let plan = ShardPlan::new(table.rows(), shards);
+            let tables = shard_tables(&table, &plan);
+            let (merged, gathered) = run_staged_f64(&engine, &queries, &plan, &tables, 16);
+            assert_eq!(merged.indices, fused.indices, "{shards} shards");
+            assert_eq!(merged.weights, fused.weights, "{shards} shards");
+            assert_eq!(merged.total_weight, fused.total_weight, "{shards} shards");
+            assert_eq!(gathered, fused_g, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn staged_pipeline_is_bit_identical_to_fused_f32() {
+        let mut table = ValueTable::zeros(1 << 18, 16).unwrap();
+        table.randomize(21, 0.02);
+        let engine = BatchLookupEngine::new(torus(), 32);
+        let mut rng = Rng::new(321);
+        let mut queries = random_queries(&mut rng, 33, 9.0);
+        queries.extend(symmetric_probes());
+        let n = queries.len() / 8;
+
+        let mut fused = BatchOutput::default();
+        let mut fused_g = vec![0.0f32; n * 16];
+        engine.lookup_gather_ragged_f32_into(&queries, &table, &mut fused, &mut fused_g);
+
+        for shards in [1usize, 2, 4, 7] {
+            let plan = ShardPlan::new(table.rows(), shards);
+            let tables = shard_tables(&table, &plan);
+            let split = (n / 2) * 8;
+            let mut parts = vec![ScoredBatch::default(), ScoredBatch::default()];
+            engine.score_f32_into(&queries[..split], &mut parts[0]);
+            engine.score_f32_into(&queries[split..], &mut parts[1]);
+            let mut sels = vec![ShardSelection::default(); shards];
+            for (s, sel) in sels.iter_mut().enumerate() {
+                engine.select_owned(&parts, &plan, s, sel);
+            }
+            let mut merged = BatchOutput::default();
+            engine.merge_into(&parts, &sels, &mut merged);
+            assert_eq!(merged.indices, fused.indices, "{shards} shards");
+            assert_eq!(merged.weights, fused.weights, "{shards} shards");
+            assert_eq!(merged.total_weight, fused.total_weight, "{shards} shards");
+            let mut stages = vec![GatherStage::default(); shards];
+            for (s, st) in stages.iter_mut().enumerate() {
+                engine.stage_gather(&merged, &plan, s, plan.range(s).start, &tables[s], st);
+            }
+            let mut gathered = vec![0.0f32; n * 16];
+            engine.combine_gather(&merged, &plan, &stages, &mut gathered);
+            assert_eq!(gathered, fused_g, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn staged_q8_gather_is_bit_identical_to_fused_q8() {
+        // per-row quantization is local to the row, so compact shard
+        // tables quantize to the same codes/scales as the full table,
+        // and the combine replays the fused axpy_q8 kernel exactly
+        let mut table = ValueTable::zeros(1 << 18, 16).unwrap();
+        table.randomize(9, 0.02);
+        let qt = QuantizedValueTable::from_table(&table).unwrap();
+        let engine = BatchLookupEngine::new(torus(), 32);
+        let mut rng = Rng::new(14);
+        let queries = random_queries(&mut rng, 24, 8.0);
+        let n = 24;
+
+        let mut fused = BatchOutput::default();
+        let mut fused_g = vec![0.0f32; n * 16];
+        engine.lookup_gather_ragged_q8_into(&queries, &qt, &mut fused, &mut fused_g);
+
+        for shards in [2usize, 5] {
+            let plan = ShardPlan::new(table.rows(), shards);
+            let qtables: Vec<QuantizedValueTable> = shard_tables(&table, &plan)
+                .iter()
+                .map(|t| QuantizedValueTable::from_table(t).unwrap())
+                .collect();
+            let split = (n / 2) * 8;
+            let mut parts = vec![ScoredBatch::default(), ScoredBatch::default()];
+            engine.score_f32_into(&queries[..split], &mut parts[0]);
+            engine.score_f32_into(&queries[split..], &mut parts[1]);
+            let mut sels = vec![ShardSelection::default(); shards];
+            for (s, sel) in sels.iter_mut().enumerate() {
+                engine.select_owned(&parts, &plan, s, sel);
+            }
+            let mut merged = BatchOutput::default();
+            engine.merge_into(&parts, &sels, &mut merged);
+            assert_eq!(merged.indices, fused.indices, "{shards} shards");
+            assert_eq!(merged.weights, fused.weights, "{shards} shards");
+            let mut stages = vec![GatherStage::default(); shards];
+            for (s, st) in stages.iter_mut().enumerate() {
+                engine.stage_gather_q8(&merged, &plan, s, plan.range(s).start, &qtables[s], st);
+            }
+            let mut gathered = vec![0.0f32; n * 16];
+            engine.combine_gather(&merged, &plan, &stages, &mut gathered);
+            assert_eq!(gathered, fused_g, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn staged_pipeline_handles_empty_and_ragged_batches() {
+        let mut table = ValueTable::zeros(1 << 18, 8).unwrap();
+        table.randomize(4, 0.1);
+        let engine = BatchLookupEngine::new(torus(), 16);
+        let plan = ShardPlan::new(table.rows(), 3);
+        let tables = shard_tables(&table, &plan);
+        // empty batch: every stage degrades to zero queries
+        let (merged, gathered) = run_staged_f64(&engine, &[], &plan, &tables, 8);
+        assert_eq!(merged.queries(), 0);
+        assert!(gathered.is_empty());
+        // ragged gather output: only the first N x m elements written
+        let mut rng = Rng::new(12);
+        let queries = random_queries(&mut rng, 5, 7.0);
+        let (merged, _) = run_staged_f64(&engine, &queries, &plan, &tables, 8);
+        let sentinel = 123.5f32;
+        let mut ragged = vec![sentinel; 12 * 8];
+        let mut stages = vec![GatherStage::default(); 3];
+        for (s, st) in stages.iter_mut().enumerate() {
+            engine.stage_gather(&merged, &plan, s, plan.range(s).start, &tables[s], st);
+        }
+        engine.combine_gather(&merged, &plan, &stages, &mut ragged);
+        let mut exact = BatchOutput::default();
+        let mut want = vec![0.0f32; 5 * 8];
+        engine.lookup_gather_ragged_into(&queries, &table, &mut exact, &mut want);
+        assert_eq!(&ragged[..5 * 8], &want[..]);
+        assert!(ragged[5 * 8..].iter().all(|&v| v == sentinel), "tail overwritten");
     }
 
     #[test]

@@ -29,7 +29,10 @@ pub mod support;
 pub mod torus;
 pub mod zn;
 
-pub use batch::{BatchLookupEngine, BatchOutput};
+pub use batch::{
+    BatchLookupEngine, BatchOutput, GatherStage, MergeWeight, ScoredBatch, ShardPlan,
+    ShardSelection,
+};
 pub use e8::{is_lattice_point, quantize, reduce, Reduction};
 pub use kernel::{kernel_f, TOTAL_WEIGHT_LOWER};
 pub use lookup::{LatticeLookup, LookupResult};

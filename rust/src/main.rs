@@ -79,6 +79,11 @@ COMMANDS:
               path; f64 is the bit-exact training-identical reference,
               f32-q8 gathers from int8-quantized value rows (see
               docs/performance.md; LRAM_SIMD=off forces scalar f32);
+              --shards N partitions the value table row-wise across N
+              in-process shard workers (one thread per shard; f64 output
+              stays bit-identical to --shards 1; a checkpoint saved with
+              N shards must be served with --shards N or reassembled
+              with --shards 1 — see docs/serving.md);
               --http-workers N, --max-pending N and
               --keep-alive-timeout SECS tune the keep-alive worker-pool
               front door; --request-timeout-ms N expires queued requests
@@ -133,6 +138,7 @@ fn engine_model_from_args(args: &Args) -> Result<EngineConfig> {
         torus_k,
         threads: args.usize("threads", d.threads)?,
         query_scale: args.f64("query-scale", d.query_scale)?,
+        shards: args.usize("shards", d.shards)?,
         ..d
     })
 }
@@ -367,12 +373,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // serving numeric path: f32 SIMD by default; f64 stays available as the
     // bit-exact training-identical reference (see docs/performance.md)
     let numeric_path = NumericPath::parse(&args.str("numeric-path", "f32"))?;
+    // value-table sharding: N > 1 partitions the table row-wise across N
+    // in-process shard workers (see docs/serving.md)
+    let shards = args.usize("shards", 1)?;
+    anyhow::ensure!(shards >= 1, "--shards must be at least 1");
     let (mut engine_ckpt, artifact_ckpt) = match args.flags.get("checkpoint") {
         Some(ckpt) => lram::server::resolve_checkpoint_flag(ckpt, args.usize("threads", 1)?)?,
         None => (None, None),
     };
     if let Some(ck) = engine_ckpt.as_mut() {
         ck.numeric_path = numeric_path;
+        ck.shards = shards;
     }
     // the tokenizer must match the training pipeline: rebuild it from the
     // same corpus spec (a checkpoint's recorded fingerprint is validated
@@ -409,6 +420,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         EngineConfig {
             threads: args.usize("threads", 1)?,
             numeric_path,
+            shards,
             ..EngineConfig::default()
         },
         engine_ckpt,

@@ -84,6 +84,28 @@ impl AccessStats {
     pub fn total_accesses(&self) -> u64 {
         self.total_hits
     }
+
+    /// [`Self::utilization`] restricted to a row range — per-shard
+    /// utilization for `/stats` under sharded serving.  O(range len).
+    pub fn utilization_in(&self, range: std::ops::Range<u64>) -> f64 {
+        let lo = (range.start as usize).min(self.hits.len());
+        let hi = (range.end as usize).min(self.hits.len());
+        if lo >= hi {
+            return 0.0;
+        }
+        let used = self.hits[lo..hi].iter().filter(|&&h| h > 0).count();
+        used as f64 / (hi - lo) as f64
+    }
+
+    /// Total accesses landing in a row range (per-shard `/stats`).
+    pub fn hits_in(&self, range: std::ops::Range<u64>) -> u64 {
+        let lo = (range.start as usize).min(self.hits.len());
+        let hi = (range.end as usize).min(self.hits.len());
+        if lo >= hi {
+            return 0;
+        }
+        self.hits[lo..hi].iter().sum()
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +150,24 @@ mod tests {
         s.record(6, 0.0); // zero weight: not an access
         assert!((s.utilization() - 2.0 / 8.0).abs() < 1e-12);
         assert_eq!(s.total_accesses(), 3);
+    }
+
+    #[test]
+    fn range_restricted_stats_match_per_shard_expectations() {
+        let mut s = AccessStats::new(16);
+        s.record(1, 1.0);
+        s.record(1, 1.0);
+        s.record(3, 0.5);
+        s.record(9, 0.25);
+        // shard [0, 8): rows 1 and 3 used, 3 accesses
+        assert!((s.utilization_in(0..8) - 2.0 / 8.0).abs() < 1e-12);
+        assert_eq!(s.hits_in(0..8), 3);
+        // shard [8, 16): row 9 used, 1 access
+        assert!((s.utilization_in(8..16) - 1.0 / 8.0).abs() < 1e-12);
+        assert_eq!(s.hits_in(8..16), 1);
+        // empty and out-of-range requests degrade to zero
+        assert_eq!(s.utilization_in(4..4), 0.0);
+        assert_eq!(s.hits_in(16..32), 0);
     }
 
     #[test]

@@ -16,15 +16,19 @@
 //!                                                   y ─w_out─► log-softmax
 //! ```
 
+pub mod sharded;
+
 use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::checkpoint::{Checkpoint, CheckpointWriter, Manifest, ModelDesc};
 use crate::lattice::e8::vec8;
-use crate::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
+use crate::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, ShardPlan, TorusK};
 use crate::memstore::{AccessStats, DenseAdam, QuantizedValueTable, SparseAdam, ValueTable};
 use crate::util::rng::Rng;
+
+pub use sharded::{ShardedMemory, ValueShard};
 
 /// Numeric implementation of the serving memory stage.
 ///
@@ -93,6 +97,11 @@ pub struct EngineConfig {
     /// numeric implementation of the memory stage (serving knob, not
     /// model geometry — defaults to the bit-exact f64 reference)
     pub numeric_path: NumericPath,
+    /// value-table shard workers (serving knob, not model geometry):
+    /// 1 = the classic fused single-owner path; N > 1 partitions the
+    /// table rows across N worker threads ([`ShardedMemory`]),
+    /// bit-identical per numeric path
+    pub shards: usize,
 }
 
 impl Default for EngineConfig {
@@ -110,6 +119,7 @@ impl Default for EngineConfig {
             query_scale: 4.0,
             track_stats: true,
             numeric_path: NumericPath::F64,
+            shards: 1,
         }
     }
 }
@@ -147,6 +157,7 @@ impl EngineConfig {
             query_scale: desc.query_scale,
             track_stats,
             numeric_path: NumericPath::F64,
+            shards: 1,
         }
     }
 }
@@ -172,6 +183,24 @@ pub mod tensor_names {
     /// f32-q8 serving path can map its table zero-copy.
     pub const VALUES_Q8: &str = "values_q8";
     pub const VALUES_Q8_SCALE: &str = "values_q8_scale";
+
+    /// Per-shard value-table blob (checkpoint format version 4, sharded
+    /// saves): shard `k`'s slice of `values`, rows `bounds[k]..bounds[k+1]`
+    /// of the manifest's shard plan.
+    pub fn values_shard(k: usize) -> String {
+        format!("values_shard_{k}")
+    }
+
+    /// Per-shard quantized codes (v4 sharded companion of [`VALUES_Q8`]).
+    pub fn values_q8_shard(k: usize) -> String {
+        format!("values_q8_shard_{k}")
+    }
+
+    /// Per-shard quantization scales (v4 sharded companion of
+    /// [`VALUES_Q8_SCALE`]).
+    pub fn values_q8_scale_shard(k: usize) -> String {
+        format!("values_q8_scale_shard_{k}")
+    }
 }
 
 /// The LRAM MLM: dense prefix → fused lattice lookup+gather → dense
@@ -200,6 +229,15 @@ pub struct LramMlm {
     /// (quantized on switch, or injected zero-copy from a checkpoint via
     /// [`Self::set_quantized_table`])
     qtable: Option<QuantizedValueTable>,
+    /// sharded memory executor; `Some` iff `cfg.shards > 1`, in which
+    /// case the memory stage fans out over its workers instead of the
+    /// fused single-owner path
+    sharded: Option<ShardedMemory>,
+    /// whether `table` holds every logical row.  False only when loaded
+    /// from a sharded (v4) checkpoint with compact per-worker slices —
+    /// then `table` is a lazily-mapped zero stub the sharded forward
+    /// never touches, and the oracle path / re-saving are refused.
+    table_full: bool,
     // reusable scratch, allocated once at max-batch size; pub(crate) so
     // the trainer's backward pass can read the forward intermediates
     pub(crate) h: Vec<f32>,
@@ -248,7 +286,32 @@ impl LramMlm {
         let wq = normal(cfg.heads * 8 * cfg.width, inv_sqrt_w);
         let wo = normal(cfg.width * cfg.heads * cfg.m, 0.05);
         let w_out = normal(vocab * cfg.width, inv_sqrt_w);
-        Self::assemble(cfg, vocab, embed, pos, wq, wo, w_out, engine, table)
+        let mut model = Self::assemble(cfg, vocab, embed, pos, wq, wo, w_out, engine, table)?;
+        if model.cfg.shards > 1 {
+            model.attach_seeded_shards()?;
+        }
+        Ok(model)
+    }
+
+    /// Shard workers for a seed-weight model: every worker re-creates
+    /// the full deterministic table from the seed (byte-identical to the
+    /// coordinator's, laziness preserved) and quantizes its own codes
+    /// when the path needs them.
+    fn attach_seeded_shards(&mut self) -> Result<()> {
+        let rows = self.table.rows();
+        let plan = ShardPlan::new(rows, self.cfg.shards);
+        let mut shards = Vec::with_capacity(self.cfg.shards);
+        for _ in 0..self.cfg.shards {
+            let mut t = ValueTable::zeros(rows, self.cfg.m)?;
+            t.randomize_rows(self.cfg.seed ^ 0xE8, 0.02, rows.min(1 << 15));
+            let q8 = match self.path {
+                NumericPath::F32Q8 => Some(QuantizedValueTable::from_table(&t)?),
+                _ => None,
+            };
+            shards.push(ValueShard { base: 0, table: t, q8 });
+        }
+        self.sharded = Some(ShardedMemory::new(&self.engine, plan, shards)?);
+        Ok(())
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -276,6 +339,8 @@ impl LramMlm {
             table,
             path: NumericPath::F64,
             qtable: None,
+            sharded: None,
+            table_full: true,
             h: vec![0.0; max_positions * cfg.width],
             queries: vec![0.0; max_positions * cfg.heads * 8],
             lk: BatchOutput::default(),
@@ -296,11 +361,27 @@ impl LramMlm {
     /// value table once (int8 codes + per-row scales) unless a quantized
     /// table was already injected ([`Self::set_quantized_table`]).
     pub fn set_numeric_path(&mut self, path: NumericPath) -> Result<()> {
-        if path == NumericPath::F32Q8 && self.qtable.is_none() {
-            self.qtable = Some(QuantizedValueTable::from_table(&self.table)?);
+        if path == NumericPath::F32Q8 {
+            if let Some(sh) = &self.sharded {
+                // sharded q8 gathers from per-worker quantized slices,
+                // never from a coordinator-side table
+                ensure!(
+                    sh.quantized(),
+                    "the sharded memory has no quantized value slices; save a sharded \
+                     checkpoint and reload it, or serve with shards = 1"
+                );
+            } else if self.qtable.is_none() {
+                self.qtable = Some(QuantizedValueTable::from_table(&self.table)?);
+            }
         }
         self.path = path;
         Ok(())
+    }
+
+    /// The shard plan when the memory stage runs sharded (`/stats`
+    /// per-shard reporting), `None` on the fused single-owner path.
+    pub fn shard_plan(&self) -> Option<&ShardPlan> {
+        self.sharded.as_ref().map(ShardedMemory::plan)
     }
 
     /// Inject a pre-built quantized value table (e.g. mapped zero-copy
@@ -324,7 +405,31 @@ impl LramMlm {
     /// costs physical memory only for rows actually served.  Every
     /// shape is validated against the manifest geometry; mismatches are
     /// loud errors, never silently misweighted models.
+    ///
+    /// Sharded (v4) checkpoints are reassembled into one logical table
+    /// here; sharded *serving* goes through
+    /// [`Self::from_checkpoint_sharded`] instead.
     pub fn from_checkpoint(ck: &Checkpoint, threads: usize) -> Result<Self> {
+        Self::from_checkpoint_sharded(ck, threads, 1, NumericPath::F64)
+    }
+
+    /// [`Self::from_checkpoint`] with shard-aware table sourcing:
+    ///
+    /// | checkpoint \ `shards` | 1                      | N > 1                       |
+    /// |-----------------------|------------------------|-----------------------------|
+    /// | unsharded (v1–v3, v4) | classic zero-copy map  | N full copy-on-write views  |
+    /// | sharded v4, N shards  | reassemble (faults all)| compact per-shard maps      |
+    /// | sharded v4, M ≠ N     | reassemble (faults all)| loud error naming M         |
+    ///
+    /// `numeric_path` decides whether per-worker quantized slices are
+    /// loaded (mapped from the checkpoint when present, re-quantized
+    /// otherwise); the returned model already runs that path.
+    pub fn from_checkpoint_sharded(
+        ck: &Checkpoint,
+        threads: usize,
+        shards: usize,
+        numeric_path: NumericPath,
+    ) -> Result<Self> {
         use tensor_names::*;
         let desc = &ck.manifest.model;
         let cfg = EngineConfig::from_desc(desc, threads, false);
@@ -355,20 +460,158 @@ impl LramMlm {
         expect_2d(WQ, hd * 8, w)?;
         expect_2d(WO, w, hd * m)?;
         expect_2d(W_OUT, vocab as u64, w)?;
-        expect_2d(VALUES, torus.num_locations(), m)?;
 
-        let table = ck.map_table(VALUES)?;
-        Self::assemble(
-            cfg,
-            vocab,
+        let locations = torus.num_locations();
+        let m_usize = cfg.m;
+        let n = shards.max(1);
+        let want_q8 = numeric_path == NumericPath::F32Q8;
+        let dense = (
             ck.read_f32(EMBED)?,
             ck.read_f32(POS)?,
             ck.read_f32(WQ)?,
             ck.read_f32(WO)?,
             ck.read_f32(W_OUT)?,
-            engine,
-            table,
-        )
+        );
+
+        let mut model = match &ck.manifest.shards {
+            None => {
+                // unsharded table blob (v1–v3, or an unsharded v4 save)
+                expect_2d(VALUES, locations, m)?;
+                let table = ck.map_table(VALUES)?;
+                let mut model = Self::assemble(
+                    cfg, vocab, dense.0, dense.1, dense.2, dense.3, dense.4, engine, table,
+                )?;
+                if n > 1 {
+                    // each worker gets its own full copy-on-write view;
+                    // ownership still partitions the *rows* exactly once
+                    let plan = ShardPlan::new(locations, n);
+                    let mut worker_shards = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let t = ck.map_table(VALUES)?;
+                        let q8 = if want_q8 {
+                            Some(Self::q8_from_unsharded(ck, &t)?)
+                        } else {
+                            None
+                        };
+                        worker_shards.push(ValueShard { base: 0, table: t, q8 });
+                    }
+                    model.sharded = Some(ShardedMemory::new(&model.engine, plan, worker_shards)?);
+                    model.cfg.shards = n;
+                }
+                model
+            }
+            Some(bounds) => {
+                let plan = ShardPlan::from_bounds(bounds.clone()).with_context(|| {
+                    format!("checkpoint {}: bad shard manifest", ck.manifest.checkpoint_id)
+                })?;
+                ensure!(
+                    plan.rows() == locations,
+                    "checkpoint {}: shard manifest covers {} rows, torus geometry has {}",
+                    ck.manifest.checkpoint_id,
+                    plan.rows(),
+                    locations
+                );
+                let saved = plan.n_shards();
+                if n == 1 {
+                    // reassemble one logical table — faults every row in,
+                    // so this is for training/inspection, not huge serving
+                    let mut table = ValueTable::zeros(locations, m_usize)?;
+                    for k in 0..saved {
+                        let r = plan.range(k);
+                        if r.start == r.end {
+                            continue;
+                        }
+                        let name = values_shard(k);
+                        expect_2d(&name, r.end - r.start, m)?;
+                        let data = ck.read_f32(&name)?;
+                        for (i, row) in (r.start..r.end).enumerate() {
+                            table
+                                .row_mut(row)
+                                .copy_from_slice(&data[i * m_usize..(i + 1) * m_usize]);
+                        }
+                    }
+                    Self::assemble(
+                        cfg, vocab, dense.0, dense.1, dense.2, dense.3, dense.4, engine, table,
+                    )?
+                } else {
+                    ensure!(
+                        n == saved,
+                        "checkpoint {} was saved with {saved} shards; serve it with \
+                         --shards {saved}, or --shards 1 to reassemble the full table",
+                        ck.manifest.checkpoint_id
+                    );
+                    let mut worker_shards = Vec::with_capacity(saved);
+                    for k in 0..saved {
+                        let r = plan.range(k);
+                        let owned = r.end - r.start;
+                        let name = values_shard(k);
+                        expect_2d(&name, owned, m)?;
+                        // empty shards get a 1-row zero table (mmap
+                        // rejects zero length); nothing gathers from it
+                        let t = if owned == 0 {
+                            ValueTable::zeros(1, m_usize)?
+                        } else {
+                            ck.map_table(&name)?
+                        };
+                        let q8 = if want_q8 {
+                            Some(Self::q8_for_shard(ck, k, &t, owned)?)
+                        } else {
+                            None
+                        };
+                        worker_shards.push(ValueShard { base: r.start, table: t, q8 });
+                    }
+                    // the coordinator's table is a lazily-mapped zero
+                    // stub: the sharded forward never reads it, and
+                    // table_full = false refuses the paths that would
+                    // (scalar oracle, re-save)
+                    let stub = ValueTable::zeros(locations, m_usize)?;
+                    let mut model = Self::assemble(
+                        cfg, vocab, dense.0, dense.1, dense.2, dense.3, dense.4, engine, stub,
+                    )?;
+                    model.table_full = false;
+                    model.sharded = Some(ShardedMemory::new(&model.engine, plan, worker_shards)?);
+                    model.cfg.shards = n;
+                    model
+                }
+            }
+        };
+        model.set_numeric_path(numeric_path)?;
+        Ok(model)
+    }
+
+    /// Quantized slice for one worker from an *unsharded* checkpoint:
+    /// map the monolithic q8 blobs zero-copy when present, else
+    /// re-quantize from the worker's own table view.
+    fn q8_from_unsharded(ck: &Checkpoint, table: &ValueTable) -> Result<QuantizedValueTable> {
+        use tensor_names::*;
+        if ck.manifest.has_tensor(VALUES_Q8) && ck.manifest.has_tensor(VALUES_Q8_SCALE) {
+            let codes = ck.map_i8(VALUES_Q8)?;
+            let scales = ck.read_f32(VALUES_Q8_SCALE)?;
+            QuantizedValueTable::from_parts(codes, scales, table.rows(), table.dim())
+        } else {
+            QuantizedValueTable::from_table(table)
+        }
+    }
+
+    /// Quantized slice for shard `k` of a sharded (v4) checkpoint.
+    fn q8_for_shard(
+        ck: &Checkpoint,
+        k: usize,
+        table: &ValueTable,
+        owned: u64,
+    ) -> Result<QuantizedValueTable> {
+        use tensor_names::*;
+        let codes_name = values_q8_shard(k);
+        let scale_name = values_q8_scale_shard(k);
+        if owned > 0 && ck.manifest.has_tensor(&codes_name) && ck.manifest.has_tensor(&scale_name)
+        {
+            let codes = ck.map_i8(&codes_name)?;
+            let scales = ck.read_f32(&scale_name)?;
+            QuantizedValueTable::from_parts(codes, scales, owned, table.dim())
+        } else {
+            // empty shard (placeholder table) or pre-q8 blobs: quantize
+            QuantizedValueTable::from_table(table)
+        }
     }
 
     /// Save the model (and optionally the optimizer state: sparse-Adam
@@ -392,6 +635,11 @@ impl LramMlm {
         keep: usize,
     ) -> Result<Manifest> {
         use tensor_names::*;
+        ensure!(
+            self.table_full,
+            "this model was loaded from a sharded checkpoint with compact table slices; \
+             reload it with shards = 1 (reassembles the full table) before re-saving"
+        );
         let mut w = CheckpointWriter::new(dir)?.with_fsync(fsync).with_keep(keep);
         let (wd, hd, m) = (self.cfg.width as u64, self.cfg.heads as u64, self.cfg.m as u64);
         w.write_f32(EMBED, &[self.vocab as u64, wd], &self.embed)?;
@@ -400,14 +648,35 @@ impl LramMlm {
         w.write_f32(WO, &[wd, hd * m], &self.wo)?;
         w.write_f32(W_OUT, &[self.vocab as u64, wd], &self.w_out)?;
         let rows = self.table.rows();
-        w.write_f32(VALUES, &[rows, m], self.table.data())?;
         // always write the quantized companion (format version 3): the
         // f32-q8 serving path maps it zero-copy instead of re-quantizing
         // a multi-GB table at every load.  Quantize fresh from the live
         // table — a cached self.qtable could predate training updates.
         let q = QuantizedValueTable::from_table(&self.table)?;
-        w.write_i8(VALUES_Q8, &[rows, m], q.data())?;
-        w.write_f32(VALUES_Q8_SCALE, &[rows], q.scales())?;
+        if self.cfg.shards > 1 {
+            // sharded save (format version 4): the value table and its
+            // q8 companions go down as per-shard slices, plus the shard
+            // manifest — so serving can map each shard compactly
+            let plan = ShardPlan::new(rows, self.cfg.shards);
+            w = w.with_shards(plan.bounds().to_vec());
+            let mu = self.cfg.m;
+            for k in 0..plan.n_shards() {
+                let r = plan.range(k);
+                let owned = r.end - r.start;
+                let (lo, hi) = (r.start as usize * mu, r.end as usize * mu);
+                w.write_f32(&values_shard(k), &[owned, m], &self.table.data()[lo..hi])?;
+                w.write_i8(&values_q8_shard(k), &[owned, m], &q.data()[lo..hi])?;
+                w.write_f32(
+                    &values_q8_scale_shard(k),
+                    &[owned],
+                    &q.scales()[r.start as usize..r.end as usize],
+                )?;
+            }
+        } else {
+            w.write_f32(VALUES, &[rows, m], self.table.data())?;
+            w.write_i8(VALUES_Q8, &[rows, m], q.data())?;
+            w.write_f32(VALUES_Q8_SCALE, &[rows], q.scales())?;
+        }
         if let Some(opt) = opt {
             ensure!(
                 opt.first_moment().rows() == rows && opt.first_moment().dim() == self.cfg.m,
@@ -521,6 +790,11 @@ impl LramMlm {
         // oracle, bit-identical, for differential testing)
         let n_queries = positions * heads;
         if use_oracle {
+            ensure!(
+                self.table_full,
+                "the scalar oracle path needs the full value table, which this model \
+                 (loaded from a sharded checkpoint) does not hold"
+            );
             let k_top = self.engine.k_top;
             let mut oracle = LatticeLookup::new(self.engine.torus, k_top);
             let mut idx_row = vec![0u64; k_top];
@@ -548,6 +822,21 @@ impl LramMlm {
                 if let Some(stats) = stats.as_deref_mut() {
                     stats.record_batch_f32(&idx_row, &w_row);
                 }
+            }
+        } else if let Some(sharded) = self.sharded.as_mut() {
+            // fan the batch out across the shard workers; a dead worker
+            // is an error (poisoned backend), never a partial answer
+            let f32_scoring = self.path != NumericPath::F64;
+            let q8 = self.path == NumericPath::F32Q8;
+            sharded.lookup_gather(
+                &self.queries[..n_queries * 8],
+                f32_scoring,
+                q8,
+                &mut self.lk,
+                &mut self.gathered,
+            )?;
+            if let Some(stats) = stats.as_deref_mut() {
+                stats.record_batch_f32(&self.lk.indices, &self.lk.weights);
             }
         } else {
             match (self.path, self.qtable.as_ref()) {
@@ -751,6 +1040,98 @@ mod tests {
         let q = QuantizedValueTable::from_parts(map, scales, rows, 8).unwrap();
         let fresh = QuantizedValueTable::from_table(&a.table).unwrap();
         assert_eq!(q.data(), fresh.data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_forward_is_bit_identical_to_unsharded() {
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 7) % 60 + 2).collect();
+        let mut base = LramMlm::seeded(tiny_cfg(), 64).unwrap();
+        let la = base.forward(&tokens, false, None).unwrap();
+        for shards in [2usize, 3] {
+            let cfg = EngineConfig { shards, ..tiny_cfg() };
+            let mut m = LramMlm::seeded(cfg, 64).unwrap();
+            assert!(m.shard_plan().is_some());
+            let lb = m.forward(&tokens, false, None).unwrap();
+            assert_eq!(la.len(), lb.len());
+            for (x, y) in la.iter().zip(&lb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{shards} shards");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_checkpoint_roundtrip_across_load_modes() {
+        let dir = tmp_dir("shrt");
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 5) % 60 + 2).collect();
+        let cfg = EngineConfig { shards: 3, ..tiny_cfg() };
+        let mut a = LramMlm::seeded(cfg, 64).unwrap();
+        let la = a.forward(&tokens, false, None).unwrap();
+        a.save_checkpoint(&dir, 1, "feedbeef00000000", None, None, false, 1).unwrap();
+        let ck = Checkpoint::open(&dir).unwrap();
+        assert_eq!(ck.manifest.shards.as_ref().map(Vec::len), Some(4), "N+1 bounds");
+        assert!(ck.manifest.has_tensor(&tensor_names::values_shard(0)));
+        assert!(!ck.manifest.has_tensor(tensor_names::VALUES));
+        // matching shard count: compact per-shard maps
+        let mut b = LramMlm::from_checkpoint_sharded(&ck, 1, 3, NumericPath::F64).unwrap();
+        let lb = b.forward(&tokens, false, None).unwrap();
+        // shards = 1: reassembled full table, fused path
+        let mut c = LramMlm::from_checkpoint(&ck, 1).unwrap();
+        let lc = c.forward(&tokens, false, None).unwrap();
+        for ((x, y), z) in la.iter().zip(&lb).zip(&lc) {
+            assert_eq!(x.to_bits(), y.to_bits());
+            assert_eq!(x.to_bits(), z.to_bits());
+        }
+        // mismatched shard count is refused with guidance
+        let err = format!(
+            "{:#}",
+            LramMlm::from_checkpoint_sharded(&ck, 1, 2, NumericPath::F64).unwrap_err()
+        );
+        assert!(err.contains("--shards 3"), "{err}");
+        // a compact-slice model refuses to re-save (its table is a stub)
+        assert!(b.save_checkpoint(&dir, 2, "feedbeef00000000", None, None, false, 1).is_err());
+        // ...and refuses the oracle path for the same reason
+        assert!(b.forward(&tokens, true, None).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unsharded_checkpoint_serves_sharded_through_full_views() {
+        let dir = tmp_dir("uns");
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 3) % 60 + 2).collect();
+        let mut a = LramMlm::seeded(tiny_cfg(), 64).unwrap();
+        let la = a.forward(&tokens, false, None).unwrap();
+        a.save_checkpoint(&dir, 1, "feedbeef00000000", None, None, false, 1).unwrap();
+        let ck = Checkpoint::open(&dir).unwrap();
+        assert_eq!(ck.manifest.shards, None);
+        let mut b = LramMlm::from_checkpoint_sharded(&ck, 1, 4, NumericPath::F64).unwrap();
+        let lb = b.forward(&tokens, false, None).unwrap();
+        for (x, y) in la.iter().zip(&lb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_q8_serving_matches_the_fused_q8_path() {
+        let dir = tmp_dir("shq8");
+        let cfg = EngineConfig { shards: 2, ..tiny_cfg() };
+        let a = LramMlm::seeded(cfg, 64).unwrap();
+        a.save_checkpoint(&dir, 1, "feedbeef00000000", None, None, false, 1).unwrap();
+        let ck = Checkpoint::open(&dir).unwrap();
+        assert!(ck.manifest.has_tensor(&tensor_names::values_q8_shard(1)));
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 9) % 60 + 2).collect();
+        // sharded: per-shard codes mapped from the checkpoint
+        let mut b = LramMlm::from_checkpoint_sharded(&ck, 1, 2, NumericPath::F32Q8).unwrap();
+        assert_eq!(b.numeric_path(), NumericPath::F32Q8);
+        let lb = b.forward(&tokens, false, None).unwrap();
+        // fused: reassembled table, re-quantized — same codes row-wise,
+        // and the staged gather replays the fused op order bit-exactly
+        let mut c = LramMlm::from_checkpoint_sharded(&ck, 1, 1, NumericPath::F32Q8).unwrap();
+        let lc = c.forward(&tokens, false, None).unwrap();
+        for (x, y) in lb.iter().zip(&lc) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,493 @@
+//! Sharded value-table serving: one persistent worker thread per shard.
+//!
+//! [`ShardedMemory`] partitions the logical value table's rows across N
+//! in-process shard workers (a [`crate::lattice::ShardPlan`] assigns
+//! every torus row to exactly one owner) and serves each batch through
+//! the staged [`crate::lattice::BatchLookupEngine`] API in three
+//! fan-out/fan-in rounds over plain mpsc channels:
+//!
+//! ```text
+//! round 1  score   workers score disjoint *query* slices (any worker
+//!                  can score any query — scoring needs no table rows)
+//! round 2  select  every worker sees all scored candidates and keeps
+//!                  the per-query top-k among the rows *it owns*;
+//!                  the coordinator merges the partial top-ks with the
+//!                  same canonical order as the fused path
+//! round 3  gather  each worker stages its owned surviving rows from
+//!                  its table slice; the coordinator combines them in
+//!                  canonical slot order
+//! ```
+//!
+//! The protocol is designed for bit-identity with the single-shard fused
+//! path on every numeric path (f64 / f32 / f32-q8): selection merges
+//! with the exact canonical tie rule, and the combine step replays the
+//! fused gather's floating-point operation sequence (see
+//! `BatchLookupEngine::combine_gather`).  Differential tests pin this.
+//!
+//! Workers hold their table slice for the life of the model (NUMA- and
+//! cache-friendly: a row is only ever touched by its owner's thread) and
+//! die by channel disconnect.  A dead worker surfaces as an `Err` from
+//! [`ShardedMemory::lookup_gather`], which serving treats like any other
+//! poisoned-backend error (supervised rebuild), never a wrong answer.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::lattice::{
+    BatchLookupEngine, BatchOutput, GatherStage, ScoredBatch, ShardPlan, ShardSelection,
+};
+use crate::memstore::{QuantizedValueTable, ValueTable};
+
+/// One shard's slice of the logical value table, owned by its worker.
+pub struct ValueShard {
+    /// Logical row id of `table`'s first row.  A *compact* per-shard
+    /// table (loaded from a v4 sharded checkpoint) sets this to the
+    /// shard's first owned row; a *full* table view (random init, or an
+    /// unsharded checkpoint mapped copy-on-write per worker) sets 0.
+    pub base: u64,
+    pub table: ValueTable,
+    /// Quantized companion for the f32-q8 path; sharded q8 serving
+    /// requires every shard to carry one.
+    pub q8: Option<QuantizedValueTable>,
+}
+
+/// Fan-out work items.  `Arc` payloads are shared read-only across all
+/// workers; each round's reply must arrive before the next round is
+/// sent, so a worker never holds two jobs.
+enum Job {
+    Score { queries: Arc<Vec<f64>>, lo: usize, hi: usize, f32_scoring: bool },
+    SelectF64 { scored: Arc<Vec<ScoredBatch<f64>>> },
+    SelectF32 { scored: Arc<Vec<ScoredBatch<f32>>> },
+    Gather { merged: Arc<BatchOutput>, q8: bool },
+}
+
+enum Reply {
+    ScoredF64(ScoredBatch<f64>),
+    ScoredF32(ScoredBatch<f32>),
+    SelectedF64(ShardSelection<f64>),
+    SelectedF32(ShardSelection<f32>),
+    Gathered(GatherStage),
+}
+
+struct Worker {
+    /// `None` only during shutdown (dropping the sender is the stop
+    /// signal — no raw locks, no poison state).
+    jobs: Option<mpsc::Sender<Job>>,
+    replies: mpsc::Receiver<Reply>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Worker {
+    fn send(&self, shard: usize, job: Job) -> Result<()> {
+        self.jobs
+            .as_ref()
+            .and_then(|tx| tx.send(job).ok())
+            .ok_or_else(|| anyhow!("shard worker {shard} died (send)"))
+    }
+
+    fn recv(&self, shard: usize) -> Result<Reply> {
+        self.replies.recv().map_err(|_| anyhow!("shard worker {shard} died (recv)"))
+    }
+}
+
+fn worker_loop(
+    engine: BatchLookupEngine,
+    plan: ShardPlan,
+    shard: usize,
+    data: ValueShard,
+    jobs: mpsc::Receiver<Job>,
+    replies: mpsc::Sender<Reply>,
+) {
+    while let Ok(job) = jobs.recv() {
+        let reply = match job {
+            Job::Score { queries, lo, hi, f32_scoring } => {
+                let slice = &queries[lo * 8..hi * 8];
+                if f32_scoring {
+                    let mut out = ScoredBatch::default();
+                    engine.score_f32_into(slice, &mut out);
+                    Reply::ScoredF32(out)
+                } else {
+                    let mut out = ScoredBatch::default();
+                    engine.score_into(slice, &mut out);
+                    Reply::ScoredF64(out)
+                }
+            }
+            Job::SelectF64 { scored } => {
+                let mut out = ShardSelection::default();
+                engine.select_owned(&scored, &plan, shard, &mut out);
+                Reply::SelectedF64(out)
+            }
+            Job::SelectF32 { scored } => {
+                let mut out = ShardSelection::default();
+                engine.select_owned(&scored, &plan, shard, &mut out);
+                Reply::SelectedF32(out)
+            }
+            Job::Gather { merged, q8 } => {
+                let mut out = GatherStage::default();
+                match (q8, data.q8.as_ref()) {
+                    (true, Some(q)) => {
+                        engine.stage_gather_q8(&merged, &plan, shard, data.base, q, &mut out)
+                    }
+                    // the coordinator only requests q8 when every shard
+                    // carries a quantized slice; degrade rather than die
+                    _ => {
+                        engine.stage_gather(&merged, &plan, shard, data.base, &data.table, &mut out)
+                    }
+                }
+                Reply::Gathered(out)
+            }
+        };
+        if replies.send(reply).is_err() {
+            return; // coordinator gone: shut down
+        }
+    }
+}
+
+/// The sharded memory stage: a [`ShardPlan`] plus one persistent worker
+/// thread per shard, driven through the staged lookup API.
+pub struct ShardedMemory {
+    /// Coordinator-side engine for the merge + combine steps (pure
+    /// compute on already-collected data; no table access).
+    engine: BatchLookupEngine,
+    plan: ShardPlan,
+    workers: Vec<Worker>,
+    /// Every shard carries a quantized slice, so the f32-q8 path may
+    /// run sharded.
+    has_q8: bool,
+}
+
+impl ShardedMemory {
+    /// Spawn one worker per shard.  `shards[s]` must cover the rows
+    /// `plan.range(s)` — either a compact slice (`base == range.start`)
+    /// or a view of the full table (`base == 0`, enough rows).
+    pub fn new(
+        engine: &BatchLookupEngine,
+        plan: ShardPlan,
+        shards: Vec<ValueShard>,
+    ) -> Result<Self> {
+        ensure!(
+            shards.len() == plan.n_shards(),
+            "shard plan has {} shards, got {} value shards",
+            plan.n_shards(),
+            shards.len()
+        );
+        for (s, shard) in shards.iter().enumerate() {
+            let range = plan.range(s);
+            if range.is_empty() {
+                continue; // nothing will ever be gathered from it
+            }
+            ensure!(
+                shard.base <= range.start && shard.base + shard.table.rows() >= range.end,
+                "shard {s}: table rows [{}, {}) do not cover owned rows [{}, {})",
+                shard.base,
+                shard.base + shard.table.rows(),
+                range.start,
+                range.end
+            );
+            if let Some(q) = &shard.q8 {
+                ensure!(
+                    q.rows() == shard.table.rows() && q.dim() == shard.table.dim(),
+                    "shard {s}: quantized slice is {} x {}, table slice is {} x {}",
+                    q.rows(),
+                    q.dim(),
+                    shard.table.rows(),
+                    shard.table.dim()
+                );
+            }
+        }
+        let has_q8 = shards.iter().all(|s| s.q8.is_some());
+        let mut workers = Vec::with_capacity(shards.len());
+        for (s, data) in shards.into_iter().enumerate() {
+            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+            // workers score serially; batch-level parallelism comes from
+            // the one-thread-per-shard fan-out itself
+            let worker_engine = BatchLookupEngine::with_threads(engine.torus, engine.k_top, 1);
+            let worker_plan = plan.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("lram-shard-{s}"))
+                .spawn(move || worker_loop(worker_engine, worker_plan, s, data, job_rx, reply_tx))
+                .with_context(|| format!("spawning shard worker {s}"))?;
+            workers.push(Worker { jobs: Some(job_tx), replies: reply_rx, handle: Some(handle) });
+        }
+        Ok(ShardedMemory { engine: engine.clone(), plan, workers, has_q8 })
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Whether the f32-q8 path can run sharded (every shard has codes).
+    pub fn quantized(&self) -> bool {
+        self.has_q8
+    }
+
+    /// One sharded memory stage: queries (`N x 8` row-major f64) in,
+    /// merged canonical top-k in `lookup` and weighted value rows in
+    /// `gathered` out — bit-identical to the fused single-owner path of
+    /// the same numeric path.  `Err` means a shard worker died; the
+    /// caller treats the backend as poisoned (it is rebuilt, results
+    /// are never partial).
+    pub fn lookup_gather(
+        &mut self,
+        queries: &[f64],
+        f32_scoring: bool,
+        q8: bool,
+        lookup: &mut BatchOutput,
+        gathered: &mut [f32],
+    ) -> Result<()> {
+        ensure!(queries.len() % 8 == 0, "queries must be N x 8 row-major");
+        let n = queries.len() / 8;
+        let n_shards = self.workers.len();
+        let q8 = q8 && self.has_q8;
+
+        // round 1: score disjoint, contiguous query slices
+        let queries = Arc::new(queries.to_vec());
+        let qb: Vec<usize> = (0..=n_shards).map(|s| n * s / n_shards).collect();
+        for (s, w) in self.workers.iter().enumerate() {
+            w.send(
+                s,
+                Job::Score { queries: Arc::clone(&queries), lo: qb[s], hi: qb[s + 1], f32_scoring },
+            )?;
+        }
+
+        // rounds 2 (select owned + merge) — monomorphic per score type
+        if f32_scoring {
+            let mut scored = Vec::with_capacity(n_shards);
+            for (s, w) in self.workers.iter().enumerate() {
+                match w.recv(s)? {
+                    Reply::ScoredF32(b) => scored.push(b),
+                    _ => bail!("shard worker {s}: protocol violation (expected f32 scores)"),
+                }
+            }
+            let scored = Arc::new(scored);
+            for (s, w) in self.workers.iter().enumerate() {
+                w.send(s, Job::SelectF32 { scored: Arc::clone(&scored) })?;
+            }
+            let mut selections = Vec::with_capacity(n_shards);
+            for (s, w) in self.workers.iter().enumerate() {
+                match w.recv(s)? {
+                    Reply::SelectedF32(sel) => selections.push(sel),
+                    _ => bail!("shard worker {s}: protocol violation (expected f32 selection)"),
+                }
+            }
+            self.engine.merge_into(scored.as_slice(), &selections, lookup);
+        } else {
+            let mut scored = Vec::with_capacity(n_shards);
+            for (s, w) in self.workers.iter().enumerate() {
+                match w.recv(s)? {
+                    Reply::ScoredF64(b) => scored.push(b),
+                    _ => bail!("shard worker {s}: protocol violation (expected f64 scores)"),
+                }
+            }
+            let scored = Arc::new(scored);
+            for (s, w) in self.workers.iter().enumerate() {
+                w.send(s, Job::SelectF64 { scored: Arc::clone(&scored) })?;
+            }
+            let mut selections = Vec::with_capacity(n_shards);
+            for (s, w) in self.workers.iter().enumerate() {
+                match w.recv(s)? {
+                    Reply::SelectedF64(sel) => selections.push(sel),
+                    _ => bail!("shard worker {s}: protocol violation (expected f64 selection)"),
+                }
+            }
+            self.engine.merge_into(scored.as_slice(), &selections, lookup);
+        }
+
+        // round 3: gather owned rows, combine in canonical slot order
+        let merged = Arc::new(lookup.clone());
+        for (s, w) in self.workers.iter().enumerate() {
+            w.send(s, Job::Gather { merged: Arc::clone(&merged), q8 })?;
+        }
+        let mut stages = Vec::with_capacity(n_shards);
+        for (s, w) in self.workers.iter().enumerate() {
+            match w.recv(s)? {
+                Reply::Gathered(st) => stages.push(st),
+                _ => bail!("shard worker {s}: protocol violation (expected gather stage)"),
+            }
+        }
+        self.engine.combine_gather(&merged, &self.plan, &stages, gathered);
+        Ok(())
+    }
+}
+
+impl Drop for ShardedMemory {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            w.jobs = None; // disconnect: the worker's recv() loop ends
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::TorusK;
+    use crate::util::rng::Rng;
+
+    fn engine() -> BatchLookupEngine {
+        BatchLookupEngine::with_threads(TorusK::new([4; 8]).unwrap(), 8, 1)
+    }
+
+    fn table(rows: u64, dim: usize, seed: u64) -> ValueTable {
+        let mut t = ValueTable::zeros(rows, dim).unwrap();
+        t.randomize(seed, 0.5);
+        t
+    }
+
+    /// Compact per-shard copies of `full` under `plan`.
+    fn compact_shards(full: &ValueTable, plan: &ShardPlan, q8: bool) -> Vec<ValueShard> {
+        (0..plan.n_shards())
+            .map(|s| {
+                let r = plan.range(s);
+                let rows = (r.end - r.start).max(1);
+                let mut t = ValueTable::zeros(rows, full.dim()).unwrap();
+                for row in r.clone() {
+                    t.row_mut(row - r.start).copy_from_slice(full.row(row));
+                }
+                let q8 = q8.then(|| QuantizedValueTable::from_table(&t).unwrap());
+                ValueShard { base: r.start, table: t, q8 }
+            })
+            .collect()
+    }
+
+    fn random_queries(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n * 8).map(|_| rng.uniform(-6.0, 6.0)).collect()
+    }
+
+    #[test]
+    fn sharded_f64_matches_fused_bitwise() {
+        let eng = engine();
+        let full = table(eng.torus.num_locations(), 4, 0xABC);
+        let mut rng = Rng::new(7);
+        for n_shards in [1usize, 2, 3, 5] {
+            let plan = ShardPlan::new(full.rows(), n_shards);
+            let mut mem =
+                ShardedMemory::new(&eng, plan.clone(), compact_shards(&full, &plan, false))
+                    .unwrap();
+            for n in [1usize, 3, 17] {
+                let q = random_queries(&mut rng, n);
+                let mut fused_lk = BatchOutput::default();
+                let mut fused_g = vec![0.0f32; n * 4];
+                eng.lookup_gather_ragged_into(&q, &full, &mut fused_lk, &mut fused_g);
+                let mut lk = BatchOutput::default();
+                let mut g = vec![0.0f32; n * 4];
+                mem.lookup_gather(&q, false, false, &mut lk, &mut g).unwrap();
+                assert_eq!(lk.indices, fused_lk.indices, "{n_shards} shards, batch {n}");
+                for (a, b) in lk.weights.iter().zip(&fused_lk.weights) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                for (a, b) in g.iter().zip(&fused_g) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{n_shards} shards, batch {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_f32_and_q8_match_their_fused_paths_bitwise() {
+        let eng = engine();
+        let full = table(eng.torus.num_locations(), 4, 0xDEF);
+        let qfull = QuantizedValueTable::from_table(&full).unwrap();
+        let mut rng = Rng::new(11);
+        let q = random_queries(&mut rng, 9);
+        let plan = ShardPlan::new(full.rows(), 3);
+        let mut mem =
+            ShardedMemory::new(&eng, plan.clone(), compact_shards(&full, &plan, true)).unwrap();
+        assert!(mem.quantized());
+
+        let mut fused_lk = BatchOutput::default();
+        let mut fused_g = vec![0.0f32; 9 * 4];
+        eng.lookup_gather_ragged_f32_into(&q, &full, &mut fused_lk, &mut fused_g);
+        let mut lk = BatchOutput::default();
+        let mut g = vec![0.0f32; 9 * 4];
+        mem.lookup_gather(&q, true, false, &mut lk, &mut g).unwrap();
+        assert_eq!(lk.indices, fused_lk.indices);
+        for (a, b) in g.iter().zip(&fused_g) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        eng.lookup_gather_ragged_q8_into(&q, &qfull, &mut fused_lk, &mut fused_g);
+        mem.lookup_gather(&q, true, true, &mut lk, &mut g).unwrap();
+        assert_eq!(lk.indices, fused_lk.indices);
+        for (a, b) in g.iter().zip(&fused_g) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn full_table_views_work_as_shard_sources() {
+        // random-init / unsharded-checkpoint serving hands every worker
+        // a view of the whole table (base 0) instead of a compact slice
+        let eng = engine();
+        let full = table(eng.torus.num_locations(), 4, 0x123);
+        let plan = ShardPlan::new(full.rows(), 2);
+        let views = (0..2)
+            .map(|_| {
+                let mut t = ValueTable::zeros(full.rows(), 4).unwrap();
+                t.load_from(full.data()).unwrap();
+                ValueShard { base: 0, table: t, q8: None }
+            })
+            .collect();
+        let mut mem = ShardedMemory::new(&eng, plan, views).unwrap();
+        let mut rng = Rng::new(3);
+        let q = random_queries(&mut rng, 5);
+        let mut fused_lk = BatchOutput::default();
+        let mut fused_g = vec![0.0f32; 5 * 4];
+        eng.lookup_gather_ragged_into(&q, &full, &mut fused_lk, &mut fused_g);
+        let mut lk = BatchOutput::default();
+        let mut g = vec![0.0f32; 5 * 4];
+        mem.lookup_gather(&q, false, false, &mut lk, &mut g).unwrap();
+        for (a, b) in g.iter().zip(&fused_g) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn mismatched_shard_coverage_is_rejected() {
+        let eng = engine();
+        let rows = eng.torus.num_locations();
+        let plan = ShardPlan::new(rows, 2);
+        // shard 1's slice is too small to cover its owned range
+        let shards = vec![
+            ValueShard { base: 0, table: table(rows / 2, 4, 1), q8: None },
+            ValueShard { base: rows / 2, table: table(1, 4, 2), q8: None },
+        ];
+        assert!(ShardedMemory::new(&eng, plan.clone(), shards).is_err());
+        // wrong shard count
+        let one = vec![ValueShard { base: 0, table: table(rows, 4, 3), q8: None }];
+        assert!(ShardedMemory::new(&eng, plan, one).is_err());
+    }
+
+    #[test]
+    fn dead_worker_surfaces_as_an_error_not_a_hang() {
+        let eng = engine();
+        let full = table(eng.torus.num_locations(), 4, 0x77);
+        let plan = ShardPlan::new(full.rows(), 2);
+        let mut mem =
+            ShardedMemory::new(&eng, plan.clone(), compact_shards(&full, &plan, false)).unwrap();
+        // kill worker 0 by disconnecting its channels
+        mem.workers[0].jobs = None;
+        if let Some(h) = mem.workers[0].handle.take() {
+            h.join().unwrap();
+        }
+        let mut rng = Rng::new(5);
+        let q = random_queries(&mut rng, 2);
+        let mut lk = BatchOutput::default();
+        let mut g = vec![0.0f32; 2 * 4];
+        let err = mem.lookup_gather(&q, false, false, &mut lk, &mut g).unwrap_err();
+        assert!(format!("{err:#}").contains("shard worker 0 died"), "{err:#}");
+    }
+}

@@ -33,6 +33,34 @@ use crate::util::sigbus;
 use crate::runtime::{Artifact, ArtifactState, HostTensor, Runtime};
 use crate::tokenizer::Bpe;
 
+/// Memory-access observability for one value-table shard, as served on
+/// `/stats`.  Under unsharded serving there is exactly one entry
+/// covering the whole table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStats {
+    /// Shard index (`0..n_shards`).
+    pub shard: usize,
+    /// Rows this shard owns.
+    pub rows: u64,
+    /// Total accesses that landed in this shard's row range.
+    pub hits: u64,
+    /// Fraction of this shard's rows accessed at least once.
+    pub utilization: f64,
+}
+
+/// Typed memory-access observability for backends that own a value
+/// table (the Table-5 serving metrics, plus the per-shard breakdown
+/// sharded serving needs to spot ownership imbalance).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendStats {
+    /// Fraction of all memory locations accessed at least once.
+    pub utilization: f64,
+    /// KL(access || uniform) in nats over the weighted distribution.
+    pub kl_from_uniform: f64,
+    /// One entry per shard; a single whole-table entry when unsharded.
+    pub per_shard: Vec<ShardStats>,
+}
+
 /// A serving inference engine: token batches in, log-probabilities out.
 ///
 /// `infer` takes `rows * seq_len()` token ids for `1 <= rows <=
@@ -49,9 +77,9 @@ pub trait InferenceBackend {
     fn vocab(&self) -> usize;
     /// Run one (possibly ragged) batch.
     fn infer(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
-    /// Memory-access observability `(utilization, kl_from_uniform)`,
-    /// for backends that own a value table (Table-5 in serving).
-    fn memory_stats(&self) -> Option<(f64, f64)> {
+    /// Memory-access observability, for backends that own a value table
+    /// (Table-5 in serving) — `None` for backends that don't.
+    fn memory_stats(&self) -> Option<BackendStats> {
         None
     }
     /// Id of the checkpoint the backend serves, if it was restored from
@@ -92,6 +120,10 @@ pub struct CheckpointInit {
     /// Numeric path of the memory stage (defaults to the bit-exact f64
     /// reference; `lram serve` defaults the CLI flag to `f32`).
     pub numeric_path: NumericPath,
+    /// Value-table shard workers (`lram serve --shards N`).  1 = fused
+    /// single-owner path; N > 1 partitions the table row-wise across N
+    /// in-process workers behind [`crate::model::ShardedMemory`].
+    pub shards: usize,
 }
 
 impl CheckpointInit {
@@ -101,6 +133,7 @@ impl CheckpointInit {
             threads: 1,
             track_stats: true,
             numeric_path: NumericPath::F64,
+            shards: 1,
         }
     }
 }
@@ -272,29 +305,38 @@ impl EngineBackend {
             manifest.model.vocab,
             bpe.vocab_size()
         );
-        let mut model = LramMlm::from_checkpoint(&ck, init.threads)?;
-        if init.numeric_path == NumericPath::F32Q8
-            && manifest.has_tensor(tensor_names::VALUES_Q8)
-            && manifest.has_tensor(tensor_names::VALUES_Q8_SCALE)
-        {
-            // version-3 checkpoints ship the quantized companion: map the
-            // codes zero-copy instead of re-quantizing a multi-GB table
-            let map = ck.map_i8(tensor_names::VALUES_Q8)?;
-            let scales = ck.read_f32(tensor_names::VALUES_Q8_SCALE)?;
-            let rows = model.table.rows();
-            let q = QuantizedValueTable::from_parts(map, scales, rows, model.cfg.m)?;
-            model.set_quantized_table(q)?;
-            log::info!("mapped quantized value table zero-copy from the checkpoint");
-        }
-        model.set_numeric_path(init.numeric_path)?;
+        let model = if init.shards > 1 {
+            // sharded restore handles its own numeric-path wiring (the
+            // shard workers map their q8 companions internally)
+            LramMlm::from_checkpoint_sharded(&ck, init.threads, init.shards, init.numeric_path)?
+        } else {
+            let mut model = LramMlm::from_checkpoint(&ck, init.threads)?;
+            if init.numeric_path == NumericPath::F32Q8
+                && manifest.has_tensor(tensor_names::VALUES_Q8)
+                && manifest.has_tensor(tensor_names::VALUES_Q8_SCALE)
+            {
+                // version-3 checkpoints ship the quantized companion: map
+                // the codes zero-copy instead of re-quantizing a multi-GB
+                // table
+                let map = ck.map_i8(tensor_names::VALUES_Q8)?;
+                let scales = ck.read_f32(tensor_names::VALUES_Q8_SCALE)?;
+                let rows = model.table.rows();
+                let q = QuantizedValueTable::from_parts(map, scales, rows, model.cfg.m)?;
+                model.set_quantized_table(q)?;
+                log::info!("mapped quantized value table zero-copy from the checkpoint");
+            }
+            model.set_numeric_path(init.numeric_path)?;
+            model
+        };
         let stats = init.track_stats.then(|| AccessStats::new(model.table.rows()));
         log::info!(
             "engine backend restored checkpoint {} (step {}, {} params, numeric path {}, \
-             kernel {})",
+             {} shard(s), kernel {})",
             manifest.checkpoint_id,
             manifest.step,
             model.param_count(),
             model.numeric_path().as_str(),
+            model.cfg.shards,
             crate::lattice::simd::active_kernel_name()
         );
         Ok(EngineBackend {
@@ -373,8 +415,32 @@ impl InferenceBackend for EngineBackend {
         out
     }
 
-    fn memory_stats(&self) -> Option<(f64, f64)> {
-        self.stats.as_ref().map(|s| (s.utilization(), s.kl_from_uniform()))
+    fn memory_stats(&self) -> Option<BackendStats> {
+        let stats = self.stats.as_ref()?;
+        let per_shard = match self.model.shard_plan() {
+            Some(plan) => (0..plan.n_shards())
+                .map(|s| {
+                    let r = plan.range(s);
+                    ShardStats {
+                        shard: s,
+                        rows: r.end - r.start,
+                        hits: stats.hits_in(r.clone()),
+                        utilization: stats.utilization_in(r),
+                    }
+                })
+                .collect(),
+            None => vec![ShardStats {
+                shard: 0,
+                rows: stats.locations(),
+                hits: stats.total_accesses(),
+                utilization: stats.utilization(),
+            }],
+        };
+        Some(BackendStats {
+            utilization: stats.utilization(),
+            kl_from_uniform: stats.kl_from_uniform(),
+            per_shard,
+        })
     }
 
     fn checkpoint_id(&self) -> Option<&str> {
@@ -450,6 +516,28 @@ mod tests {
         let b = EngineBackend::new(tiny_cfg(), 64).unwrap();
         assert!(b.checkpoint_id().is_none());
         assert!(!b.poisoned(), "fresh backend must not be poisoned");
+    }
+
+    #[test]
+    fn sharded_engine_backend_matches_unsharded_and_reports_per_shard_stats() {
+        let tokens: Vec<i32> = (0..16).map(|i| (i % 60) + 2).collect();
+        let mut base = EngineBackend::new(tiny_cfg(), 64).unwrap();
+        let want = base.infer(&tokens).unwrap();
+        let ustats = base.memory_stats().unwrap();
+        assert_eq!(ustats.per_shard.len(), 1, "unsharded = one whole-table entry");
+        assert_eq!(ustats.per_shard[0].utilization, ustats.utilization);
+        let cfg = EngineConfig { shards: 4, ..tiny_cfg() };
+        let mut b = EngineBackend::new(cfg, 64).unwrap();
+        let got = b.infer(&tokens).unwrap();
+        for (x, y) in want.iter().zip(&got) {
+            assert_eq!(x.to_bits(), y.to_bits(), "sharded f64 serving must be bit-identical");
+        }
+        let stats = b.memory_stats().unwrap();
+        assert_eq!(stats.per_shard.len(), 4);
+        let total_rows: u64 = stats.per_shard.iter().map(|s| s.rows).sum();
+        assert_eq!(total_rows, ustats.per_shard[0].rows, "shards must cover the table");
+        let total_hits: u64 = stats.per_shard.iter().map(|s| s.hits).sum();
+        assert!(total_hits > 0, "the batch must have recorded accesses somewhere");
     }
 
     #[test]

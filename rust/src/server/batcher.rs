@@ -33,7 +33,7 @@ use crate::util::hist::Histogram;
 use crate::util::lockcheck::{rank, Mutex, MutexGuard};
 
 use super::api::{MaskPrediction, PredictRequest, PredictResponse, TokenScore};
-use super::backend::{BackendInit, InferenceBackend};
+use super::backend::{BackendInit, BackendStats, InferenceBackend};
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -290,9 +290,9 @@ pub struct BatchStats {
     pub backend: &'static str,
     /// id of the checkpoint the backend serves, when restored from one
     pub checkpoint: Option<String>,
-    /// value-table observability from engine-owned backends (last poll)
-    pub memory_utilization: Option<f64>,
-    pub memory_kl: Option<f64>,
+    /// value-table observability from engine-owned backends (last poll):
+    /// whole-table utilization/KL plus the per-shard breakdown
+    pub memory: Option<BackendStats>,
 }
 
 /// Lock the batch stats, recovering from poisoning.  The executor is
@@ -724,9 +724,8 @@ fn executor_loop(
             s.batches += 1;
             s.total_exec_latency_ms += exec_ms;
             s.max_batch_fill = s.max_batch_fill.max(fill);
-            if let Some((util, kl)) = backend.memory_stats() {
-                s.memory_utilization = Some(util);
-                s.memory_kl = Some(kl);
+            if let Some(m) = backend.memory_stats() {
+                s.memory = Some(m);
             }
         }
         match result {

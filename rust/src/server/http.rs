@@ -38,12 +38,18 @@
 //! a well-formed 503 before the connection closes; a hung socket is
 //! never the failure mode.
 //!
-//! Endpoints:
-//!   POST /predict  {"text": "... [MASK] ...", "top_k": 5}
-//!   GET  /healthz  liveness: 200 while the process serves at all
-//!   GET  /readyz   readiness: 200 only in the `ready` health state
-//!   GET  /stats    batching, latency percentiles, queue/shed/connection
-//!                  counters, health state, restarts, memory observability
+//! Endpoints (full contract in `docs/api.md`):
+//!   POST /v1/predict  {"text": "... [MASK] ...", "top_k": 5}
+//!   POST /predict     compatibility alias for /v1/predict
+//!   GET  /healthz     liveness: 200 while the process serves at all
+//!   GET  /readyz      readiness: 200 only in the `ready` health state
+//!   GET  /stats       batching, latency percentiles, queue/shed/connection
+//!                     counters, health state, restarts, memory observability
+//!                     (schema_version 1, per-shard breakdown under "shards")
+//!
+//! Every 4xx/5xx body is the structured envelope
+//! `{"error": {"code", "message", "retry_after_s"?}}` built by
+//! [`error_body`] — one helper, one shape, no ad-hoc error JSON.
 
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -370,7 +376,11 @@ fn shed_connection(mut stream: TcpStream, retry_after_secs: u64) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
-    let body = error_body("server overloaded: connection backlog full");
+    let body = error_body(
+        429,
+        "server overloaded: connection backlog full",
+        Some(retry_after_secs.max(1)),
+    );
     let _ = respond(&mut stream, 429, &body, true, 0, retry_after_secs);
     drain_briefly(&mut stream);
 }
@@ -444,7 +454,8 @@ fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) 
             // requests, idle past the deadline, or server draining
             Err(ReadError::Idle) => return Ok(()),
             Err(ReadError::Bad { status, message }) => {
-                let _ = respond(&mut stream, status, &error_body(&message), true, 0, 0);
+                let body = error_body(status, &message, None);
+                let _ = respond(&mut stream, status, &body, true, 0, 0);
                 // drain what the client is still sending (e.g. the body
                 // of an oversized POST) before closing, so the error
                 // response isn't wiped out by a TCP reset on unread data
@@ -463,7 +474,8 @@ fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) 
         // socket with a request outstanding
         let routed = catch_unwind(AssertUnwindSafe(|| {
             if let Some(e) = failpoint::inject("http.worker") {
-                return (503, error_body(&format!("{e:#}")));
+                let retry = router.batcher.retry_after_secs().max(1);
+                return (503, error_body(503, &format!("{e:#}"), Some(retry)));
             }
             router.route(&req)
         }));
@@ -472,7 +484,15 @@ fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) 
             // ORDERING: /stats counter
             router.http.worker_panics.fetch_add(1, Ordering::Relaxed);
             log::error!("request handler panicked; answering 503 and closing the connection");
-            (503, error_body("request handler panicked; retry on a fresh connection"))
+            let retry = router.batcher.retry_after_secs().max(1);
+            (
+                503,
+                error_body(
+                    503,
+                    "request handler panicked; retry on a fresh connection",
+                    Some(retry),
+                ),
+            )
         });
         // shed and not-ready responses tell the client when to come
         // back, from live queue depth x measured batch latency
@@ -752,41 +772,53 @@ impl Router {
             // elsewhere without being restarted
             ("GET", "/readyz") => {
                 let state = self.batcher.health().state();
-                let body = format!(r#"{{"state": "{}"}}"#, state.as_str());
                 if state == HealthState::Ready {
-                    (200, body)
+                    (200, format!(r#"{{"state": "{}"}}"#, state.as_str()))
                 } else {
-                    (503, body)
+                    let retry = self.batcher.retry_after_secs().max(1);
+                    let msg = format!("not ready (state {})", state.as_str());
+                    (503, error_body(503, &msg, Some(retry)))
                 }
             }
             ("GET", "/stats") => (200, self.stats_json()),
-            ("POST", "/predict") => self.predict(&req.body),
-            _ => (404, r#"{"error": "not found"}"#.to_string()),
+            // /v1/predict is the canonical route (docs/api.md); the
+            // unversioned path stays as a compatibility alias
+            ("POST", "/predict") | ("POST", "/v1/predict") => self.predict(&req.body),
+            _ => (404, error_body(404, "not found", None)),
         }
     }
 
     fn predict(&self, body: &[u8]) -> (u16, String) {
         let text = match std::str::from_utf8(body) {
             Ok(t) => t,
-            Err(_) => return (400, error_body("body is not utf-8")),
+            Err(_) => return (400, error_body(400, "body is not utf-8", None)),
         };
         let parsed = json::parse(text)
             .map_err(|e| anyhow!(e))
             .and_then(|v| PredictRequest::from_json(&v));
         let req = match parsed {
             Ok(r) => r,
-            Err(e) => return (400, error_body(&format!("{e:#}"))),
+            Err(e) => return (400, error_body(400, &format!("{e:#}"), None)),
         };
+        // the retryable statuses mirror Retry-After into the body so
+        // JSON-only clients can back off without parsing headers
+        let retry = || Some(self.batcher.retry_after_secs().max(1));
         match self.batcher.submit_bounded(&self.bpe, &req) {
             Ok(resp) => (200, resp.to_json().to_string()),
-            Err(SubmitError::BadRequest(m)) => (400, error_body(&m)),
-            Err(e @ SubmitError::Overloaded { .. }) => (429, error_body(&e.to_string())),
+            Err(SubmitError::BadRequest(m)) => (400, error_body(400, &m, None)),
+            Err(e @ SubmitError::Overloaded { .. }) => {
+                (429, error_body(429, &e.to_string(), retry()))
+            }
             // executor died mid-request and the supervisor is restarting
             // it: retryable, so 503 (+ Retry-After), not 500
-            Err(e @ SubmitError::Unavailable(_)) => (503, error_body(&e.to_string())),
+            Err(e @ SubmitError::Unavailable(_)) => {
+                (503, error_body(503, &e.to_string(), retry()))
+            }
             // the request expired in queue before the backend saw it
-            Err(e @ SubmitError::Timeout { .. }) => (504, error_body(&e.to_string())),
-            Err(SubmitError::Internal(m)) => (500, error_body(&m)),
+            Err(e @ SubmitError::Timeout { .. }) => {
+                (504, error_body(504, &e.to_string(), None))
+            }
+            Err(SubmitError::Internal(m)) => (500, error_body(500, &m, None)),
         }
     }
 
@@ -800,11 +832,25 @@ impl Router {
         };
         let mean_exec =
             if s.batches > 0 { s.total_exec_latency_ms / s.batches as f64 } else { 0.0 };
-        let memory = match (s.memory_utilization, s.memory_kl) {
-            (Some(u), Some(kl)) => {
-                format!(r#", "memory_utilization": {u:.6}, "memory_kl": {kl:.6}"#)
+        let memory = match &s.memory {
+            Some(m) => {
+                let shards = m
+                    .per_shard
+                    .iter()
+                    .map(|p| {
+                        format!(
+                            r#"{{"shard": {}, "rows": {}, "hits": {}, "utilization": {:.6}}}"#,
+                            p.shard, p.rows, p.hits, p.utilization
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                format!(
+                    r#", "memory_utilization": {:.6}, "memory_kl": {:.6}, "shards": [{shards}]"#,
+                    m.utilization, m.kl_from_uniform
+                )
             }
-            _ => String::new(),
+            None => String::new(),
         };
         // which trained weights are live (absent on seed/artifact);
         // the id comes from a user-editable manifest, so emit it
@@ -816,7 +862,7 @@ impl Router {
             None => String::new(),
         };
         format!(
-            r#"{{"backend": "{}", "state": "{}", "restarts": {}, "requests": {}, "batches": {}, "mean_request_latency_ms": {:.3}, "mean_exec_latency_ms": {:.3}, "latency_p50_ms": {:.3}, "latency_p95_ms": {:.3}, "latency_p99_ms": {:.3}, "max_batch_fill": {}, "truncated_masks": {}, "timeouts": {}, "shed": {}, "queue_depth": {}, "max_pending": {}, "http_workers": {}, "active_connections": {}, "connections_accepted": {}, "connections_shed": {}, "http_requests": {}, "worker_panics": {}{}{}}}"#,
+            r#"{{"schema_version": 1, "backend": "{}", "state": "{}", "restarts": {}, "requests": {}, "batches": {}, "mean_request_latency_ms": {:.3}, "mean_exec_latency_ms": {:.3}, "latency_p50_ms": {:.3}, "latency_p95_ms": {:.3}, "latency_p99_ms": {:.3}, "max_batch_fill": {}, "truncated_masks": {}, "timeouts": {}, "shed": {}, "queue_depth": {}, "max_pending": {}, "http_workers": {}, "active_connections": {}, "connections_accepted": {}, "connections_shed": {}, "http_requests": {}, "worker_panics": {}{}{}}}"#,
             s.backend,
             health.state().as_str(),
             health.restarts(),
@@ -849,8 +895,36 @@ impl Router {
 
 // -- responses -------------------------------------------------------------
 
-fn error_body(message: &str) -> String {
-    Json::obj(vec![("error", Json::Str(message.to_string()))]).to_string()
+/// Machine-readable error code, one per status the front door emits —
+/// the stable half of the error contract (`docs/api.md`): messages are
+/// for humans and may change, codes are for clients and must not.
+fn error_code(status: u16) -> &'static str {
+    match status {
+        400 => "bad_request",
+        404 => "not_found",
+        408 => "request_timeout",
+        413 => "payload_too_large",
+        429 => "overloaded",
+        431 => "headers_too_large",
+        503 => "unavailable",
+        504 => "deadline_exceeded",
+        _ => "internal",
+    }
+}
+
+/// The single source of every 4xx/5xx body:
+/// `{"error": {"code", "message", "retry_after_s"?}}`.  `retry_after_s`
+/// mirrors the `Retry-After` header on retryable statuses so JSON-only
+/// clients never need to parse headers.
+fn error_body(status: u16, message: &str, retry_after_s: Option<u64>) -> String {
+    let mut fields = vec![
+        ("code", Json::Str(error_code(status).to_string())),
+        ("message", Json::Str(message.to_string())),
+    ];
+    if let Some(s) = retry_after_s {
+        fields.push(("retry_after_s", Json::Num(s as f64)));
+    }
+    Json::obj(vec![("error", Json::obj(fields))]).to_string()
 }
 
 fn reason(status: u16) -> &'static str {
@@ -999,9 +1073,35 @@ mod tests {
     }
 
     #[test]
-    fn error_body_escapes_via_json_writer() {
-        let b = error_body("a \"quoted\" failure");
+    fn error_body_is_the_structured_envelope_and_escapes_via_json_writer() {
+        let b = error_body(400, "a \"quoted\" failure", None);
         let v = json::parse(&b).unwrap();
-        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "a \"quoted\" failure");
+        let e = v.get("error").expect("envelope has an error object");
+        assert_eq!(e.get("code").unwrap().as_str().unwrap(), "bad_request");
+        assert_eq!(e.get("message").unwrap().as_str().unwrap(), "a \"quoted\" failure");
+        assert!(e.get("retry_after_s").is_none(), "no retry hint unless retryable");
+    }
+
+    #[test]
+    fn retryable_errors_mirror_retry_after_into_the_body() {
+        let b = error_body(429, "overloaded", Some(7));
+        let v = json::parse(&b).unwrap();
+        let e = v.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(e.get("retry_after_s").unwrap().as_f64().unwrap(), 7.0);
+        // each front-door status maps to a stable machine-readable code
+        for (status, code) in [
+            (400, "bad_request"),
+            (404, "not_found"),
+            (408, "request_timeout"),
+            (413, "payload_too_large"),
+            (429, "overloaded"),
+            (431, "headers_too_large"),
+            (500, "internal"),
+            (503, "unavailable"),
+            (504, "deadline_exceeded"),
+        ] {
+            assert_eq!(error_code(status), code);
+        }
     }
 }

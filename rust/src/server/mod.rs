@@ -3,7 +3,8 @@
 //! batcher, pluggable inference backend — with python nowhere on the
 //! path.  See `docs/serving.md` for the operator view.
 //!
-//! Requests (`POST /predict` with `{"text": "... [MASK] ..."}`) are
+//! Requests (`POST /v1/predict` with `{"text": "... [MASK] ..."}`;
+//! `/predict` is a compatibility alias) are
 //! tokenized, queued, and coalesced by the [`batcher`] into (possibly
 //! ragged) batches for an [`InferenceBackend`]; responses carry the
 //! top-k predictions for every `[MASK]` position.  Two backends exist:
@@ -18,8 +19,8 @@ mod http;
 
 pub use api::{MaskPrediction, PredictRequest, PredictResponse, TokenScore};
 pub use backend::{
-    resolve_checkpoint_flag, ArtifactBackend, ArtifactInit, BackendInit, CheckpointInit,
-    EngineBackend, EngineConfig, InferenceBackend, NumericPath,
+    resolve_checkpoint_flag, ArtifactBackend, ArtifactInit, BackendInit, BackendStats,
+    CheckpointInit, EngineBackend, EngineConfig, InferenceBackend, NumericPath, ShardStats,
 };
 pub use batcher::{Batcher, BatcherConfig, Health, HealthState, SubmitError};
 pub use http::{

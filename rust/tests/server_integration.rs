@@ -194,8 +194,9 @@ fn engine_batcher_answers_fill_mask_requests() {
     // the latency histogram saw the same request
     assert_eq!(stats.latency.count(), 1);
     assert!(stats.latency.percentile_ms(0.5) > 0.0);
-    let util = stats.memory_utilization.expect("engine backend tracks memory stats");
-    assert!(util > 0.0, "no slots touched?");
+    let memory = stats.memory.expect("engine backend tracks memory stats");
+    assert!(memory.utilization > 0.0, "no slots touched?");
+    assert!(!memory.per_shard.is_empty(), "per-shard breakdown always present");
     // nothing shed, nothing left in the queue
     assert_eq!(stats.shed, 0);
     assert_eq!(batcher.queue_depth(), 0);
@@ -278,8 +279,10 @@ fn engine_http_end_to_end() {
     let stats = c.get("/stats");
     assert_eq!(stats.status, 200);
     let body = stats.body;
+    assert!(body.starts_with(r#"{"schema_version": 1"#), "{body}");
     assert!(body.contains(r#""backend": "engine""#), "{body}");
     assert!(body.contains("memory_utilization"), "{body}");
+    assert!(body.contains(r#""shards": [{"shard": 0"#), "{body}");
     assert!(body.contains("latency_p50_ms"), "{body}");
     assert!(body.contains("latency_p99_ms"), "{body}");
     assert!(body.contains("queue_depth"), "{body}");
@@ -400,11 +403,13 @@ fn overload_sheds_429_with_retry_after_and_never_reaches_backend() {
         });
         assert!((1..=60).contains(&secs), "Retry-After {secs} outside [1, 60]");
         let v = lram::util::json::parse(&resp.body).expect("429 body is JSON");
-        assert!(
-            v.get("error").unwrap().as_str().unwrap().contains("overloaded"),
-            "{}",
-            resp.body
-        );
+        let err = v.get("error").expect("structured error envelope");
+        assert_eq!(err.get("code").unwrap().as_str().unwrap(), "overloaded", "{}", resp.body);
+        assert!(err.get("message").unwrap().as_str().is_some(), "{}", resp.body);
+        // the body mirrors the Retry-After header so JSON-only clients
+        // see the backoff hint too
+        let body_secs = err.get("retry_after_s").unwrap().as_f64().unwrap() as u64;
+        assert!((1..=60).contains(&body_secs), "{}", resp.body);
         // shedding must not kill the keep-alive connection (the client
         // is told when to retry, on the same socket) — proven by the
         // next loop iteration reusing `c`
@@ -590,6 +595,77 @@ fn engine_backend_matches_scalar_oracle_end_to_end() {
     for (i, (x, y)) in a.iter().zip(&b).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(), "logp {i}: {x} vs {y}");
     }
+}
+
+#[test]
+fn sharded_serving_is_bit_identical_to_single_shard_over_http() {
+    // the sharding acceptance test, through the full HTTP boundary: an
+    // engine server whose value table is partitioned across 4 shard
+    // workers must answer with exactly the same bytes as the fused
+    // single-owner path on the bit-exact f64 path.  Ragged shapes —
+    // varying lengths, multiple masks, truncation — all route through
+    // the staged score/select/merge/gather pipeline, so any divergence
+    // in merge order or per-shard gather shows up as a byte diff here.
+    let bpe = build_small_bpe();
+    // a small torus so the tiny batch actually spreads across owners
+    let cfg = EngineConfig { torus_k: [4; 8], k_top: 8, ..engine_cfg() };
+    let spawn = |shards: usize| {
+        let cfg = EngineConfig { shards, ..cfg.clone() };
+        let b = Batcher::spawn(BackendInit::Engine(cfg), bpe.clone(), BatcherConfig::default())
+            .expect("engine backend needs no artifacts");
+        start_server(b, bpe.clone())
+    };
+    let one = spawn(1);
+    let four = spawn(4);
+    let mut c1 = Client::connect(&one.local_addr().to_string());
+    let mut c4 = Client::connect(&four.local_addr().to_string());
+    // masks-only prefix: everything before the latency field, which is
+    // wall-clock and legitimately differs between the two servers
+    let masks_of = |body: &str| {
+        let end = body.find(r#", "latency_ms""#).expect("response carries latency");
+        body[..end].to_string()
+    };
+    let mut texts: Vec<String> = vec![
+        "the [MASK] sat".into(),
+        "a [MASK] and a [MASK] walked into the [MASK] .".into(),
+        "[MASK]".into(),
+        "one more [MASK] for the long and winding road , [MASK] says".into(),
+    ];
+    // push a late mask past seq_len = 24: the truncation error object
+    // must also be identical across shard counts
+    let mut long = String::from("the [MASK] sat");
+    for _ in 0..40 {
+        long.push_str(" cat");
+    }
+    long.push_str(" [MASK]");
+    texts.push(long);
+    for (i, text) in texts.iter().enumerate() {
+        let body = format!(r#"{{"text": "{text}", "top_k": 6}}"#);
+        // alternate the canonical route and its legacy alias — the
+        // comparison also proves the two routes serve the same handler
+        let path = if i % 2 == 0 { "/v1/predict" } else { "/predict" };
+        let req = format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let a = c1.roundtrip(&req);
+        let b = c4.roundtrip(&req);
+        assert_eq!(a.status, 200, "shards=1 {path}: {}", a.body);
+        assert_eq!(b.status, 200, "shards=4 {path}: {}", b.body);
+        assert_eq!(
+            masks_of(&a.body),
+            masks_of(&b.body),
+            "request {i} ({text:?}) diverged between 1 and 4 shards"
+        );
+    }
+    // the sharded server reports its partition in /stats
+    let stats = c4.get("/stats");
+    let v = lram::util::json::parse(&stats.body).unwrap();
+    assert_eq!(v.get("schema_version").unwrap().as_usize().unwrap(), 1);
+    let shards = v.get("shards").expect("sharded /stats breakdown").as_arr().unwrap();
+    assert_eq!(shards.len(), 4, "{}", stats.body);
+    one.shutdown();
+    four.shutdown();
 }
 
 // ---------------------------------------------------------------------

@@ -118,9 +118,17 @@ impl Resp {
     fn assert_well_formed_error(&self) {
         let v = json::parse(&self.body)
             .unwrap_or_else(|e| panic!("unparseable error body {:?}: {e:#}", self.body));
+        let err = v
+            .get("error")
+            .unwrap_or_else(|| panic!("error body missing 'error' object: {}", self.body));
         assert!(
-            v.get("error").and_then(|e| e.as_str()).is_some(),
-            "error body missing 'error' field: {}",
+            err.get("code").and_then(|c| c.as_str()).is_some_and(|c| !c.is_empty()),
+            "error envelope missing 'code': {}",
+            self.body
+        );
+        assert!(
+            err.get("message").and_then(|m| m.as_str()).is_some(),
+            "error envelope missing 'message': {}",
             self.body
         );
     }
