@@ -1,5 +1,5 @@
-//! Serving demo: start the fill-mask router behind the keep-alive
-//! worker-pool front door, fire concurrent requests at it from
+//! Serving demo: start the fill-mask router behind the event-driven
+//! keep-alive front door, fire concurrent requests at it from
 //! persistent client connections, print predictions + batching stats.
 //! Demonstrates the vLLM-style dynamic batcher with python nowhere on
 //! the request path.

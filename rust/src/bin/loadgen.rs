@@ -26,20 +26,33 @@
 //! parseable framing, JSON error body, `Retry-After` on 429 and 503;
 //! exit 1 on any malformed response), `--connection-close` (send
 //! `Connection: close` and reconnect per request — the seed server's
-//! behavior, kept as a measurable baseline for what keep-alive buys).
+//! behavior, kept as a measurable baseline for what keep-alive buys),
+//! `--multiplex` (event-driven client: every connection multiplexed
+//! over `--mux-threads` poll loops instead of one thread each — the
+//! only way one generator box holds 5–10k concurrent sockets),
+//! `--mux-threads T` (8).
+//!
+//! `--multiplex` raises `RLIMIT_NOFILE` toward what the connection
+//! count needs (`lram::util::poll::raise_nofile_limit`); when the hard
+//! cap is still too low the run exits 3 instead of producing a
+//! misleading partial measurement.
 //!
 //! Exit codes: 0 ok; 1 gate failure (`--fail-on-5xx` /
 //! `--expect-some-5xx`); 2 the run produced no successful request at
-//! all (nothing to measure).
+//! all (nothing to measure); 3 the environment cannot hold the
+//! requested connection count (fd limit) — CI treats this as a skip,
+//! not a gate failure.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::TcpStream;
+use std::os::fd::AsRawFd;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use lram::util::cli::Args;
 use lram::util::json::Json;
+use lram::util::poll::{self, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
 use lram::util::timing::{BenchReport, Table};
 
 struct HttpResponse {
@@ -192,6 +205,31 @@ fn server_error_is_well_formed(resp: &HttpResponse) -> bool {
     }
 }
 
+/// Tally one complete response into the report (shared by the
+/// thread-per-connection and multiplexed clients, so both modes gate on
+/// exactly the same well-formedness rules).
+fn record(resp: &HttpResponse, t0: Instant, rep: &mut ClientReport) {
+    match resp.status {
+        200 => {
+            rep.ok += 1;
+            rep.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        429 => {
+            rep.shed += 1;
+            if !shed_is_well_formed(resp) {
+                rep.malformed_shed += 1;
+            }
+        }
+        s if (400..500).contains(&s) => rep.other_4xx += 1,
+        _ => {
+            rep.server_5xx += 1;
+            if !server_error_is_well_formed(resp) {
+                rep.malformed_5xx += 1;
+            }
+        }
+    }
+}
+
 fn client_loop(addr: &str, request: &str, deadline: Instant) -> ClientReport {
     let mut rep = ClientReport::default();
     let mut conn: Option<(TcpStream, BufReader<TcpStream>)> = None;
@@ -230,27 +268,226 @@ fn client_loop(addr: &str, request: &str, deadline: Instant) -> ClientReport {
                 continue;
             }
         };
-        match resp.status {
-            200 => {
-                rep.ok += 1;
-                rep.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
-            }
-            429 => {
-                rep.shed += 1;
-                if !shed_is_well_formed(&resp) {
-                    rep.malformed_shed += 1;
+        record(&resp, t0, &mut rep);
+        if resp.close {
+            conn = None;
+        }
+    }
+    rep
+}
+
+// -- multiplexed client ------------------------------------------------------
+//
+// One poll loop per mux thread, each multiplexing `connections /
+// mux_threads` nonblocking keep-alive sockets: write the canned request,
+// accumulate the response, classify it, repeat until the deadline.  The
+// thread-per-connection mode above cannot reach 5-10k concurrent
+// sockets (10k stacks and 10k blocked reads); this one holds them all
+// with `mux_threads` stacks, mirroring the server's own event loops.
+
+/// Where a multiplexed connection is in its request/response cycle.
+enum MuxState {
+    /// Sending the canned request; `off` bytes already written.
+    Writing { off: usize, t0: Instant },
+    /// Request fully sent; accumulating the response into `inbuf`.
+    Reading { t0: Instant },
+}
+
+struct MuxConn {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    state: MuxState,
+}
+
+/// Blocking connect, then switch to nonblocking for the poll loop.
+fn mux_connect(addr: &str) -> Result<MuxConn> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_nonblocking(true)?;
+    Ok(MuxConn {
+        stream,
+        inbuf: Vec::new(),
+        state: MuxState::Writing { off: 0, t0: Instant::now() },
+    })
+}
+
+/// Parse one complete response off the front of `buf`, if present.
+/// Returns the response and how many bytes it consumed.
+fn parse_buffered_response(buf: &[u8]) -> Result<Option<(HttpResponse, usize)>> {
+    let Some(head_end) = buf.windows(4).position(|w| w == b"\r\n\r\n") else {
+        return Ok(None);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("non-utf8 response head")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    if !status_line.starts_with("HTTP/") {
+        bail!("bad status line '{status_line}'");
+    }
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("status line missing code")?
+        .parse()
+        .context("non-numeric status code")?;
+    let mut headers = Vec::new();
+    for h in lines {
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    let resp = HttpResponse { status, headers, body: Vec::new(), close: false };
+    let content_length: usize = resp
+        .header("content-length")
+        .context("response missing Content-Length")?
+        .parse()
+        .context("bad Content-Length")?;
+    let close = resp
+        .header("connection")
+        .map(|v| v.to_ascii_lowercase().contains("close"))
+        .unwrap_or(false);
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_length {
+        return Ok(None);
+    }
+    let body = buf[body_start..body_start + content_length].to_vec();
+    Ok(Some((HttpResponse { body, close, ..resp }, body_start + content_length)))
+}
+
+/// Tear a connection down and dial a replacement (best effort — a
+/// refused reconnect leaves a hole until the next cycle notices).
+fn mux_reconnect(conn: &mut Option<MuxConn>, addr: &str, rep: &mut ClientReport) {
+    *conn = None;
+    match mux_connect(addr) {
+        Ok(c) => {
+            rep.reconnects += 1;
+            *conn = Some(c);
+        }
+        Err(_) => rep.io_errors += 1,
+    }
+}
+
+/// Drive one ready connection as far as it goes.  Returns false when the
+/// connection died and needs a replacement.
+fn mux_drive(conn: &mut MuxConn, request: &str, rep: &mut ClientReport) -> bool {
+    loop {
+        match conn.state {
+            MuxState::Writing { off, t0 } => {
+                match conn.stream.write(&request.as_bytes()[off..]) {
+                    Ok(0) => return false,
+                    Ok(n) if off + n == request.len() => {
+                        conn.state = MuxState::Reading { t0 };
+                    }
+                    Ok(n) => conn.state = MuxState::Writing { off: off + n, t0 },
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        rep.io_errors += 1;
+                        return false;
+                    }
                 }
             }
-            s if (400..500).contains(&s) => rep.other_4xx += 1,
-            _ => {
-                rep.server_5xx += 1;
-                if !server_error_is_well_formed(&resp) {
-                    rep.malformed_5xx += 1;
+            MuxState::Reading { t0 } => {
+                let mut chunk = [0u8; 4096];
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        // keep-alive timeout or drain: quiet teardown
+                        rep.io_errors += 1;
+                        return false;
+                    }
+                    Ok(n) => conn.inbuf.extend_from_slice(&chunk[..n]),
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        rep.io_errors += 1;
+                        return false;
+                    }
+                }
+                match parse_buffered_response(&conn.inbuf) {
+                    Ok(Some((resp, consumed))) => {
+                        record(&resp, t0, rep);
+                        conn.inbuf.drain(..consumed);
+                        if resp.close {
+                            return false;
+                        }
+                        conn.state = MuxState::Writing { off: 0, t0: Instant::now() };
+                    }
+                    Ok(None) => {} // need more bytes; loop back into read
+                    Err(_) => {
+                        // torn framing: this connection is beyond saving
+                        rep.io_errors += 1;
+                        return false;
+                    }
                 }
             }
         }
-        if resp.close {
-            conn = None;
+    }
+}
+
+/// One mux thread: hold `target` keep-alive connections through a poll
+/// loop until `deadline`.
+fn mux_loop(addr: &str, request: &str, deadline: Instant, target: usize) -> ClientReport {
+    let mut rep = ClientReport::default();
+    let mut conns: Vec<Option<MuxConn>> = Vec::with_capacity(target);
+    for _ in 0..target {
+        match mux_connect(addr) {
+            Ok(c) => conns.push(Some(c)),
+            Err(_) => {
+                rep.io_errors += 1;
+                conns.push(None);
+            }
+        }
+    }
+    let mut fds = Vec::with_capacity(target);
+    let mut slots = Vec::with_capacity(target);
+    while Instant::now() < deadline {
+        fds.clear();
+        slots.clear();
+        for (i, slot) in conns.iter().enumerate() {
+            let Some(c) = slot else { continue };
+            let events = match c.state {
+                MuxState::Writing { .. } => POLLOUT,
+                MuxState::Reading { .. } => POLLIN,
+            };
+            fds.push(poll::entry(c.stream.as_raw_fd(), events));
+            slots.push(i);
+        }
+        if fds.is_empty() {
+            // every socket is down (server gone?); retry a batch
+            for slot in conns.iter_mut().take(64) {
+                mux_reconnect(slot, addr, &mut rep);
+            }
+            std::thread::sleep(Duration::from_millis(50));
+            continue;
+        }
+        let wait = deadline
+            .saturating_duration_since(Instant::now())
+            .min(Duration::from_millis(100));
+        let n = match poll::poll(&mut fds, Some(wait)) {
+            Ok(n) => n,
+            Err(_) => {
+                rep.io_errors += 1;
+                continue;
+            }
+        };
+        if n == 0 {
+            continue;
+        }
+        for (fd, &slot) in fds.iter().zip(&slots) {
+            if fd.revents == 0 {
+                continue;
+            }
+            let died = if fd.revents & (POLLERR | POLLNVAL) != 0 && fd.revents & POLLHUP == 0 {
+                rep.io_errors += 1;
+                true
+            } else {
+                // POLLHUP still delivers buffered response bytes; let
+                // the read path run to completion first
+                let conn = conns[slot].as_mut().expect("ready slot holds a connection");
+                !mux_drive(conn, request, &mut rep)
+            };
+            if died && Instant::now() < deadline {
+                mux_reconnect(&mut conns[slot], addr, &mut rep);
+            }
         }
     }
     rep
@@ -298,11 +535,29 @@ fn main() -> Result<()> {
     let fail_on_5xx = args.bool("fail-on-5xx", false)?;
     let expect_some_5xx = args.bool("expect-some-5xx", false)?;
     let connection_close = args.bool("connection-close", false)?;
+    let multiplex = args.bool("multiplex", false)?;
+    let mux_threads = args.usize("mux-threads", 8)?.max(1);
     if fail_on_5xx && expect_some_5xx {
         bail!("--fail-on-5xx and --expect-some-5xx are mutually exclusive");
     }
+    if multiplex && connection_close {
+        bail!("--multiplex measures keep-alive connections; drop --connection-close");
+    }
     if !text.contains("[MASK]") {
         bail!("--text must contain a [MASK] token");
+    }
+    if multiplex {
+        // the sockets plus stdio, the listener-side pipe pair, and slack
+        let want = connections as u64 + 64;
+        let got = poll::raise_nofile_limit(want)
+            .with_context(|| format!("raising RLIMIT_NOFILE to {want}"))?;
+        if got < want {
+            eprintln!(
+                "LOADGEN SKIP: fd limit {got} cannot hold {connections} connections \
+                 (hard cap too low)"
+            );
+            std::process::exit(3);
+        }
     }
 
     wait_healthz(&addr, Duration::from_secs_f64(args.f64("wait-healthz-secs", 30.0)?))?;
@@ -322,21 +577,44 @@ fn main() -> Result<()> {
     );
 
     println!(
-        "loadgen: {connections} {} connections against http://{addr} for {:.1}s",
+        "loadgen: {connections} {} connections against http://{addr} for {:.1}s{}",
         if connection_close { "close-per-request (seed-style)" } else { "keep-alive" },
-        duration.as_secs_f64()
+        duration.as_secs_f64(),
+        if multiplex {
+            format!(" (multiplexed over {mux_threads} poll loops)")
+        } else {
+            String::new()
+        }
     );
     let t0 = Instant::now();
     let deadline = t0 + duration;
-    let mut handles = Vec::with_capacity(connections);
-    for _ in 0..connections {
-        let addr = addr.clone();
-        let request = request.clone();
-        handles.push(std::thread::spawn(move || client_loop(&addr, &request, deadline)));
-    }
     let mut total = ClientReport::default();
-    for h in handles {
-        total.merge(h.join().expect("client thread panicked"));
+    if multiplex {
+        // split the connection count across the poll loops; the first
+        // threads absorb the remainder
+        let threads = mux_threads.min(connections);
+        let base = connections / threads;
+        let extra = connections % threads;
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let addr = addr.clone();
+            let request = request.clone();
+            let target = base + usize::from(i < extra);
+            handles.push(std::thread::spawn(move || mux_loop(&addr, &request, deadline, target)));
+        }
+        for h in handles {
+            total.merge(h.join().expect("mux thread panicked"));
+        }
+    } else {
+        let mut handles = Vec::with_capacity(connections);
+        for _ in 0..connections {
+            let addr = addr.clone();
+            let request = request.clone();
+            handles.push(std::thread::spawn(move || client_loop(&addr, &request, deadline)));
+        }
+        for h in handles {
+            total.merge(h.join().expect("client thread panicked"));
+        }
     }
     let elapsed = t0.elapsed().as_secs_f64();
 
@@ -379,6 +657,7 @@ fn main() -> Result<()> {
             &[
                 ("connections", connections as f64),
                 ("keep_alive", if connection_close { 0.0 } else { 1.0 }),
+                ("multiplex", if multiplex { 1.0 } else { 0.0 }),
                 ("duration_s", elapsed),
                 ("requests", requests as f64),
                 ("ok", total.ok as f64),

@@ -321,6 +321,62 @@ impl MergeWeight for f32 {
     }
 }
 
+/// Forward-pass routing decisions captured for the backward pass — the
+/// trainer-side companion of [`BatchOutput`].
+///
+/// The routing backward only needs, per selected hit, the squared
+/// distance `d2` (for `f'(d2)`) and the candidate index (for the
+/// original-frame lattice point and torus row, both cheap integer
+/// arithmetic given the query's reduction).  Capturing `(d2, candidate)`
+/// during the forward lets
+/// [`BatchLookupEngine::backward_gather_ragged_cached_into`] skip the
+/// expensive part of the recompute — the 8×232 distance passes, the
+/// kernel weights, and the canonical top-k — per masked query.
+///
+/// Layout mirrors `BatchOutput`: `k_top` slots per query, stored in the
+/// forward's canonical selection order, padded with
+/// [`BackwardCache::NO_HIT`] candidates.  The cache is only coherent
+/// with the forward pass that filled it; callers must
+/// [`BackwardCache::invalidate`] it whenever the queries, the engine, or
+/// the numeric path change (the f32/q8/sharded/oracle paths never fill
+/// it — the routing backward is defined against the f64 forward).
+#[derive(Debug, Clone, Default)]
+pub struct BackwardCache {
+    /// `[N*k]` squared distances of the selected hits.
+    d2: Vec<f64>,
+    /// `[N*k]` candidate indices; [`Self::NO_HIT`] marks padding.
+    cand: Vec<u32>,
+    k_top: usize,
+    queries: usize,
+    valid: bool,
+}
+
+impl BackwardCache {
+    /// Padding sentinel: no real candidate index (they are `< 232`).
+    pub const NO_HIT: u32 = u32::MAX;
+
+    /// Whether the cache holds the routing decisions of a forward pass
+    /// over exactly `n` queries at `k_top` hits per query.
+    pub fn matches(&self, n: usize, k_top: usize) -> bool {
+        self.valid && self.queries == n && self.k_top == k_top
+    }
+
+    /// Drop the cached decisions (the next backward must recompute).
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    fn reset(&mut self, n: usize, k_top: usize) {
+        self.queries = n;
+        self.k_top = k_top;
+        self.d2.clear();
+        self.d2.resize(n * k_top, 0.0);
+        self.cand.clear();
+        self.cand.resize(n * k_top, Self::NO_HIT);
+        self.valid = true;
+    }
+}
+
 /// Per-worker scratch: one distance row over the candidate table, the
 /// in-support `(weight, candidate)` pairs awaiting selection, and the
 /// canonically-ordered `(weight, torus row, candidate)` selection.
@@ -469,6 +525,115 @@ impl BatchLookupEngine {
         );
         lookup.reset(n, self.k_top);
         self.dispatch(queries, lookup, Some(table), &mut gathered[..need]);
+    }
+
+    /// [`Self::lookup_gather_ragged_into`] that additionally captures
+    /// each query's selected `(d2, candidate)` pairs into `cache` so the
+    /// backward pass can skip the scoring + top-k recompute
+    /// ([`Self::backward_gather_ragged_cached_into`]).  The lookup and
+    /// gather results are bit-identical to the uncached path — the
+    /// capture reads the same per-worker scratch the selection already
+    /// filled, adding two stores per hit.
+    pub fn lookup_gather_ragged_cached_into(
+        &self,
+        queries: &[f64],
+        table: &ValueTable,
+        lookup: &mut BatchOutput,
+        gathered: &mut [f32],
+        cache: &mut BackwardCache,
+    ) {
+        assert_eq!(queries.len() % 8, 0, "queries must be N x 8 row-major");
+        let n = queries.len() / 8;
+        let need = n * table.dim();
+        assert!(
+            gathered.len() >= need,
+            "gather output holds {} floats, batch needs {need}",
+            gathered.len()
+        );
+        lookup.reset(n, self.k_top);
+        cache.reset(n, self.k_top);
+        self.dispatch_cached(queries, lookup, table, &mut gathered[..need], cache);
+    }
+
+    /// The routing gradient over a forward's captured selection: exactly
+    /// [`Self::backward_gather_ragged_into`] — same hits, same operation
+    /// order, bit-identical `d_queries` — but reading each masked
+    /// query's `(d2, candidate)` pairs from `cache` instead of re-running
+    /// the candidate scoring and canonical top-k.  Only the query's
+    /// reduction (exact integer-dominated arithmetic) is recomputed, for
+    /// the original-frame lattice points and torus rows.
+    ///
+    /// `cache` must hold the selections of the forward pass over these
+    /// exact queries ([`BackwardCache::matches`]); anything else is a
+    /// logic error upstream and panics rather than silently producing
+    /// gradients for the wrong routing.
+    pub fn backward_gather_ragged_cached_into(
+        &self,
+        queries: &[f64],
+        table: &ValueTable,
+        d_gathered: &[f32],
+        cache: &BackwardCache,
+        d_queries: &mut [f64],
+    ) {
+        assert_eq!(queries.len() % 8, 0, "queries must be N x 8 row-major");
+        let n = queries.len() / 8;
+        assert!(
+            cache.matches(n, self.k_top),
+            "backward cache is stale: holds {} queries x {} hits (valid: {}), \
+             the batch needs {n} x {}",
+            cache.queries,
+            cache.k_top,
+            cache.valid,
+            self.k_top
+        );
+        let m = table.dim();
+        assert!(
+            d_gathered.len() >= n * m,
+            "upstream gradient holds {} floats, batch needs {}",
+            d_gathered.len(),
+            n * m
+        );
+        assert!(
+            d_queries.len() >= n * 8,
+            "query-gradient output holds {} floats, batch needs {}",
+            d_queries.len(),
+            n * 8
+        );
+        if n == 0 {
+            return;
+        }
+        let k = self.k_top;
+        let torus = self.torus;
+        let d_gathered = &d_gathered[..n * m];
+        let d_queries = &mut d_queries[..n * 8];
+        const MIN_QUERIES_PER_SHARD: usize = 32;
+        let shards = self.n_threads.min(n.div_ceil(MIN_QUERIES_PER_SHARD));
+        if shards <= 1 {
+            backward_range_cached(
+                torus,
+                k,
+                queries,
+                table,
+                d_gathered,
+                &cache.d2,
+                &cache.cand,
+                d_queries,
+            );
+            return;
+        }
+        let chunk = n.div_ceil(shards);
+        std::thread::scope(|s| {
+            let qs = queries.chunks(chunk * 8);
+            let gs = d_gathered.chunks(chunk * m);
+            let d2s = cache.d2.chunks(chunk * k);
+            let cis = cache.cand.chunks(chunk * k);
+            let dqs = d_queries.chunks_mut(chunk * 8);
+            for ((((q, g), d2), ci), dq) in qs.zip(gs).zip(d2s).zip(cis).zip(dqs) {
+                s.spawn(move || {
+                    backward_range_cached(torus, k, q, table, g, d2, ci, dq);
+                });
+            }
+        });
     }
 
     /// f32 SIMD lookup: same shapes and padding as
@@ -924,6 +1089,72 @@ impl BatchLookupEngine {
         });
     }
 
+    /// [`Self::dispatch`] with the backward-cache capture: identical
+    /// sharding and shard-size heuristics, the cache buffers sharded in
+    /// lockstep with the output shards.
+    fn dispatch_cached(
+        &self,
+        queries: &[f64],
+        out: &mut BatchOutput,
+        table: &ValueTable,
+        gathered: &mut [f32],
+        cache: &mut BackwardCache,
+    ) {
+        let n = queries.len() / 8;
+        if n == 0 {
+            return;
+        }
+        let k = self.k_top;
+        let torus = self.torus;
+        let m = table.dim();
+        const MIN_QUERIES_PER_SHARD: usize = 32;
+        let shards = self.n_threads.min(n.div_ceil(MIN_QUERIES_PER_SHARD));
+        if shards <= 1 {
+            let mut scratch = Scratch::new();
+            run_range_cached(
+                torus,
+                k,
+                queries,
+                &mut scratch,
+                &mut out.indices,
+                &mut out.weights,
+                &mut out.total_weight,
+                table,
+                gathered,
+                &mut cache.d2,
+                &mut cache.cand,
+            );
+            return;
+        }
+        let chunk = n.div_ceil(shards);
+        // per-shard windows of the gather output (empty when the table
+        // is zero-dim; `&mut []` is 'static by promotion)
+        let mut gs: Vec<&mut [f32]> = Vec::with_capacity(shards);
+        if m == 0 {
+            gs.resize_with(shards, || &mut []);
+        } else {
+            gs.extend(gathered.chunks_mut(chunk * m));
+        }
+        std::thread::scope(|s| {
+            let qs = queries.chunks(chunk * 8);
+            let is = out.indices.chunks_mut(chunk * k);
+            let ws = out.weights.chunks_mut(chunk * k);
+            let ts = out.total_weight.chunks_mut(chunk);
+            let d2s = cache.d2.chunks_mut(chunk * k);
+            let cis = cache.cand.chunks_mut(chunk * k);
+            for ((((((q, idx), wts), tot), g), d2), ci) in
+                qs.zip(is).zip(ws).zip(ts).zip(gs).zip(d2s).zip(cis)
+            {
+                s.spawn(move || {
+                    let mut scratch = Scratch::new();
+                    run_range_cached(
+                        torus, k, q, &mut scratch, idx, wts, tot, table, g, d2, ci,
+                    );
+                });
+            }
+        });
+    }
+
     /// [`Self::dispatch`] for the f32 SIMD path: identical sharding and
     /// shard-size heuristics, per-worker [`ScratchF32`].
     fn dispatch_f32(
@@ -1003,6 +1234,50 @@ fn run_range(
         if let Some(t) = table {
             t.gather_weighted(idx_row, w_row, &mut gathered[qi * m..(qi + 1) * m]);
         }
+    }
+}
+
+/// [`run_range`] with the backward-cache capture: after each query's
+/// selection, store the selected hits' `(d2, candidate)` pairs — read
+/// straight from the scratch the selection already filled — into the
+/// query's cache rows, padding with [`BackwardCache::NO_HIT`].  The
+/// lookup and gather outputs are bit-identical to [`run_range`]'s.
+#[allow(clippy::too_many_arguments)]
+fn run_range_cached(
+    torus: TorusK,
+    k_top: usize,
+    queries: &[f64],
+    scratch: &mut Scratch,
+    indices: &mut [u64],
+    weights: &mut [f32],
+    totals: &mut [f64],
+    table: &ValueTable,
+    gathered: &mut [f32],
+    cache_d2: &mut [f64],
+    cache_cand: &mut [u32],
+) {
+    let soa = neighbor_table_soa();
+    let nbr = neighbor_table();
+    let m = table.dim();
+    for (qi, chunk) in queries.chunks_exact(8).enumerate() {
+        let q = vec8(chunk);
+        let idx_row = &mut indices[qi * k_top..(qi + 1) * k_top];
+        let w_row = &mut weights[qi * k_top..(qi + 1) * k_top];
+        totals[qi] = lookup_one(torus, k_top, soa, nbr, q, scratch, idx_row, w_row);
+        // `lookup_one` leaves the selection in `scratch.sel` and the full
+        // distance row in `scratch.d2`; capture the pairs the backward
+        // needs, in selection order
+        let d2_row = &mut cache_d2[qi * k_top..(qi + 1) * k_top];
+        let ci_row = &mut cache_cand[qi * k_top..(qi + 1) * k_top];
+        for (j, &(_w, _row, ci)) in scratch.sel.iter().enumerate() {
+            d2_row[j] = scratch.d2[ci as usize];
+            ci_row[j] = ci;
+        }
+        for j in scratch.sel.len()..k_top {
+            d2_row[j] = 0.0;
+            ci_row[j] = BackwardCache::NO_HIT;
+        }
+        table.gather_weighted(idx_row, w_row, &mut gathered[qi * m..(qi + 1) * m]);
     }
 }
 
@@ -1238,6 +1513,59 @@ fn backward_range(
     }
 }
 
+/// [`backward_range`] over a forward's captured selection: identical
+/// per-hit arithmetic in the identical order — `df` from the *stored*
+/// `d2` (the exact f64 the forward computed), the lattice point and
+/// torus row from the recomputed reduction — so `d_queries` comes out
+/// bit-identical to the recompute path's.
+#[allow(clippy::too_many_arguments)]
+fn backward_range_cached(
+    torus: TorusK,
+    k_top: usize,
+    queries: &[f64],
+    table: &ValueTable,
+    d_gathered: &[f32],
+    cache_d2: &[f64],
+    cache_cand: &[u32],
+    d_queries: &mut [f64],
+) {
+    let nbr = neighbor_table();
+    let m = table.dim();
+    for (qi, chunk) in queries.chunks_exact(8).enumerate() {
+        let q = vec8(chunk);
+        let dq = &mut d_queries[qi * 8..(qi + 1) * 8];
+        dq.fill(0.0);
+        let dg = &d_gathered[qi * m..(qi + 1) * m];
+        // no-loss queries (unmasked positions) skip the whole pipeline
+        if dg.iter().all(|&g| g == 0.0) {
+            continue;
+        }
+        let red = reduce(q);
+        let d2_row = &cache_d2[qi * k_top..(qi + 1) * k_top];
+        let ci_row = &cache_cand[qi * k_top..(qi + 1) * k_top];
+        for (&d2, &ci) in d2_row.iter().zip(ci_row) {
+            if ci == BackwardCache::NO_HIT {
+                break; // padding is a suffix of the selection
+            }
+            let df = kernel_df_dd2(d2);
+            let u = red.unmap(&nbr[ci as usize]);
+            let row_idx = torus.index(&u);
+            let row = table.row(row_idx);
+            let mut dldw = 0.0f64;
+            for (&g, &r) in dg.iter().zip(row) {
+                dldw += g as f64 * r as f64;
+            }
+            let coef = 2.0 * dldw * df;
+            if coef == 0.0 {
+                continue; // e.g. the hit's value row is all zeros
+            }
+            for (d, out) in dq.iter_mut().enumerate() {
+                *out += coef * (q[d] - u[d] as f64);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1447,6 +1775,105 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads, lane {i}");
             }
         }
+    }
+
+    #[test]
+    fn cached_forward_is_bit_identical_to_the_uncached_path() {
+        let mut table = ValueTable::zeros(1 << 18, 8).unwrap();
+        table.randomize(5, 0.3);
+        let mut rng = Rng::new(90);
+        let n = 67;
+        let queries = random_queries(&mut rng, n, 9.0);
+        for threads in [1, 3] {
+            let engine = BatchLookupEngine::with_threads(torus(), 16, threads);
+            let mut plain = BatchOutput::default();
+            let mut plain_g = vec![0.0f32; n * 8];
+            engine.lookup_gather_ragged_into(&queries, &table, &mut plain, &mut plain_g);
+            let mut cached = BatchOutput::default();
+            let mut cached_g = vec![0.0f32; n * 8];
+            let mut cache = BackwardCache::default();
+            engine.lookup_gather_ragged_cached_into(
+                &queries,
+                &table,
+                &mut cached,
+                &mut cached_g,
+                &mut cache,
+            );
+            assert!(cache.matches(n, 16));
+            assert_eq!(plain.indices, cached.indices, "{threads} threads");
+            assert_eq!(plain.weights, cached.weights, "{threads} threads");
+            for (a, b) in plain_g.iter().zip(&cached_g) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_backward_is_bit_identical_to_the_recompute_path() {
+        let mut table = ValueTable::zeros(1 << 18, 16).unwrap();
+        table.randomize(13, 0.2);
+        let mut rng = Rng::new(91);
+        let n = 53;
+        let queries = random_queries(&mut rng, n, 10.0);
+        // a training-shaped upstream gradient: most query rows zero
+        // (unmasked positions), a few dense
+        let mut dg = vec![0.0f32; n * 16];
+        for qi in (0..n).step_by(3) {
+            for v in dg[qi * 16..(qi + 1) * 16].iter_mut() {
+                *v = rng.uniform(-1.0, 1.0) as f32;
+            }
+        }
+        for threads in [1, 4] {
+            let engine = BatchLookupEngine::with_threads(torus(), 24, threads);
+            let mut lk = BatchOutput::default();
+            let mut gathered = vec![0.0f32; n * 16];
+            let mut cache = BackwardCache::default();
+            engine.lookup_gather_ragged_cached_into(
+                &queries,
+                &table,
+                &mut lk,
+                &mut gathered,
+                &mut cache,
+            );
+            let mut recomputed = vec![0.0f64; n * 8];
+            engine.backward_gather_ragged_into(&queries, &table, &dg, &mut recomputed);
+            let mut from_cache = vec![0.0f64; n * 8];
+            engine.backward_gather_ragged_cached_into(
+                &queries,
+                &table,
+                &dg,
+                &cache,
+                &mut from_cache,
+            );
+            for (i, (a, b)) in from_cache.iter().zip(&recomputed).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads, lane {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "backward cache is stale")]
+    fn stale_backward_cache_panics_instead_of_misrouting_gradients() {
+        let table = ValueTable::zeros(1 << 18, 4).unwrap();
+        let engine = BatchLookupEngine::new(torus(), 8);
+        let mut rng = Rng::new(92);
+        let queries = random_queries(&mut rng, 3, 5.0);
+        let mut cache = BackwardCache::default();
+        {
+            let mut lk = BatchOutput::default();
+            let mut gathered = vec![0.0f32; 3 * 4];
+            engine.lookup_gather_ragged_cached_into(
+                &queries,
+                &table,
+                &mut lk,
+                &mut gathered,
+                &mut cache,
+            );
+        }
+        cache.invalidate();
+        let dg = vec![0.0f32; 3 * 4];
+        let mut dq = vec![0.0f64; 3 * 8];
+        engine.backward_gather_ragged_cached_into(&queries, &table, &dg, &cache, &mut dq);
     }
 
     #[test]

@@ -30,8 +30,8 @@ pub mod torus;
 pub mod zn;
 
 pub use batch::{
-    BatchLookupEngine, BatchOutput, GatherStage, MergeWeight, ScoredBatch, ShardPlan,
-    ShardSelection,
+    BackwardCache, BatchLookupEngine, BatchOutput, GatherStage, MergeWeight, ScoredBatch,
+    ShardPlan, ShardSelection,
 };
 pub use e8::{is_lattice_point, quantize, reduce, Reduction};
 pub use kernel::{kernel_f, TOTAL_WEIGHT_LOWER};

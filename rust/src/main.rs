@@ -84,9 +84,11 @@ COMMANDS:
               stays bit-identical to --shards 1; a checkpoint saved with
               N shards must be served with --shards N or reassembled
               with --shards 1 — see docs/serving.md);
-              --http-workers N, --max-pending N and
-              --keep-alive-timeout SECS tune the keep-alive worker-pool
-              front door; --request-timeout-ms N expires queued requests
+              --http-workers N (event loops), --max-connections N,
+              --max-pending N and --keep-alive-timeout SECS tune the
+              event-driven keep-alive front door (each loop multiplexes
+              its connections with poll(2) — see docs/serving.md);
+              --request-timeout-ms N expires queued requests
               with 504 before they reach the backend; SIGTERM/SIGINT
               drain gracefully; a corrupt checkpoint falls back to its
               newest verifying .prev-<step> sibling — see
@@ -391,14 +393,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spec = CorpusSpec { seed: cfg.corpus_seed, ..CorpusSpec::default() };
     let pipeline = DataPipeline::new(spec, cfg.vocab_size, 8, 1, 0.15)?;
     let bpe = Arc::new(pipeline.bpe);
-    // front-door tunables: worker-pool size, bounded admission, and the
-    // keep-alive idle timeout (see docs/serving.md)
+    // front-door tunables: event-loop count, the connection ceiling, and
+    // the keep-alive idle timeout (see docs/serving.md)
     let http = HttpConfig::default();
     let http = HttpConfig {
         workers: args.usize("http-workers", http.workers)?,
         keep_alive_timeout: std::time::Duration::from_secs_f64(
             args.f64("keep-alive-timeout", http.keep_alive_timeout.as_secs_f64())?,
         ),
+        max_connections: args.usize("max-connections", http.max_connections)?,
         ..http
     };
     // per-request deadline: expired requests get 504 without ever

@@ -24,7 +24,9 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::checkpoint::{Checkpoint, CheckpointWriter, Manifest, ModelDesc};
 use crate::lattice::e8::vec8;
-use crate::lattice::{BatchLookupEngine, BatchOutput, LatticeLookup, ShardPlan, TorusK};
+use crate::lattice::{
+    BackwardCache, BatchLookupEngine, BatchOutput, LatticeLookup, ShardPlan, TorusK,
+};
 use crate::memstore::{AccessStats, DenseAdam, QuantizedValueTable, SparseAdam, ValueTable};
 use crate::util::rng::Rng;
 
@@ -244,6 +246,13 @@ pub struct LramMlm {
     pub(crate) queries: Vec<f64>,
     pub(crate) lk: BatchOutput,
     pub(crate) gathered: Vec<f32>,
+    /// Trainer-only capture of the last f64 fused forward's routing
+    /// decisions, so [`Self::backward_queries`] skips the scoring +
+    /// top-k recompute.  Filled only by the f64 single-owner memory
+    /// stage; every other path (oracle, sharded, f32, q8) invalidates
+    /// it and the backward falls back to recomputing — bit-identical
+    /// either way.
+    bwd_cache: BackwardCache,
 }
 
 impl LramMlm {
@@ -345,6 +354,7 @@ impl LramMlm {
             queries: vec![0.0; max_positions * cfg.heads * 8],
             lk: BatchOutput::default(),
             gathered: vec![0.0; max_positions * cfg.heads * cfg.m],
+            bwd_cache: BackwardCache::default(),
             cfg,
         };
         model.set_numeric_path(path)?;
@@ -789,6 +799,9 @@ impl LramMlm {
         // the O(1) memory stage: fused lookup+gather (or the scalar
         // oracle, bit-identical, for differential testing)
         let n_queries = positions * heads;
+        // every path below overwrites the gathered prefix; only the f64
+        // fused path re-validates the backward cache as it runs
+        self.bwd_cache.invalidate();
         if use_oracle {
             ensure!(
                 self.table_full,
@@ -840,11 +853,17 @@ impl LramMlm {
             }
         } else {
             match (self.path, self.qtable.as_ref()) {
-                (NumericPath::F64, _) => self.engine.lookup_gather_ragged_into(
+                // the f64 training path also captures each query's
+                // selected (d2, candidate) pairs, so the routing
+                // backward skips the scoring + top-k recompute; the
+                // lookup and gather stay bit-identical to the uncached
+                // engine call
+                (NumericPath::F64, _) => self.engine.lookup_gather_ragged_cached_into(
                     &self.queries[..n_queries * 8],
                     &self.table,
                     &mut self.lk,
                     &mut self.gathered,
+                    &mut self.bwd_cache,
                 ),
                 (NumericPath::F32Q8, Some(q)) => self.engine.lookup_gather_ragged_q8_into(
                     &self.queries[..n_queries * 8],
@@ -922,6 +941,21 @@ impl LramMlm {
         d_gathered: &[f32],
         d_queries: &mut [f64],
     ) {
+        // the f64 fused forward captured each query's selected
+        // (d2, candidate) pairs; replaying them skips the candidate
+        // scoring and canonical top-k per masked query and is
+        // bit-identical to the recompute below (pinned by
+        // rust/tests/grad_check.rs)
+        if self.bwd_cache.matches(n_queries, self.engine.k_top) {
+            self.engine.backward_gather_ragged_cached_into(
+                &self.queries[..n_queries * 8],
+                &self.table,
+                d_gathered,
+                &self.bwd_cache,
+                d_queries,
+            );
+            return;
+        }
         self.engine.backward_gather_ragged_into(
             &self.queries[..n_queries * 8],
             &self.table,

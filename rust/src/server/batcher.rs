@@ -231,11 +231,50 @@ impl SlotGuard {
     }
 }
 
+/// Callback fired when an async submission's outcome becomes readable
+/// (or is guaranteed never to arrive): the event-driven front door
+/// pushes the owning connection's token onto its completion queue and
+/// wakes the event loop.  Must not block and must not take any lock
+/// ranked at or below the batcher's (`batcher.stats`) — it runs on the
+/// executor thread with no locks held.
+pub type ReplyNotify = Arc<dyn Fn() + Send + Sync>;
+
+/// The executor's reply handle.  [`ReplyTo::send`] delivers the outcome
+/// *then* fires the completion notifier; dropping without sending (an
+/// executor unwind mid-batch) fires the notifier too, so an
+/// event-driven waiter always gets woken — it then observes the
+/// disconnected channel and surfaces [`SubmitError::Unavailable`]
+/// exactly like a blocked [`Batcher::submit_bounded`] caller.
+struct ReplyTo {
+    tx: Sender<Result<PredictResponse, SubmitError>>,
+    notify: Option<ReplyNotify>,
+}
+
+impl ReplyTo {
+    /// Deliver the outcome and wake the waiter.  Consumes the handle so
+    /// the notifier fires exactly once (the `Drop` impl only fires if
+    /// `send` never ran).
+    fn send(mut self, outcome: Result<PredictResponse, SubmitError>) {
+        let _ = self.tx.send(outcome);
+        if let Some(n) = self.notify.take() {
+            n();
+        }
+    }
+}
+
+impl Drop for ReplyTo {
+    fn drop(&mut self) {
+        if let Some(n) = self.notify.take() {
+            n();
+        }
+    }
+}
+
 struct Pending {
     tokens: Vec<i32>,
     mask_positions: Vec<usize>,
     top_k: usize,
-    reply: Sender<Result<PredictResponse, SubmitError>>,
+    reply: ReplyTo,
     enqueued: Instant,
     /// Hard deadline derived from [`BatcherConfig::request_timeout`].
     deadline: Option<Instant>,
@@ -472,6 +511,51 @@ impl Batcher {
         bpe: &Bpe,
         req: &PredictRequest,
     ) -> Result<PredictResponse, SubmitError> {
+        let pending = self.enqueue(bpe, req, None)?;
+        // the executor owns the slot now: it releases after replying, so
+        // queue depth counts in-flight work, not just the channel
+        match pending.rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => {
+                // the executor unwound with this request in flight and
+                // never replied; reclaim the slot ourselves (idempotent
+                // if the executor got to it first) and tell the client
+                // the truth: transient, retry
+                pending.slot.release();
+                Err(SubmitError::Unavailable(EXECUTOR_DIED_MSG.into()))
+            }
+        }
+    }
+
+    /// [`Self::submit_bounded`] without the blocking wait: tokenize +
+    /// enqueue under the same bounded admission, returning immediately
+    /// with a [`PendingReply`] the caller polls via
+    /// [`PendingReply::try_take`].  `notify` fires (from the executor
+    /// thread, exactly once) when an outcome becomes readable — or when
+    /// it is guaranteed never to arrive, in which case `try_take`
+    /// reports [`SubmitError::Unavailable`].  The event-driven front
+    /// door parks the connection on this instead of parking a thread.
+    pub fn submit_bounded_async(
+        &self,
+        bpe: &Bpe,
+        req: &PredictRequest,
+        notify: ReplyNotify,
+    ) -> Result<PendingReply, SubmitError> {
+        self.enqueue(bpe, req, Some(notify))
+    }
+
+    /// Shared admission + enqueue path behind [`Self::submit_bounded`]
+    /// and [`Self::submit_bounded_async`].
+    ///
+    /// Admission is checked *first* — shedding under overload must be
+    /// the cheapest path through this function, and a shed request
+    /// never reaches the backend (it is not even tokenized).
+    fn enqueue(
+        &self,
+        bpe: &Bpe,
+        req: &PredictRequest,
+        notify: Option<ReplyNotify>,
+    ) -> Result<PendingReply, SubmitError> {
         // fault site for the admission path itself (chaos harness)
         if let Some(e) = failpoint::inject("batcher.submit") {
             return Err(SubmitError::Internal(format!("{e:#}")));
@@ -517,7 +601,7 @@ impl Batcher {
             tokens,
             mask_positions,
             top_k: req.top_k,
-            reply: reply_tx,
+            reply: ReplyTo { tx: reply_tx, notify },
             enqueued,
             deadline: self.request_timeout.map(|t| enqueued + t),
             slot: slot.clone(),
@@ -526,21 +610,37 @@ impl Batcher {
             slot.release();
             return Err(SubmitError::Internal("batcher is shut down".into()));
         }
-        // the executor owns the slot now: it releases after replying, so
-        // queue depth counts in-flight work, not just the channel
-        match reply_rx.recv() {
-            Ok(outcome) => outcome,
-            Err(_) => {
-                // the executor unwound with this request in flight and
-                // never replied; reclaim the slot ourselves (idempotent
-                // if the executor got to it first) and tell the client
-                // the truth: transient, retry
-                slot.release();
-                Err(SubmitError::Unavailable(
-                    "the inference executor failed mid-request and is being restarted \
-                     from its last good state; retry shortly"
-                        .into(),
-                ))
+        Ok(PendingReply { rx: reply_rx, slot })
+    }
+}
+
+/// What a blocked client is told when the executor unwound with its
+/// request in flight (same wording on the blocking and async paths).
+const EXECUTOR_DIED_MSG: &str = "the inference executor failed mid-request and is being \
+     restarted from its last good state; retry shortly";
+
+/// An admitted request awaiting its outcome — the async counterpart of
+/// the blocking wait inside [`Batcher::submit_bounded`].  Holds the
+/// reply channel plus the admission [`SlotGuard`] so an abandoned
+/// executor (unwind without reply) still frees the slot.
+pub struct PendingReply {
+    rx: Receiver<Result<PredictResponse, SubmitError>>,
+    slot: Arc<SlotGuard>,
+}
+
+impl PendingReply {
+    /// Non-blocking poll for the outcome.  `None` = still in flight
+    /// (spurious wakes are fine — poll again on the next notify).  A
+    /// disconnected channel (the executor unwound without replying)
+    /// releases the admission slot and reports
+    /// [`SubmitError::Unavailable`], exactly like the blocking path.
+    pub fn try_take(&self) -> Option<Result<PredictResponse, SubmitError>> {
+        match self.rx.try_recv() {
+            Ok(outcome) => Some(outcome),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                self.slot.release();
+                Some(Err(SubmitError::Unavailable(EXECUTOR_DIED_MSG.into())))
             }
         }
     }
@@ -651,7 +751,7 @@ fn expire_if_late(p: Pending, stats: &Mutex<BatchStats>) -> Option<Pending> {
     let waited_ms = now.duration_since(p.enqueued).as_millis() as u64;
     lock_stats(stats).timeouts += 1;
     p.slot.release();
-    let _ = p.reply.send(Err(SubmitError::Timeout { waited_ms }));
+    p.reply.send(Err(SubmitError::Timeout { waited_ms }));
     None
 }
 
@@ -747,7 +847,7 @@ fn executor_loop(
                     // request immediately must never be shed against its
                     // own slot
                     p.slot.release();
-                    let _ = p.reply.send(Ok(resp));
+                    p.reply.send(Ok(resp));
                 }
                 let mut s = lock_stats(stats);
                 for &l in &latencies {
@@ -793,7 +893,7 @@ fn fail_group_with(
     for p in group {
         latencies.push(p.enqueued.elapsed().as_secs_f64() * 1e3);
         p.slot.release();
-        let _ = p.reply.send(Err(err(msg.clone())));
+        p.reply.send(Err(err(msg.clone())));
     }
     let mut s = lock_stats(stats);
     for &l in &latencies {
@@ -974,7 +1074,7 @@ mod tests {
             tokens: vec![CLS_ID, MASK_ID, SEP_ID],
             mask_positions: vec![1],
             top_k: 1,
-            reply,
+            reply: ReplyTo { tx: reply, notify: None },
             enqueued,
             deadline: Some(now), // already in the past once checked
             slot: Arc::new(SlotGuard { pending: pending.clone(), released: AtomicBool::new(false) }),
@@ -997,7 +1097,7 @@ mod tests {
             tokens: vec![CLS_ID, MASK_ID, SEP_ID],
             mask_positions: vec![1],
             top_k: 1,
-            reply,
+            reply: ReplyTo { tx: reply, notify: None },
             enqueued: now,
             deadline: Some(now + Duration::from_secs(3600)),
             slot: test_slot(),
@@ -1011,7 +1111,7 @@ mod tests {
             tokens: vec![CLS_ID, MASK_ID, SEP_ID],
             mask_positions: vec![1],
             top_k: 1,
-            reply,
+            reply: ReplyTo { tx: reply, notify: None },
             // checked_sub: a fresh VM's Instant epoch may be younger
             // than the offset, and bare subtraction would panic
             enqueued: now.checked_sub(Duration::from_secs(9999)).unwrap_or(now),
@@ -1029,6 +1129,57 @@ mod tests {
     }
 
     #[test]
+    fn reply_to_fires_its_notifier_exactly_once_on_send_and_on_drop() {
+        // send path: the notifier fires once, after the outcome became
+        // readable (the waiter's try_take must succeed when woken)
+        let fired = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        let n = fired.clone();
+        let r = ReplyTo {
+            tx,
+            notify: Some(Arc::new(move || {
+                n.fetch_add(1, Ordering::SeqCst);
+            })),
+        };
+        r.send(Err(SubmitError::Internal("boom".into())));
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "send fires the notifier exactly once");
+        assert!(rx.try_recv().is_ok(), "the outcome was readable by notify time");
+
+        // drop-without-send path (executor unwind mid-batch): the
+        // notifier still fires so no event-loop waiter sleeps forever
+        let dropped = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel::<Result<PredictResponse, SubmitError>>();
+        let n = dropped.clone();
+        drop(ReplyTo {
+            tx,
+            notify: Some(Arc::new(move || {
+                n.fetch_add(1, Ordering::SeqCst);
+            })),
+        });
+        assert_eq!(dropped.load(Ordering::SeqCst), 1, "drop fires the notifier exactly once");
+        assert!(rx.try_recv().is_err(), "no outcome: the waiter sees the disconnect");
+    }
+
+    #[test]
+    fn pending_reply_surfaces_executor_death_and_frees_the_slot() {
+        let pending = Arc::new(AtomicUsize::new(1));
+        let slot =
+            Arc::new(SlotGuard { pending: pending.clone(), released: AtomicBool::new(false) });
+        let (tx, rx) = channel();
+        let pr = PendingReply { rx, slot };
+        assert!(pr.try_take().is_none(), "in flight: no outcome yet, slot stays claimed");
+        assert_eq!(pending.load(Ordering::Relaxed), 1);
+        drop(tx); // the executor unwound without replying
+        match pr.try_take() {
+            Some(Err(SubmitError::Unavailable(m))) => {
+                assert!(m.contains("executor failed"), "honest transient wording: {m}")
+            }
+            _ => panic!("expected Unavailable after executor death"),
+        }
+        assert_eq!(pending.load(Ordering::Relaxed), 0, "slot reclaimed on the error path");
+    }
+
+    #[test]
     fn truncated_mask_position_becomes_explicit_error() {
         let b = bpe();
         let (reply, _rx) = channel();
@@ -1036,7 +1187,7 @@ mod tests {
             tokens: vec![CLS_ID, 5, MASK_ID, SEP_ID],
             mask_positions: vec![2, 9], // 9 is beyond seq_len 4
             top_k: 2,
-            reply,
+            reply: ReplyTo { tx: reply, notify: None },
             enqueued: Instant::now(),
             deadline: None,
             slot: test_slot(),

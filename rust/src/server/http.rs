@@ -1,42 +1,58 @@
-//! Production HTTP/1.1 front door for the serving router (std::net;
-//! tokio is unavailable offline).
+//! Production HTTP/1.1 front door for the serving router (std::net +
+//! `poll(2)`; tokio is unavailable offline).
 //!
-//! The seed server spawned one thread per connection and closed the
-//! socket after every response, so under concurrent load the engine's
-//! fused lookup idled behind connection churn.  This front door is the
-//! shape production serving actually needs:
+//! The previous front door ran a fixed pool of threads, each *owning*
+//! one connection at a time and blocking in `fill_buf` between
+//! requests.  That shape caps concurrent keep-alive connections at the
+//! worker count: 10,000 mostly-idle clients would need 10,000 parked
+//! threads.  This revision keeps every externally visible semantic and
+//! replaces the thread-per-connection core with an **event-driven
+//! readiness layer**:
 //!
-//! * **fixed worker pool** — `workers` threads own connections taken
-//!   from a **bounded accept queue** (`conn_backlog`); when the queue is
-//!   full, new connections are shed immediately with a well-formed
-//!   `429 Too Many Requests` + `Retry-After` instead of piling into an
-//!   unbounded backlog,
-//! * **persistent keep-alive connections** — each worker runs a
-//!   pipelined request loop per connection (requests already buffered
-//!   are served back-to-back), honours `Connection: close`, and closes
-//!   idle connections after `keep_alive_timeout`,
-//! * **bounded admission** in front of the batcher — `/predict` goes
-//!   through [`Batcher::submit_bounded`]; once `max_pending` requests
-//!   are in flight the batcher sheds and the front door answers 429
-//!   with `Retry-After`, so overload degrades into fast, explicit
-//!   rejections rather than a latency collapse,
+//! * **event loops, not connection owners** — `workers` threads each
+//!   multiplex thousands of nonblocking keep-alive connections through
+//!   [`crate::util::poll`].  A connection is a small state machine
+//!   (reading head → reading body → dispatched to the batcher →
+//!   writing the response), advanced only when its socket is ready,
+//!   so idle connections cost one `pollfd`, not one thread,
+//! * **self-pipe wakeups** — each loop owns a [`Waker`]; the acceptor
+//!   wakes it to hand over new connections, and the batcher's executor
+//!   wakes it when a dispatched request completes
+//!   ([`Batcher::submit_bounded_async`]), so responses are written the
+//!   moment they exist instead of on the next poll tick,
+//! * **bounded admission at two layers** — the acceptor sheds beyond
+//!   `max_connections` open connections (or a full per-loop intake
+//!   queue, `conn_backlog`) with a well-formed `429 Too Many Requests`
+//!   + `Retry-After`; `/predict` still goes through the batcher's
+//!   `max_pending` admission cap and sheds with the same adaptive 429.
+//!   The shed response is written *by an event loop*, never by the
+//!   acceptor — a shed client that refuses to read its 429 can no
+//!   longer stall `accept(2)` for everyone else,
+//! * **persistent keep-alive connections** — pipelined requests are
+//!   served back-to-back from the connection's buffer, `Connection:
+//!   close` is honoured, and idle connections are closed after
+//!   `keep_alive_timeout` by the loops' deadline sweep,
 //! * **graceful drain** — [`Server::shutdown`] stops the acceptor,
-//!   lets every in-flight request complete (workers finish the current
-//!   response, the batcher finishes the current batch), then joins all
-//!   threads.  [`Server::drain_on_termination`] wires SIGTERM/SIGINT
-//!   (vendored-libc `sigaction`) to the same drain, which is how
-//!   [`serve_until_signaled`] — the `lram serve` daemon loop — exits,
+//!   closes idle connections, lets every in-flight request complete
+//!   (the batcher finishes the current batch, the loop writes the
+//!   response), then joins all threads.  [`Server::drain_on_termination`]
+//!   wires SIGTERM/SIGINT (vendored-libc `sigaction`) to the same
+//!   drain, which is how [`serve_until_signaled`] — the `lram serve`
+//!   daemon loop — exits,
 //! * **adaptive `Retry-After`** — every 429 carries a back-off estimate
 //!   from live queue depth × measured mean batch latency
 //!   ([`Batcher::retry_after_secs`]), so well-behaved clients back off
 //!   proportionally to actual overload.
 //!
-//! Workers are *supervised*: a panic anywhere in the parse/serve path is
-//! caught at the connection boundary (`catch_unwind`), counted in
-//! `/stats.worker_panics`, and kills only that connection — the pool
-//! never silently shrinks.  A panic inside request routing still writes
-//! a well-formed 503 before the connection closes; a hung socket is
-//! never the failure mode.
+//! The loops are *supervised*: a panic anywhere in the parse/serve path
+//! is caught at the connection boundary (`catch_unwind`), counted in
+//! `/stats.worker_panics`, and kills only that connection — the loop
+//! never dies.  A panic inside request routing still writes a
+//! well-formed 503 before the connection closes; a hung socket is never
+//! the failure mode.  `active_connections` is incremented at exactly
+//! one place (admission, in the acceptor) and decremented at exactly
+//! one place ([`release_admitted`], on teardown), so the gauge returns
+//! to zero no matter which error or panic path closed the connection.
 //!
 //! Endpoints (full contract in `docs/api.md`):
 //!   POST /v1/predict  {"text": "... [MASK] ...", "top_k": 5}
@@ -51,11 +67,12 @@
 //! `{"error": {"code", "message", "retry_after_s"?}}` built by
 //! [`error_body`] — one helper, one shape, no ad-hoc error JSON.
 
-use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -66,39 +83,58 @@ use crate::tokenizer::Bpe;
 use crate::util::failpoint;
 use crate::util::json::{self, Json};
 use crate::util::lockcheck::{rank, Mutex};
+use crate::util::poll::{self, Waker, POLLIN, POLLOUT};
 
 use super::api::PredictRequest;
-use super::batcher::{Batcher, Health, HealthState, SubmitError};
+use super::batcher::{Batcher, Health, HealthState, PendingReply, ReplyNotify, SubmitError};
 
-/// Socket-level read poll interval: short enough that idle workers
-/// notice shutdown and keep-alive deadlines promptly.
-const READ_POLL: Duration = Duration::from_millis(250);
-/// A stuck or dead client must not pin a worker on write.
+/// Upper bound on how long an event loop sleeps in `poll(2)` with
+/// nothing ready: deadline sweeps (keep-alive idle, request deadlines,
+/// write timeouts) and the shutdown flag are re-checked at least this
+/// often.  Wakeups (new connections, completed dispatches) interrupt
+/// the sleep immediately via the self-pipe.
+const POLL_TICK: Duration = Duration::from_millis(100);
+/// A stuck or dead client must not pin its response buffer forever.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// A shed client gets less patience: the 429 write is best-effort.
+const SHED_WRITE_TIMEOUT: Duration = Duration::from_secs(1);
 /// Request-line / header-line length cap.
 const MAX_LINE_BYTES: usize = 8 << 10;
 /// Header count cap per request.
 const MAX_HEADERS: usize = 100;
+/// Socket read granularity for the nonblocking read path.
+const READ_CHUNK: usize = 8192;
+/// Post-error drain caps: read-and-discard at most this many bytes /
+/// this long before closing, so the error response isn't wiped out by
+/// a TCP reset on unread request data.
+const DRAIN_CAP_BYTES: usize = 256 << 10;
+const DRAIN_CAP_TIME: Duration = Duration::from_millis(300);
 
-/// Front-door tunables (`--http-workers`, `--keep-alive-timeout`; the
-/// admission cap lives in [`super::BatcherConfig::max_pending`]).
+/// Front-door tunables (`--http-workers`, `--keep-alive-timeout`,
+/// `--max-connections`; the request admission cap lives in
+/// [`super::BatcherConfig::max_pending`]).
 #[derive(Debug, Clone)]
 pub struct HttpConfig {
-    /// Fixed worker-pool size; each worker serves one connection at a
-    /// time, so this bounds concurrent keep-alive connections.
+    /// Number of event-loop threads.  Each multiplexes many nonblocking
+    /// keep-alive connections, so this sizes CPU parallelism for
+    /// parse/route work — not the connection cap (see
+    /// [`HttpConfig::max_connections`]).
     pub workers: usize,
     /// Idle keep-alive connections are closed after this long.
     pub keep_alive_timeout: Duration,
-    /// Accepted connections waiting for a free worker; beyond this the
+    /// Per-loop bound on accepted connections parked in the intake
+    /// queue awaiting adoption by the event loop; beyond it the
     /// acceptor sheds with 429 + `Retry-After`.
     pub conn_backlog: usize,
     /// Request bodies larger than this are rejected with 413.
     pub max_body_bytes: usize,
     /// Once a request line has arrived, the rest of the request (headers
-    /// + body) must arrive within this window or the client gets 408 and
-    /// the worker slot is freed — a half-sent request must not wedge a
-    /// worker.
+    /// + body) must arrive within this window or the client gets 408 —
+    /// a half-sent request must not occupy state forever.
     pub request_deadline: Duration,
+    /// Hard cap on simultaneously open admitted connections across all
+    /// loops; beyond it the acceptor sheds with 429 + `Retry-After`.
+    pub max_connections: usize,
 }
 
 impl Default for HttpConfig {
@@ -109,6 +145,7 @@ impl Default for HttpConfig {
             conn_backlog: 256,
             max_body_bytes: 1 << 20,
             request_deadline: Duration::from_secs(10),
+            max_connections: 16384,
         }
     }
 }
@@ -117,14 +154,17 @@ impl Default for HttpConfig {
 #[derive(Debug, Default)]
 pub struct HttpStats {
     pub connections_accepted: AtomicU64,
-    /// connections shed at accept time (worker queue full)
+    /// connections shed at accept time (connection cap reached or the
+    /// loops' intake queues full)
     pub connections_shed: AtomicU64,
+    /// admitted connections currently open (adopted by an event loop or
+    /// awaiting adoption); shed connections are never counted
     pub active_connections: AtomicUsize,
     /// requests served over all connections (keep-alive reuse shows up
     /// as `http_requests` ≫ `connections_accepted`)
     pub requests: AtomicU64,
-    /// panics caught at the connection boundary; a nonzero value means a
-    /// worker hit a bug but the pool survived it
+    /// panics caught at the connection boundary; a nonzero value means
+    /// the serving path hit a bug but the event loops survived it
     pub worker_panics: AtomicU64,
 }
 
@@ -159,8 +199,8 @@ impl ShutdownHandle {
 }
 
 impl Server {
-    /// Bind and start the worker pool.  `addr` may use port 0 to bind an
-    /// ephemeral port (see [`Server::local_addr`]).
+    /// Bind and start the acceptor + event loops.  `addr` may use port 0
+    /// to bind an ephemeral port (see [`Server::local_addr`]).
     pub fn bind(
         addr: &str,
         batcher: Arc<Batcher>,
@@ -172,6 +212,21 @@ impl Server {
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let workers = cfg.workers.max(1);
+        // best effort: lift the fd limit toward the admission cap plus
+        // slack for wake pipes, the listener, and the rest of the
+        // process.  A capped limit is not fatal — the acceptor simply
+        // sheds once accept() hits EMFILE territory — but it deserves a
+        // log line, because "why does my 10k box stall at 1024?" is the
+        // question this answers.
+        let want = cfg.max_connections.max(1) as u64 + 2 * workers as u64 + 64;
+        match poll::raise_nofile_limit(want) {
+            Ok(got) if got < want => log::warn!(
+                "fd limit {got} is below max_connections + slack ({want}); \
+                 connections past the limit will be shed"
+            ),
+            Ok(_) => {}
+            Err(e) => log::warn!("could not read/raise RLIMIT_NOFILE: {e}"),
+        }
         let shutdown = Arc::new(AtomicBool::new(false));
         let http = Arc::new(HttpStats::default());
         let health = batcher.health_handle();
@@ -183,18 +238,26 @@ impl Server {
             keep_alive_timeout: cfg.keep_alive_timeout,
             max_body_bytes: cfg.max_body_bytes,
             request_deadline: cfg.request_deadline,
+            max_connections: cfg.max_connections.max(1),
+            conn_backlog: cfg.conn_backlog.max(1),
         });
-        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.conn_backlog.max(1));
-        let conn_rx = Arc::new(Mutex::new(rank::HTTP_CONN_QUEUE, conn_rx));
+        let mut loops = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            loops.push(Arc::new(LoopShared {
+                intake: Mutex::new(rank::HTTP_CONN_QUEUE, VecDeque::new()),
+                completions: Mutex::new(rank::HTTP_LOOP_COMPLETIONS, Vec::new()),
+                waker: Waker::new().context("creating an event-loop wake pipe")?,
+            }));
+        }
         let mut threads = Vec::with_capacity(workers + 1);
-        for i in 0..workers {
-            let rx = conn_rx.clone();
+        for (i, shared) in loops.iter().enumerate() {
+            let shared = shared.clone();
             let router = router.clone();
             let shutdown = shutdown.clone();
             threads.push(
                 std::thread::Builder::new()
-                    .name(format!("http-worker-{i}"))
-                    .spawn(move || worker_loop(&rx, &router, &shutdown))?,
+                    .name(format!("http-loop-{i}"))
+                    .spawn(move || event_loop(&shared, &router, &shutdown))?,
             );
         }
         {
@@ -203,14 +266,15 @@ impl Server {
             threads.push(
                 std::thread::Builder::new()
                     .name("http-acceptor".into())
-                    .spawn(move || acceptor_loop(&listener, &conn_tx, &router, &shutdown))?,
+                    .spawn(move || acceptor_loop(&listener, &loops, &router, &shutdown))?,
             );
         }
         log::info!(
-            "serving on http://{local} ({workers} workers, keep-alive {:.0}s, \
-             conn backlog {}, admission cap {})",
+            "serving on http://{local} ({workers} event loops, keep-alive {:.0}s, \
+             conn backlog {}, max connections {}, admission cap {})",
             cfg.keep_alive_timeout.as_secs_f64(),
             cfg.conn_backlog.max(1),
+            cfg.max_connections.max(1),
             router.batcher.max_pending()
         );
         Ok(Server { addr: local, shutdown, threads, http, health })
@@ -221,7 +285,7 @@ impl Server {
         self.addr
     }
 
-    /// Front-door counters (shared with the worker threads).
+    /// Front-door counters (shared with the event-loop threads).
     pub fn http_stats(&self) -> Arc<HttpStats> {
         self.http.clone()
     }
@@ -321,37 +385,73 @@ pub fn serve_until_signaled(
     Ok(())
 }
 
+// -- event-loop plumbing ---------------------------------------------------
+
+/// The cross-thread surface of one event loop: the acceptor pushes
+/// connections into `intake`, the batcher's executor pushes finished
+/// request tokens into `completions`, and both wake the loop's `poll`
+/// through the self-pipe `waker`.
+struct LoopShared {
+    intake: Mutex<VecDeque<Intake>>,
+    completions: Mutex<Vec<u64>>,
+    waker: Waker,
+}
+
+/// What the acceptor hands an event loop.
+enum Intake {
+    /// An admitted connection (already counted in `active_connections`).
+    Accepted(TcpStream),
+    /// A connection shed at the door: write the pre-rendered 429 bytes,
+    /// then close.  Writing happens here, on the event loop — the
+    /// acceptor must never block on a client that won't read.
+    Shed(TcpStream, Vec<u8>),
+}
+
 // -- acceptor --------------------------------------------------------------
 
 fn acceptor_loop(
     listener: &TcpListener,
-    conn_tx: &SyncSender<TcpStream>,
+    loops: &[Arc<LoopShared>],
     router: &Router,
     shutdown: &AtomicBool,
 ) {
-    // conn_tx is dropped when this loop exits, which is what lets idle
-    // workers drain the queue and stop
+    let mut rr = 0usize;
     loop {
         // ORDERING: polled drain flag; a stale read delays the acceptor
         // exit by one accept-loop iteration at most
         if shutdown.load(Ordering::Relaxed) {
+            // the loops poll the flag too, but a wake makes the drain
+            // prompt instead of one POLL_TICK late
+            for l in loops {
+                l.waker.wake();
+            }
             return;
         }
         match listener.accept() {
             Ok((stream, _)) => {
                 // ORDERING: /stats counters — atomicity without fences
                 router.http.connections_accepted.fetch_add(1, Ordering::Relaxed);
-                match conn_tx.try_send(stream) {
-                    Ok(()) => {}
-                    Err(TrySendError::Full(stream)) => {
-                        // every worker busy and the backlog full: shed at
-                        // the door with a well-formed 429 instead of
-                        // queueing unboundedly
-                        // ORDERING: /stats counter
-                        router.http.connections_shed.fetch_add(1, Ordering::Relaxed);
-                        shed_connection(stream, router.batcher.retry_after_secs());
-                    }
-                    Err(TrySendError::Disconnected(_)) => return,
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(true).is_err() {
+                    // a socket we cannot make nonblocking would wedge an
+                    // event loop; drop it (the peer sees a reset)
+                    continue;
+                }
+                // admission: the gauge is incremented here — the single
+                // admit point — and decremented only in release_admitted
+                let active = router.http.active_connections.load(Ordering::Acquire);
+                if active >= router.max_connections {
+                    shed_connection(stream, loops, &mut rr, router);
+                    continue;
+                }
+                router.http.active_connections.fetch_add(1, Ordering::AcqRel);
+                if !hand_off(loops, &mut rr, router.conn_backlog, Intake::Accepted(stream)) {
+                    // every loop's intake queue is full: undo the admit
+                    // and drop — there is no capacity even for a polite 429
+                    release_admitted(&router.http);
+                    // ORDERING: /stats counter
+                    router.http.connections_shed.fetch_add(1, Ordering::Relaxed);
+                    log::debug!("intake queues full; dropping a connection");
                 }
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -365,385 +465,782 @@ fn acceptor_loop(
     }
 }
 
-/// Best-effort 429 to a connection we cannot serve; errors are ignored
-/// (the peer may already be gone).  The brief post-response drain keeps
-/// the close from turning into a TCP reset that wipes the 429 on the
-/// client side (the peer usually has its request in flight already);
-/// its tight read timeout bounds how long a shed can stall the
-/// acceptor — under sustained overload that stall is itself
-/// backpressure on the accept rate.
-fn shed_connection(mut stream: TcpStream, retry_after_secs: u64) {
-    let _ = stream.set_nonblocking(false);
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+/// Shed a connection the cap refuses: render the 429 once, then hand
+/// the socket to an event loop to write it.  The acceptor never writes
+/// — a shed client that refuses to read its response used to stall the
+/// accept loop (and with it every other client) for up to the shed
+/// write timeout; now it merely occupies one `pollfd` until the write
+/// deadline expires.
+fn shed_connection(
+    stream: TcpStream,
+    loops: &[Arc<LoopShared>],
+    rr: &mut usize,
+    router: &Router,
+) {
+    // ORDERING: /stats counter
+    router.http.connections_shed.fetch_add(1, Ordering::Relaxed);
+    let retry = router.batcher.retry_after_secs();
     let body = error_body(
         429,
         "server overloaded: connection backlog full",
-        Some(retry_after_secs.max(1)),
+        Some(retry.max(1)),
     );
-    let _ = respond(&mut stream, 429, &body, true, 0, retry_after_secs);
-    drain_briefly(&mut stream);
+    let bytes = render_response(429, &body, true, 0, retry).into_bytes();
+    // best-effort: if every intake queue is full too, the socket is
+    // simply dropped (the peer sees a reset instead of the 429)
+    let _ = hand_off(loops, rr, router.conn_backlog, Intake::Shed(stream, bytes));
 }
 
-// -- workers ---------------------------------------------------------------
+/// Round-robin a connection to the first loop with intake capacity.
+/// Returns false (dropping nothing — the caller still owns no socket
+/// only on success) when every queue is at `backlog`.
+fn hand_off(loops: &[Arc<LoopShared>], rr: &mut usize, backlog: usize, item: Intake) -> bool {
+    for _ in 0..loops.len() {
+        let l = &loops[*rr % loops.len()];
+        *rr = rr.wrapping_add(1);
+        let mut q = l.intake.lock().unwrap_or_else(|p| p.into_inner());
+        if q.len() < backlog {
+            q.push_back(item);
+            drop(q);
+            l.waker.wake();
+            return true;
+        }
+    }
+    false
+}
 
-fn worker_loop(rx: &Mutex<Receiver<TcpStream>>, router: &Router, shutdown: &AtomicBool) {
-    loop {
-        // hold the lock only while waiting; a poisoned lock (panicked
-        // sibling) must not take the whole pool down
-        let next = {
-            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
-            guard.recv_timeout(Duration::from_millis(100))
-        };
-        match next {
-            Ok(stream) => {
-                router.http.active_connections.fetch_add(1, Ordering::AcqRel);
-                // supervise the connection: a panic anywhere in the
-                // parse/serve path kills this connection, not this
-                // worker thread — otherwise each panic would silently
-                // shrink the pool until nothing serves
-                match catch_unwind(AssertUnwindSafe(|| handle_connection(stream, router, shutdown)))
-                {
-                    Ok(Ok(())) => {}
-                    Ok(Err(e)) => log::debug!("connection error: {e:#}"),
-                    Err(_) => {
-                        // ORDERING: /stats counter
-                        router.http.worker_panics.fetch_add(1, Ordering::Relaxed);
-                        log::error!(
-                            "http worker caught a panic serving a connection; \
-                             connection dropped, worker continues"
-                        );
-                    }
-                }
-                router.http.active_connections.fetch_sub(1, Ordering::AcqRel);
+/// The single teardown point for the admission gauge: every admitted
+/// connection leaves through here exactly once — normal close, protocol
+/// error, write failure, panic, or drain — so `active_connections`
+/// cannot drift away from zero.
+fn release_admitted(http: &HttpStats) {
+    http.active_connections.fetch_sub(1, Ordering::AcqRel);
+}
+
+// -- per-connection state machine ------------------------------------------
+
+/// One multiplexed connection.
+struct Conn {
+    stream: TcpStream,
+    /// Counted in `active_connections` (false for shed 429 writers).
+    admitted: bool,
+    /// Bytes read but not yet consumed by the parser or body — carries
+    /// pipelined follow-up requests across responses.
+    inbuf: Vec<u8>,
+    state: State,
+}
+
+enum State {
+    /// Accumulating the request line + headers through [`HeadParser`].
+    /// `idle_deadline` is the keep-alive timeout armed when the
+    /// connection went idle; `head_deadline` is armed once the request
+    /// line arrives (the rest of the head must arrive promptly).
+    ReadingHead { parser: HeadParser, idle_deadline: Instant, head_deadline: Option<Instant> },
+    /// Head complete; accumulating `content_length` body bytes.
+    ReadingBody { head: Head, body: Vec<u8>, deadline: Instant },
+    /// Request handed to the batcher; the connection is parked (no
+    /// thread waits) until the executor's notify pushes our token into
+    /// the loop's completion queue.
+    Dispatched { reply: PendingReply, keep_alive: bool },
+    /// Writing a rendered response; `drain_after` runs the post-error
+    /// read-and-discard before closing.
+    Writing { buf: Vec<u8>, off: usize, close: bool, deadline: Instant, drain_after: bool },
+    /// Best-effort bounded read-and-discard after an error response, so
+    /// closing on unread request data doesn't turn into a TCP reset
+    /// that wipes the response on the client side.
+    Draining { deadline: Instant, drained: usize },
+    /// Transient placeholder while an event is being processed; never
+    /// observed between events.
+    Moving,
+}
+
+impl State {
+    /// Fresh between-requests state.
+    fn reading(keep_alive_timeout: Duration) -> State {
+        State::ReadingHead {
+            parser: HeadParser::new(),
+            idle_deadline: Instant::now() + keep_alive_timeout,
+            head_deadline: None,
+        }
+    }
+
+    /// The next instant at which this state times out, if any — drives
+    /// the loops' deadline sweep.
+    fn deadline(&self) -> Option<Instant> {
+        match self {
+            State::ReadingHead { idle_deadline, head_deadline, .. } => {
+                Some(head_deadline.unwrap_or(*idle_deadline))
             }
-            Err(RecvTimeoutError::Timeout) => {
-                // ORDERING: polled drain flag, re-checked every 100ms
-                if shutdown.load(Ordering::Relaxed) {
-                    return;
-                }
-            }
-            // acceptor gone and queue drained
-            Err(RecvTimeoutError::Disconnected) => return,
+            State::ReadingBody { deadline, .. }
+            | State::Writing { deadline, .. }
+            | State::Draining { deadline, .. } => Some(*deadline),
+            State::Dispatched { .. } | State::Moving => None,
         }
     }
 }
 
-/// The per-connection keep-alive request loop.
-fn handle_connection(stream: TcpStream, router: &Router, shutdown: &AtomicBool) -> Result<()> {
-    // accepted sockets inherit the listener's non-blocking mode on
-    // BSD/macOS/Windows, which would defeat SO_RCVTIMEO and busy-spin
-    // the poll loop; force blocking mode first (no-op on Linux)
-    stream.set_nonblocking(false)?;
-    let _ = stream.set_nodelay(true);
-    stream.set_read_timeout(Some(READ_POLL))?;
-    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    let keep_alive_secs = router.keep_alive_timeout.as_secs().max(1);
-    loop {
-        let req = match read_request(
-            &mut reader,
-            router.keep_alive_timeout,
-            router.request_deadline,
-            shutdown,
-            router.max_body_bytes,
-        ) {
-            Ok(req) => req,
-            // clean end of a keep-alive connection: peer closed between
-            // requests, idle past the deadline, or server draining
-            Err(ReadError::Idle) => return Ok(()),
-            Err(ReadError::Bad { status, message }) => {
-                let body = error_body(status, &message, None);
-                let _ = respond(&mut stream, status, &body, true, 0, 0);
-                // drain what the client is still sending (e.g. the body
-                // of an oversized POST) before closing, so the error
-                // response isn't wiped out by a TCP reset on unread data
-                drain_briefly(&mut reader);
-                return Ok(());
-            }
-            Err(ReadError::Io(e)) => {
-                return Err(anyhow!(e).context("reading request"));
-            }
-        };
-        // ORDERING: /stats counter
-        router.http.requests.fetch_add(1, Ordering::Relaxed);
-        // supervise routing separately from the connection loop: a panic
-        // while handling a parsed request still owes the client a
-        // well-formed response — 503 + close, never a silently dropped
-        // socket with a request outstanding
-        let routed = catch_unwind(AssertUnwindSafe(|| {
-            if let Some(e) = failpoint::inject("http.worker") {
-                let retry = router.batcher.retry_after_secs().max(1);
-                return (503, error_body(503, &format!("{e:#}"), Some(retry)));
-            }
-            router.route(&req)
-        }));
-        let panicked = routed.is_err();
-        let (status, body) = routed.unwrap_or_else(|_| {
-            // ORDERING: /stats counter
-            router.http.worker_panics.fetch_add(1, Ordering::Relaxed);
-            log::error!("request handler panicked; answering 503 and closing the connection");
-            let retry = router.batcher.retry_after_secs().max(1);
-            (
-                503,
-                error_body(
-                    503,
-                    "request handler panicked; retry on a fresh connection",
-                    Some(retry),
-                ),
-            )
-        });
-        // shed and not-ready responses tell the client when to come
-        // back, from live queue depth x measured batch latency
-        let retry =
-            if status == 429 || status == 503 { router.batcher.retry_after_secs() } else { 0 };
-        // a draining server finishes this response, then closes; so does
-        // a worker that just caught a panic (its connection state is
-        // suspect)
-        // ORDERING: polled drain flag; one stale keep-alive round-trip
-        // during a drain is harmless (the next request re-checks)
-        let close = !req.keep_alive || panicked || shutdown.load(Ordering::Relaxed);
-        respond(&mut stream, status, &body, close, keep_alive_secs, retry)
-            .map_err(|e| anyhow!(e).context("writing response"))?;
-        if close {
-            return Ok(());
-        }
-    }
+enum Flow {
+    Keep,
+    Close,
 }
 
-// -- request parsing -------------------------------------------------------
-
-#[derive(Debug)]
-struct HttpRequest {
-    method: String,
-    path: String,
-    keep_alive: bool,
-    body: Vec<u8>,
-}
-
-#[derive(Debug)]
-enum ReadError {
-    /// Clean end of the connection: EOF between requests, idle past the
-    /// keep-alive deadline, or shutdown while idle.
-    Idle,
-    /// The peer sent something we must reject; respond and close.
-    Bad { status: u16, message: String },
-    /// Transport failure mid-request; close without responding.
-    Io(std::io::Error),
+enum ReadSome {
+    Data,
+    Eof,
+    WouldBlock,
+    Err,
 }
 
 fn transient(kind: ErrorKind) -> bool {
     matches!(kind, ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted)
 }
 
-/// Best-effort, bounded read-and-discard of whatever the peer is still
-/// sending, so closing after an error response doesn't turn into a TCP
-/// reset that discards the response on the client side.  Capped in both
-/// bytes and wall time; all errors end the drain.
-fn drain_briefly<R: Read>(r: &mut R) {
-    const DRAIN_CAP_BYTES: usize = 256 << 10;
-    const DRAIN_CAP_TIME: Duration = Duration::from_millis(300);
-    let deadline = Instant::now() + DRAIN_CAP_TIME;
-    let mut scratch = [0u8; 8192];
-    let mut drained = 0usize;
-    while drained < DRAIN_CAP_BYTES && Instant::now() < deadline {
-        match r.read(&mut scratch) {
-            Ok(0) => return,
-            Ok(n) => drained += n,
-            Err(_) => return,
+/// One nonblocking read into `inbuf`.
+fn read_some(stream: &mut TcpStream, inbuf: &mut Vec<u8>) -> ReadSome {
+    let mut scratch = [0u8; READ_CHUNK];
+    loop {
+        match stream.read(&mut scratch) {
+            Ok(0) => return ReadSome::Eof,
+            Ok(n) => {
+                inbuf.extend_from_slice(&scratch[..n]);
+                return ReadSome::Data;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if transient(e.kind()) => return ReadSome::WouldBlock,
+            Err(e) => {
+                log::debug!("connection read error: {e}");
+                return ReadSome::Err;
+            }
         }
     }
 }
 
-/// Read one CRLF-terminated line through `fill_buf`/`consume`, riding
-/// out socket read timeouts until `deadline`.  `idle_ok` marks the
-/// between-requests wait, where EOF / deadline / shutdown are a clean
-/// [`ReadError::Idle`] rather than an error.
-fn read_line_bounded<R: BufRead>(
-    r: &mut R,
-    deadline: Instant,
-    shutdown: &AtomicBool,
-    idle_ok: bool,
-) -> Result<String, ReadError> {
-    let mut line: Vec<u8> = Vec::new();
+/// Advance one connection as far as it can go right now.  Called on
+/// socket readiness, batcher completion, and deadline ticks alike — the
+/// state machine re-derives everything it needs, so spurious calls are
+/// harmless.  Returns whether the connection stays in the loop.
+fn advance(
+    conn: &mut Conn,
+    token: u64,
+    shared: &Arc<LoopShared>,
+    router: &Router,
+    draining: bool,
+) -> Flow {
     loop {
-        let (consumed, done) = {
-            let buf = match r.fill_buf() {
-                Ok(b) => b,
-                Err(e) if transient(e.kind()) => {
-                    // ORDERING: polled drain flag, re-read every
-                    // READ_POLL tick while the connection idles
-                    if line.is_empty() && idle_ok && shutdown.load(Ordering::Relaxed) {
-                        return Err(ReadError::Idle);
+        let state = std::mem::replace(&mut conn.state, State::Moving);
+        match state {
+            State::ReadingHead { mut parser, idle_deadline, mut head_deadline } => {
+                loop {
+                    // parse whatever is already buffered
+                    if !conn.inbuf.is_empty() {
+                        let was_started = parser.started();
+                        let (consumed, step) = parser.step(&conn.inbuf);
+                        conn.inbuf.drain(..consumed);
+                        if !was_started && parser.started() {
+                            // the request line is in: the rest of the
+                            // request must arrive promptly
+                            head_deadline = Some(Instant::now() + router.request_deadline);
+                        }
+                        match step {
+                            HeadStep::Done(head) => {
+                                if head.content_length > router.max_body_bytes {
+                                    // reject before reading a single body
+                                    // byte (the drain discards what the
+                                    // client insists on sending)
+                                    let msg = format!(
+                                        "request body of {} bytes exceeds {}",
+                                        head.content_length, router.max_body_bytes
+                                    );
+                                    conn.state = error_response(413, &msg);
+                                    break;
+                                }
+                                let deadline = head_deadline.unwrap_or_else(|| {
+                                    Instant::now() + router.request_deadline
+                                });
+                                let body =
+                                    Vec::with_capacity(head.content_length.min(64 << 10));
+                                conn.state = State::ReadingBody { head, body, deadline };
+                                break;
+                            }
+                            HeadStep::Bad { status, message } => {
+                                conn.state = error_response(status, &message);
+                                break;
+                            }
+                            HeadStep::NeedMore => {}
+                        }
+                    }
+                    // deadlines: between requests an expiry is a silent
+                    // close (keep-alive idle timeout); with a partial
+                    // request in the buffer it is a 408
+                    let now = Instant::now();
+                    if let Some(d) = head_deadline {
+                        if now >= d {
+                            conn.state = error_response(408, "request timed out");
+                            break;
+                        }
+                    } else if now >= idle_deadline {
+                        if parser.idle() {
+                            return Flow::Close;
+                        }
+                        conn.state = error_response(408, "request timed out");
+                        break;
+                    }
+                    // a draining server closes idle connections; one with
+                    // a request in progress finishes serving it first
+                    if draining && parser.idle() {
+                        return Flow::Close;
+                    }
+                    match read_some(&mut conn.stream, &mut conn.inbuf) {
+                        ReadSome::Data => continue,
+                        // EOF: clean between requests, torn mid-request —
+                        // either way the connection closes silently
+                        ReadSome::Eof => return Flow::Close,
+                        ReadSome::WouldBlock => {
+                            conn.state =
+                                State::ReadingHead { parser, idle_deadline, head_deadline };
+                            return Flow::Keep;
+                        }
+                        ReadSome::Err => return Flow::Close,
+                    }
+                }
+            }
+            State::ReadingBody { head, mut body, deadline } => {
+                loop {
+                    if !conn.inbuf.is_empty() && body.len() < head.content_length {
+                        let take = (head.content_length - body.len()).min(conn.inbuf.len());
+                        body.extend(conn.inbuf.drain(..take));
+                    }
+                    if body.len() == head.content_length {
+                        conn.state = finish_request(head, body, token, shared, router, draining);
+                        break;
                     }
                     if Instant::now() >= deadline {
-                        return if line.is_empty() && idle_ok {
-                            Err(ReadError::Idle)
-                        } else {
-                            Err(ReadError::Bad {
-                                status: 408,
-                                message: "request timed out".into(),
-                            })
-                        };
+                        conn.state = error_response(408, "request body timed out");
+                        break;
                     }
-                    continue;
+                    match read_some(&mut conn.stream, &mut conn.inbuf) {
+                        ReadSome::Data => continue,
+                        // connection closed mid-body: nothing to answer
+                        ReadSome::Eof => return Flow::Close,
+                        ReadSome::WouldBlock => {
+                            conn.state = State::ReadingBody { head, body, deadline };
+                            return Flow::Keep;
+                        }
+                        ReadSome::Err => return Flow::Close,
+                    }
                 }
-                Err(e) => return Err(ReadError::Io(e)),
-            };
-            if buf.is_empty() {
-                // EOF: clean between requests, fatal mid-request
-                return if line.is_empty() && idle_ok {
-                    Err(ReadError::Idle)
-                } else {
-                    Err(ReadError::Io(std::io::Error::new(
-                        ErrorKind::UnexpectedEof,
-                        "connection closed mid-request",
-                    )))
-                };
             }
-            match buf.iter().position(|&b| b == b'\n') {
-                Some(pos) => {
-                    line.extend_from_slice(&buf[..pos]);
-                    (pos + 1, true)
-                }
+            State::Dispatched { reply, keep_alive } => match reply.try_take() {
                 None => {
-                    line.extend_from_slice(buf);
-                    (buf.len(), false)
+                    // spurious wake (or not our completion yet): park again
+                    conn.state = State::Dispatched { reply, keep_alive };
+                    return Flow::Keep;
                 }
-            }
-        };
-        r.consume(consumed);
-        if line.len() > MAX_LINE_BYTES {
-            return Err(ReadError::Bad {
-                status: 431,
-                message: format!("request line exceeds {MAX_LINE_BYTES} bytes"),
-            });
-        }
-        // enforce the deadline on successful reads too: a slow-drip
-        // client that keeps one byte per poll flowing must not be able
-        // to pin a worker past the request deadline
-        if !done && Instant::now() >= deadline {
-            return Err(ReadError::Bad { status: 408, message: "request timed out".into() });
-        }
-        if done {
-            if line.last() == Some(&b'\r') {
-                line.pop();
-            }
-            return String::from_utf8(line).map_err(|_| ReadError::Bad {
-                status: 400,
-                message: "request is not utf-8".into(),
-            });
-        }
-    }
-}
-
-fn read_exact_bounded<R: BufRead>(
-    r: &mut R,
-    buf: &mut [u8],
-    deadline: Instant,
-) -> Result<(), ReadError> {
-    let mut filled = 0usize;
-    while filled < buf.len() {
-        match r.read(&mut buf[filled..]) {
-            Ok(0) => {
-                return Err(ReadError::Io(std::io::Error::new(
-                    ErrorKind::UnexpectedEof,
-                    "connection closed mid-body",
-                )))
-            }
-            Ok(n) => {
-                filled += n;
-                // slow-drip bodies must hit the deadline even when
-                // every read succeeds
-                if filled < buf.len() && Instant::now() >= deadline {
-                    return Err(ReadError::Bad {
-                        status: 408,
-                        message: "request body timed out".into(),
-                    });
+                Some(outcome) => {
+                    let (status, body) = match outcome {
+                        Ok(resp) => (200, resp.to_json().to_string()),
+                        Err(e) => router.submit_error(e),
+                    };
+                    conn.state = response(router, status, &body, keep_alive, draining);
                 }
-            }
-            Err(e) if transient(e.kind()) => {
+            },
+            State::Writing { buf, mut off, close, deadline, drain_after } => {
                 if Instant::now() >= deadline {
-                    return Err(ReadError::Bad {
-                        status: 408,
-                        message: "request body timed out".into(),
-                    });
+                    // stuck peer: give up on the write, close silently
+                    return Flow::Close;
+                }
+                loop {
+                    if off == buf.len() {
+                        break;
+                    }
+                    match conn.stream.write(&buf[off..]) {
+                        Ok(0) => return Flow::Close,
+                        Ok(n) => off += n,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(e) if transient(e.kind()) => {
+                            conn.state =
+                                State::Writing { buf, off, close, deadline, drain_after };
+                            return Flow::Keep;
+                        }
+                        Err(_) => return Flow::Close,
+                    }
+                }
+                // response fully written
+                if drain_after {
+                    conn.state =
+                        State::Draining { deadline: Instant::now() + DRAIN_CAP_TIME, drained: 0 };
+                } else if close {
+                    return Flow::Close;
+                } else {
+                    // back to keep-alive; pipelined bytes already in
+                    // `inbuf` parse immediately on the next pass
+                    conn.state = State::reading(router.keep_alive_timeout);
                 }
             }
-            Err(e) => return Err(ReadError::Io(e)),
+            State::Draining { deadline, mut drained } => {
+                if Instant::now() >= deadline {
+                    return Flow::Close;
+                }
+                drained += conn.inbuf.len();
+                conn.inbuf.clear();
+                loop {
+                    if drained >= DRAIN_CAP_BYTES {
+                        return Flow::Close;
+                    }
+                    let mut scratch = [0u8; READ_CHUNK];
+                    match conn.stream.read(&mut scratch) {
+                        Ok(0) => return Flow::Close,
+                        Ok(n) => drained += n,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(e) if transient(e.kind()) => {
+                            conn.state = State::Draining { deadline, drained };
+                            return Flow::Keep;
+                        }
+                        Err(_) => return Flow::Close,
+                    }
+                }
+            }
+            // unreachable by construction (Moving only exists inside one
+            // advance call); treat defensively as a teardown
+            State::Moving => return Flow::Close,
         }
     }
-    Ok(())
 }
 
-/// Parse one HTTP/1.x request off the connection.  Keep-alive defaults
-/// on for HTTP/1.1 and off for HTTP/1.0; a `Connection` header
-/// overrides either way.
-fn read_request<R: BufRead>(
-    r: &mut R,
-    idle_timeout: Duration,
-    request_deadline: Duration,
-    shutdown: &AtomicBool,
-    max_body: usize,
-) -> Result<HttpRequest, ReadError> {
-    let idle_deadline = Instant::now() + idle_timeout;
-    let line = read_line_bounded(r, idle_deadline, shutdown, true)?;
-    // the request line is in: the rest must arrive promptly
-    let deadline = Instant::now() + request_deadline;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
-    let version = parts.next().unwrap_or("");
-    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/") {
-        return Err(ReadError::Bad {
-            status: 400,
-            message: format!("malformed request line '{line}'"),
-        });
-    }
-    let mut keep_alive = version == "HTTP/1.1";
-    let mut content_length = 0usize;
-    let mut headers_done = false;
-    // one extra iteration so exactly MAX_HEADERS headers (plus the
-    // terminating blank line) are accepted
-    for _ in 0..=MAX_HEADERS {
-        let h = read_line_bounded(r, deadline, shutdown, false)?;
-        if h.is_empty() {
-            headers_done = true;
-            break;
+/// A parsed request is in: count it, route it (supervised), and decide
+/// what the connection does next — write an immediate response, or park
+/// on the batcher's async reply.
+fn finish_request(
+    head: Head,
+    body: Vec<u8>,
+    token: u64,
+    shared: &Arc<LoopShared>,
+    router: &Router,
+    draining: bool,
+) -> State {
+    // ORDERING: /stats counter
+    router.http.requests.fetch_add(1, Ordering::Relaxed);
+    // supervise routing separately from the connection loop: a panic
+    // while handling a parsed request still owes the client a
+    // well-formed response — 503 + close, never a silently dropped
+    // socket with a request outstanding
+    let routed = catch_unwind(AssertUnwindSafe(|| {
+        if let Some(e) = failpoint::inject("http.worker") {
+            let retry = router.batcher.retry_after_secs().max(1);
+            return Routed::Done(503, error_body(503, &format!("{e:#}"), Some(retry)));
         }
-        if let Some((name, value)) = h.split_once(':') {
+        router.route(&head, &body, token, shared)
+    }));
+    match routed {
+        Ok(Routed::Done(status, body_json)) => {
+            response(router, status, &body_json, head.keep_alive, draining)
+        }
+        Ok(Routed::Dispatched(reply)) => State::Dispatched { reply, keep_alive: head.keep_alive },
+        Err(_) => {
+            // ORDERING: /stats counter
+            router.http.worker_panics.fetch_add(1, Ordering::Relaxed);
+            log::error!("request handler panicked; answering 503 and closing the connection");
+            let retry = router.batcher.retry_after_secs().max(1);
+            let body_json = error_body(
+                503,
+                "request handler panicked; retry on a fresh connection",
+                Some(retry),
+            );
+            // a connection that just survived a panic is suspect: close
+            response(router, 503, &body_json, false, draining)
+        }
+    }
+}
+
+/// Render a routed response into a write state.  A draining server (or
+/// a request that asked for it) closes after this response.
+fn response(router: &Router, status: u16, body: &str, keep_alive: bool, draining: bool) -> State {
+    let close = !keep_alive || draining;
+    // shed and not-ready responses tell the client when to come back,
+    // from live queue depth x measured batch latency
+    let retry = if status == 429 || status == 503 { router.batcher.retry_after_secs() } else { 0 };
+    let keep_alive_secs = router.keep_alive_timeout.as_secs().max(1);
+    let buf = render_response(status, body, close, keep_alive_secs, retry).into_bytes();
+    State::Writing {
+        buf,
+        off: 0,
+        close,
+        deadline: Instant::now() + WRITE_TIMEOUT,
+        drain_after: false,
+    }
+}
+
+/// Render a protocol-error response (400/408/413/431): always closes,
+/// and drains what the client is still sending (e.g. the body of an
+/// oversized POST) before the close, so the error response isn't wiped
+/// out by a TCP reset on unread data.
+fn error_response(status: u16, message: &str) -> State {
+    let body = error_body(status, message, None);
+    let buf = render_response(status, &body, true, 0, 0).into_bytes();
+    State::Writing {
+        buf,
+        off: 0,
+        close: true,
+        deadline: Instant::now() + WRITE_TIMEOUT,
+        drain_after: true,
+    }
+}
+
+// -- the event loop --------------------------------------------------------
+
+/// Run one connection through [`advance`] under panic supervision.  A
+/// panic anywhere in the parse/serve path kills this connection, not
+/// this loop thread — otherwise each panic would silently shrink the
+/// serving capacity until nothing serves.
+fn drive(
+    conns: &mut HashMap<u64, Conn>,
+    token: u64,
+    shared: &Arc<LoopShared>,
+    router: &Router,
+    draining: bool,
+) {
+    let Some(mut conn) = conns.remove(&token) else { return };
+    match catch_unwind(AssertUnwindSafe(|| advance(&mut conn, token, shared, router, draining))) {
+        Ok(Flow::Keep) => {
+            conns.insert(token, conn);
+        }
+        Ok(Flow::Close) => close_conn(conn, router),
+        Err(_) => {
+            // ORDERING: /stats counter
+            router.http.worker_panics.fetch_add(1, Ordering::Relaxed);
+            log::error!(
+                "http event loop caught a panic serving a connection; \
+                 connection dropped, loop continues"
+            );
+            close_conn(conn, router);
+        }
+    }
+}
+
+fn close_conn(conn: Conn, router: &Router) {
+    if conn.admitted {
+        release_admitted(&router.http);
+    }
+    // dropping `conn.stream` closes the socket
+}
+
+fn event_loop(shared: &Arc<LoopShared>, router: &Router, shutdown: &AtomicBool) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token: u64 = 0;
+    let mut fds: Vec<poll::pollfd> = Vec::new();
+    let mut fd_tokens: Vec<u64> = Vec::new();
+    let mut scratch: Vec<u64> = Vec::new();
+    loop {
+        // ORDERING: polled drain flag, re-read every loop iteration (a
+        // wake from the acceptor makes the drain prompt)
+        let draining = shutdown.load(Ordering::Relaxed);
+
+        // adopt handed-off connections
+        let intake: Vec<Intake> = {
+            let mut q = shared.intake.lock().unwrap_or_else(|p| p.into_inner());
+            q.drain(..).collect()
+        };
+        for item in intake {
+            match item {
+                Intake::Accepted(stream) => {
+                    if draining {
+                        // admitted before the drain flag flipped, never
+                        // adopted: release the admission gauge
+                        release_admitted(&router.http);
+                        continue;
+                    }
+                    next_token += 1;
+                    conns.insert(
+                        next_token,
+                        Conn {
+                            stream,
+                            admitted: true,
+                            inbuf: Vec::new(),
+                            state: State::reading(router.keep_alive_timeout),
+                        },
+                    );
+                }
+                Intake::Shed(stream, buf) => {
+                    next_token += 1;
+                    conns.insert(
+                        next_token,
+                        Conn {
+                            stream,
+                            admitted: false,
+                            inbuf: Vec::new(),
+                            state: State::Writing {
+                                buf,
+                                off: 0,
+                                close: true,
+                                deadline: Instant::now() + SHED_WRITE_TIMEOUT,
+                                drain_after: true,
+                            },
+                        },
+                    );
+                    // write the 429 immediately if the socket allows
+                    drive(&mut conns, next_token, shared, router, draining);
+                }
+            }
+        }
+
+        // completed dispatches (the executor's notify pushed our tokens)
+        scratch.clear();
+        {
+            let mut done = shared.completions.lock().unwrap_or_else(|p| p.into_inner());
+            scratch.append(&mut done);
+        }
+        for i in 0..scratch.len() {
+            drive(&mut conns, scratch[i], shared, router, draining);
+        }
+
+        // wait for readiness (or a wake, or the tick)
+        fds.clear();
+        fd_tokens.clear();
+        fds.push(poll::entry(shared.waker.read_fd(), POLLIN));
+        for (&token, conn) in conns.iter() {
+            let events = match conn.state {
+                State::ReadingHead { .. } | State::ReadingBody { .. } | State::Draining { .. } => {
+                    POLLIN
+                }
+                State::Writing { .. } => POLLOUT,
+                // parked on the batcher: no socket interest (responses
+                // are triggered by the completion queue, not the peer)
+                State::Dispatched { .. } | State::Moving => continue,
+            };
+            fds.push(poll::entry(conn.stream.as_raw_fd(), events));
+            fd_tokens.push(token);
+        }
+        match poll::poll(&mut fds, Some(POLL_TICK)) {
+            Ok(_) => {}
+            Err(e) => {
+                log::warn!("poll failed: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+        if fds[0].revents != 0 {
+            shared.waker.drain();
+        }
+        scratch.clear();
+        for (f, &token) in fds[1..].iter().zip(fd_tokens.iter()) {
+            // POLLERR/POLLHUP surface through the read/write attempt
+            if f.revents != 0 {
+                scratch.push(token);
+            }
+        }
+        for i in 0..scratch.len() {
+            drive(&mut conns, scratch[i], shared, router, draining);
+        }
+
+        // deadline sweep: keep-alive idle closes, 408s, write timeouts,
+        // drain caps — and, while draining, idle connection teardown
+        let now = Instant::now();
+        scratch.clear();
+        for (&token, conn) in conns.iter() {
+            let due = match &conn.state {
+                State::ReadingHead { parser, .. } if draining && parser.idle() => true,
+                s => s.deadline().is_some_and(|d| now >= d),
+            };
+            if due {
+                scratch.push(token);
+            }
+        }
+        for i in 0..scratch.len() {
+            drive(&mut conns, scratch[i], shared, router, draining);
+        }
+
+        if draining && conns.is_empty() {
+            // adopt-then-exit race: release anything still parked in the
+            // intake queue (the sockets drop, which the peers see as a
+            // reset — same contract as the old bounded accept queue)
+            let leftover: Vec<Intake> = {
+                let mut q = shared.intake.lock().unwrap_or_else(|p| p.into_inner());
+                q.drain(..).collect()
+            };
+            for item in leftover {
+                if let Intake::Accepted(_) = item {
+                    release_admitted(&router.http);
+                }
+            }
+            return;
+        }
+    }
+}
+
+// -- request parsing -------------------------------------------------------
+
+/// Everything parsed from one request head.
+#[derive(Debug)]
+struct Head {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    content_length: usize,
+}
+
+/// Incremental HTTP/1.x head parser: feed byte chunks through
+/// [`HeadParser::step`]; it consumes up to a full head and reports how
+/// far it got.  Keep-alive defaults on for HTTP/1.1 and off for
+/// HTTP/1.0; a `Connection` header overrides either way.  All limits
+/// (line length, header count) are enforced *during* accumulation, so a
+/// hostile slow sender is rejected as soon as it crosses one.
+struct HeadParser {
+    /// The current partial line (no terminator yet).
+    line: Vec<u8>,
+    /// Method + path once the request line has arrived.
+    request_line: Option<(String, String)>,
+    keep_alive: bool,
+    content_length: usize,
+    headers_seen: usize,
+}
+
+#[derive(Debug)]
+enum HeadStep {
+    /// More bytes needed; everything given was consumed.
+    NeedMore,
+    /// A full head was parsed; unconsumed bytes start the body.
+    Done(Head),
+    /// The peer sent something we must reject; respond and close.
+    Bad { status: u16, message: String },
+}
+
+impl HeadParser {
+    fn new() -> HeadParser {
+        HeadParser {
+            line: Vec::new(),
+            request_line: None,
+            keep_alive: false,
+            content_length: 0,
+            headers_seen: 0,
+        }
+    }
+
+    /// True until any request bytes arrive.  Between requests, deadline
+    /// expiry and shutdown close the connection silently; once a
+    /// partial request exists, the same expiry is a 408.
+    fn idle(&self) -> bool {
+        self.request_line.is_none() && self.line.is_empty()
+    }
+
+    /// True once the full request line has arrived — the moment the
+    /// per-request deadline starts (a half-sent request must not hold
+    /// its state past it).
+    fn started(&self) -> bool {
+        self.request_line.is_some()
+    }
+
+    /// Consume bytes from `data`; returns `(bytes_consumed, step)`.
+    /// On [`HeadStep::Done`] / [`HeadStep::Bad`] the remainder past
+    /// `bytes_consumed` was not touched (body bytes, or pipelined junk
+    /// for the drain to discard).
+    fn step(&mut self, data: &[u8]) -> (usize, HeadStep) {
+        let mut consumed = 0usize;
+        loop {
+            let Some(pos) = data[consumed..].iter().position(|&b| b == b'\n') else {
+                self.line.extend_from_slice(&data[consumed..]);
+                consumed = data.len();
+                // reject over-long lines mid-accumulation: a slow drip
+                // of an unbounded line must not grow the buffer forever
+                if self.line.len() > MAX_LINE_BYTES {
+                    return (
+                        consumed,
+                        HeadStep::Bad {
+                            status: 431,
+                            message: format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                        },
+                    );
+                }
+                return (consumed, HeadStep::NeedMore);
+            };
+            self.line.extend_from_slice(&data[consumed..consumed + pos]);
+            consumed += pos + 1;
+            if self.line.len() > MAX_LINE_BYTES {
+                return (
+                    consumed,
+                    HeadStep::Bad {
+                        status: 431,
+                        message: format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                    },
+                );
+            }
+            let mut raw = std::mem::take(&mut self.line);
+            if raw.last() == Some(&b'\r') {
+                raw.pop();
+            }
+            let line = match String::from_utf8(raw) {
+                Ok(l) => l,
+                Err(_) => {
+                    return (
+                        consumed,
+                        HeadStep::Bad { status: 400, message: "request is not utf-8".into() },
+                    )
+                }
+            };
+            match self.take_line(line) {
+                None => continue,
+                Some(step) => return (consumed, step),
+            }
+        }
+    }
+
+    /// Digest one complete line; `Some` ends the head (done or bad).
+    fn take_line(&mut self, line: String) -> Option<HeadStep> {
+        if self.request_line.is_none() {
+            let mut parts = line.split_whitespace();
+            let method = parts.next().unwrap_or("").to_string();
+            let path = parts.next().unwrap_or("").to_string();
+            let version = parts.next().unwrap_or("");
+            if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/") {
+                return Some(HeadStep::Bad {
+                    status: 400,
+                    message: format!("malformed request line '{line}'"),
+                });
+            }
+            self.keep_alive = version == "HTTP/1.1";
+            self.request_line = Some((method, path));
+            return None;
+        }
+        if line.is_empty() {
+            // blank line: head complete
+            let (method, path) = self.request_line.take().unwrap_or_default();
+            return Some(HeadStep::Done(Head {
+                method,
+                path,
+                keep_alive: self.keep_alive,
+                content_length: self.content_length,
+            }));
+        }
+        // exactly MAX_HEADERS headers (plus the terminating blank line)
+        // are accepted; one more is a 431
+        if self.headers_seen == MAX_HEADERS {
+            return Some(HeadStep::Bad {
+                status: 431,
+                message: format!("more than {MAX_HEADERS} request headers"),
+            });
+        }
+        self.headers_seen += 1;
+        if let Some((name, value)) = line.split_once(':') {
             let value = value.trim();
             if name.eq_ignore_ascii_case("content-length") {
-                content_length = value.parse().map_err(|_| ReadError::Bad {
-                    status: 400,
-                    message: format!("bad Content-Length '{value}'"),
-                })?;
+                match value.parse() {
+                    Ok(n) => self.content_length = n,
+                    Err(_) => {
+                        return Some(HeadStep::Bad {
+                            status: 400,
+                            message: format!("bad Content-Length '{value}'"),
+                        })
+                    }
+                }
             } else if name.eq_ignore_ascii_case("connection") {
                 let v = value.to_ascii_lowercase();
                 if v.contains("close") {
-                    keep_alive = false;
+                    self.keep_alive = false;
                 } else if v.contains("keep-alive") {
-                    keep_alive = true;
+                    self.keep_alive = true;
                 }
             }
         }
+        None
     }
-    if !headers_done {
-        return Err(ReadError::Bad {
-            status: 431,
-            message: format!("more than {MAX_HEADERS} request headers"),
-        });
-    }
-    if content_length > max_body {
-        return Err(ReadError::Bad {
-            status: 413,
-            message: format!("request body of {content_length} bytes exceeds {max_body}"),
-        });
-    }
-    let mut body = vec![0u8; content_length];
-    read_exact_bounded(r, &mut body, deadline)?;
-    Ok(HttpRequest { method, path, keep_alive, body })
 }
 
 // -- routing ---------------------------------------------------------------
@@ -756,16 +1253,25 @@ struct Router {
     keep_alive_timeout: Duration,
     max_body_bytes: usize,
     request_deadline: Duration,
+    max_connections: usize,
+    conn_backlog: usize,
+}
+
+/// What routing decided: an immediate response, or a request parked on
+/// the batcher (the connection waits in [`State::Dispatched`]).
+enum Routed {
+    Done(u16, String),
+    Dispatched(PendingReply),
 }
 
 impl Router {
-    fn route(&self, req: &HttpRequest) -> (u16, String) {
-        match (req.method.as_str(), req.path.as_str()) {
+    fn route(&self, head: &Head, body: &[u8], token: u64, shared: &Arc<LoopShared>) -> Routed {
+        match (head.method.as_str(), head.path.as_str()) {
             // liveness: 200 whenever the process can answer at all —
             // restarting into degraded still means "don't kill me"
             ("GET", "/healthz") => {
                 let state = self.batcher.health().state();
-                (200, format!(r#"{{"ok": true, "state": "{}"}}"#, state.as_str()))
+                Routed::Done(200, format!(r#"{{"ok": true, "state": "{}"}}"#, state.as_str()))
             }
             // readiness: 200 only when the executor is up and serving;
             // a degraded/draining instance tells the balancer to route
@@ -773,52 +1279,70 @@ impl Router {
             ("GET", "/readyz") => {
                 let state = self.batcher.health().state();
                 if state == HealthState::Ready {
-                    (200, format!(r#"{{"state": "{}"}}"#, state.as_str()))
+                    Routed::Done(200, format!(r#"{{"state": "{}"}}"#, state.as_str()))
                 } else {
                     let retry = self.batcher.retry_after_secs().max(1);
                     let msg = format!("not ready (state {})", state.as_str());
-                    (503, error_body(503, &msg, Some(retry)))
+                    Routed::Done(503, error_body(503, &msg, Some(retry)))
                 }
             }
-            ("GET", "/stats") => (200, self.stats_json()),
+            ("GET", "/stats") => Routed::Done(200, self.stats_json()),
             // /v1/predict is the canonical route (docs/api.md); the
             // unversioned path stays as a compatibility alias
-            ("POST", "/predict") | ("POST", "/v1/predict") => self.predict(&req.body),
-            _ => (404, error_body(404, "not found", None)),
+            ("POST", "/predict") | ("POST", "/v1/predict") => self.predict(body, token, shared),
+            _ => Routed::Done(404, error_body(404, "not found", None)),
         }
     }
 
-    fn predict(&self, body: &[u8]) -> (u16, String) {
+    fn predict(&self, body: &[u8], token: u64, shared: &Arc<LoopShared>) -> Routed {
         let text = match std::str::from_utf8(body) {
             Ok(t) => t,
-            Err(_) => return (400, error_body(400, "body is not utf-8", None)),
+            Err(_) => return Routed::Done(400, error_body(400, "body is not utf-8", None)),
         };
         let parsed = json::parse(text)
             .map_err(|e| anyhow!(e))
             .and_then(|v| PredictRequest::from_json(&v));
         let req = match parsed {
             Ok(r) => r,
-            Err(e) => return (400, error_body(400, &format!("{e:#}"), None)),
+            Err(e) => return Routed::Done(400, error_body(400, &format!("{e:#}"), None)),
         };
-        // the retryable statuses mirror Retry-After into the body so
-        // JSON-only clients can back off without parsing headers
-        let retry = || Some(self.batcher.retry_after_secs().max(1));
-        match self.batcher.submit_bounded(&self.bpe, &req) {
-            Ok(resp) => (200, resp.to_json().to_string()),
-            Err(SubmitError::BadRequest(m)) => (400, error_body(400, &m, None)),
-            Err(e @ SubmitError::Overloaded { .. }) => {
-                (429, error_body(429, &e.to_string(), retry()))
+        // the notify runs on the executor thread with no locks held: it
+        // queues our token and interrupts this connection's event loop
+        let notify: ReplyNotify = {
+            let shared = shared.clone();
+            Arc::new(move || {
+                {
+                    let mut done =
+                        shared.completions.lock().unwrap_or_else(|p| p.into_inner());
+                    done.push(token);
+                }
+                shared.waker.wake();
+            })
+        };
+        match self.batcher.submit_bounded_async(&self.bpe, &req, notify) {
+            Ok(reply) => Routed::Dispatched(reply),
+            Err(e) => {
+                let (status, body) = self.submit_error(e);
+                Routed::Done(status, body)
             }
+        }
+    }
+
+    /// Map a batcher rejection (or a completed dispatch's error) onto
+    /// the wire contract.  The retryable statuses mirror `Retry-After`
+    /// into the body so JSON-only clients can back off without parsing
+    /// headers.
+    fn submit_error(&self, e: SubmitError) -> (u16, String) {
+        let retry = || Some(self.batcher.retry_after_secs().max(1));
+        match e {
+            SubmitError::BadRequest(m) => (400, error_body(400, &m, None)),
+            e @ SubmitError::Overloaded { .. } => (429, error_body(429, &e.to_string(), retry())),
             // executor died mid-request and the supervisor is restarting
             // it: retryable, so 503 (+ Retry-After), not 500
-            Err(e @ SubmitError::Unavailable(_)) => {
-                (503, error_body(503, &e.to_string(), retry()))
-            }
+            e @ SubmitError::Unavailable(_) => (503, error_body(503, &e.to_string(), retry())),
             // the request expired in queue before the backend saw it
-            Err(e @ SubmitError::Timeout { .. }) => {
-                (504, error_body(504, &e.to_string(), None))
-            }
-            Err(SubmitError::Internal(m)) => (500, error_body(500, &m, None)),
+            e @ SubmitError::Timeout { .. } => (504, error_body(504, &e.to_string(), None)),
+            SubmitError::Internal(m) => (500, error_body(500, &m, None)),
         }
     }
 
@@ -943,14 +1467,18 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
-fn respond(
-    stream: &mut TcpStream,
+/// Render a full response (head + body) into one buffer for the
+/// nonblocking write path.  Byte-identical to what the worker-pool
+/// front door wrote: status line, `Content-Type`/`Content-Length`,
+/// `Retry-After` on the retryable statuses, and either `Connection:
+/// close` or `Connection: keep-alive` + `Keep-Alive: timeout=`.
+fn render_response(
     status: u16,
     body: &str,
     close: bool,
     keep_alive_secs: u64,
     retry_after_secs: u64,
-) -> std::io::Result<()> {
+) -> String {
     let mut head = format!(
         "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
         reason(status),
@@ -970,106 +1498,208 @@ fn respond(
             "Connection: keep-alive\r\nKeep-Alive: timeout={keep_alive_secs}\r\n\r\n"
         ));
     }
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
-    stream.flush()
+    head.push_str(body);
+    head
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::Cursor;
 
-    fn no_shutdown() -> AtomicBool {
-        AtomicBool::new(false)
+    /// Drive the incremental parser over a fully buffered request, the
+    /// way the event loop does when everything arrived at once.
+    /// Returns the step plus the unconsumed remainder (body bytes).
+    fn parse(raw: &[u8]) -> (HeadStep, Vec<u8>) {
+        let mut p = HeadParser::new();
+        let (consumed, step) = p.step(raw);
+        (step, raw[consumed..].to_vec())
     }
 
-    fn parse(raw: &str) -> Result<HttpRequest, ReadError> {
-        let mut c = Cursor::new(raw.as_bytes().to_vec());
-        read_request(&mut c, Duration::from_secs(1), Duration::from_secs(1), &no_shutdown(), 1 << 20)
-    }
-
-    #[test]
-    fn parses_post_with_body_and_keeps_alive_by_default() {
-        let req = parse("POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello")
-            .unwrap();
-        assert_eq!(req.method, "POST");
-        assert_eq!(req.path, "/predict");
-        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
-        assert_eq!(req.body, b"hello");
-    }
-
-    #[test]
-    fn connection_close_is_honoured() {
-        let req =
-            parse("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
-        assert!(!req.keep_alive);
-    }
-
-    #[test]
-    fn http_10_defaults_to_close_but_can_opt_in() {
-        assert!(!parse("GET / HTTP/1.0\r\n\r\n").unwrap().keep_alive);
-        assert!(
-            parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
-                .unwrap()
-                .keep_alive
-        );
-    }
-
-    #[test]
-    fn pipelined_requests_parse_back_to_back() {
-        let raw = "GET /healthz HTTP/1.1\r\n\r\nPOST /predict HTTP/1.1\r\nContent-Length: 2\r\n\r\nok";
-        let mut c = Cursor::new(raw.as_bytes().to_vec());
-        let s = no_shutdown();
-        let t = Duration::from_secs(1);
-        let a = read_request(&mut c, t, t, &s, 1 << 20).unwrap();
-        assert_eq!(a.path, "/healthz");
-        let b = read_request(&mut c, t, t, &s, 1 << 20).unwrap();
-        assert_eq!(b.path, "/predict");
-        assert_eq!(b.body, b"ok");
-    }
-
-    #[test]
-    fn eof_between_requests_is_clean_idle() {
-        match parse("") {
-            Err(ReadError::Idle) => {}
-            other => panic!("expected Idle, got {other:?}"),
+    fn head_of(step: HeadStep) -> Head {
+        match step {
+            HeadStep::Done(h) => h,
+            other => panic!("expected a parsed head, got {other:?}"),
         }
     }
 
     #[test]
+    fn parses_post_with_body_and_keeps_alive_by_default() {
+        let (step, rest) =
+            parse(b"POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello");
+        let head = head_of(step);
+        assert_eq!(head.method, "POST");
+        assert_eq!(head.path, "/predict");
+        assert!(head.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(head.content_length, 5);
+        assert_eq!(rest, b"hello", "body bytes stay unconsumed for the body reader");
+    }
+
+    #[test]
+    fn connection_close_is_honoured() {
+        let (step, _) = parse(b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(!head_of(step).keep_alive);
+    }
+
+    #[test]
+    fn http_10_defaults_to_close_but_can_opt_in() {
+        let (plain, _) = parse(b"GET / HTTP/1.0\r\n\r\n");
+        assert!(!head_of(plain).keep_alive);
+        let (opted, _) = parse(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(head_of(opted).keep_alive);
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let raw =
+            b"GET /healthz HTTP/1.1\r\n\r\nPOST /predict HTTP/1.1\r\nContent-Length: 2\r\n\r\nok";
+        let (a, rest) = parse(raw);
+        assert_eq!(head_of(a).path, "/healthz");
+        // a fresh parser picks up the very next buffered request
+        let (b, body) = parse(&rest);
+        let b = head_of(b);
+        assert_eq!(b.path, "/predict");
+        assert_eq!(b.content_length, 2);
+        assert_eq!(body, b"ok");
+    }
+
+    #[test]
+    fn byte_at_a_time_feeding_parses_identically() {
+        // the event loop may receive any fragmentation; feed the worst
+        let raw = b"POST /predict HTTP/1.1\r\nContent-Length: 2\r\n\r\nok";
+        let mut p = HeadParser::new();
+        let mut done = None;
+        let mut used = 0;
+        for (i, b) in raw.iter().enumerate() {
+            let (consumed, step) = p.step(std::slice::from_ref(b));
+            match step {
+                HeadStep::NeedMore => assert_eq!(consumed, 1),
+                HeadStep::Done(h) => {
+                    done = Some(h);
+                    used = i + 1;
+                    break;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        let h = done.expect("head must complete");
+        assert_eq!(h.path, "/predict");
+        assert_eq!(h.content_length, 2);
+        assert_eq!(&raw[used..], b"ok");
+    }
+
+    #[test]
+    fn fresh_parser_is_idle_and_any_byte_ends_idleness() {
+        let mut p = HeadParser::new();
+        assert!(p.idle(), "no bytes yet: timeout closes silently");
+        let (_, step) = p.step(b"G");
+        assert!(matches!(step, HeadStep::NeedMore));
+        assert!(!p.idle(), "a partial request line must 408, not close silently");
+        assert!(!p.started(), "the request deadline arms only on a full request line");
+        let (_, step) = p.step(b"ET /x HTTP/1.1\r\n");
+        assert!(matches!(step, HeadStep::NeedMore));
+        assert!(p.started(), "request line in: the request deadline starts");
+    }
+
+    #[test]
     fn malformed_request_line_is_400() {
-        match parse("NOT-HTTP\r\n\r\n") {
-            Err(ReadError::Bad { status: 400, .. }) => {}
+        let (step, _) = parse(b"NOT-HTTP\r\n\r\n");
+        match step {
+            HeadStep::Bad { status: 400, message } => {
+                assert!(message.contains("malformed request line"), "{message}")
+            }
             other => panic!("expected 400, got {other:?}"),
         }
     }
 
     #[test]
-    fn oversized_body_is_413_before_reading_it() {
-        let mut c = Cursor::new(
-            b"POST /predict HTTP/1.1\r\nContent-Length: 99\r\n\r\n".to_vec(),
-        );
-        match read_request(&mut c, Duration::from_secs(1), Duration::from_secs(1), &no_shutdown(), 10) {
-            Err(ReadError::Bad { status: 413, .. }) => {}
-            other => panic!("expected 413, got {other:?}"),
+    fn non_utf8_line_is_400() {
+        let (step, _) = parse(b"GET /\xff\xfe HTTP/1.1\r\n\r\n");
+        match step {
+            HeadStep::Bad { status: 400, message } => assert!(message.contains("utf-8")),
+            other => panic!("expected 400, got {other:?}"),
         }
     }
 
     #[test]
     fn bad_content_length_is_400() {
-        match parse("POST /p HTTP/1.1\r\nContent-Length: nope\r\n\r\n") {
-            Err(ReadError::Bad { status: 400, .. }) => {}
+        let (step, _) = parse(b"POST /p HTTP/1.1\r\nContent-Length: nope\r\n\r\n");
+        match step {
+            HeadStep::Bad { status: 400, message } => {
+                assert!(message.contains("Content-Length"), "{message}")
+            }
             other => panic!("expected 400, got {other:?}"),
         }
     }
 
     #[test]
-    fn truncated_body_is_an_io_error() {
-        match parse("POST /p HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort") {
-            Err(ReadError::Io(e)) => assert_eq!(e.kind(), ErrorKind::UnexpectedEof),
-            other => panic!("expected Io, got {other:?}"),
+    fn oversized_line_is_431_even_without_a_terminator() {
+        // a slow-loris line that never ends must be rejected as soon as
+        // it crosses the cap, not buffered forever
+        let mut p = HeadParser::new();
+        let chunk = vec![b'a'; MAX_LINE_BYTES / 2];
+        assert!(matches!(p.step(&chunk).1, HeadStep::NeedMore));
+        assert!(matches!(p.step(&chunk).1, HeadStep::NeedMore));
+        match p.step(b"aa").1 {
+            HeadStep::Bad { status: 431, message } => {
+                assert!(message.contains("request line exceeds"), "{message}")
+            }
+            other => panic!("expected 431, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn too_many_headers_is_431() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..=MAX_HEADERS {
+            raw.extend_from_slice(format!("X-{i}: v\r\n").as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        let (step, _) = parse(&raw);
+        match step {
+            HeadStep::Bad { status: 431, message } => {
+                assert!(message.contains("request headers"), "{message}")
+            }
+            other => panic!("expected 431, got {other:?}"),
+        }
+        // exactly MAX_HEADERS is still fine
+        let mut ok = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..MAX_HEADERS {
+            ok.extend_from_slice(format!("X-{i}: v\r\n").as_bytes());
+        }
+        ok.extend_from_slice(b"\r\n");
+        let (step, _) = parse(&ok);
+        assert_eq!(head_of(step).path, "/");
+    }
+
+    #[test]
+    fn short_body_leaves_the_connection_waiting_for_more() {
+        // "POST with Content-Length: 10 but only 5 bytes" is not a parse
+        // error: the body reader keeps waiting and the request deadline
+        // (or EOF) decides the outcome — same as the blocking reader
+        let (step, rest) = parse(b"POST /p HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort");
+        let head = head_of(step);
+        assert_eq!(head.content_length, 10);
+        assert!(rest.len() < head.content_length, "body incomplete: keep reading");
+    }
+
+    #[test]
+    fn render_response_matches_the_wire_contract() {
+        let keep = render_response(200, "{}", false, 5, 0);
+        assert!(keep.starts_with("HTTP/1.1 200 OK\r\n"), "{keep}");
+        assert!(keep.contains("Content-Type: application/json\r\n"), "{keep}");
+        assert!(keep.contains("Content-Length: 2\r\n"), "{keep}");
+        assert!(
+            keep.contains("Connection: keep-alive\r\nKeep-Alive: timeout=5\r\n\r\n"),
+            "{keep}"
+        );
+        assert!(!keep.contains("Retry-After"), "{keep}");
+
+        let shed = render_response(429, "{}", true, 0, 7);
+        assert!(shed.contains("Retry-After: 7\r\n"), "{shed}");
+        assert!(shed.contains("Connection: close\r\n\r\n"), "{shed}");
+
+        let nohist = render_response(503, "{}", true, 0, 0);
+        assert!(nohist.contains("Retry-After: 1\r\n"), "floored at 1: {nohist}");
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! MLM serving: a vLLM-router-style coordinator — keep-alive worker-pool
-//! HTTP front door with bounded admission and load shedding, dynamic
+//! MLM serving: a vLLM-router-style coordinator — an event-driven
+//! keep-alive HTTP front door (`poll(2)` loops multiplexing nonblocking
+//! connections) with bounded admission and load shedding, dynamic
 //! batcher, pluggable inference backend — with python nowhere on the
 //! path.  See `docs/serving.md` for the operator view.
 //!

@@ -57,10 +57,19 @@ impl LockRank {
 pub mod rank {
     use super::LockRank;
 
-    /// HTTP worker connection queue (`server::http`): held only while a
-    /// worker blocks on `recv_timeout` for the next connection, before
-    /// any request work starts — outermost of the serving locks.
+    /// Event-loop intake queue (`server::http`): the acceptor pushes
+    /// accepted (and shed) connections here for an event loop to adopt.
+    /// Held only for a push/drain of the `VecDeque`, before any request
+    /// work starts — outermost of the serving locks.
     pub const HTTP_CONN_QUEUE: LockRank = LockRank::new("http.conn_queue", 100);
+
+    /// Event-loop completion queue (`server::http`): batcher reply
+    /// notifications push the finished connection's token here to wake
+    /// its event loop.  Held only for a push/drain of the token `Vec`;
+    /// ranked above the intake queue because an event loop drains
+    /// completions while it may still hold nothing else, and the
+    /// notifier side (batcher executor) holds no lock at the send site.
+    pub const HTTP_LOOP_COMPLETIONS: LockRank = LockRank::new("http.loop_completions", 200);
 
     /// Batcher rolling statistics (`server::batcher`): a leaf — plain
     /// counters updated under short critical sections on the admission,

@@ -11,6 +11,7 @@ pub mod json;
 pub mod lockcheck;
 pub mod logger;
 pub mod mmap;
+pub mod poll;
 pub mod rng;
 pub mod sigbus;
 pub mod signal;

@@ -1,0 +1,201 @@
+//! Thin safe layer over `poll(2)` — the readiness primitive behind the
+//! event-driven HTTP front door (`server::http`) and `loadgen`'s
+//! high-connection client.
+//!
+//! Three pieces:
+//!
+//! * [`poll`] — wait for readiness on a set of fds with EINTR retry;
+//! * [`Waker`] — a self-pipe that other threads write one byte into to
+//!   interrupt a blocked `poll` (connection handoff, batcher completion
+//!   notifications, shutdown);
+//! * [`raise_nofile_limit`] — lift `RLIMIT_NOFILE` toward a target so a
+//!   single process can hold thousands of sockets (the 5–10k-connection
+//!   load scenario).
+//!
+//! Everything here is plain fd arithmetic; no locks, no allocation on
+//! the wake path.
+
+use std::io;
+use std::os::fd::RawFd;
+use std::time::Duration;
+
+pub use libc::pollfd;
+pub use libc::{POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+
+/// Build one `poll(2)` registration.
+#[inline]
+pub fn entry(fd: RawFd, events: i16) -> pollfd {
+    pollfd { fd, events, revents: 0 }
+}
+
+/// Wait until at least one registered fd is ready, `timeout` elapses
+/// (`None` blocks indefinitely), or a wakeup arrives.  Returns how many
+/// entries have nonzero `revents`; `Ok(0)` means the timeout fired.
+/// EINTR retries transparently (the remaining timeout is re-armed in
+/// full — callers here all re-derive deadlines per iteration anyway).
+pub fn poll(fds: &mut [pollfd], timeout: Option<Duration>) -> io::Result<usize> {
+    let timeout_ms: i32 = match timeout {
+        // poll's c_int timeout is milliseconds; saturate long waits
+        Some(t) => t.as_millis().min(i32::MAX as u128) as i32,
+        None => -1,
+    };
+    loop {
+        // SAFETY: `fds` is a valid, initialised slice of `pollfd` for
+        // the duration of the call, and the length is passed alongside.
+        let rc = unsafe { libc::poll(fds.as_mut_ptr(), fds.len() as libc::nfds_t, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::Interrupted {
+            continue;
+        }
+        return Err(err);
+    }
+}
+
+/// A self-pipe wakeup: `wake()` from any thread makes the owning event
+/// loop's [`poll`] (which registers [`Waker::read_fd`] for `POLLIN`)
+/// return immediately.  Wakes coalesce — the pipe holds at most its
+/// buffer of pending bytes and `wake()` treats a full pipe as "wakeup
+/// already pending" — so the loop must re-check all its wake sources
+/// after [`Waker::drain`], never count bytes.
+pub struct Waker {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let mut fds = [0 as libc::c_int; 2];
+        // SAFETY: `fds` is a valid out-array of two ints; pipe2 fills
+        // both ends or returns -1 without touching them.
+        let rc = unsafe { libc::pipe2(fds.as_mut_ptr(), libc::O_NONBLOCK | libc::O_CLOEXEC) };
+        if rc != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Waker { read_fd: fds[0], write_fd: fds[1] })
+    }
+
+    /// The fd an event loop registers for `POLLIN`.
+    pub fn read_fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Interrupt the owning loop's `poll`.  Cheap, lock-free,
+    /// signal-safe; a full pipe means a wakeup is already pending and
+    /// counts as success.
+    pub fn wake(&self) {
+        let byte = [1u8];
+        loop {
+            // SAFETY: one-byte write from a live stack buffer into our
+            // own open pipe fd.
+            let rc = unsafe { libc::write(self.write_fd, byte.as_ptr().cast(), 1) };
+            if rc >= 0 {
+                return;
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            // WouldBlock: the pipe already holds unread wakeup bytes —
+            // the loop is guaranteed to wake; nothing more to do.
+            return;
+        }
+    }
+
+    /// Discard all pending wakeup bytes (called by the event loop once
+    /// `poll` reports the read end readable).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            // SAFETY: bounded read into a live stack buffer from our
+            // own open pipe fd.
+            let rc = unsafe { libc::read(self.read_fd, buf.as_mut_ptr().cast(), buf.len()) };
+            if rc > 0 {
+                continue;
+            }
+            if rc < 0 && io::Error::last_os_error().kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            // 0 (impossible while we hold the write end) or EAGAIN:
+            // the pipe is empty
+            return;
+        }
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        // SAFETY: closing the two pipe fds this struct owns exactly
+        // once; nothing else holds them.
+        unsafe {
+            libc::close(self.read_fd);
+            libc::close(self.write_fd);
+        }
+    }
+}
+
+/// Raise the process's soft `RLIMIT_NOFILE` toward `want` (clamped to
+/// the hard cap).  Returns the resulting soft limit; never lowers it.
+pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+    let mut lim = libc::rlimit { rlim_cur: 0, rlim_max: 0 };
+    // SAFETY: plain out-parameter read of the process fd limit.
+    if unsafe { libc::getrlimit(libc::RLIMIT_NOFILE, &mut lim) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if lim.rlim_cur >= want {
+        return Ok(lim.rlim_cur);
+    }
+    let new = libc::rlimit { rlim_cur: want.min(lim.rlim_max), rlim_max: lim.rlim_max };
+    // SAFETY: writing a well-formed rlimit no larger than the hard cap.
+    if unsafe { libc::setrlimit(libc::RLIMIT_NOFILE, &new) } != 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(new.rlim_cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waker_wakes_a_poll_and_drains_clean() {
+        let w = Waker::new().expect("pipe");
+        // no wake pending: a zero-timeout poll reports nothing
+        let mut fds = [entry(w.read_fd(), POLLIN)];
+        assert_eq!(poll(&mut fds, Some(Duration::ZERO)).expect("poll"), 0);
+
+        w.wake();
+        w.wake(); // coalesces, never errors
+        let mut fds = [entry(w.read_fd(), POLLIN)];
+        let n = poll(&mut fds, Some(Duration::from_secs(5))).expect("poll");
+        assert_eq!(n, 1);
+        assert_ne!(fds[0].revents & POLLIN, 0);
+
+        w.drain();
+        let mut fds = [entry(w.read_fd(), POLLIN)];
+        assert_eq!(poll(&mut fds, Some(Duration::ZERO)).expect("poll"), 0);
+    }
+
+    #[test]
+    fn wake_from_another_thread_interrupts_a_blocked_poll() {
+        let w = std::sync::Arc::new(Waker::new().expect("pipe"));
+        let w2 = w.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            w2.wake();
+        });
+        let mut fds = [entry(w.read_fd(), POLLIN)];
+        let n = poll(&mut fds, Some(Duration::from_secs(10))).expect("poll");
+        assert_eq!(n, 1, "the cross-thread wake must end the poll");
+        t.join().expect("waker thread");
+    }
+
+    #[test]
+    fn raise_nofile_limit_never_lowers() {
+        let before = raise_nofile_limit(0).expect("read limit");
+        let after = raise_nofile_limit(before).expect("no-op raise");
+        assert!(after >= before);
+    }
+}

@@ -1,0 +1,336 @@
+//! Event-driven front-door behavior that the worker-pool tests never
+//! pinned down: connection-level shedding handled *off* the acceptor
+//! thread, the `active_connections` gauge returning to zero through
+//! panic teardown, slow-loris expiry while the request line is still
+//! incomplete, the silent idle keep-alive sweep, and pipelined
+//! requests on one socket.
+//!
+//! Everything here runs on the engine backend (no artifacts, no PJRT).
+//! The failpoint registry is process-global, so every test takes the
+//! same gate mutex chaos.rs uses — serialized, never flaky.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use lram::data::synth::CorpusSpec;
+use lram::data::DataPipeline;
+use lram::server::{BackendInit, Batcher, BatcherConfig, EngineConfig, HttpConfig, Server};
+use lram::util::failpoint;
+
+/// Failpoints are process-global: serialize the whole binary so an
+/// armed site can never leak into a neighboring test's requests.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::clear_all();
+    g
+}
+
+fn build_small_bpe() -> Arc<lram::tokenizer::Bpe> {
+    let p = DataPipeline::new(CorpusSpec::default(), 512, 8, 1, 0.15).unwrap();
+    Arc::new(p.bpe)
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig { max_batch: 4, seq_len: 24, width: 32, m: 32, ..EngineConfig::default() }
+}
+
+fn start_server(cfg: HttpConfig) -> Server {
+    let bpe = build_small_bpe();
+    let batcher = Batcher::spawn(BackendInit::Engine(engine_cfg()), bpe.clone(), BatcherConfig::default())
+        .expect("engine backend needs no artifacts");
+    Server::bind("127.0.0.1:0", batcher, bpe, cfg).expect("binding an ephemeral port")
+}
+
+/// A persistent client connection: write half + buffered read half.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+struct Resp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Resp {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let stream = TcpStream::connect(addr).expect("connecting to test server");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, raw: &str) {
+        self.stream.write_all(raw.as_bytes()).expect("writing request");
+    }
+
+    /// Read exactly one response off the buffered reader.
+    fn read_response(&mut self) -> Resp {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("reading status line");
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .unwrap_or_else(|| panic!("bad status line {line:?}"))
+            .parse()
+            .expect("numeric status");
+        let mut headers = Vec::new();
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).expect("reading header");
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+            }
+        }
+        let len: usize = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .map(|(_, v)| v.parse().expect("numeric content-length"))
+            .expect("response carries Content-Length");
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body).expect("reading body");
+        Resp { status, headers, body: String::from_utf8(body).expect("utf-8 body") }
+    }
+
+    fn roundtrip(&mut self, raw: &str) -> Resp {
+        self.send(raw);
+        self.read_response()
+    }
+
+    fn predict(&mut self, text: &str, top_k: usize) -> Resp {
+        let body = format!(r#"{{"text": "{text}", "top_k": {top_k}}}"#);
+        self.roundtrip(&format!(
+            "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ))
+    }
+
+    fn get(&mut self, path: &str) -> Resp {
+        self.roundtrip(&format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+    }
+}
+
+/// Poll an HTTP gauge until it reaches `want` (bounded, not a sleep).
+fn await_gauge(read: impl Fn() -> usize, want: usize, what: &str) {
+    let t0 = Instant::now();
+    while read() != want {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "{what} stuck at {} (want {want})",
+            read()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn pipelined_requests_on_one_socket_are_each_answered() {
+    let _g = guard();
+    let server = start_server(HttpConfig::default());
+    let mut c = Client::connect(&server.local_addr().to_string());
+    // both requests land in one TCP segment; the loop must answer the
+    // first, then parse the second out of the residual buffer without
+    // waiting for more readable bytes
+    c.send("GET /healthz HTTP/1.1\r\nHost: t\r\n\r\nGET /readyz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let first = c.read_response();
+    assert_eq!(first.status, 200, "{}", first.body);
+    assert!(first.body.contains(r#""ok": true"#), "{}", first.body);
+    let second = c.read_response();
+    assert_eq!(second.status, 200, "{}", second.body);
+    assert!(second.body.contains(r#""state""#), "{}", second.body);
+    assert_eq!(
+        server.http_stats().connections_accepted.load(Ordering::Relaxed),
+        1,
+        "both requests on the same connection"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn connection_shed_is_written_by_the_event_loop_not_the_acceptor() {
+    let _g = guard();
+    // one admitted connection fills the house; every later connect must
+    // shed with a polite 429 — written by an event loop, so shed peers
+    // that never read cannot stall the accept path
+    let server = start_server(HttpConfig {
+        workers: 2,
+        max_connections: 1,
+        ..HttpConfig::default()
+    });
+    let addr = server.local_addr().to_string();
+    let http = server.http_stats();
+
+    let mut admitted = Client::connect(&addr);
+    let resp = admitted.predict("the [MASK] sat", 2);
+    assert_eq!(resp.status, 200, "{}", resp.body);
+
+    // four peers that connect and then neither write nor read: the old
+    // front door answered sheds synchronously from the acceptor thread,
+    // where one bad peer stalled all accepts behind it
+    const SHED: usize = 4;
+    let mut parked: Vec<TcpStream> = (0..SHED)
+        .map(|_| {
+            let s = TcpStream::connect(&addr).expect("connect for shedding");
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s
+        })
+        .collect();
+    await_gauge(
+        || http.connections_shed.load(Ordering::Relaxed) as usize,
+        SHED,
+        "connections_shed",
+    );
+
+    // with all four shed peers still parked unread, the admitted
+    // connection is served as if nothing happened
+    let resp = admitted.predict("round two [MASK] .", 2);
+    assert_eq!(resp.status, 200, "admitted client starved by parked shed peers: {}", resp.body);
+
+    // each shed peer holds a complete, well-formed 429 + close
+    for (i, s) in parked.iter_mut().enumerate() {
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).expect("shed response then close");
+        assert!(raw.starts_with("HTTP/1.1 429"), "peer {i}: {raw}");
+        assert!(raw.contains("Connection: close"), "peer {i}: {raw}");
+        assert!(raw.contains("Retry-After:"), "peer {i}: {raw}");
+        let body = raw.split("\r\n\r\n").nth(1).expect("429 carries a body");
+        let v = lram::util::json::parse(body).expect("429 body is JSON");
+        let err = v.get("error").expect("structured error envelope");
+        assert_eq!(err.get("code").unwrap().as_str().unwrap(), "overloaded", "peer {i}");
+    }
+    drop(parked);
+
+    // the slot frees when the admitted connection goes away, and a new
+    // client is admitted again — the gauge did not drift
+    drop(admitted);
+    await_gauge(
+        || http.active_connections.load(Ordering::Relaxed),
+        0,
+        "active_connections",
+    );
+    let mut fresh = Client::connect(&addr);
+    assert_eq!(fresh.get("/healthz").status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn active_connections_returns_to_zero_through_panic_teardown() {
+    let _g = guard();
+    let server = start_server(HttpConfig { workers: 2, ..HttpConfig::default() });
+    let addr = server.local_addr().to_string();
+    let http = server.http_stats();
+
+    // two connections, each of whose single request panics the handler:
+    // both must get a well-formed 503 + close, and both teardowns must
+    // release their admission slot
+    failpoint::set("http.worker", "panic:1.0:2").unwrap();
+    for i in 0..2 {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write!(s, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).expect("panic must still answer, then close");
+        assert!(raw.starts_with("HTTP/1.1 503"), "conn {i}: {raw}");
+        assert!(raw.contains("Connection: close"), "conn {i}: {raw}");
+        assert!(raw.contains("panicked"), "conn {i}: {raw}");
+    }
+    failpoint::clear_all();
+
+    assert_eq!(http.worker_panics.load(Ordering::Relaxed), 2);
+    await_gauge(
+        || http.active_connections.load(Ordering::Relaxed),
+        0,
+        "active_connections",
+    );
+
+    // the loops survived: a fresh connection is served normally
+    let mut c = Client::connect(&addr);
+    assert_eq!(c.get("/healthz").status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn slow_loris_request_line_is_expired_with_408() {
+    let _g = guard();
+    // the pre-body loris: a partial request *line* and then silence.
+    // The head deadline arms on the first byte, so the connection is
+    // expired with a 408 — it does not ride the (longer) idle timeout,
+    // and it does not hold its event loop
+    let server = start_server(HttpConfig {
+        request_deadline: Duration::from_millis(300),
+        ..HttpConfig::default()
+    });
+    let addr = server.local_addr().to_string();
+
+    let mut loris = TcpStream::connect(&addr).unwrap();
+    loris.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(loris, "GET /hea").unwrap();
+    loris.flush().unwrap();
+    let t0 = Instant::now();
+
+    // meanwhile the loop keeps serving others
+    let mut ok = Client::connect(&addr);
+    assert_eq!(ok.get("/healthz").status, 200);
+
+    let mut raw = String::new();
+    loris.read_to_string(&mut raw).expect("server must answer, then close");
+    assert!(raw.starts_with("HTTP/1.1 408"), "expected 408, got: {raw}");
+    assert!(raw.contains("Connection: close"), "{raw}");
+    assert!(raw.contains("timed out"), "{raw}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "408 took {:?}, deadline was 300ms",
+        t0.elapsed()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn idle_keep_alive_connections_are_swept_silently() {
+    let _g = guard();
+    let server = start_server(HttpConfig {
+        keep_alive_timeout: Duration::from_millis(200),
+        ..HttpConfig::default()
+    });
+    let addr = server.local_addr().to_string();
+    let http = server.http_stats();
+
+    // a connection that never sends a byte is closed silently — EOF,
+    // not a 408 (nothing was in flight to time out)
+    let mut idle = TcpStream::connect(&addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut raw = String::new();
+    idle.read_to_string(&mut raw).expect("sweep closes cleanly");
+    assert!(raw.is_empty(), "idle sweep must not write anything: {raw}");
+
+    // a connection that finished a request and then idles gets the same
+    // silent sweep after its response
+    let mut c = Client::connect(&addr);
+    assert_eq!(c.get("/healthz").status, 200);
+    let mut rest = String::new();
+    c.reader.read_to_string(&mut rest).expect("sweep closes cleanly");
+    assert!(rest.is_empty(), "post-response sweep must not write anything: {rest}");
+
+    await_gauge(
+        || http.active_connections.load(Ordering::Relaxed),
+        0,
+        "active_connections",
+    );
+    server.shutdown();
+}

@@ -30,9 +30,11 @@
 
 use lram::coordinator::{EngineTrainConfig, EngineTrainer};
 use lram::data::Batch;
-use lram::lattice::{LatticeLookup, TorusK};
+use lram::lattice::{BackwardCache, BatchLookupEngine, BatchOutput, LatticeLookup, TorusK};
+use lram::memstore::ValueTable;
 use lram::model::EngineConfig;
 use lram::util::check::assert_grad_close;
+use lram::util::rng::Rng;
 
 /// Every in-support candidate selected: the loss is smooth in the
 /// queries, so finite differences see exactly what the backward computes.
@@ -376,6 +378,54 @@ fn frozen_routing_zeroes_exactly_the_routing_gradient() {
     assert_eq!(frozen.grads().rows, trained.grads().rows);
     // embeddings differ: routing adds its own dh term
     assert_ne!(frozen.grads().embed, trained.grads().embed);
+}
+
+#[test]
+fn cached_routing_backward_is_bit_identical_to_the_recompute_path() {
+    // The trainer's backward now replays the forward's captured
+    // (d2, candidate) selections instead of re-running candidate
+    // scoring + top-k per masked query.  The optimization contract is
+    // *bit*-identity, not tolerance: at a training-shaped k_top
+    // (truncation and padding both exercised), over a training-shaped
+    // upstream gradient (most query rows zero), every gradient lane
+    // must match the recompute path exactly.
+    let torus = TorusK::new([16, 16, 8, 8, 8, 8, 8, 8]).unwrap();
+    let mut table = ValueTable::zeros(1 << 18, 8).unwrap();
+    table.randomize(21, 0.3);
+    let mut rng = Rng::new(77);
+    let n = 96;
+    let queries: Vec<f64> = (0..n * 8).map(|_| rng.uniform(-9.0, 9.0)).collect();
+    let mut dg = vec![0.0f32; n * 8];
+    for qi in (0..n).step_by(4) {
+        for v in dg[qi * 8..(qi + 1) * 8].iter_mut() {
+            *v = rng.uniform(-1.0, 1.0) as f32;
+        }
+    }
+    for threads in [1, 4] {
+        let engine = BatchLookupEngine::with_threads(torus, 32, threads);
+        let mut lk = BatchOutput::default();
+        let mut gathered = vec![0.0f32; n * 8];
+        let mut cache = BackwardCache::default();
+        engine.lookup_gather_ragged_cached_into(
+            &queries,
+            &table,
+            &mut lk,
+            &mut gathered,
+            &mut cache,
+        );
+        assert!(cache.matches(n, 32), "forward must validate the cache");
+        let mut recomputed = vec![0.0f64; n * 8];
+        engine.backward_gather_ragged_into(&queries, &table, &dg, &mut recomputed);
+        let mut from_cache = vec![0.0f64; n * 8];
+        engine.backward_gather_ragged_cached_into(&queries, &table, &dg, &cache, &mut from_cache);
+        for (i, (a, b)) in from_cache.iter().zip(&recomputed).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{threads} threads, lane {i}: cached {a} vs recomputed {b}"
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------

@@ -1,5 +1,5 @@
 //! Serving-path integration: dynamic batcher over a pluggable inference
-//! backend, keep-alive worker-pool HTTP front door end-to-end on a
+//! backend, event-driven keep-alive HTTP front door end-to-end on a
 //! loopback socket — including bounded admission (429 + `Retry-After`
 //! under overload, shed requests never reaching the backend), keep-alive
 //! connection reuse, and graceful drain.

@@ -1,7 +1,9 @@
 //! Offline drop-in subset of the `libc` crate: exactly the FFI surface
 //! `util::mmap` (anonymous/file mappings plus `mincore` residency
-//! queries) and `util::signal` (`sigaction` for SIGTERM-driven graceful
-//! drain) need on 64-bit Linux.  Declaring the prototypes locally links
+//! queries), `util::signal` (`sigaction` for SIGTERM-driven graceful
+//! drain), and `util::poll` (`poll(2)` readiness multiplexing, the
+//! self-pipe wakeup, and `RLIMIT_NOFILE` for high-connection load
+//! tests) need on 64-bit Linux.  Declaring the prototypes locally links
 //! against the system libc that std already pulls in; no crates.io
 //! access is required.
 
@@ -12,8 +14,13 @@ pub use std::ffi::c_void;
 pub type c_int = i32;
 pub type c_char = i8;
 pub type c_uchar = u8;
+pub type c_short = i16;
+pub type c_ulong = u64;
 pub type size_t = usize;
+pub type ssize_t = isize;
 pub type off_t = i64;
+/// `nfds_t` — the `poll(2)` fd-count type (unsigned long on Linux).
+pub type nfds_t = c_ulong;
 
 pub const PROT_READ: c_int = 0x1;
 pub const PROT_WRITE: c_int = 0x2;
@@ -26,6 +33,37 @@ pub const MAP_NORESERVE: c_int = 0x4000;
 pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
 
 pub const MAP_FIXED: c_int = 0x10;
+
+// `poll(2)` event bits (asm-generic values, shared by x86_64/aarch64).
+pub const POLLIN: c_short = 0x1;
+pub const POLLOUT: c_short = 0x4;
+pub const POLLERR: c_short = 0x8;
+pub const POLLHUP: c_short = 0x10;
+pub const POLLNVAL: c_short = 0x20;
+
+// `pipe2(2)` flags (octal in the kernel headers).
+pub const O_NONBLOCK: c_int = 0o4000;
+pub const O_CLOEXEC: c_int = 0o2000000;
+
+/// Per-process open-file-descriptor cap (`getrlimit`/`setrlimit`).
+pub const RLIMIT_NOFILE: c_int = 7;
+
+/// One `poll(2)` registration: fd, requested events, returned events.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct pollfd {
+    pub fd: c_int,
+    pub events: c_short,
+    pub revents: c_short,
+}
+
+/// `struct rlimit` on 64-bit Linux: soft and hard caps as u64.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct rlimit {
+    pub rlim_cur: u64,
+    pub rlim_max: u64,
+}
 
 pub const SIGBUS: c_int = 7;
 pub const SIGINT: c_int = 2;
@@ -86,6 +124,20 @@ extern "C" {
     /// Deliver `sig` to the calling thread (tests exercise the handler
     /// path without a second process).
     pub fn raise(sig: c_int) -> c_int;
+
+    pub fn poll(fds: *mut pollfd, nfds: nfds_t, timeout: c_int) -> c_int;
+
+    pub fn pipe2(pipefd: *mut c_int, flags: c_int) -> c_int;
+
+    pub fn read(fd: c_int, buf: *mut c_void, count: size_t) -> ssize_t;
+
+    pub fn write(fd: c_int, buf: *const c_void, count: size_t) -> ssize_t;
+
+    pub fn close(fd: c_int) -> c_int;
+
+    pub fn getrlimit(resource: c_int, rlim: *mut rlimit) -> c_int;
+
+    pub fn setrlimit(resource: c_int, rlim: *const rlimit) -> c_int;
 }
 
 #[cfg(test)]
@@ -112,5 +164,43 @@ mod tests {
             assert_eq!(mincore(p, 4096, resident.as_mut_ptr()), 0);
             assert_eq!(munmap(p, 4096), 0);
         }
+    }
+
+    #[test]
+    fn pipe2_poll_roundtrip() {
+        // SAFETY: a private nonblocking pipe, written and polled within
+        // the test, both ends closed at the end.
+        unsafe {
+            let mut fds = [0 as c_int; 2];
+            assert_eq!(pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC), 0);
+            let (rd, wr) = (fds[0], fds[1]);
+
+            // nothing readable yet: poll with a zero timeout returns 0
+            let mut pfd = pollfd { fd: rd, events: POLLIN, revents: 0 };
+            assert_eq!(poll(&mut pfd, 1, 0), 0);
+
+            let byte = [1u8];
+            assert_eq!(write(wr, byte.as_ptr() as *const c_void, 1), 1);
+            let mut pfd = pollfd { fd: rd, events: POLLIN, revents: 0 };
+            assert_eq!(poll(&mut pfd, 1, 1000), 1);
+            assert_ne!(pfd.revents & POLLIN, 0);
+
+            let mut buf = [0u8; 8];
+            assert_eq!(read(rd, buf.as_mut_ptr() as *mut c_void, 8), 1);
+            assert_eq!(buf[0], 1);
+
+            assert_eq!(close(rd), 0);
+            assert_eq!(close(wr), 0);
+        }
+    }
+
+    #[test]
+    fn rlimit_nofile_is_readable() {
+        let mut lim = rlimit { rlim_cur: 0, rlim_max: 0 };
+        // SAFETY: plain out-parameter read of the process fd limit.
+        let rc = unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) };
+        assert_eq!(rc, 0);
+        assert!(lim.rlim_cur >= 1, "a process always has some fd budget");
+        assert!(lim.rlim_max >= lim.rlim_cur);
     }
 }
